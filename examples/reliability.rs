@@ -1,0 +1,58 @@
+//! Reliability sweep: stuck-at cell faults vs end-to-end result corruption.
+//!
+//! The paper's companion work ([13], *Making Memristive Processing-in-Memory
+//! Reliable*) motivates fault tolerance for stateful logic; this driver
+//! quantifies the raw vulnerability of the partitioned multiplier: inject
+//! stuck-at faults at increasing cell-failure rates, run full 32-bit
+//! multiplications, and measure the fraction of wrong products.
+//!
+//! Run: `cargo run --release --example reliability`
+
+use anyhow::Result;
+use partition_pim::algorithms::multpim::{build_multpim, MultPimVariant};
+use partition_pim::crossbar::crossbar::Crossbar;
+use partition_pim::crossbar::faults::{run_with_faults, FaultMap};
+use partition_pim::crossbar::gate::GateSet;
+use partition_pim::crossbar::geometry::Geometry;
+
+fn main() -> Result<()> {
+    let geom = Geometry::paper(32);
+    let mult = build_multpim(geom, MultPimVariant::Plain)?;
+    println!("fault-rate sweep: 32 rows x 32-bit multiplication, stuck-at cell faults\n");
+    println!("{:>12} {:>8} {:>14} {:>12}", "cell rate", "faults", "wrong products", "error rate");
+
+    let mut seed = 0xfau64;
+    let mut rnd = move || {
+        seed ^= seed << 13;
+        seed ^= seed >> 7;
+        seed ^= seed << 17;
+        seed & 0xffff_ffff
+    };
+
+    for &rate in &[0.0, 1e-5, 1e-4, 5e-4, 1e-3, 5e-3] {
+        let mut wrong = 0usize;
+        let mut total = 0usize;
+        let mut n_faults = 0usize;
+        for trial in 0..4u64 {
+            let faults = FaultMap::random(geom.rows, geom.n, rate, 1 + trial * 7919);
+            n_faults += faults.faults.len();
+            let mut xb = Crossbar::new(geom, GateSet::NotNor);
+            let cases: Vec<(u64, u64)> = (0..geom.rows).map(|_| (rnd(), rnd())).collect();
+            for (r, &(a, b)) in cases.iter().enumerate() {
+                mult.load(&mut xb, r, a, b)?;
+            }
+            run_with_faults(&mut xb, &mult.program.ops, &faults)?;
+            for (r, &(a, b)) in cases.iter().enumerate() {
+                total += 1;
+                if mult.read_product(&xb, r)? != a * b {
+                    wrong += 1;
+                }
+            }
+        }
+        println!("{:>12.0e} {:>8} {:>14} {:>11.1}%", rate, n_faults / 4, wrong, 100.0 * wrong as f64 / total as f64);
+    }
+    println!("\n(zero faults -> zero errors; with ~23 of 32 intra columns live per");
+    println!(" partition, roughly 2/3 of random cell faults corrupt a product —");
+    println!(" the quantitative motivation for remapping/ECC in [13])");
+    Ok(())
+}

@@ -1,0 +1,72 @@
+"""AOT lowering: JAX/Pallas -> HLO *text* artifacts for the rust runtime.
+
+HLO text (NOT ``lowered.compile()``/``.serialize()``) is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which
+the xla crate's xla_extension 0.5.1 rejects; the text parser reassigns ids
+and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage: ``python -m compile.aot --out-dir ../artifacts`` (the Makefile's
+``artifacts`` target). Python never runs at request time.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# Step-artifact shapes the rust side loads: (rows, cols, gates) with
+# gates = k (the maximum concurrent gates of a partitioned operation).
+STEP_SHAPES = [
+    (16, 256, 8),   # runtime parity tests (n=256, k=8)
+    (64, 512, 16),  # mid-size demos
+    (64, 1024, 32), # paper scale (n=1024, k=32)
+]
+
+# Whole-program executor shapes: (rows, cols, gates, steps).
+EXEC_SHAPES = [
+    (16, 256, 8, 64),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def emit(path: str, text: str) -> None:
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"wrote {len(text):>8} chars  {path}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+
+    for rows, cols, gates in STEP_SHAPES:
+        lowered = jax.jit(model.step).lower(model.state_spec(rows, cols), model.idx_spec(gates))
+        emit(os.path.join(args.out_dir, f"step_r{rows}_c{cols}_g{gates}.hlo.txt"), to_hlo_text(lowered))
+
+    for rows, cols, gates, steps in EXEC_SHAPES:
+        lowered = jax.jit(model.run_program).lower(
+            model.state_spec(rows, cols), model.program_spec(steps, gates)
+        )
+        emit(
+            os.path.join(args.out_dir, f"exec_r{rows}_c{cols}_g{gates}_t{steps}.hlo.txt"),
+            to_hlo_text(lowered),
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,100 @@
+"""L1 Pallas kernel: one crossbar stateful-logic cycle.
+
+One simulated cycle applies up to G concurrent column gates (NOR / NOT /
+initialization writes) to every row of the R x C crossbar state at once.
+
+Hardware adaptation (see DESIGN.md #Hardware-Adaptation): instead of
+porting the scalar bit-twiddling of a CPU simulator, the cycle is
+formulated for the TPU's strengths:
+
+  * input gather  ->  A = state @ sel_a,  B = state @ sel_b   (MXU matmuls
+    over one-hot column selectors, [R,C] @ [C,G])
+  * gate compute  ->  NOR = (1-A)*(1-B), masked by the per-slot mode
+    (mode 1 = write-0 initialization; init-to-1 is NOR of two unused
+    inputs)                                                    (VPU)
+  * output scatter->  state' = state*(1-outmask) + NOR @ sel_out^T  (MXU)
+
+BlockSpec tiles rows into VMEM-resident blocks; the small [C,G] selector
+matrices are replicated per block. ``interpret=True`` everywhere: the CPU
+PJRT client cannot execute Mosaic custom-calls, so the kernel lowers to
+plain HLO (real-TPU perf is estimated from the VMEM/MXU analysis in
+EXPERIMENTS.md #Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gate_step_kernel(state_ref, sa_ref, sb_ref, so_ref, mode_ref, out_ref):
+    """One row-block of the cycle. Shapes:
+    state [Rb, C], sa/sb/so [C, G], mode [1, G], out [Rb, C]."""
+    state = state_ref[...]
+    sa = sa_ref[...]
+    sb = sb_ref[...]
+    so = so_ref[...]
+    mode = mode_ref[...]  # [1, G]; 1.0 = write-0 slot
+    # Input gather on the MXU.
+    a = jnp.dot(state, sa)  # [Rb, G]
+    b = jnp.dot(state, sb)
+    # Stateful NOR on the VPU (inputs are 0/1-valued).
+    val = (1.0 - a) * (1.0 - b) * (1.0 - mode)
+    # Output scatter on the MXU. Columns without a writer keep their value.
+    outmask = jnp.sum(so, axis=1)  # [C]
+    out_ref[...] = state * (1.0 - outmask)[None, :] + jnp.dot(val, so.T)
+
+
+def gate_step(state, sel_a, sel_b, sel_out, mode, *, block_rows=None, interpret=True):
+    """Apply one simulated cycle.
+
+    Args:
+      state:   [R, C] float 0/1 crossbar image.
+      sel_a:   [C, G] one-hot InA column selectors (all-zero column = the
+               constant-0 input, i.e. a NOT or an init slot).
+      sel_b:   [C, G] one-hot InB selectors.
+      sel_out: [C, G] one-hot output selectors (all-zero = inactive slot).
+      mode:    [1, G] 1.0 where the slot is a write-0 initialization.
+      block_rows: VMEM row-block size (defaults to min(R, 128)).
+    """
+    r, c = state.shape
+    g = sel_a.shape[1]
+    if block_rows is None:
+        block_rows = min(r, 128)
+    assert r % block_rows == 0, f"rows {r} not divisible by block {block_rows}"
+    grid = (r // block_rows,)
+    return pl.pallas_call(
+        _gate_step_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, c), lambda i: (i, 0)),
+            pl.BlockSpec((c, g), lambda i: (0, 0)),
+            pl.BlockSpec((c, g), lambda i: (0, 0)),
+            pl.BlockSpec((c, g), lambda i: (0, 0)),
+            pl.BlockSpec((1, g), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, c), state.dtype),
+        interpret=interpret,
+    )(state, sel_a, sel_b, sel_out, mode)
+
+
+def selectors_from_indices(idx, c, dtype=jnp.float32):
+    """Expand a [G, 4] (in_a, in_b, out, mode) int32 step descriptor into the
+    kernel's one-hot selector matrices. Index -1 marks an unused line and
+    expands to an all-zero selector column (jax one_hot semantics)."""
+    sa = jax.nn.one_hot(idx[:, 0], c, dtype=dtype).T  # [C, G]
+    sb = jax.nn.one_hot(idx[:, 1], c, dtype=dtype).T
+    so = jax.nn.one_hot(idx[:, 2], c, dtype=dtype).T
+    mode = idx[:, 3].astype(dtype)[None, :]  # [1, G]
+    return sa, sb, so, mode
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def step_from_indices(state, idx, *, block_rows=None):
+    """One cycle straight from the wire-format step descriptor."""
+    sa, sb, so, mode = selectors_from_indices(idx, state.shape[1], state.dtype)
+    return gate_step(state, sa, sb, so, mode, block_rows=block_rows)

@@ -1,0 +1,44 @@
+"""Pure-jnp (and pure-python) oracles for the gate-step kernel.
+
+Two independent references:
+
+* :func:`gate_step_ref` — the same linear-algebra formulation without
+  Pallas, for allclose checks of the kernel's lowering.
+* :func:`step_semantic` — a direct per-gate semantic interpreter (gather
+  all reads first, then scatter writes), matching the rust simulator's
+  stateful-logic semantics exactly. This is the ground truth.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def gate_step_ref(state, sel_a, sel_b, sel_out, mode):
+    """Reference linear-algebra formulation (no pallas)."""
+    a = state @ sel_a
+    b = state @ sel_b
+    val = (1.0 - a) * (1.0 - b) * (1.0 - mode)
+    outmask = jnp.sum(sel_out, axis=1)
+    return state * (1.0 - outmask)[None, :] + val @ sel_out.T
+
+
+def step_semantic(state: np.ndarray, idx: np.ndarray) -> np.ndarray:
+    """Semantic interpreter over a [G, 4] step descriptor.
+
+    All gates of a cycle read the pre-cycle state (they execute in isolated
+    sections, so their column sets are disjoint), then writes land.
+    """
+    out = state.copy()
+    reads = state  # pre-cycle snapshot
+    for ina, inb, o, mode in np.asarray(idx):
+        if o < 0:
+            continue
+        if mode == 1:
+            out[:, o] = 0.0
+            continue
+        a = reads[:, ina] if ina >= 0 else np.zeros(state.shape[0], state.dtype)
+        b = reads[:, inb] if inb >= 0 else np.zeros(state.shape[0], state.dtype)
+        out[:, o] = (1.0 - a) * (1.0 - b)
+    return out

@@ -1,0 +1,48 @@
+"""L2: the crossbar *program executor* as a single JAX computation.
+
+A compiled PIM program (produced by the rust program builders and exported
+as wire-format step descriptors) is a [T, G, 4] int32 tensor; the executor
+``lax.scan``s the L1 Pallas gate-step kernel over it, so an entire
+multiplication (or any other program) lowers to one XLA computation.
+Python runs only at build time — the rust runtime loads the lowered HLO.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.gate_step import gate_step, selectors_from_indices
+
+
+def step(state, idx):
+    """One cycle from a [G, 4] step descriptor (tuple-returning for AOT)."""
+    sa, sb, so, mode = selectors_from_indices(idx, state.shape[1], state.dtype)
+    return (gate_step(state, sa, sb, so, mode),)
+
+
+def run_program(state, idx_steps):
+    """Execute a whole [T, G, 4] program: scan of the pallas step.
+
+    Returns a 1-tuple (AOT lowers with return_tuple=True; the rust side
+    unwraps with ``to_tuple1``).
+    """
+
+    def body(s, idx):
+        sa, sb, so, mode = selectors_from_indices(idx, s.shape[1], s.dtype)
+        return gate_step(s, sa, sb, so, mode), None
+
+    final, _ = jax.lax.scan(body, state, idx_steps)
+    return (final,)
+
+
+def state_spec(rows: int, cols: int, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct((rows, cols), dtype)
+
+
+def idx_spec(gates: int):
+    return jax.ShapeDtypeStruct((gates, 4), jnp.int32)
+
+
+def program_spec(steps: int, gates: int):
+    return jax.ShapeDtypeStruct((steps, gates, 4), jnp.int32)

@@ -1,0 +1,34 @@
+"""Shared random-program generator for the python test suite (mirrors the
+validity rules of the rust Operation model: distinct outputs per cycle,
+outputs never alias inputs)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def random_program(rng: np.random.Generator, c: int, g: int, t: int) -> np.ndarray:
+    """A [T, G, 4] random valid program."""
+    prog = np.full((t, g, 4), -1, dtype=np.int32)
+    for step in range(t):
+        outs = rng.choice(c, size=g, replace=False)
+        for slot in range(g):
+            kind = rng.integers(0, 5)
+            o = int(outs[slot])
+            if kind == 0:
+                continue
+            prog[step, slot, 2] = o
+            prog[step, slot, 3] = 0
+            if kind == 1:
+                pass  # init 1
+            elif kind == 2:
+                prog[step, slot, 3] = 1  # init 0
+            elif kind == 3:
+                a = int(rng.integers(0, c - 1))
+                a = a if a != o else c - 1
+                prog[step, slot, 0] = prog[step, slot, 1] = a
+            else:
+                pool = [x for x in rng.choice(c, size=4, replace=False) if x != o]
+                prog[step, slot, 0] = int(pool[0])
+                prog[step, slot, 1] = int(pool[1])
+    return prog

@@ -1,0 +1,29 @@
+"""Sanity checks of the L1 structural performance model."""
+
+from compile.analysis import StepAnalysis, sweep, VMEM_BYTES
+
+
+def test_vmem_fits_for_all_sweep_points():
+    for a in sweep():
+        assert a.vmem_block_bytes < VMEM_BYTES, f"{a} exceeds VMEM"
+
+
+def test_mxu_utilization_monotone_in_block_rows():
+    a8 = StepAnalysis(1024, 1024, 32, 8)
+    a128 = StepAnalysis(1024, 1024, 32, 128)
+    assert a128.mxu_utilization > a8.mxu_utilization
+    # With full 128-row blocks the bound is G/128.
+    assert abs(a128.mxu_utilization - 32 / 128) < 1e-9
+
+
+def test_kernel_is_memory_bound():
+    # One cycle reads/writes the whole state for only G gates of matmul
+    # work — memory-bound at every paper-scale shape.
+    for a in sweep():
+        assert a.memory_bound
+
+
+def test_flop_accounting_scales_linearly_in_rows():
+    a = StepAnalysis(64, 1024, 32, 32)
+    b = StepAnalysis(128, 1024, 32, 32)
+    assert b.mxu_flops == 2 * a.mxu_flops

@@ -1,0 +1,44 @@
+//! Ablation: MultPIM broadcast strategies (DESIGN.md §7) — the
+//! minimal-legal double-NOT tree vs the parity single-NOT tree, and what
+//! each costs under every model after legalization/packing.
+
+use partition_pim::algorithms::multpim::{build_multpim, MultPimVariant};
+use partition_pim::bench_support::section;
+use partition_pim::crossbar::gate::GateSet;
+use partition_pim::crossbar::geometry::Geometry;
+use partition_pim::figures;
+use partition_pim::isa::lower::LegalizeConfig;
+use partition_pim::isa::models::ModelKind;
+use partition_pim::isa::schedule::pack_program;
+
+fn main() {
+    let geom = Geometry::paper(1);
+
+    section("broadcast variants (32-bit multiplication, n=1024, k=32)");
+    for r in figures::broadcast_ablation(geom).expect("ablation") {
+        println!("{:<36} {:>6} cycles {:>7} gates", r.name, r.cycles, r.gates);
+    }
+
+    section("variant x model matrix (cycles after legalize/pack)");
+    println!("{:<10} {:>12} {:>12}", "model", "plain", "fast");
+    for model in [ModelKind::Unlimited, ModelKind::Standard, ModelKind::Minimal] {
+        let mut cells = Vec::new();
+        for variant in [MultPimVariant::Plain, MultPimVariant::Fast] {
+            let m = build_multpim(geom, variant).expect("build");
+            let cycles = if m.program.check_model(model).is_ok() {
+                let (packed, _) = pack_program(&m.program.ops, model, &geom, GateSet::NotNor);
+                packed.len()
+            } else {
+                match m.program.legalize(model, &LegalizeConfig::default()) {
+                    Ok((legal, _)) => legal.ops.len(),
+                    Err(_) => 0, // not legalizable without scratch
+                }
+            };
+            cells.push(cycles);
+        }
+        println!("{:<10} {:>12} {:>12}", model.name(), cells[0], cells[1]);
+    }
+    println!("\n(the fast parity tree wins under unlimited/standard; its aperiodic");
+    println!(" subset cycles make it lose to the plain tree under minimal — the");
+    println!(" reason the minimal-model worker compiles the plain variant)");
+}

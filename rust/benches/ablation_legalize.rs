@@ -1,0 +1,50 @@
+//! Ablation: legalization strategies (DESIGN.md §7) — what each model's
+//! restrictions cost when rewriting the standard-legal Fast multiplier,
+//! and the cost of the split-input copy rewrite.
+
+use partition_pim::algorithms::multpim::{build_multpim, MultPimVariant};
+use partition_pim::bench_support::{bench, section};
+use partition_pim::crossbar::gate::GateSet;
+use partition_pim::crossbar::geometry::Geometry;
+use partition_pim::isa::lower::{legalize_program, LegalizeConfig, LegalizeStats};
+use partition_pim::isa::models::ModelKind;
+use partition_pim::isa::operation::{GateOp, Operation};
+use partition_pim::isa::schedule::pack_program;
+
+fn main() {
+    let geom = Geometry::paper(1);
+    let fast = build_multpim(geom, MultPimVariant::Fast).expect("build");
+
+    section("legalizing the Fast multiplier for minimal (Section 5 'alternatives')");
+    let (legal, stats) = legalize_program(&fast.program.ops, ModelKind::Minimal, &geom, GateSet::NotNor, &LegalizeConfig::default())
+        .expect("legalize");
+    println!("ops in:  {:>6}   (passthrough {})", stats.ops_in, stats.passthrough);
+    println!("ops out: {:>6}   latency x{:.3}", legal.len(), legal.len() as f64 / fast.program.ops.len() as f64);
+
+    section("packing the Fast multiplier for unlimited");
+    let (packed, pstats) = pack_program(&fast.program.ops, ModelKind::Unlimited, &geom, GateSet::NotNor);
+    println!("ops in:  {:>6}   merges {}", pstats.ops_in, pstats.merges);
+    println!("ops out: {:>6}   latency x{:.3}", packed.len(), packed.len() as f64 / fast.program.ops.len() as f64);
+
+    section("split-input copy rewrite cost");
+    // A semi-parallel op whose gates split their inputs across partitions.
+    let op = Operation::Gates(vec![
+        GateOp::nor(geom.col(0, 0), geom.col(1, 1), geom.col(2, 3)),
+        GateOp::nor(geom.col(8, 0), geom.col(9, 1), geom.col(10, 3)),
+    ]);
+    let cfg = LegalizeConfig { scratch_intra: Some((30, 31)) };
+    let mut st = LegalizeStats::default();
+    let out = partition_pim::isa::lower::legalize_op(&op, ModelKind::Standard, &geom, GateSet::NotNor, &cfg, &mut st).expect("legalize");
+    println!("1 split-input op -> {} ops ({} copies inserted)", out.len(), st.copies_inserted);
+
+    section("legalizer wall-clock");
+    bench("legalize/fast->minimal/full-program", || {
+        let (l, _) = legalize_program(&fast.program.ops, ModelKind::Minimal, &geom, GateSet::NotNor, &LegalizeConfig::default())
+            .expect("legalize");
+        assert!(!l.is_empty());
+    });
+    bench("pack/fast->unlimited/full-program", || {
+        let (p, _) = pack_program(&fast.program.ops, ModelKind::Unlimited, &geom, GateSet::NotNor);
+        assert!(!p.is_empty());
+    });
+}

@@ -1,0 +1,40 @@
+//! Experiment E13: end-to-end coordinator throughput — batched 32-bit
+//! vector multiplication served by a bank of crossbars, per model.
+
+use partition_pim::bench_support::{bench, section, throughput};
+use partition_pim::coordinator::{PimService, ServiceConfig, WorkloadKind};
+use partition_pim::isa::models::ModelKind;
+
+fn main() {
+    section("service throughput: 256-element multiply jobs, 4 crossbars x 64 rows");
+    for model in [ModelKind::Minimal, ModelKind::Standard, ModelKind::Unlimited] {
+        let mut svc = PimService::start(ServiceConfig { kind: WorkloadKind::Mul32, model, n_crossbars: 4, rows: 64 })
+            .expect("service");
+        let a: Vec<u64> = (0..256).map(|i| (i * 2654435761) & 0xffff_ffff).collect();
+        let b: Vec<u64> = (0..256).map(|i| (i * 40503 + 12345) & 0xffff_ffff).collect();
+        let res = bench(&format!("service/mul32/{}", model.name()), || {
+            let r = svc.submit(&a, &b).expect("submit");
+            assert_eq!(r.values[3], a[3] * b[3]);
+        });
+        throughput(&res, 256.0, "mults");
+        let stats = svc.shutdown();
+        println!(
+            "      simulated: {:.2} elements/kilocycle, {:.1} control bits/element",
+            1000.0 * stats.elements as f64 / stats.metrics.cycles as f64,
+            stats.metrics.control_bits as f64 / stats.elements as f64
+        );
+    }
+
+    section("batching ablation: rows per crossbar (minimal model)");
+    for rows in [8usize, 32, 128] {
+        let mut svc = PimService::start(ServiceConfig { kind: WorkloadKind::Mul32, model: ModelKind::Minimal, n_crossbars: 4, rows })
+            .expect("service");
+        let a: Vec<u64> = (0..256).map(|i| (i * 7919) & 0xffff_ffff).collect();
+        let b: Vec<u64> = (0..256).map(|i| (i * 104729) & 0xffff_ffff).collect();
+        let res = bench(&format!("service/batch-rows-{rows}"), || {
+            svc.submit(&a, &b).expect("submit");
+        });
+        throughput(&res, 256.0, "mults");
+        svc.shutdown();
+    }
+}

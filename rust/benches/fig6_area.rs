@@ -1,0 +1,24 @@
+//! Figure 6(c) + Section 5.3 — algorithmic area (memristor footprint) and
+//! physical overhead per model (experiments E8, E12 summary).
+
+use partition_pim::bench_support::section;
+use partition_pim::crossbar::geometry::Geometry;
+use partition_pim::figures;
+
+fn main() {
+    section("Figure 6(c): algorithmic area for 32-bit multiplication (paper: ~1.4x)");
+    println!("{:<11} {:>14} {:>9}", "model", "memristors/row", "ratio");
+    for r in figures::figure6().expect("figure6") {
+        println!("{:<11} {:>14} {:>8.2}x", r.model.name(), r.stats.footprint_cols, r.area_ratio);
+    }
+
+    let geom = Geometry::paper(64);
+    section("physical overhead");
+    println!("isolation transistors: {:.2}% of row cells (paper cites ~3% [8])", 100.0 * figures::transistor_overhead(&geom));
+    for r in figures::periphery_table(&geom) {
+        println!(
+            "{:<22} CMOS gates {:>9}  analog muxes {:>7}  extra logic {:>6}",
+            r.name, r.area.cmos_gates, r.area.analog_muxes, r.area.extra_logic_gates
+        );
+    }
+}

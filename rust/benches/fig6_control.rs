@@ -1,0 +1,52 @@
+//! Figure 6(b) + Sections 2.3/3.3/4.3 — control-message lengths, lower
+//! bounds, per-program control traffic, and codec wall-clock throughput
+//! (experiments E2-E5, E7).
+
+use partition_pim::bench_support::{bench, section, throughput};
+use partition_pim::coordinator::worker::{compile_workload, workload_geometry, WorkloadKind};
+use partition_pim::crossbar::geometry::Geometry;
+use partition_pim::figures;
+use partition_pim::isa::encode::{decode, encode, message_bits};
+use partition_pim::isa::models::ModelKind;
+use partition_pim::isa::operation::{GateOp, Operation};
+use partition_pim::periphery;
+
+fn main() {
+    let geom = Geometry::paper(64);
+
+    section("Figure 6(b): message formats vs lower bounds (paper: 30/607/79/36 bits)");
+    println!("{:<11} {:>12} {:>13} {:>10}", "model", "format bits", "lower bound", "overhead");
+    for r in figures::control_table(&geom) {
+        println!(
+            "{:<11} {:>12} {:>13} {:>9.1}x",
+            r.model.name(),
+            r.format_bits,
+            r.lower_bound_bits,
+            r.format_bits as f64 / message_bits(ModelKind::Baseline, &geom) as f64
+        );
+    }
+
+    section("total control traffic for one 32-bit multiplication");
+    for model in ModelKind::ALL {
+        let g = workload_geometry(WorkloadKind::Mul32, model, 1);
+        let (prog, _) = compile_workload(WorkloadKind::Mul32, model, g).expect("compile");
+        println!(
+            "{:<11} {:>10} bits over {:>5} cycles",
+            model.name(),
+            prog.control_bits(model),
+            prog.stats().cycles
+        );
+    }
+
+    section("codec wall-clock (encode + decode + periphery reconstruction)");
+    let par_op = Operation::Gates((0..geom.k).map(|p| GateOp::nor(geom.col(p, 0), geom.col(p, 1), geom.col(p, 3))).collect());
+    for model in [ModelKind::Unlimited, ModelKind::Standard, ModelKind::Minimal] {
+        let res = bench(&format!("roundtrip/{}/parallel-op", model.name()), || {
+            let bits = encode(model, &par_op, &geom).expect("encode");
+            let msg = decode(model, &bits, &geom).expect("decode");
+            let op = periphery::reconstruct(&msg, &geom).expect("reconstruct");
+            assert_eq!(op.gate_count(), geom.k);
+        });
+        throughput(&res, 1.0, "msg");
+    }
+}

@@ -1,0 +1,63 @@
+//! Figure 6(a) + Section 5.4 — 32-bit multiplication latency (cycles) and
+//! energy (gate count) per model, plus wall-clock simulator timing of each
+//! program (experiments E6, E9).
+
+use partition_pim::bench_support::{bench, section, throughput};
+use partition_pim::coordinator::worker::{compile_workload, workload_geometry, WorkloadKind};
+use partition_pim::crossbar::crossbar::Crossbar;
+use partition_pim::crossbar::gate::GateSet;
+use partition_pim::figures;
+use partition_pim::isa::models::ModelKind;
+
+fn main() {
+    section("Figure 6(a): 32-bit multiplication latency (paper: 11.3x / 9.2x / 8.6x)");
+    let rows = figures::figure6().expect("figure6");
+    println!("{:<11} {:>8} {:>9} {:>12} {:>10}", "model", "cycles", "speedup", "gate events", "energy x");
+    for r in &rows {
+        println!(
+            "{:<11} {:>8} {:>8.2}x {:>12} {:>9.2}x",
+            r.model.name(),
+            r.stats.cycles,
+            r.speedup_vs_serial,
+            r.stats.gates,
+            r.energy_ratio
+        );
+    }
+
+    section("wall-clock: simulator executing one full multiplication program (64 rows)");
+    for model in ModelKind::ALL {
+        let geom = workload_geometry(WorkloadKind::Mul32, model, 64);
+        let (prog, _) = compile_workload(WorkloadKind::Mul32, model, geom).expect("compile");
+        let mut xb = Crossbar::new(geom, GateSet::NotNor);
+        xb.state.fill_random(1);
+        let res = bench(&format!("mult32/{}/direct", model.name()), || {
+            prog.run(&mut xb).expect("run");
+        });
+        throughput(&res, prog.stats().cycles as f64, "cycles");
+    }
+
+    section("wall-clock: full control-message path (encode -> decode -> periphery -> execute)");
+    for model in [ModelKind::Unlimited, ModelKind::Standard, ModelKind::Minimal] {
+        let geom = workload_geometry(WorkloadKind::Mul32, model, 64);
+        let (prog, _) = compile_workload(WorkloadKind::Mul32, model, geom).expect("compile");
+        let mut xb = Crossbar::new(geom, GateSet::NotNor);
+        xb.state.fill_random(1);
+        let res = bench(&format!("mult32/{}/messages", model.name()), || {
+            prog.run_via_messages(&mut xb, model).expect("run");
+        });
+        throughput(&res, prog.stats().cycles as f64, "cycles");
+    }
+
+    section("wall-clock: pre-encoded message stream (controller encodes once)");
+    for model in [ModelKind::Unlimited, ModelKind::Standard, ModelKind::Minimal] {
+        let geom = workload_geometry(WorkloadKind::Mul32, model, 64);
+        let (prog, _) = compile_workload(WorkloadKind::Mul32, model, geom).expect("compile");
+        let encoded = prog.encode_for(model).expect("encode");
+        let mut xb = Crossbar::new(geom, GateSet::NotNor);
+        xb.state.fill_random(1);
+        let res = bench(&format!("mult32/{}/pre-encoded", model.name()), || {
+            encoded.run(&mut xb).expect("run");
+        });
+        throughput(&res, prog.stats().cycles as f64, "cycles");
+    }
+}

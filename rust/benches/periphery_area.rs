@@ -1,0 +1,38 @@
+//! Experiment E12: half-gate periphery vs the naive Ω(k²) decoder stack
+//! (Figure 3) across partition counts, plus the functional decoder's
+//! wall-clock cost.
+
+use partition_pim::bench_support::{bench, section};
+use partition_pim::crossbar::geometry::Geometry;
+use partition_pim::isa::models::ModelKind;
+use partition_pim::isa::operation::Direction;
+use partition_pim::periphery::area::{naive_unlimited_area, periphery_area};
+use partition_pim::periphery::{opcode_gen, range_gen};
+
+fn main() {
+    section("periphery CMOS gates vs k (n = 1024)");
+    println!("{:>4} {:>10} {:>11} {:>10} {:>10} {:>13}", "k", "baseline", "half-gates", "standard", "minimal", "naive stack");
+    for k in [2usize, 4, 8, 16, 32] {
+        let geom = Geometry::new(1024, k, 1).expect("geometry");
+        let b = periphery_area(ModelKind::Baseline, &geom).cmos_gates;
+        let u = periphery_area(ModelKind::Unlimited, &geom).cmos_gates;
+        let s = periphery_area(ModelKind::Standard, &geom).total_gates();
+        let m = periphery_area(ModelKind::Minimal, &geom).total_gates();
+        let naive = naive_unlimited_area(&geom).cmos_gates;
+        println!("{k:>4} {b:>10} {u:>11} {s:>10} {m:>10} {naive:>13}");
+    }
+    println!("\n(half-gates stays below the baseline — Section 2.2; the naive stack explodes quadratically)");
+
+    section("functional generator wall-clock (k = 32)");
+    let enables = vec![true; 32];
+    let selects = vec![true; 31];
+    bench("opcode_gen/standard", || {
+        let ops = opcode_gen::generate(&enables, &selects, Direction::InputsLeft).expect("generate");
+        assert_eq!(ops.len(), 32);
+    });
+    let params = range_gen::RangeParams { p_start: 0, p_end: 30, t: 2, distance: 1, dir: Direction::InputsLeft };
+    bench("range_gen/minimal", || {
+        let e = range_gen::expand(&params, 32).expect("expand");
+        assert_eq!(e.in_mask.len(), 32);
+    });
+}

@@ -1,0 +1,51 @@
+//! L3 hot-path throughput: row-gates/second of the bit-packed simulator
+//! (the §Perf target: ≥ 1e8 row-gates/s), across geometries and paths.
+
+use partition_pim::bench_support::{bench, section, throughput};
+use partition_pim::crossbar::crossbar::Crossbar;
+use partition_pim::crossbar::gate::GateSet;
+use partition_pim::crossbar::geometry::Geometry;
+use partition_pim::isa::encode::encode;
+use partition_pim::isa::models::ModelKind;
+use partition_pim::isa::operation::{GateOp, Operation};
+
+fn parallel_op(geom: &Geometry) -> Operation {
+    Operation::Gates((0..geom.k).map(|p| GateOp::nor(geom.col(p, 0), geom.col(p, 1), geom.col(p, 3))).collect())
+}
+
+fn main() {
+    section("bit-packed simulator: parallel operation (k gates x rows)");
+    for (n, k, rows) in [(1024usize, 32usize, 64usize), (1024, 32, 1024), (1024, 32, 16384), (256, 8, 1024)] {
+        let geom = Geometry::new(n, k, rows).expect("geometry");
+        let mut xb = Crossbar::new(geom, GateSet::NotNor);
+        xb.state.fill_random(7);
+        let op = parallel_op(&geom);
+        let res = bench(&format!("execute/n{n}k{k}r{rows}"), || {
+            xb.execute(&op).expect("execute");
+        });
+        throughput(&res, (geom.k * rows) as f64, "row-gates");
+    }
+
+    section("message path: decode + periphery + execute (minimal model)");
+    for rows in [64usize, 1024] {
+        let geom = Geometry::new(1024, 32, rows).expect("geometry");
+        let mut xb = Crossbar::new(geom, GateSet::NotNor);
+        xb.state.fill_random(7);
+        let op = parallel_op(&geom);
+        let bits = encode(ModelKind::Minimal, &op, &geom).expect("encode");
+        let res = bench(&format!("message/n1024k32r{rows}"), || {
+            xb.execute_message(ModelKind::Minimal, &bits).expect("execute");
+        });
+        throughput(&res, (geom.k * rows) as f64, "row-gates");
+    }
+
+    section("initialization writes");
+    let geom = Geometry::new(1024, 32, 1024).expect("geometry");
+    let mut xb = Crossbar::new(geom, GateSet::NotNor);
+    let cols: Vec<usize> = (0..geom.k).flat_map(|p| (10..20).map(move |i| geom.col(p, i))).collect();
+    let op = Operation::init1(cols.clone());
+    let res = bench("init/320cols/1024rows", || {
+        xb.execute(&op).expect("init");
+    });
+    throughput(&res, (cols.len() * geom.rows) as f64, "cell-writes");
+}

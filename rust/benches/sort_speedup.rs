@@ -1,0 +1,36 @@
+//! Experiment E10: in-memory sorting speedup from partitions (the paper's
+//! intro cites 14x with 16 partitions [1]).
+
+use partition_pim::algorithms::sort::{build_sorter_partitioned, build_sorter_serial};
+use partition_pim::bench_support::{bench, section, throughput};
+use partition_pim::crossbar::crossbar::Crossbar;
+use partition_pim::crossbar::gate::GateSet;
+use partition_pim::crossbar::geometry::Geometry;
+use partition_pim::figures;
+
+fn main() {
+    section("sorting cycles: serial vs partitioned bitonic network");
+    println!("{:>6} {:>7} {:>14} {:>19} {:>9}", "elems", "w bits", "serial cycles", "partitioned cycles", "speedup");
+    for r in figures::sort_table(6).expect("sort table") {
+        println!("{:>6} {:>7} {:>14} {:>19} {:>8.2}x", r.elems, r.w_bits, r.serial_cycles, r.partitioned_cycles, r.speedup);
+    }
+
+    section("wall-clock: simulator running a 16-element sort over 64 rows");
+    let geom = Geometry::new(512, 16, 64).expect("geometry");
+    let par = build_sorter_partitioned(geom, 6).expect("partitioned sorter");
+    let mut xb = Crossbar::new(geom, GateSet::NotNor);
+    xb.state.fill_random(3);
+    let res = bench("sort16x6/partitioned/64rows", || {
+        par.program.run(&mut xb).expect("run");
+    });
+    throughput(&res, 64.0 * 16.0, "elements");
+
+    let sgeom = Geometry::new(1024, 1, 64).expect("geometry");
+    let ser = build_sorter_serial(sgeom, 16, 6).expect("serial sorter");
+    let mut sxb = Crossbar::new(sgeom, GateSet::NotNor);
+    sxb.state.fill_random(3);
+    let res = bench("sort16x6/serial/64rows", || {
+        ser.program.run(&mut sxb).expect("run");
+    });
+    throughput(&res, 64.0 * 16.0, "elements");
+}

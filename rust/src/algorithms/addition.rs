@@ -1,0 +1,212 @@
+//! Single-row N-bit addition (serial ripple-carry of NOR full adders).
+//!
+//! Every row of the crossbar adds its own pair of operands independently —
+//! the throughput-oriented "single-row" style of [3, 18] the paper builds
+//! on (experiment E11: ≈320 cycles for 32-bit addition in [18]; our NOR-only
+//! 12-gate adder lands at `N·13 + 2` cycles).
+
+use crate::algorithms::program::{emit_fa_serial, Builder, Program};
+use crate::crossbar::crossbar::Crossbar;
+use crate::crossbar::gate::GateSet;
+use crate::crossbar::geometry::Geometry;
+use anyhow::{ensure, Result};
+
+/// Column layout of the serial ripple adder within a row.
+#[derive(Debug, Clone, Copy)]
+pub struct AdderLayout {
+    pub n_bits: usize,
+    /// Operand A at columns `a0 .. a0+n`.
+    pub a0: usize,
+    /// Operand B.
+    pub b0: usize,
+    /// Sum (n+1 bits).
+    pub s0: usize,
+    /// Carry chain (n+1 columns; `carry0` is the constant-0 input).
+    pub c0: usize,
+    /// 10 scratch columns (reused across bit positions).
+    pub scratch0: usize,
+}
+
+impl AdderLayout {
+    /// Pack the adder at the start of the row.
+    pub fn packed(n_bits: usize) -> Self {
+        let a0 = 0;
+        let b0 = a0 + n_bits;
+        let s0 = b0 + n_bits;
+        let c0 = s0 + n_bits + 1;
+        let scratch0 = c0 + n_bits + 1;
+        Self { n_bits, a0, b0, s0, c0, scratch0 }
+    }
+
+    /// Total columns consumed.
+    pub fn width(&self) -> usize {
+        self.scratch0 + 10
+    }
+}
+
+/// A compiled adder: the program plus its layout for operand I/O.
+#[derive(Debug, Clone)]
+pub struct Adder {
+    pub program: Program,
+    pub layout: AdderLayout,
+}
+
+/// Build the serial single-row ripple adder.
+pub fn build_adder(geom: Geometry, n_bits: usize) -> Result<Adder> {
+    ensure!(n_bits >= 1 && n_bits <= 63, "n_bits {n_bits} out of range");
+    let layout = AdderLayout::packed(n_bits);
+    ensure!(layout.width() <= geom.n, "adder layout needs {} columns, crossbar has {}", layout.width(), geom.n);
+    let mut b = Builder::new(geom, GateSet::NotNor);
+    let scratch: Vec<usize> = (layout.scratch0..layout.scratch0 + 10).collect();
+
+    // carry[0] = 0.
+    b.init0(vec![layout.c0])?;
+    for j in 0..n_bits {
+        // Init scratch + this bit's outputs (one write cycle).
+        let mut init = scratch.clone();
+        init.push(layout.s0 + j);
+        init.push(layout.c0 + j + 1);
+        b.init1(init)?;
+        emit_fa_serial(&mut b, layout.a0 + j, layout.b0 + j, layout.c0 + j, layout.s0 + j, layout.c0 + j + 1, &scratch)?;
+    }
+    // Final carry-out is the (n+1)-th sum bit: copy c[n] -> s[n].
+    b.init1(vec![layout.s0 + n_bits, scratch[0]])?;
+    b.not(layout.c0 + n_bits, scratch[0])?;
+    b.not(scratch[0], layout.s0 + n_bits)?;
+    Ok(Adder { program: b.finish(format!("add{n_bits}_serial")), layout })
+}
+
+impl Adder {
+    /// Load operands into `row`.
+    pub fn load(&self, xb: &mut Crossbar, row: usize, a: u64, bval: u64) -> Result<()> {
+        xb.state.write_field(row, self.layout.a0, self.layout.n_bits, a)?;
+        xb.state.write_field(row, self.layout.b0, self.layout.n_bits, bval)?;
+        Ok(())
+    }
+
+    /// Read the (n+1)-bit sum from `row`.
+    pub fn read_sum(&self, xb: &Crossbar, row: usize) -> Result<u64> {
+        xb.state.read_field(row, self.layout.s0, self.layout.n_bits + 1)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Partition-aligned adder
+// ---------------------------------------------------------------------------
+
+/// Per-bit column block of the partition-aligned adder. 16 columns per bit
+/// position keeps every full-adder gate's *inputs* inside one partition
+/// (the paper's *No Split-Input* criterion, footnote 3: "adjusting the
+/// mapping algorithms") — only the carry output crosses into the next block.
+const BLOCK: usize = 16;
+const BA: usize = 0; // a_j
+const BB_: usize = 1; // b_j
+const BS: usize = 2; // s_j
+const BCIN: usize = 3; // carry into position j
+const BT: usize = 4; // 10 scratch columns, 4..14
+
+/// A partition-aligned serial adder: encodable under **every** model
+/// (baseline / unlimited / standard / minimal) because no gate has inputs
+/// in two partitions.
+#[derive(Debug, Clone)]
+pub struct AlignedAdder {
+    pub program: Program,
+    pub n_bits: usize,
+}
+
+/// Build the aligned adder for a partitioned crossbar. Requires the
+/// partition width to be a multiple of the 16-column bit block.
+pub fn build_adder_aligned(geom: Geometry, n_bits: usize) -> Result<AlignedAdder> {
+    ensure!(n_bits >= 1 && n_bits <= 63, "n_bits {n_bits} out of range");
+    ensure!(geom.m() % BLOCK == 0, "partition width {} is not a multiple of the {BLOCK}-column bit block", geom.m());
+    ensure!((n_bits + 1) * BLOCK <= geom.n, "aligned adder needs {} columns, crossbar has {}", (n_bits + 1) * BLOCK, geom.n);
+    let off = |j: usize, c: usize| j * BLOCK + c;
+    let mut b = Builder::new(geom, GateSet::NotNor);
+
+    b.init0(vec![off(0, BCIN)])?;
+    for j in 0..n_bits {
+        let scratch: Vec<usize> = (0..10).map(|t| off(j, BT + t)).collect();
+        let mut init = scratch.clone();
+        init.push(off(j, BS));
+        init.push(off(j + 1, BCIN));
+        b.init1(init)?;
+        emit_fa_serial(&mut b, off(j, BA), off(j, BB_), off(j, BCIN), off(j, BS), off(j + 1, BCIN), &scratch)?;
+    }
+    // Final carry-out becomes sum bit n.
+    b.init1(vec![off(n_bits, BS), off(n_bits, BT)])?;
+    b.not(off(n_bits, BCIN), off(n_bits, BT))?;
+    b.not(off(n_bits, BT), off(n_bits, BS))?;
+    Ok(AlignedAdder { program: b.finish(format!("add{n_bits}_aligned")), n_bits })
+}
+
+impl AlignedAdder {
+    pub fn load(&self, xb: &mut Crossbar, row: usize, a: u64, bval: u64) -> Result<()> {
+        xb.state.write_strided(row, BA, BLOCK, self.n_bits, a)?;
+        xb.state.write_strided(row, BB_, BLOCK, self.n_bits, bval)?;
+        Ok(())
+    }
+
+    pub fn read_sum(&self, xb: &Crossbar, row: usize) -> Result<u64> {
+        xb.state.read_strided(row, BS, BLOCK, self.n_bits + 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adds_exhaustive_4bit() {
+        let geom = Geometry::new(128, 1, 256).unwrap();
+        let adder = build_adder(geom, 4).unwrap();
+        let mut xb = Crossbar::new(geom, GateSet::NotNor);
+        let mut row = 0;
+        for a in 0..16u64 {
+            for b in 0..16u64 {
+                adder.load(&mut xb, row, a, b).unwrap();
+                row += 1;
+            }
+        }
+        adder.program.run(&mut xb).unwrap();
+        row = 0;
+        for a in 0..16u64 {
+            for b in 0..16u64 {
+                assert_eq!(adder.read_sum(&xb, row).unwrap(), a + b, "{a}+{b}");
+                row += 1;
+            }
+        }
+    }
+
+    #[test]
+    fn adds_random_32bit_all_rows_in_parallel() {
+        let geom = Geometry::new(256, 1, 64).unwrap();
+        let adder = build_adder(geom, 32).unwrap();
+        let mut xb = Crossbar::new(geom, GateSet::NotNor);
+        let mut expect = Vec::new();
+        let mut seed = 0x12345678u64;
+        for r in 0..64 {
+            seed = seed.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let a = seed >> 32;
+            seed = seed.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let b = seed >> 32;
+            adder.load(&mut xb, r, a, b).unwrap();
+            expect.push(a + b);
+        }
+        adder.program.run(&mut xb).unwrap();
+        for r in 0..64 {
+            assert_eq!(adder.read_sum(&xb, r).unwrap(), expect[r], "row {r}");
+        }
+    }
+
+    /// Experiment E11: the 32-bit serial adder's latency is in the
+    /// few-hundred-cycle regime of [18] (320 cycles there; N·13+3 here).
+    #[test]
+    fn latency_matches_formula() {
+        let geom = Geometry::new(1024, 1, 8).unwrap();
+        let adder = build_adder(geom, 32).unwrap();
+        let st = adder.program.stats();
+        assert_eq!(st.cycles, 32 * 13 + 4);
+        assert_eq!(st.gate_cycles, 32 * 12 + 2);
+        assert!(st.cycles < 500, "serial addition should stay in the ~hundreds regime");
+    }
+}

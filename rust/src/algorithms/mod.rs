@@ -1,0 +1,19 @@
+//! PIM algorithms as micro-op programs over the partitioned crossbar.
+//!
+//! * [`program`] — the program IR, row layouts, and the builder API.
+//! * [`addition`] — NOR full adders and serial single-row N-bit addition.
+//! * [`mult_serial`] — the optimized serial multiplier baseline (Section 5).
+//! * [`multpim`] — the MultPIM-style partitioned multiplier [14]: one bit
+//!   position per partition, log-time broadcast, constant-time shift,
+//!   parallel carry-save full adders.
+//! * [`sort`] — partitioned bitonic sorting (the paper's intro cites a 14×
+//!   speedup with 16 partitions [1]).
+
+pub mod addition;
+pub mod felix;
+pub mod mult_serial;
+pub mod multpim;
+pub mod program;
+pub mod sort;
+
+pub use program::{Program, ProgramStats};

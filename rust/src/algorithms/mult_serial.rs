@@ -1,0 +1,182 @@
+//! The optimized serial single-row multiplier — the baseline of Figure 6.
+//!
+//! Shift-add with a sliding accumulator: iteration `i` computes the partial
+//! product `A · b_i` and ripple-adds it into the accumulator, writing each
+//! full-adder sum one column "down" so the accumulator shift costs no
+//! physical copies. One gate per cycle (no partitions needed): `O(N²)` gates
+//! and cycles, as in [9].
+
+use crate::algorithms::program::{emit_fa_serial, Builder, Program};
+use crate::crossbar::crossbar::Crossbar;
+use crate::crossbar::gate::GateSet;
+use crate::crossbar::geometry::Geometry;
+use anyhow::{ensure, Result};
+
+/// Column layout of the serial multiplier within a row.
+#[derive(Debug, Clone, Copy)]
+pub struct SerialMultLayout {
+    pub n_bits: usize,
+    pub a0: usize,
+    pub b0: usize,
+    /// Precomputed complements of A.
+    pub na0: usize,
+    /// Complement of the current multiplier bit (reused each iteration).
+    pub nb: usize,
+    /// Partial-product bit (reused for every position).
+    pub pp: usize,
+    /// Accumulator high half (N columns, rewritten every iteration).
+    pub h0: usize,
+    /// Carry chain (N+1 columns, rewritten every iteration).
+    pub c0: usize,
+    /// Product (2N columns).
+    pub p0: usize,
+    /// 10 scratch columns for the full adder.
+    pub scratch0: usize,
+}
+
+impl SerialMultLayout {
+    pub fn packed(n_bits: usize) -> Self {
+        let a0 = 0;
+        let b0 = a0 + n_bits;
+        let na0 = b0 + n_bits;
+        let nb = na0 + n_bits;
+        let pp = nb + 1;
+        let h0 = pp + 1;
+        let c0 = h0 + n_bits;
+        let p0 = c0 + n_bits + 1;
+        let scratch0 = p0 + 2 * n_bits;
+        Self { n_bits, a0, b0, na0, nb, pp, h0, c0, p0, scratch0 }
+    }
+
+    pub fn width(&self) -> usize {
+        self.scratch0 + 10
+    }
+}
+
+/// A compiled serial multiplier.
+#[derive(Debug, Clone)]
+pub struct SerialMultiplier {
+    pub program: Program,
+    pub layout: SerialMultLayout,
+}
+
+/// Build the optimized serial `n_bits × n_bits → 2·n_bits` multiplier.
+pub fn build_serial_multiplier(geom: Geometry, n_bits: usize) -> Result<SerialMultiplier> {
+    ensure!(n_bits >= 2 && n_bits <= 32, "n_bits {n_bits} out of range");
+    let l = SerialMultLayout::packed(n_bits);
+    ensure!(l.width() <= geom.n, "serial multiplier needs {} columns, crossbar has {}", l.width(), geom.n);
+    let n = n_bits;
+    let mut b = Builder::new(geom, GateSet::NotNor);
+    let scratch: Vec<usize> = (l.scratch0..l.scratch0 + 10).collect();
+
+    // Prolog: NA = NOT(A); accumulator (sliding, lives in h) starts at 0.
+    b.init1((0..n).map(|j| l.na0 + j).collect())?;
+    for j in 0..n {
+        b.not(l.a0 + j, l.na0 + j)?;
+    }
+    let h_cols: Vec<usize> = (0..n).map(|j| l.h0 + j).collect();
+    b.init0(h_cols)?;
+
+    for i in 0..n {
+        // nb = NOT(b_i); carry[0] = 0.
+        b.init1(vec![l.nb])?;
+        b.not(l.b0 + i, l.nb)?;
+        b.init0(vec![l.c0])?;
+        for j in 0..n {
+            // FA position j: sum lands pre-shifted — j=0 retires directly to
+            // the product, j>0 writes h[j-1] (already consumed by step j-1).
+            let s_out = if j == 0 { l.p0 + i } else { l.h0 + j - 1 };
+            let mut init = scratch.clone();
+            init.extend([l.pp, s_out, l.c0 + j + 1]);
+            b.init1(init)?;
+            b.nor(l.na0 + j, l.nb, l.pp)?; // pp = a_j AND b_i
+            emit_fa_serial(&mut b, l.h0 + j, l.pp, l.c0 + j, s_out, l.c0 + j + 1, &scratch)?;
+        }
+        // Top accumulator bit receives the final carry: h[n-1] = c[n].
+        b.init1(vec![l.h0 + n - 1, scratch[0]])?;
+        b.not(l.c0 + n, scratch[0])?;
+        b.not(scratch[0], l.h0 + n - 1)?;
+    }
+
+    // Epilog: the accumulator holds the high half; copy h -> p[n..2n]
+    // through double NOTs (scratch re-initialized between positions).
+    b.init1((0..n).map(|j| l.p0 + n + j).collect())?;
+    for j in 0..n {
+        b.init1(vec![scratch[0]])?;
+        b.not(l.h0 + j, scratch[0])?;
+        b.not(scratch[0], l.p0 + n + j)?;
+    }
+    Ok(SerialMultiplier { program: b.finish(format!("mult{n}_serial")), layout: l })
+}
+
+impl SerialMultiplier {
+    /// Load operands into `row`.
+    pub fn load(&self, xb: &mut Crossbar, row: usize, a: u64, bval: u64) -> Result<()> {
+        ensure!(a < 1 << self.layout.n_bits && bval < 1 << self.layout.n_bits, "operand exceeds {} bits", self.layout.n_bits);
+        xb.state.write_field(row, self.layout.a0, self.layout.n_bits, a)?;
+        xb.state.write_field(row, self.layout.b0, self.layout.n_bits, bval)?;
+        Ok(())
+    }
+
+    /// Read the 2N-bit product from `row`.
+    pub fn read_product(&self, xb: &Crossbar, row: usize) -> Result<u64> {
+        xb.state.read_field(row, self.layout.p0, 2 * self.layout.n_bits)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn multiplies_exhaustive_4bit() {
+        let geom = Geometry::new(256, 1, 256).unwrap();
+        let mult = build_serial_multiplier(geom, 4).unwrap();
+        let mut xb = Crossbar::new(geom, GateSet::NotNor);
+        let mut row = 0;
+        for a in 0..16u64 {
+            for b in 0..16u64 {
+                mult.load(&mut xb, row, a, b).unwrap();
+                row += 1;
+            }
+        }
+        mult.program.run(&mut xb).unwrap();
+        row = 0;
+        for a in 0..16u64 {
+            for b in 0..16u64 {
+                assert_eq!(mult.read_product(&xb, row).unwrap(), a * b, "{a}*{b}");
+                row += 1;
+            }
+        }
+    }
+
+    #[test]
+    fn multiplies_random_8bit() {
+        let geom = Geometry::new(256, 1, 64).unwrap();
+        let mult = build_serial_multiplier(geom, 8).unwrap();
+        let mut xb = Crossbar::new(geom, GateSet::NotNor);
+        let mut expect = Vec::new();
+        let mut seed = 42u64;
+        for r in 0..64 {
+            seed = seed.wrapping_mul(6364136223846793005).wrapping_add(1);
+            let a = (seed >> 33) & 0xff;
+            let b = (seed >> 17) & 0xff;
+            mult.load(&mut xb, r, a, b).unwrap();
+            expect.push(a * b);
+        }
+        mult.program.run(&mut xb).unwrap();
+        for r in 0..64 {
+            assert_eq!(mult.read_product(&xb, r).unwrap(), expect[r], "row {r}");
+        }
+    }
+
+    /// The baseline is O(N²): ~14 cycles per bit-position per iteration.
+    #[test]
+    fn latency_is_quadratic() {
+        let geom = Geometry::new(1024, 1, 8).unwrap();
+        let m8 = build_serial_multiplier(geom, 8).unwrap().program.stats().cycles;
+        let m16 = build_serial_multiplier(geom, 16).unwrap().program.stats().cycles;
+        let ratio = m16 as f64 / m8 as f64;
+        assert!(ratio > 3.0 && ratio < 5.0, "expected ~4x scaling, got {ratio} ({m8} -> {m16})");
+    }
+}

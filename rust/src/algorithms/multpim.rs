@@ -1,0 +1,384 @@
+//! MultPIM-style partitioned multiplication [14]: the paper's Section 5 case
+//! study.
+//!
+//! One product bit-position per partition. Each iteration broadcasts one
+//! multiplier bit to all partitions (log₂k cycles — MultPIM's logarithmic
+//! broadcast), forms all partial-product bits at once, carry-save adds them
+//! with a **parallel** full adder (one FA per partition per cycle), and
+//! shifts the sum vector one partition down in constant time (MultPIM's
+//! two-phase constant-time shift). A final serial pass resolves the
+//! carry-save accumulator into the product's high half.
+//!
+//! Two variants:
+//!
+//! * [`MultPimVariant::Plain`] — every cycle is **minimal-model legal** by
+//!   construction (uniform distance + periodic): double-NOT broadcast tree.
+//! * [`MultPimVariant::Fast`] — single-NOT broadcast tree: each hop
+//!   complements, so partitions end up holding `b` or `¬b` according to the
+//!   parity of their tree depth (= popcount parity). The parity fix-up and
+//!   partial-product cycles operate on *aperiodic* partition subsets —
+//!   standard-legal, but **not** minimal-legal (they legalize into several
+//!   periodic runs, reproducing the paper's standard→minimal latency gap).
+//!   Under the unlimited model the scheduler ([`crate::isa` packer]) merges
+//!   independent subset cycles with different intra indices, reproducing the
+//!   unlimited→standard gap.
+
+use crate::algorithms::program::{emit_fa_parallel, emit_fa_serial, Builder, FaIntra, Program};
+use crate::crossbar::crossbar::Crossbar;
+use crate::crossbar::gate::GateSet;
+use crate::crossbar::geometry::Geometry;
+use crate::isa::operation::GateOp;
+use anyhow::{ensure, Result};
+
+/// Intra-partition column roles (identical in every partition — the paper's
+/// *Identical Indices* criterion holds by construction).
+pub mod intra {
+    pub const A: usize = 0; // multiplicand bit a_j
+    pub const NA: usize = 1; // ¬a_j (precomputed)
+    pub const B: usize = 2; // multiplier bit b_j
+    pub const BB: usize = 3; // broadcast slot
+    pub const NB: usize = 4; // ¬broadcast (parity fix-up in Fast)
+    pub const PP: usize = 5; // partial-product bit
+    pub const S: usize = 6; // carry-save sum (weight i+j)
+    pub const C: usize = 7; // carry (weight i+j)
+    pub const SN: usize = 8; // new sum
+    pub const CN: usize = 9; // new carry
+    pub const T0: usize = 10; // FA scratch 10..=19
+    pub const TS: usize = 20; // shift landing
+    pub const TC: usize = 21; // carry-copy scratch
+    pub const NP: usize = 22; // retired product bit, complemented
+    // The epilog/final-add phases reuse columns that are dead once the main
+    // loop ends — keeping the algorithmic area (Figure 6(c)) tight:
+    pub const P: usize = PP; // product low bit p_j (PP dead after main loop)
+    pub const H: usize = BB; // product high bit h_j (broadcast slot dead)
+    pub const RT: usize = TS; // final-add carry-move scratch
+    pub const R: usize = NB; // final-add running carry
+    pub const RN: usize = TC; // final-add carry out
+    pub const COLS: usize = 23;
+}
+
+/// Broadcast/partial-product strategy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MultPimVariant {
+    /// Minimal-model-legal throughout (double-NOT broadcast).
+    Plain,
+    /// Single-NOT broadcast + parity fix-up (standard-legal).
+    Fast,
+}
+
+/// A compiled partitioned multiplier.
+#[derive(Debug, Clone)]
+pub struct MultPim {
+    pub program: Program,
+    pub n_bits: usize,
+    pub variant: MultPimVariant,
+}
+
+fn fa_intra() -> FaIntra {
+    FaIntra {
+        a: intra::S,
+        b: intra::C,
+        cin: intra::PP,
+        s: intra::SN,
+        cout: intra::CN,
+        scratch: [10, 11, 12, 13, 14, 15, 16, 17, 18, 19],
+    }
+}
+
+/// Build the MultPIM-style multiplier: `n_bits` must equal the partition
+/// count `k` (one bit position per partition, as in MultPIM's evaluation:
+/// 32-bit multiplication on 32 partitions).
+pub fn build_multpim(geom: Geometry, variant: MultPimVariant) -> Result<MultPim> {
+    let n = geom.k;
+    ensure!(n >= 4, "need at least 4 partitions/bits");
+    ensure!(geom.m() >= intra::COLS, "partition width {} below the {}-column MultPIM layout", geom.m(), intra::COLS);
+    let k = geom.k;
+    let lk = geom.log2_k();
+    let all: Vec<usize> = (0..k).collect();
+    let col = |p: usize, i: usize| geom.col(p, i);
+    let across = |i: usize| -> Vec<usize> { (0..k).map(|p| col(p, i)).collect() };
+
+    let mut b = Builder::new(geom, GateSet::NotNor);
+
+    // ---- Prolog: NA = NOT(A); accumulators start at zero; NP slots ready.
+    let mut init: Vec<usize> = across(intra::NA);
+    init.extend(across(intra::NP));
+    b.init1(init)?;
+    b.concurrent(all.iter().map(|&p| GateOp::not(col(p, intra::A), col(p, intra::NA))).collect())?;
+    let mut zeros = across(intra::S);
+    zeros.extend(across(intra::C));
+    b.init0(zeros)?;
+
+    // Parity classes of the Fast broadcast tree.
+    let even: Vec<usize> = (0..k).filter(|p| p.count_ones() % 2 == 0).collect();
+    let odd: Vec<usize> = (0..k).filter(|p| p.count_ones() % 2 == 1).collect();
+
+    // ---- Main loop: one iteration per multiplier bit.
+    for i in 0..n {
+        // Phase-1 initialization (single write cycle).
+        let mut init: Vec<usize> = Vec::new();
+        for &ix in &[intra::BB, intra::NB, intra::PP, intra::SN, intra::CN] {
+            init.extend(across(ix));
+        }
+        for t in 0..10 {
+            init.extend(across(intra::T0 + t));
+        }
+        if variant == MultPimVariant::Plain {
+            init.extend(across(intra::TS));
+        }
+        b.init1(init)?;
+
+        match variant {
+            MultPimVariant::Plain => {
+                // Fetch b_i into partition 0 (two NOTs via TS).
+                b.not(col(i, intra::B), col(0, intra::TS))?;
+                b.not(col(0, intra::TS), col(0, intra::BB))?;
+                // Reverse-doubling broadcast, two NOTs per stage.
+                for t in 0..lk {
+                    let stride = k >> t;
+                    let dist = k >> (t + 1);
+                    let hop: Vec<GateOp> = (0..(1 << t))
+                        .map(|j| GateOp::not(col(j * stride, intra::BB), col(j * stride + dist, intra::TS)))
+                        .collect();
+                    b.concurrent(hop)?;
+                    let land: Vec<GateOp> = (0..(1 << t))
+                        .map(|j| GateOp::not(col(j * stride + dist, intra::TS), col(j * stride + dist, intra::BB)))
+                        .collect();
+                    b.concurrent(land)?;
+                }
+                // NB = NOT(BB); PP = a AND b = NOR(NA, NB).
+                b.concurrent(all.iter().map(|&p| GateOp::not(col(p, intra::BB), col(p, intra::NB))).collect())?;
+                b.concurrent(all.iter().map(|&p| GateOp::nor(col(p, intra::NA), col(p, intra::NB), col(p, intra::PP))).collect())?;
+            }
+            MultPimVariant::Fast => {
+                // Fetch ¬b_i into partition 0 with a single NOT.
+                b.not(col(i, intra::B), col(0, intra::BB))?;
+                // Single-NOT tree: each hop complements.
+                for t in 0..lk {
+                    let stride = k >> t;
+                    let dist = k >> (t + 1);
+                    let hop: Vec<GateOp> = (0..(1 << t))
+                        .map(|j| GateOp::not(col(j * stride, intra::BB), col(j * stride + dist, intra::BB)))
+                        .collect();
+                    b.concurrent(hop)?;
+                }
+                // Even-parity partitions hold ¬b, odd hold b: fix up odd,
+                // then form partial products per parity class. These subset
+                // cycles are aperiodic — standard-legal, minimal-illegal.
+                b.concurrent(odd.iter().map(|&p| GateOp::not(col(p, intra::BB), col(p, intra::NB))).collect())?;
+                b.concurrent(even.iter().map(|&p| GateOp::nor(col(p, intra::NA), col(p, intra::BB), col(p, intra::PP))).collect())?;
+                b.concurrent(odd.iter().map(|&p| GateOp::nor(col(p, intra::NA), col(p, intra::NB), col(p, intra::PP))).collect())?;
+            }
+        }
+
+        // Carry-save add: (S, C, PP) -> SN, CN in every partition at once.
+        emit_fa_parallel(&mut b, &all, fa_intra())?;
+
+        // Phase-2 initialization: shift/copy targets (S and C re-init after
+        // the FA consumed them).
+        let mut init2: Vec<usize> = Vec::new();
+        for &ix in &[intra::TC, intra::TS, intra::S, intra::C] {
+            init2.extend(across(ix));
+        }
+        b.init1(init2)?;
+
+        // Retire p_i = SN_0, stored complemented (resolved in the epilog).
+        b.push(crate::isa::operation::Operation::serial(GateOp::not(col(0, intra::SN), col(i, intra::NP))))?;
+
+        // Carry copy CN -> C (two in-place NOTs, all partitions).
+        b.concurrent(all.iter().map(|&p| GateOp::not(col(p, intra::CN), col(p, intra::TC))).collect())?;
+        b.concurrent(all.iter().map(|&p| GateOp::not(col(p, intra::TC), col(p, intra::C))).collect())?;
+
+        // Constant-time shift S_j <- SN_{j+1} (MultPIM's two-phase shift):
+        // odd sources, then even sources, then the parallel landing NOT.
+        // TS_{k-1} keeps its init value 1, so S_{k-1} = NOT(1) = 0 shifts in.
+        let phase_a: Vec<GateOp> = (1..k).step_by(2).map(|j| GateOp::not(col(j, intra::SN), col(j - 1, intra::TS))).collect();
+        b.concurrent(phase_a)?;
+        let phase_b: Vec<GateOp> = (2..k).step_by(2).map(|j| GateOp::not(col(j, intra::SN), col(j - 1, intra::TS))).collect();
+        b.concurrent(phase_b)?;
+        b.concurrent(all.iter().map(|&p| GateOp::not(col(p, intra::TS), col(p, intra::S))).collect())?;
+    }
+
+    // ---- Epilog: resolve retired complements into the product low half.
+    b.init1(across(intra::P))?;
+    b.concurrent(all.iter().map(|&p| GateOp::not(col(p, intra::NP), col(p, intra::P))).collect())?;
+
+    // ---- Final add: high half H = S + C with a serial carry ripple.
+    b.init0(vec![col(0, intra::R)])?;
+    for j in 0..n {
+        let mut init: Vec<usize> = (0..10).map(|t| col(j, intra::T0 + t)).collect();
+        init.push(col(j, intra::H));
+        init.push(col(j, intra::RN));
+        b.init1(init)?;
+        let scratch: Vec<usize> = (0..10).map(|t| col(j, intra::T0 + t)).collect();
+        emit_fa_serial(&mut b, col(j, intra::S), col(j, intra::C), col(j, intra::R), col(j, intra::H), col(j, intra::RN), &scratch)?;
+        if j + 1 < n {
+            b.init1(vec![col(j + 1, intra::RT), col(j + 1, intra::R)])?;
+            b.not(col(j, intra::RN), col(j + 1, intra::RT))?;
+            b.not(col(j + 1, intra::RT), col(j + 1, intra::R))?;
+        }
+    }
+
+    let name = match variant {
+        MultPimVariant::Plain => format!("multpim{n}_plain"),
+        MultPimVariant::Fast => format!("multpim{n}_fast"),
+    };
+    Ok(MultPim { program: b.finish(name), n_bits: n, variant })
+}
+
+impl MultPim {
+    /// Load operands into `row`: bit `j` of each operand lands in
+    /// partition `j` (MultPIM's strided layout).
+    pub fn load(&self, xb: &mut Crossbar, row: usize, a: u64, bval: u64) -> Result<()> {
+        ensure!(self.n_bits >= 64 || (a < 1 << self.n_bits && bval < 1 << self.n_bits), "operand exceeds {} bits", self.n_bits);
+        let m = xb.geom.m();
+        xb.state.write_strided(row, intra::A, m, self.n_bits, a)?;
+        xb.state.write_strided(row, intra::B, m, self.n_bits, bval)?;
+        Ok(())
+    }
+
+    /// Read the 2N-bit product from `row`: low bits from the `P` stripe,
+    /// high bits from the `H` stripe.
+    pub fn read_product(&self, xb: &Crossbar, row: usize) -> Result<u64> {
+        let m = xb.geom.m();
+        let lo = xb.state.read_strided(row, intra::P, m, self.n_bits)?;
+        let hi = xb.state.read_strided(row, intra::H, m, self.n_bits)?;
+        Ok(lo | (hi << self.n_bits))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::models::ModelKind;
+
+    #[test]
+    fn multiplies_exhaustive_4bit_both_variants() {
+        let geom = Geometry::new(128, 4, 256).unwrap();
+        for variant in [MultPimVariant::Plain, MultPimVariant::Fast] {
+            let mult = build_multpim(geom, variant).unwrap();
+            let mut xb = Crossbar::new(geom, GateSet::NotNor);
+            let mut row = 0;
+            for a in 0..16u64 {
+                for b in 0..16u64 {
+                    mult.load(&mut xb, row, a, b).unwrap();
+                    row += 1;
+                }
+            }
+            mult.program.run(&mut xb).unwrap();
+            row = 0;
+            for a in 0..16u64 {
+                for b in 0..16u64 {
+                    assert_eq!(mult.read_product(&xb, row).unwrap(), a * b, "{a}*{b} ({variant:?})");
+                    row += 1;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn multiplies_random_8bit() {
+        let geom = Geometry::new(256, 8, 64).unwrap();
+        for variant in [MultPimVariant::Plain, MultPimVariant::Fast] {
+            let mult = build_multpim(geom, variant).unwrap();
+            let mut xb = Crossbar::new(geom, GateSet::NotNor);
+            let mut expect = Vec::new();
+            let mut seed = 7u64;
+            for r in 0..64 {
+                seed = seed.wrapping_mul(6364136223846793005).wrapping_add(1);
+                let a = (seed >> 33) & 0xff;
+                let b = (seed >> 17) & 0xff;
+                mult.load(&mut xb, r, a, b).unwrap();
+                expect.push(a * b);
+            }
+            mult.program.run(&mut xb).unwrap();
+            for r in 0..64 {
+                assert_eq!(mult.read_product(&xb, r).unwrap(), expect[r], "row {r} ({variant:?})");
+            }
+        }
+    }
+
+    /// The Plain variant is minimal-model legal cycle-by-cycle; Fast is
+    /// standard-legal but NOT minimal-legal (its parity subsets are
+    /// aperiodic) — the paper's Section 5 structure.
+    #[test]
+    fn variant_model_legality() {
+        let geom = Geometry::new(256, 8, 8).unwrap();
+        let plain = build_multpim(geom, MultPimVariant::Plain).unwrap();
+        plain.program.check_model(ModelKind::Minimal).unwrap();
+        plain.program.check_model(ModelKind::Standard).unwrap();
+
+        let fast = build_multpim(geom, MultPimVariant::Fast).unwrap();
+        fast.program.check_model(ModelKind::Standard).unwrap();
+        assert!(fast.program.check_model(ModelKind::Minimal).is_err());
+    }
+
+    /// Section 5 end-to-end: legalizing the (minimal-illegal) Fast variant
+    /// into the minimal model must preserve the computed products, and the
+    /// packed unlimited variant must too.
+    #[test]
+    fn legalized_and_packed_variants_still_multiply() {
+        use crate::crossbar::gate::GateSet;
+        use crate::isa::lower::LegalizeConfig;
+        use crate::isa::schedule::pack_program;
+
+        let geom = Geometry::new(256, 8, 16).unwrap();
+        let fast = build_multpim(geom, MultPimVariant::Fast).unwrap();
+
+        let (legal, stats) = fast.program.legalize(ModelKind::Minimal, &LegalizeConfig::default()).unwrap();
+        assert!(stats.ops_out > stats.ops_in, "legalization must split aperiodic cycles");
+        legal.check_model(ModelKind::Minimal).unwrap();
+
+        let (packed, pstats) = pack_program(&fast.program.ops, ModelKind::Unlimited, &geom, GateSet::NotNor);
+        assert!(pstats.merges > 0, "packer must find mergeable cycles");
+
+        for (name, ops) in [("legalized", &legal.ops), ("packed", &packed)] {
+            let mut xb = crate::crossbar::crossbar::Crossbar::new(geom, GateSet::NotNor);
+            let cases: Vec<(u64, u64)> = (0..16).map(|i| ((i * 31 + 4) % 256, (i * 57 + 9) % 256)).collect();
+            for (r, &(a, b)) in cases.iter().enumerate() {
+                fast.load(&mut xb, r, a, b).unwrap();
+            }
+            xb.execute_all(ops).unwrap();
+            for (r, &(a, b)) in cases.iter().enumerate() {
+                assert_eq!(fast.read_product(&xb, r).unwrap(), a * b, "{name} row {r}");
+            }
+        }
+    }
+
+    /// The three model programs executed through their *own* wire formats
+    /// (encode → decode → periphery → execute) still multiply correctly.
+    #[test]
+    fn all_models_multiply_via_messages() {
+        use crate::crossbar::gate::GateSet;
+
+        for (model, variant) in [
+            (ModelKind::Minimal, MultPimVariant::Plain),
+            (ModelKind::Standard, MultPimVariant::Fast),
+        ] {
+            let geom = Geometry::new(256, 8, 8).unwrap();
+            let mult = build_multpim(geom, variant).unwrap();
+            let encoded = mult.program.encode_for(model).unwrap();
+            let mut xb = crate::crossbar::crossbar::Crossbar::new(geom, GateSet::NotNor);
+            for r in 0..8u64 {
+                mult.load(&mut xb, r as usize, 200 + r, 17 * r + 3).unwrap();
+            }
+            encoded.run(&mut xb).unwrap();
+            for r in 0..8u64 {
+                assert_eq!(mult.read_product(&xb, r as usize).unwrap(), (200 + r) * (17 * r + 3), "{}", model.name());
+            }
+        }
+    }
+
+    /// Partitioned multiplication is O(N log N + N) cycles vs the serial
+    /// baseline's O(N²): the speedup must grow with N.
+    #[test]
+    fn speedup_scales() {
+        let g8 = Geometry::new(256, 8, 8).unwrap();
+        let g16 = Geometry::new(512, 16, 8).unwrap();
+        let par8 = build_multpim(g8, MultPimVariant::Plain).unwrap().program.stats().cycles;
+        let par16 = build_multpim(g16, MultPimVariant::Plain).unwrap().program.stats().cycles;
+        let ser8 = crate::algorithms::mult_serial::build_serial_multiplier(Geometry::new(256, 1, 8).unwrap(), 8).unwrap().program.stats().cycles;
+        let ser16 = crate::algorithms::mult_serial::build_serial_multiplier(Geometry::new(512, 1, 8).unwrap(), 16).unwrap().program.stats().cycles;
+        assert!((ser16 as f64 / par16 as f64) > (ser8 as f64 / par8 as f64), "speedup should grow with N");
+    }
+}

@@ -1,0 +1,406 @@
+//! Program IR: a named sequence of operations plus the builder API the
+//! algorithm constructors use, and per-program architectural statistics.
+
+use crate::crossbar::crossbar::{init_message_bits, Crossbar};
+use crate::crossbar::gate::GateSet;
+use crate::crossbar::geometry::Geometry;
+use crate::isa::encode::{self, message_bits};
+use crate::isa::lower::{legalize_program, LegalizeConfig, LegalizeStats};
+use crate::isa::models::ModelKind;
+use crate::isa::operation::{GateOp, Operation};
+use anyhow::Result;
+
+/// A compiled PIM program: one entry per simulated cycle.
+#[derive(Debug, Clone)]
+pub struct Program {
+    pub name: String,
+    pub geom: Geometry,
+    pub gate_set: GateSet,
+    pub ops: Vec<Operation>,
+    /// Columns ever read, written or initialized — the *algorithmic area*
+    /// (memristor footprint per row) of Figure 6(c).
+    pub used_cols: Vec<usize>,
+}
+
+/// Architectural cost summary of a program.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ProgramStats {
+    /// Latency in cycles (gate cycles + init cycles) — Figure 6(a).
+    pub cycles: usize,
+    pub gate_cycles: usize,
+    pub init_cycles: usize,
+    /// Total gates executed — the paper's energy proxy (Section 5.4).
+    pub gates: usize,
+    /// Memristors touched per row — Figure 6(c).
+    pub footprint_cols: usize,
+}
+
+impl Program {
+    pub fn stats(&self) -> ProgramStats {
+        let mut s = ProgramStats { footprint_cols: self.used_cols.len(), ..Default::default() };
+        for op in &self.ops {
+            s.cycles += 1;
+            match op {
+                Operation::Init { .. } => s.init_cycles += 1,
+                Operation::Gates(gs) => {
+                    s.gate_cycles += 1;
+                    s.gates += gs.len();
+                }
+            }
+        }
+        s
+    }
+
+    /// Control traffic (bits) to stream this program under `model`:
+    /// gate cycles cost one model message each, init cycles one write
+    /// command each.
+    pub fn control_bits(&self, model: ModelKind) -> u64 {
+        let gate_msg = message_bits(model, &self.geom) as u64;
+        let init_msg = init_message_bits(&self.geom) as u64;
+        self.ops
+            .iter()
+            .map(|op| match op {
+                Operation::Init { .. } => init_msg,
+                Operation::Gates(_) => gate_msg,
+            })
+            .sum()
+    }
+
+    /// Execute directly on a crossbar (abstract-operation path).
+    pub fn run(&self, xb: &mut Crossbar) -> Result<()> {
+        xb.execute_all(&self.ops)
+    }
+
+    /// Execute through the full control pipeline: encode each cycle as a
+    /// wire message for `model`, decode through the periphery, execute.
+    /// This is the production path; it also meters control traffic.
+    pub fn run_via_messages(&self, xb: &mut Crossbar, model: ModelKind) -> Result<()> {
+        for op in &self.ops {
+            match op {
+                Operation::Init { cols, value } => xb.execute_init(cols, *value)?,
+                Operation::Gates(_) => {
+                    let bits = encode::encode(model, op, &self.geom)?;
+                    xb.execute_message(model, &bits)?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Pre-encode every cycle's wire message once (the controller encodes a
+    /// compiled program a single time and then streams it to every batch —
+    /// see EXPERIMENTS.md §Perf).
+    pub fn encode_for(&self, model: ModelKind) -> Result<EncodedProgram> {
+        let mut steps = Vec::with_capacity(self.ops.len());
+        for op in &self.ops {
+            steps.push(match op {
+                Operation::Init { cols, value } => EncodedStep::Init { cols: cols.clone(), value: *value },
+                Operation::Gates(_) => EncodedStep::Gate(encode::encode(model, op, &self.geom)?),
+            });
+        }
+        Ok(EncodedProgram { model, steps })
+    }
+
+    /// Rewrite into a `model`-legal program (Section 5's "alternatives").
+    pub fn legalize(&self, model: ModelKind, cfg: &LegalizeConfig) -> Result<(Program, LegalizeStats)> {
+        let (ops, stats) = legalize_program(&self.ops, model, &self.geom, self.gate_set, cfg)?;
+        let mut p = Program {
+            name: format!("{}@{}", self.name, model.name()),
+            geom: self.geom,
+            gate_set: self.gate_set,
+            ops,
+            used_cols: self.used_cols.clone(),
+        };
+        // Legalization may touch scratch columns; recompute the footprint.
+        p.recompute_used();
+        Ok((p, stats))
+    }
+
+    /// Verify every cycle is legal under `model`.
+    pub fn check_model(&self, model: ModelKind) -> Result<()> {
+        for (i, op) in self.ops.iter().enumerate() {
+            model
+                .check(op, &self.geom, self.gate_set)
+                .map_err(|e| anyhow::anyhow!("cycle {i} of {} illegal under {}: {e}", self.name, model.name()))?;
+        }
+        Ok(())
+    }
+
+    fn recompute_used(&mut self) {
+        let mut used = vec![false; self.geom.n];
+        for op in &self.ops {
+            match op {
+                Operation::Init { cols, .. } => cols.iter().for_each(|&c| used[c] = true),
+                Operation::Gates(gs) => {
+                    for g in gs {
+                        used[g.out] = true;
+                        g.ins.iter().for_each(|&c| used[c] = true);
+                    }
+                }
+            }
+        }
+        self.used_cols = used.iter().enumerate().filter_map(|(c, &u)| u.then_some(c)).collect();
+    }
+}
+
+/// One pre-encoded wire-format cycle.
+#[derive(Debug, Clone)]
+pub enum EncodedStep {
+    /// A gate cycle's control message.
+    Gate(encode::BitVec),
+    /// An initialization write (travels on the write path).
+    Init { cols: Vec<usize>, value: bool },
+}
+
+/// A program encoded once for a model's wire format, ready to stream.
+#[derive(Debug, Clone)]
+pub struct EncodedProgram {
+    pub model: ModelKind,
+    pub steps: Vec<EncodedStep>,
+}
+
+impl EncodedProgram {
+    /// Stream all messages into a crossbar (decode + periphery + execute,
+    /// with control-traffic metering).
+    pub fn run(&self, xb: &mut Crossbar) -> Result<()> {
+        for step in &self.steps {
+            match step {
+                EncodedStep::Gate(bits) => xb.execute_message(self.model, bits)?,
+                EncodedStep::Init { cols, value } => xb.execute_init(cols, *value)?,
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Incremental program constructor used by the algorithm builders.
+#[derive(Debug, Clone)]
+pub struct Builder {
+    pub geom: Geometry,
+    pub gate_set: GateSet,
+    ops: Vec<Operation>,
+    used: Vec<bool>,
+}
+
+impl Builder {
+    pub fn new(geom: Geometry, gate_set: GateSet) -> Self {
+        Self { geom, gate_set, ops: Vec::new(), used: vec![false; geom.n] }
+    }
+
+    /// Append a validated operation.
+    pub fn push(&mut self, op: Operation) -> Result<()> {
+        op.validate(&self.geom, self.gate_set)?;
+        match &op {
+            Operation::Init { cols, .. } => cols.iter().for_each(|&c| self.used[c] = true),
+            Operation::Gates(gs) => {
+                for g in gs {
+                    self.used[g.out] = true;
+                    g.ins.iter().for_each(|&c| self.used[c] = true);
+                }
+            }
+        }
+        self.ops.push(op);
+        Ok(())
+    }
+
+    /// Serial two-input NOR.
+    pub fn nor(&mut self, a: usize, b: usize, out: usize) -> Result<()> {
+        self.push(Operation::serial(GateOp::nor(a, b, out)))
+    }
+
+    /// Serial NOT.
+    pub fn not(&mut self, a: usize, out: usize) -> Result<()> {
+        self.push(Operation::serial(GateOp::not(a, out)))
+    }
+
+    /// Concurrent gates (one cycle).
+    pub fn concurrent(&mut self, gates: Vec<GateOp>) -> Result<()> {
+        self.push(Operation::Gates(gates))
+    }
+
+    /// Initialization to logical one (the MAGIC gate precondition).
+    pub fn init1(&mut self, cols: Vec<usize>) -> Result<()> {
+        self.push(Operation::Init { cols, value: true })
+    }
+
+    /// Initialization to logical zero.
+    pub fn init0(&mut self, cols: Vec<usize>) -> Result<()> {
+        self.push(Operation::Init { cols, value: false })
+    }
+
+    pub fn len(&self) -> usize {
+        self.ops.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+
+    pub fn finish(self, name: impl Into<String>) -> Program {
+        let used_cols = self.used.iter().enumerate().filter_map(|(c, &u)| u.then_some(c)).collect();
+        Program { name: name.into(), geom: self.geom, gate_set: self.gate_set, ops: self.ops, used_cols }
+    }
+}
+
+/// Emit a 12-gate NOR/NOT full adder: `(s, cout) = a + b + cin`.
+///
+/// `scratch` must provide 10 distinct columns; the caller must have
+/// initialized `scratch`, `s` and `cout` to logical one beforehand (batch
+/// the inits — initialization is a single write cycle for any column set).
+///
+/// Gate derivation (all MAGIC NOT/NOR):
+/// ```text
+/// t1 = NOR(a,b)    t2 = NOR(a,t1)   t3 = NOR(b,t1)   x  = NOR(t2,t3)  // x = XNOR(a,b)
+/// u1 = NOR(x,cin)  u2 = NOR(x,u1)   u3 = NOR(cin,u1) s  = NOR(u2,u3)  // sum
+/// nx = NOT(x)      v2 = NOR(t1,nx)                                    // v2 = a·b
+/// w  = NOR(u2,v2)  cout = NOT(w)                                      // u2 = (a⊕b)·cin
+/// ```
+pub fn emit_fa_serial(b: &mut Builder, a: usize, bb: usize, cin: usize, s: usize, cout: usize, scratch: &[usize]) -> Result<()> {
+    anyhow::ensure!(scratch.len() >= 10, "full adder needs 10 scratch columns, got {}", scratch.len());
+    let (t1, t2, t3, x, u1, u2, u3, nx, v2, w) =
+        (scratch[0], scratch[1], scratch[2], scratch[3], scratch[4], scratch[5], scratch[6], scratch[7], scratch[8], scratch[9]);
+    b.nor(a, bb, t1)?;
+    b.nor(a, t1, t2)?;
+    b.nor(bb, t1, t3)?;
+    b.nor(t2, t3, x)?;
+    b.nor(x, cin, u1)?;
+    b.nor(x, u1, u2)?;
+    b.nor(cin, u1, u3)?;
+    b.nor(u2, u3, s)?;
+    b.not(x, nx)?;
+    b.nor(t1, nx, v2)?;
+    b.nor(u2, v2, w)?;
+    b.not(w, cout)?;
+    Ok(())
+}
+
+/// Intra-partition column assignment for a partition-parallel full adder.
+#[derive(Debug, Clone, Copy)]
+pub struct FaIntra {
+    pub a: usize,
+    pub b: usize,
+    pub cin: usize,
+    pub s: usize,
+    pub cout: usize,
+    pub scratch: [usize; 10],
+}
+
+/// Emit the same 12-gate full adder with one gate **per partition per
+/// cycle** (distance 0, period 1 — legal in every partition model).
+/// Initialization of `s`, `cout` and scratch is the caller's job.
+pub fn emit_fa_parallel(b: &mut Builder, partitions: &[usize], ix: FaIntra) -> Result<()> {
+    let geom = b.geom;
+    let seq: [(usize, usize, usize); 12] = [
+        (ix.a, ix.b, ix.scratch[0]),
+        (ix.a, ix.scratch[0], ix.scratch[1]),
+        (ix.b, ix.scratch[0], ix.scratch[2]),
+        (ix.scratch[1], ix.scratch[2], ix.scratch[3]),
+        (ix.scratch[3], ix.cin, ix.scratch[4]),
+        (ix.scratch[3], ix.scratch[4], ix.scratch[5]),
+        (ix.cin, ix.scratch[4], ix.scratch[6]),
+        (ix.scratch[5], ix.scratch[6], ix.s),
+        (ix.scratch[3], ix.scratch[3], ix.scratch[7]), // NOT(x)
+        (ix.scratch[0], ix.scratch[7], ix.scratch[8]),
+        (ix.scratch[5], ix.scratch[8], ix.scratch[9]),
+        (ix.scratch[9], ix.scratch[9], ix.cout), // NOT(w)
+    ];
+    for (ia, ib, io) in seq {
+        let gates: Vec<GateOp> = partitions
+            .iter()
+            .map(|&p| {
+                if ia == ib {
+                    GateOp::not(geom.col(p, ia), geom.col(p, io))
+                } else {
+                    GateOp::nor(geom.col(p, ia), geom.col(p, ib), geom.col(p, io))
+                }
+            })
+            .collect();
+        b.concurrent(gates)?;
+    }
+    Ok(())
+}
+
+/// Columns a full adder's caller must initialize (scratch + outputs).
+pub fn fa_init_intra(ix: &FaIntra) -> Vec<usize> {
+    let mut v = ix.scratch.to_vec();
+    v.push(ix.s);
+    v.push(ix.cout);
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serial_full_adder_truth_table() {
+        let geom = Geometry::new(64, 1, 8).unwrap();
+        // Columns: a=0, b=1, cin=2, s=3, cout=4, scratch=5..15.
+        let scratch: Vec<usize> = (5..15).collect();
+        let mut b = Builder::new(geom, GateSet::NotNor);
+        let mut init = scratch.clone();
+        init.extend([3, 4]);
+        b.init1(init).unwrap();
+        emit_fa_serial(&mut b, 0, 1, 2, 3, 4, &scratch).unwrap();
+        let prog = b.finish("fa");
+
+        let mut xb = Crossbar::new(geom, GateSet::NotNor);
+        // Rows 0..8 enumerate all (a, b, cin) combinations.
+        for r in 0..8 {
+            xb.state.set(r, 0, r & 1 == 1);
+            xb.state.set(r, 1, r & 2 == 2);
+            xb.state.set(r, 2, r & 4 == 4);
+        }
+        prog.run(&mut xb).unwrap();
+        for r in 0..8 {
+            let total = (r & 1) + ((r >> 1) & 1) + ((r >> 2) & 1);
+            assert_eq!(xb.state.get(r, 3), total & 1 == 1, "sum row {r}");
+            assert_eq!(xb.state.get(r, 4), total >= 2, "cout row {r}");
+        }
+        let st = prog.stats();
+        assert_eq!(st.gate_cycles, 12);
+        assert_eq!(st.init_cycles, 1);
+    }
+
+    #[test]
+    fn parallel_full_adder_matches_serial() {
+        let geom = Geometry::new(256, 8, 64).unwrap();
+        let ix = FaIntra { a: 0, b: 1, cin: 2, s: 3, cout: 4, scratch: [5, 6, 7, 8, 9, 10, 11, 12, 13, 14] };
+        let parts: Vec<usize> = (0..8).collect();
+        let mut b = Builder::new(geom, GateSet::NotNor);
+        let init: Vec<usize> = parts.iter().flat_map(|&p| fa_init_intra(&ix).into_iter().map(move |i| geom.col(p, i))).collect();
+        b.init1(init).unwrap();
+        emit_fa_parallel(&mut b, &parts, ix).unwrap();
+        let prog = b.finish("fa_par");
+        // Every op must be minimal-legal (d=0, periodic T=1).
+        prog.check_model(ModelKind::Minimal).unwrap();
+
+        let mut xb = Crossbar::new(geom, GateSet::NotNor);
+        xb.state.fill_random(3);
+        // Snapshot inputs.
+        let mut inputs = vec![];
+        for p in 0..8 {
+            for r in 0..geom.rows {
+                inputs.push((r, p, xb.state.get(r, geom.col(p, 0)), xb.state.get(r, geom.col(p, 1)), xb.state.get(r, geom.col(p, 2))));
+            }
+        }
+        prog.run(&mut xb).unwrap();
+        for (r, p, a, bb, cin) in inputs {
+            let total = a as u8 + bb as u8 + cin as u8;
+            assert_eq!(xb.state.get(r, geom.col(p, 3)), total & 1 == 1, "s @ row {r} part {p}");
+            assert_eq!(xb.state.get(r, geom.col(p, 4)), total >= 2, "cout @ row {r} part {p}");
+        }
+    }
+
+    #[test]
+    fn control_bits_accounting() {
+        let geom = Geometry::paper(8);
+        let mut b = Builder::new(geom, GateSet::NotNor);
+        b.init1(vec![0, 1]).unwrap();
+        b.nor(0, 1, 2).unwrap();
+        let prog = b.finish("t");
+        // init message (30) + minimal gate message (36).
+        assert_eq!(prog.control_bits(ModelKind::Minimal), 30 + 36);
+        assert_eq!(prog.control_bits(ModelKind::Unlimited), 30 + 607);
+    }
+}

@@ -1,0 +1,338 @@
+//! In-memory sorting (experiment E10: the paper's intro cites a 14× sorting
+//! speedup with 16 partitions [1]).
+//!
+//! Bitonic sorting network over `k` elements per row, one element per
+//! partition. Every compare-and-swap (CAS) stage executes all its pairs
+//! concurrently: the copy-in, borrow-ripple comparison, select and copy-back
+//! cycles each run as one semi-parallel operation across all pairs (uniform
+//! distance = the stage's partner distance, identical intra indices). The
+//! serial baseline executes the same network one CAS at a time in a
+//! partition-free crossbar.
+
+use crate::algorithms::program::{Builder, Program};
+use crate::crossbar::crossbar::Crossbar;
+use crate::crossbar::gate::GateSet;
+use crate::crossbar::geometry::Geometry;
+use crate::isa::operation::GateOp;
+use anyhow::{ensure, Result};
+
+/// Intra-partition layout of the partitioned sorter (fits m ≥ 30).
+mod ix {
+    pub const X0: usize = 0; // element bits (w_bits wide)
+    pub const YC0: usize = 8; // partner-element copy
+    pub const NLT: usize = 17; // ¬(x < y)
+    pub const TB: usize = 20; // cross-partition hop scratch
+    pub const G0: usize = 21; // general scratch, 9 columns
+}
+
+/// A compiled sorter.
+#[derive(Debug, Clone)]
+pub struct Sorter {
+    pub program: Program,
+    pub n_elems: usize,
+    pub w_bits: usize,
+    /// Element base columns (one per element).
+    elem_cols: Vec<usize>,
+}
+
+/// The bitonic network as (stage pairs, partner distance) lists:
+/// `pairs[s] = (lo, hi, ascending)` with uniform `hi - lo` per stage.
+fn bitonic_stages(n: usize) -> Vec<(usize, Vec<(usize, usize, bool)>)> {
+    let mut stages = Vec::new();
+    let mut kk = 2;
+    while kk <= n {
+        let mut jj = kk / 2;
+        while jj >= 1 {
+            let mut pairs = Vec::new();
+            for i in 0..n {
+                let partner = i ^ jj;
+                if partner > i {
+                    let asc = i & kk == 0;
+                    pairs.push((i, partner, asc));
+                }
+            }
+            stages.push((jj, pairs));
+            jj /= 2;
+        }
+        kk *= 2;
+    }
+    stages
+}
+
+// ---------------------------------------------------------------------------
+// Partitioned sorter
+// ---------------------------------------------------------------------------
+
+/// Build the partitioned sorter: sorts `k` elements of `w_bits` bits per row
+/// (ascending), one element per partition.
+pub fn build_sorter_partitioned(geom: Geometry, w_bits: usize) -> Result<Sorter> {
+    let k = geom.k;
+    ensure!(k >= 2, "need at least 2 partitions");
+    ensure!(w_bits >= 2 && w_bits <= 8, "w_bits {w_bits} out of supported range 2..=8");
+    ensure!(geom.m() >= 30, "partition width {} below the 30-column sorter layout", geom.m());
+    let col = |p: usize, i: usize| geom.col(p, i);
+    let g: Vec<usize> = (0..9).map(|t| ix::G0 + t).collect();
+    let mut b = Builder::new(geom, GateSet::NotNor);
+
+    for (d, pairs) in bitonic_stages(k) {
+        let los: Vec<usize> = pairs.iter().map(|&(lo, _, _)| lo).collect();
+        let his: Vec<usize> = pairs.iter().map(|&(_, hi, _)| hi).collect();
+
+        // Cross-partition hops span the pair interval [lo, lo+d]; pairs whose
+        // intervals interleave cannot fire in one cycle (sections must be
+        // disjoint), so hops execute in `d` residue-class sub-phases —
+        // physical serialization the partition model imposes on long-range
+        // communication.
+        let hop_groups: Vec<Vec<(usize, usize, bool)>> = (0..d)
+            .map(|c| pairs.iter().copied().filter(|&(lo, _, _)| lo % (2 * d) == c).collect())
+            .filter(|g: &Vec<_>| !g.is_empty())
+            .collect();
+
+        // 1. Copy partner elements into the lo partitions' YC region.
+        b.init1(los.iter().flat_map(|&p| (0..w_bits).map(move |w| col(p, ix::YC0 + w))).collect())?;
+        for w in 0..w_bits {
+            b.init1(los.iter().map(|&p| col(p, ix::TB)).collect())?;
+            for group in &hop_groups {
+                b.concurrent(group.iter().map(|&(lo, hi, _)| GateOp::not(col(hi, ix::X0 + w), col(lo, ix::TB))).collect())?;
+            }
+            b.concurrent(los.iter().map(|&p| GateOp::not(col(p, ix::TB), col(p, ix::YC0 + w))).collect())?;
+        }
+
+        // 2. Borrow-ripple comparison in every lo partition concurrently:
+        //    borrow' = maj(¬x_w, y_w, borrow);   lt = final borrow.
+        // Borrow ping-pongs between G[7] and G[8].
+        b.init0(los.iter().map(|&p| col(p, ix::G0 + 7)).collect())?;
+        for w in 0..w_bits {
+            let (br, brn) = if w % 2 == 0 { (g[7], g[8]) } else { (g[8], g[7]) };
+            // init scratch + borrow-next.
+            b.init1(los.iter().flat_map(|&p| [g[0], g[1], g[2], g[3], g[4], g[5], g[6], brn].into_iter().map(move |i| col(p, i))).collect())?;
+            let each = |f: &dyn Fn(usize) -> GateOp| -> Vec<GateOp> { los.iter().map(|&p| f(p)).collect() };
+            // a' = ¬x_w
+            b.concurrent(each(&|p| GateOp::not(col(p, ix::X0 + w), col(p, g[0]))))?;
+            // majority(a', y, br) via the FA carry network.
+            b.concurrent(each(&|p| GateOp::nor(col(p, g[0]), col(p, ix::YC0 + w), col(p, g[1]))))?; // t1
+            b.concurrent(each(&|p| GateOp::nor(col(p, g[0]), col(p, g[1]), col(p, g[2]))))?; // t2
+            b.concurrent(each(&|p| GateOp::nor(col(p, ix::YC0 + w), col(p, g[1]), col(p, g[3]))))?; // t3
+            b.concurrent(each(&|p| GateOp::nor(col(p, g[2]), col(p, g[3]), col(p, g[4]))))?; // xnor
+            b.concurrent(each(&|p| GateOp::nor(col(p, g[4]), col(p, br), col(p, g[5]))))?; // u1
+            b.concurrent(each(&|p| GateOp::nor(col(p, g[4]), col(p, g[5]), col(p, g[6]))))?; // u2 = (a'^y)·br
+            // v2 = a'·y = NOR(t1, ¬xnor): reuse g[5] after u1 is consumed -> need fresh: use g[0] (a' no longer needed after t1..t3? a' used only for t1,t2 -> free), overwrite not allowed without init; instead:
+            b.init1(los.iter().flat_map(|&p| [col(p, ix::TB)]).collect())?;
+            b.concurrent(each(&|p| GateOp::not(col(p, g[4]), col(p, ix::TB))))?; // ¬xnor
+            b.init1(los.iter().map(|&p| col(p, g[0])).collect())?;
+            b.concurrent(each(&|p| GateOp::nor(col(p, g[1]), col(p, ix::TB), col(p, g[0]))))?; // v2 = a'·y
+            b.init1(los.iter().map(|&p| col(p, g[1])).collect())?;
+            b.concurrent(each(&|p| GateOp::nor(col(p, g[6]), col(p, g[0]), col(p, g[1]))))?; // ¬maj
+            b.concurrent(each(&|p| GateOp::not(col(p, g[1]), col(p, brn))))?; // borrow'
+        }
+        let lt = if w_bits % 2 == 0 { g[7] } else { g[8] };
+        // NLT = ¬lt.
+        b.init1(los.iter().map(|&p| col(p, ix::NLT)).collect())?;
+        b.concurrent(los.iter().map(|&p| GateOp::not(col(p, lt), col(p, ix::NLT))).collect())?;
+
+        // 3. Select min/max per bit; write the kept element into X (lo) and
+        //    stage the other into YC. Ascending pairs keep min at lo.
+        for w in 0..w_bits {
+            b.init1(los.iter().flat_map(|&p| [g[0], g[1], g[2], g[3], g[4], g[5], g[6], ix::TB].into_iter().map(move |i| col(p, i))).collect())?;
+            let each = |f: &dyn Fn(usize) -> GateOp| -> Vec<GateOp> { los.iter().map(|&p| f(p)).collect() };
+            b.concurrent(each(&|p| GateOp::not(col(p, ix::X0 + w), col(p, g[0]))))?; // ¬x
+            b.concurrent(each(&|p| GateOp::not(col(p, ix::YC0 + w), col(p, g[1]))))?; // ¬y
+            b.concurrent(each(&|p| GateOp::nor(col(p, g[0]), col(p, ix::NLT), col(p, g[2]))))?; // x·lt
+            b.concurrent(each(&|p| GateOp::nor(col(p, g[1]), col(p, lt), col(p, g[3]))))?; // y·¬lt
+            b.concurrent(each(&|p| GateOp::nor(col(p, g[2]), col(p, g[3]), col(p, g[4]))))?; // ¬min
+            b.concurrent(each(&|p| GateOp::nor(col(p, g[0]), col(p, lt), col(p, g[5]))))?; // x·¬lt
+            b.concurrent(each(&|p| GateOp::nor(col(p, g[1]), col(p, ix::NLT), col(p, g[6]))))?; // y·lt
+            b.concurrent(each(&|p| GateOp::nor(col(p, g[5]), col(p, g[6]), col(p, ix::TB))))?; // ¬max
+            b.init1(los.iter().flat_map(|&p| [col(p, ix::X0 + w), col(p, ix::YC0 + w)]).collect())?;
+            // Ascending: X <- min, YC <- max. Descending: swapped.
+            // (Two cycles: the kept element, then the staged partner —
+            // both writes live in the same partition.)
+            b.concurrent(
+                pairs
+                    .iter()
+                    .map(|&(lo, _, up)| GateOp::not(col(lo, if up { g[4] } else { ix::TB }), col(lo, ix::X0 + w)))
+                    .collect(),
+            )?;
+            b.concurrent(
+                pairs
+                    .iter()
+                    .map(|&(lo, _, up)| GateOp::not(col(lo, if up { ix::TB } else { g[4] }), col(lo, ix::YC0 + w)))
+                    .collect(),
+            )?;
+        }
+
+        // 4. Copy the staged partner back to the hi partitions (same
+        //    residue-class sub-phasing as the copy-in).
+        for w in 0..w_bits {
+            b.init1(his.iter().flat_map(|&p| [col(p, ix::TB), col(p, ix::X0 + w)]).collect())?;
+            for group in &hop_groups {
+                b.concurrent(group.iter().map(|&(lo, hi, _)| GateOp::not(col(lo, ix::YC0 + w), col(hi, ix::TB))).collect())?;
+            }
+            b.concurrent(his.iter().map(|&p| GateOp::not(col(p, ix::TB), col(p, ix::X0 + w))).collect())?;
+        }
+    }
+
+    let elem_cols = (0..k).map(|p| col(p, ix::X0)).collect();
+    Ok(Sorter { program: b.finish(format!("sort{k}x{w_bits}_partitioned")), n_elems: k, w_bits, elem_cols })
+}
+
+// ---------------------------------------------------------------------------
+// Serial baseline
+// ---------------------------------------------------------------------------
+
+/// Build the serial sorter: the same bitonic network, one CAS at a time on a
+/// partition-free crossbar. Elements live side-by-side in the row, so no
+/// copy-in/copy-back cycles are needed — this is the *optimized* serial
+/// baseline (mirroring the paper's optimized serial multiplier).
+pub fn build_sorter_serial(geom: Geometry, n_elems: usize, w_bits: usize) -> Result<Sorter> {
+    ensure!(n_elems.is_power_of_two() && n_elems >= 2, "element count must be a power of two");
+    ensure!(w_bits >= 2 && w_bits <= 8, "w_bits {w_bits} out of supported range 2..=8");
+    // Layout: elements at [e·w .. e·w+w), then scratch.
+    let e0 = 0;
+    let scratch0 = e0 + n_elems * w_bits;
+    let g: Vec<usize> = (scratch0..scratch0 + 9).collect();
+    let lt = scratch0 + 9;
+    let nlt = scratch0 + 10;
+    let nmin = scratch0 + 11;
+    let nmax = scratch0 + 12;
+    ensure!(nmax + 1 <= geom.n, "serial sorter needs {} columns", nmax + 1);
+    let ecol = |e: usize, w: usize| e0 + e * w_bits + w;
+    let mut b = Builder::new(geom, GateSet::NotNor);
+
+    for (_, pairs) in bitonic_stages(n_elems) {
+        for (lo, hi, asc) in pairs {
+            // Borrow-ripple comparison x(lo) vs y(hi).
+            b.init0(vec![g[7]])?;
+            for w in 0..w_bits {
+                let (br, brn) = if w % 2 == 0 { (g[7], g[8]) } else { (g[8], g[7]) };
+                b.init1(vec![g[0], g[1], g[2], g[3], g[4], g[5], g[6], brn])?;
+                b.not(ecol(lo, w), g[0])?;
+                b.nor(g[0], ecol(hi, w), g[1])?;
+                b.nor(g[0], g[1], g[2])?;
+                b.nor(ecol(hi, w), g[1], g[3])?;
+                b.nor(g[2], g[3], g[4])?;
+                b.nor(g[4], br, g[5])?;
+                b.nor(g[4], g[5], g[6])?;
+                b.init1(vec![nmin])?;
+                b.not(g[4], nmin)?; // ¬xnor (nmin reused as hop scratch)
+                b.init1(vec![g[0]])?;
+                b.nor(g[1], nmin, g[0])?; // v2
+                b.init1(vec![g[1]])?;
+                b.nor(g[6], g[0], g[1])?; // ¬maj
+                b.not(g[1], brn)?;
+            }
+            let brf = if w_bits % 2 == 0 { g[7] } else { g[8] };
+            b.init1(vec![lt, nlt])?;
+            b.not(brf, nlt)?;
+            b.not(nlt, lt)?;
+            // Select + in-place writeback per bit.
+            for w in 0..w_bits {
+                b.init1(vec![g[0], g[1], g[2], g[3], g[4], g[5], nmin, nmax])?;
+                b.not(ecol(lo, w), g[0])?;
+                b.not(ecol(hi, w), g[1])?;
+                b.nor(g[0], nlt, g[2])?;
+                b.nor(g[1], lt, g[3])?;
+                b.nor(g[2], g[3], nmin)?;
+                b.nor(g[0], lt, g[4])?;
+                b.nor(g[1], nlt, g[5])?;
+                b.nor(g[4], g[5], nmax)?;
+                b.init1(vec![ecol(lo, w), ecol(hi, w)])?;
+                let (to_lo, to_hi) = if asc { (nmin, nmax) } else { (nmax, nmin) };
+                b.not(to_lo, ecol(lo, w))?;
+                b.not(to_hi, ecol(hi, w))?;
+            }
+        }
+    }
+    let elem_cols = (0..n_elems).map(|e| ecol(e, 0)).collect();
+    Ok(Sorter { program: b.finish(format!("sort{n_elems}x{w_bits}_serial")), n_elems, w_bits, elem_cols })
+}
+
+impl Sorter {
+    /// Load `values` (one per element slot) into `row`.
+    pub fn load(&self, xb: &mut Crossbar, row: usize, values: &[u64]) -> Result<()> {
+        ensure!(values.len() == self.n_elems, "expected {} values", self.n_elems);
+        for (e, &v) in values.iter().enumerate() {
+            ensure!(v < 1 << self.w_bits, "value {v} exceeds {} bits", self.w_bits);
+            xb.state.write_field(row, self.elem_cols[e], self.w_bits, v)?;
+        }
+        Ok(())
+    }
+
+    /// Read the element vector back from `row`.
+    pub fn read(&self, xb: &Crossbar, row: usize) -> Result<Vec<u64>> {
+        self.elem_cols.iter().map(|&c| xb.state.read_field(row, c, self.w_bits)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lcg(seed: &mut u64) -> u64 {
+        *seed = seed.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        *seed >> 33
+    }
+
+    #[test]
+    fn bitonic_network_shape() {
+        let stages = bitonic_stages(16);
+        assert_eq!(stages.len(), 10); // log(16)·(log(16)+1)/2
+        let cas: usize = stages.iter().map(|(_, p)| p.len()).sum();
+        assert_eq!(cas, 80);
+        for (d, pairs) in &stages {
+            for &(lo, hi, _) in pairs {
+                assert_eq!(hi - lo, *d, "uniform distance per stage");
+            }
+        }
+    }
+
+    #[test]
+    fn partitioned_sorts_random_rows() {
+        let geom = Geometry::new(256, 8, 32).unwrap();
+        let sorter = build_sorter_partitioned(geom, 6).unwrap();
+        let mut xb = Crossbar::new(geom, GateSet::NotNor);
+        let mut seed = 77u64;
+        let mut expect = Vec::new();
+        for r in 0..32 {
+            let vals: Vec<u64> = (0..8).map(|_| lcg(&mut seed) % 64).collect();
+            sorter.load(&mut xb, r, &vals).unwrap();
+            let mut s = vals.clone();
+            s.sort_unstable();
+            expect.push(s);
+        }
+        sorter.program.run(&mut xb).unwrap();
+        for r in 0..32 {
+            assert_eq!(sorter.read(&xb, r).unwrap(), expect[r], "row {r}");
+        }
+    }
+
+    #[test]
+    fn serial_sorts_random_rows() {
+        let geom = Geometry::new(128, 1, 16).unwrap();
+        let sorter = build_sorter_serial(geom, 8, 6).unwrap();
+        let mut xb = Crossbar::new(geom, GateSet::NotNor);
+        let mut seed = 123u64;
+        let mut expect = Vec::new();
+        for r in 0..16 {
+            let vals: Vec<u64> = (0..8).map(|_| lcg(&mut seed) % 64).collect();
+            sorter.load(&mut xb, r, &vals).unwrap();
+            let mut s = vals.clone();
+            s.sort_unstable();
+            expect.push(s);
+        }
+        sorter.program.run(&mut xb).unwrap();
+        for r in 0..16 {
+            assert_eq!(sorter.read(&xb, r).unwrap(), expect[r], "row {r}");
+        }
+    }
+
+    /// E10 shape: the partitioned sorter must beat the serial baseline by a
+    /// widening margin as the element count grows.
+    #[test]
+    fn partitioned_speedup() {
+        let par = build_sorter_partitioned(Geometry::new(512, 16, 8).unwrap(), 6).unwrap();
+        let ser = build_sorter_serial(Geometry::new(1024, 1, 8).unwrap(), 16, 6).unwrap();
+        let sp = ser.program.stats().cycles as f64 / par.program.stats().cycles as f64;
+        assert!(sp > 2.0, "16-element sort speedup {sp:.2} too small");
+    }
+}

@@ -1,0 +1,176 @@
+//! A tiny arbitrary-precision unsigned integer — just enough to count
+//! operation sets like `[C(n/k, 2) · (n/k − 2)]^k ≈ 2^443` exactly.
+
+use std::cmp::Ordering;
+use std::fmt;
+
+/// Arbitrary-precision unsigned integer, little-endian 64-bit limbs.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BigUint {
+    /// Invariant: no trailing zero limbs (zero is the empty vec).
+    limbs: Vec<u64>,
+}
+
+impl BigUint {
+    pub fn zero() -> Self {
+        Self { limbs: vec![] }
+    }
+
+    pub fn from_u128(v: u128) -> Self {
+        let lo = v as u64;
+        let hi = (v >> 64) as u64;
+        let mut b = Self { limbs: vec![lo, hi] };
+        b.trim();
+        b
+    }
+
+    pub fn from_u64(v: u64) -> Self {
+        Self::from_u128(v as u128)
+    }
+
+    fn trim(&mut self) {
+        while self.limbs.last() == Some(&0) {
+            self.limbs.pop();
+        }
+    }
+
+    pub fn is_zero(&self) -> bool {
+        self.limbs.is_empty()
+    }
+
+    /// Number of bits in the binary representation (0 for zero).
+    pub fn bit_length(&self) -> usize {
+        match self.limbs.last() {
+            None => 0,
+            Some(&top) => 64 * (self.limbs.len() - 1) + (64 - top.leading_zeros() as usize),
+        }
+    }
+
+    /// `self += other`.
+    pub fn add_assign(&mut self, other: &BigUint) {
+        let n = self.limbs.len().max(other.limbs.len());
+        self.limbs.resize(n, 0);
+        let mut carry = 0u64;
+        for i in 0..n {
+            let b = *other.limbs.get(i).unwrap_or(&0);
+            let (s1, c1) = self.limbs[i].overflowing_add(b);
+            let (s2, c2) = s1.overflowing_add(carry);
+            self.limbs[i] = s2;
+            carry = (c1 as u64) + (c2 as u64);
+        }
+        if carry > 0 {
+            self.limbs.push(carry);
+        }
+    }
+
+    /// `self *= m` for a small multiplier.
+    pub fn mul_u64(&mut self, m: u64) {
+        if m == 0 {
+            self.limbs.clear();
+            return;
+        }
+        let mut carry = 0u128;
+        for limb in self.limbs.iter_mut() {
+            let prod = *limb as u128 * m as u128 + carry;
+            *limb = prod as u64;
+            carry = prod >> 64;
+        }
+        while carry > 0 {
+            self.limbs.push(carry as u64);
+            carry >>= 64;
+        }
+    }
+
+    /// `base^exp` for a u64 base.
+    pub fn pow_u64(base: u64, exp: u32) -> BigUint {
+        let mut acc = BigUint::from_u64(1);
+        for _ in 0..exp {
+            acc.mul_u64(base);
+        }
+        acc
+    }
+
+    pub fn cmp_big(&self, other: &BigUint) -> Ordering {
+        match self.limbs.len().cmp(&other.limbs.len()) {
+            Ordering::Equal => {
+                for i in (0..self.limbs.len()).rev() {
+                    match self.limbs[i].cmp(&other.limbs[i]) {
+                        Ordering::Equal => continue,
+                        ord => return ord,
+                    }
+                }
+                Ordering::Equal
+            }
+            ord => ord,
+        }
+    }
+}
+
+impl fmt::Display for BigUint {
+    /// Decimal rendering (repeated division by 10^19) — slow but only used
+    /// in reports.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.is_zero() {
+            return write!(f, "0");
+        }
+        let mut limbs = self.limbs.clone();
+        let mut chunks: Vec<u64> = Vec::new();
+        const BASE: u64 = 10_000_000_000_000_000_000; // 10^19
+        while !limbs.is_empty() {
+            let mut rem = 0u128;
+            for limb in limbs.iter_mut().rev() {
+                let cur = (rem << 64) | *limb as u128;
+                *limb = (cur / BASE as u128) as u64;
+                rem = cur % BASE as u128;
+            }
+            while limbs.last() == Some(&0) {
+                limbs.pop();
+            }
+            chunks.push(rem as u64);
+        }
+        write!(f, "{}", chunks.last().unwrap())?;
+        for c in chunks.iter().rev().skip(1) {
+            write!(f, "{c:019}")?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bit_lengths() {
+        assert_eq!(BigUint::zero().bit_length(), 0);
+        assert_eq!(BigUint::from_u64(1).bit_length(), 1);
+        assert_eq!(BigUint::from_u64(255).bit_length(), 8);
+        assert_eq!(BigUint::from_u64(256).bit_length(), 9);
+        assert_eq!(BigUint::from_u128(1u128 << 100).bit_length(), 101);
+    }
+
+    #[test]
+    fn pow_matches_shift() {
+        // 2^443 has bit length 444.
+        assert_eq!(BigUint::pow_u64(2, 443).bit_length(), 444);
+    }
+
+    #[test]
+    fn display_decimal() {
+        assert_eq!(BigUint::from_u64(0).to_string(), "0");
+        assert_eq!(BigUint::from_u64(12345).to_string(), "12345");
+        assert_eq!(BigUint::from_u128(123456789012345678901234567890u128).to_string(), "123456789012345678901234567890");
+        let mut v = BigUint::from_u64(1);
+        v.mul_u64(u64::MAX);
+        v.mul_u64(u64::MAX);
+        // (2^64-1)^2 = 2^128 - 2^65 + 1
+        assert_eq!(v.to_string(), "340282366920938463426481119284349108225");
+    }
+
+    #[test]
+    fn add_with_carry() {
+        let mut a = BigUint::from_u64(u64::MAX);
+        a.add_assign(&BigUint::from_u64(1));
+        assert_eq!(a, BigUint::from_u128(1u128 << 64));
+    }
+}

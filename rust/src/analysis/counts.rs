@@ -1,0 +1,144 @@
+//! Counting supported operations per design — the message-length lower
+//! bounds of Sections 2.3, 3.3 and 4.3.
+
+use crate::analysis::bigint::BigUint;
+use crate::crossbar::geometry::Geometry;
+use crate::isa::models::ModelKind;
+
+/// The operation count of a design and the bit lower bound it implies.
+#[derive(Debug, Clone)]
+pub struct OperationCount {
+    pub model: ModelKind,
+    pub count: BigUint,
+    /// `ceil(log2(count))` — any implementation needs at least this many
+    /// message bits.
+    pub lower_bound_bits: usize,
+}
+
+/// `C(n, 2) = n(n-1)/2` as u64 (fits easily for crossbar sizes).
+fn choose2(n: u64) -> u64 {
+    n * (n - 1) / 2
+}
+
+/// `C(n, r)` as u128 for the standard-model enable-pattern count.
+fn choose(n: u64, r: u64) -> u128 {
+    if r > n {
+        return 0;
+    }
+    let r = r.min(n - r);
+    let mut num = 1u128;
+    let mut den = 1u128;
+    for i in 0..r {
+        num *= (n - i) as u128;
+        den *= (i + 1) as u128;
+    }
+    num / den
+}
+
+/// Count the operations supported by `model` (the paper's lower-bound
+/// counting — deliberately an *under*count for unlimited/standard since
+/// semi-parallel variants are omitted, "valid as we seek a lower-bound").
+pub fn operation_count(model: ModelKind, geom: &Geometry) -> OperationCount {
+    let n = geom.n as u64;
+    let k = geom.k as u64;
+    let m = (geom.n / geom.k) as u64;
+    let count = match model {
+        // All serial gates: C(n,2) choices of {InA, InB} times (n-2) outputs.
+        ModelKind::Baseline => BigUint::from_u128(choose2(n) as u128 * (n - 2) as u128),
+        // Serial + parallel (semi-parallel omitted, Section 2.3):
+        //   C(n,2)(n-2)  +  [C(m,2)(m-2)]^k.
+        ModelKind::Unlimited => {
+            let mut parallel = BigUint::from_u64(1);
+            let per_partition = choose2(m) * (m - 2);
+            for _ in 0..k {
+                parallel.mul_u64(per_partition);
+            }
+            parallel.add_assign(&BigUint::from_u128(choose2(n) as u128 * (n - 2) as u128));
+            parallel
+        }
+        // Section 3.3: 2 · Σ_{q=1}^{k} C(k-1, q-1) · C(m,2) · (m-2)
+        // (direction × enable patterns × shared index choices).
+        ModelKind::Standard => {
+            let mut sum = 0u128;
+            for q in 1..=k {
+                sum += choose(k - 1, q - 1);
+            }
+            let per = choose2(m) as u128 * (m - 2) as u128;
+            BigUint::from_u128(2 * sum * per)
+        }
+        // Section 4.3: all non-input-split serial operations are supported:
+        // k partitions × m(m-1) ordered input pairs × (n-2) outputs.
+        ModelKind::Minimal => BigUint::from_u128(k as u128 * (m as u128 * (m - 1) as u128) * (n - 2) as u128),
+    };
+    // ceil(log2(count)): bit_length(count - 1)... for lower bounds the paper
+    // uses ceil(log2(count)), which equals bit_length(count) when count is
+    // not a power of two (true for all of these).
+    let lower_bound_bits = count.bit_length();
+    OperationCount { model, count, lower_bound_bits }
+}
+
+/// Convenience: just the bit lower bound.
+pub fn lower_bound_bits(model: ModelKind, geom: &Geometry) -> usize {
+    operation_count(model, geom).lower_bound_bits
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::encode::message_bits;
+
+    fn paper() -> Geometry {
+        Geometry::paper(64)
+    }
+
+    /// Section 2.3: "over 2^443 different operations, thus ... at least
+    /// 443 bits" (experiment E3).
+    #[test]
+    fn unlimited_bound_443() {
+        let c = operation_count(ModelKind::Unlimited, &paper());
+        // count > 2^443  <=>  bit_length >= 444
+        assert_eq!(c.lower_bound_bits, 444);
+        let two_443 = BigUint::pow_u64(2, 443);
+        assert_eq!(c.count.cmp_big(&two_443), std::cmp::Ordering::Greater);
+    }
+
+    /// Section 3.3: "a 46 bit lower-bound" (experiment E4).
+    #[test]
+    fn standard_bound_46() {
+        let c = operation_count(ModelKind::Standard, &paper());
+        assert_eq!(c.lower_bound_bits, 46);
+    }
+
+    /// Section 4.3: "a lower bound of at least 25 bits" (experiment E5).
+    #[test]
+    fn minimal_bound_25() {
+        let c = operation_count(ModelKind::Minimal, &paper());
+        assert_eq!(c.lower_bound_bits, 25);
+    }
+
+    /// Baseline sanity: C(1024,2)·1022 ≈ 2^28.996 → the 30-bit format is
+    /// within one bit of the information-theoretic bound.
+    #[test]
+    fn baseline_bound_matches_format() {
+        let g = paper();
+        let c = operation_count(ModelKind::Baseline, &g);
+        assert!(c.lower_bound_bits <= message_bits(ModelKind::Baseline, &g));
+        assert_eq!(c.lower_bound_bits, 29);
+    }
+
+    /// The paper's consistency claims: every format is at least as long as
+    /// its lower bound, and "not very far" from it.
+    #[test]
+    fn formats_dominate_bounds() {
+        let g = paper();
+        for m in ModelKind::ALL {
+            let bound = lower_bound_bits(m, &g);
+            let fmt = message_bits(m, &g);
+            assert!(fmt >= bound, "{}: format {fmt} < bound {bound}", m.name());
+        }
+        // 607 vs 443+1, 79 vs 46, 36 vs 25 — same ballpark as the paper.
+        assert_eq!(message_bits(ModelKind::Unlimited, &g), 607);
+        assert_eq!(message_bits(ModelKind::Standard, &g), 79);
+        assert_eq!(message_bits(ModelKind::Minimal, &g), 36);
+    }
+}

@@ -1,0 +1,8 @@
+//! Combinatorial analysis of the operation sets: counting supported
+//! operations to lower-bound the control-message length of any
+//! implementation (Sections 2.3, 3.3, 4.3).
+
+pub mod bigint;
+pub mod counts;
+
+pub use counts::{lower_bound_bits, operation_count, OperationCount};

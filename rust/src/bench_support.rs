@@ -1,0 +1,95 @@
+//! A small criterion-style measurement harness (criterion itself is not in
+//! the offline vendor set — see DESIGN.md §Substitutions).
+//!
+//! Auto-calibrates iteration counts to ~200ms per benchmark, reports
+//! mean / stddev / throughput over multiple samples.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub mean: Duration,
+    pub stddev: Duration,
+    pub samples: usize,
+    pub iters_per_sample: u64,
+}
+
+impl BenchResult {
+    pub fn mean_ns(&self) -> f64 {
+        self.mean.as_nanos() as f64
+    }
+}
+
+fn fmt_duration(d: Duration) -> String {
+    let ns = d.as_nanos() as f64;
+    if ns < 1_000.0 {
+        format!("{ns:.1} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} µs", ns / 1_000.0)
+    } else if ns < 1_000_000_000.0 {
+        format!("{:.2} ms", ns / 1_000_000.0)
+    } else {
+        format!("{:.3} s", ns / 1_000_000_000.0)
+    }
+}
+
+/// Measure `f`, auto-calibrating so each of the `samples` runs takes
+/// roughly `target` wall time. Prints a criterion-like line.
+pub fn bench<F: FnMut()>(name: &str, mut f: F) -> BenchResult {
+    let target = Duration::from_millis(40);
+    let samples = 5usize;
+    // Calibrate.
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().max(Duration::from_nanos(20));
+    let iters = (target.as_nanos() / once.as_nanos()).clamp(1, 1_000_000) as u64;
+
+    let mut times = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        times.push(t.elapsed().as_secs_f64() / iters as f64);
+    }
+    let mean = times.iter().sum::<f64>() / samples as f64;
+    let var = times.iter().map(|t| (t - mean) * (t - mean)).sum::<f64>() / samples as f64;
+    let res = BenchResult {
+        name: name.to_string(),
+        mean: Duration::from_secs_f64(mean),
+        stddev: Duration::from_secs_f64(var.sqrt()),
+        samples,
+        iters_per_sample: iters,
+    };
+    println!(
+        "bench {:<44} {:>12} ± {:<10} ({} samples x {} iters)",
+        res.name,
+        fmt_duration(res.mean),
+        fmt_duration(res.stddev),
+        res.samples,
+        res.iters_per_sample
+    );
+    res
+}
+
+/// Print a section header.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+/// Report a throughput number derived from a bench result.
+pub fn throughput(res: &BenchResult, units: f64, unit_name: &str) {
+    let per_sec = units / res.mean.as_secs_f64();
+    let formatted = if per_sec >= 1e9 {
+        format!("{:.2} G{unit_name}/s", per_sec / 1e9)
+    } else if per_sec >= 1e6 {
+        format!("{:.2} M{unit_name}/s", per_sec / 1e6)
+    } else if per_sec >= 1e3 {
+        format!("{:.2} k{unit_name}/s", per_sec / 1e3)
+    } else {
+        format!("{per_sec:.1} {unit_name}/s")
+    };
+    println!("      -> {formatted}");
+}

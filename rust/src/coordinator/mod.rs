@@ -1,0 +1,29 @@
+//! The L3 coordinator: a controller + crossbar-bank runtime serving vectored
+//! arithmetic jobs over the partitioned-PIM substrate.
+//!
+//! Architecture (mirroring a PIM memory controller [4, 19]):
+//!
+//! ```text
+//!   clients ──submit──▶ Controller ──chunks──▶ Worker 0 (crossbar 0)
+//!                        │  dynamic batching    Worker 1 (crossbar 1)
+//!                        ◀──results/metrics───  ...
+//! ```
+//!
+//! * Jobs are element-wise vector operations (32-bit multiply / add);
+//!   each crossbar **row** processes one element pair independently — the
+//!   single-row parallelism stateful logic provides for free.
+//! * The controller batches job elements into row-chunks and dispatches them
+//!   round-robin to worker threads, each owning one simulated crossbar.
+//! * Workers stream the compiled program **as encoded control messages**
+//!   through the periphery decode path (the production path), so control
+//!   traffic, cycles and energy are metered exactly as the paper counts them.
+//!
+//! The environment has no tokio vendored, so the runtime is `std::thread` +
+//! `mpsc` channels (see DESIGN.md §Substitutions); the architecture is
+//! unchanged.
+
+pub mod service;
+pub mod worker;
+
+pub use service::{JobResult, PimService, ServiceConfig, ServiceStats};
+pub use worker::WorkloadKind;

@@ -1,0 +1,279 @@
+//! The controller service: accepts vector jobs, batches elements onto
+//! crossbar rows, dispatches chunks to worker threads, and aggregates
+//! results plus architectural metrics.
+
+use crate::coordinator::worker::{workload_geometry, Worker, WorkloadKind};
+use crate::crossbar::crossbar::Metrics;
+use crate::isa::models::ModelKind;
+use anyhow::{ensure, Context, Result};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// Service configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct ServiceConfig {
+    pub kind: WorkloadKind,
+    pub model: ModelKind,
+    /// Crossbars (= worker threads) in the bank.
+    pub n_crossbars: usize,
+    /// Rows per crossbar (elements per batch chunk).
+    pub rows: usize,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        Self { kind: WorkloadKind::Mul32, model: ModelKind::Minimal, n_crossbars: 4, rows: 64 }
+    }
+}
+
+/// Completed-job report.
+#[derive(Debug, Clone)]
+pub struct JobResult {
+    pub id: u64,
+    pub values: Vec<u64>,
+    /// Simulated crossbar cycles spent on this job's chunks (summed).
+    pub sim_cycles: u64,
+    /// Control traffic the job generated, in bits.
+    pub control_bits: u64,
+    /// Wall-clock service latency.
+    pub wall: std::time::Duration,
+}
+
+/// Aggregate service statistics.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ServiceStats {
+    pub jobs: u64,
+    pub elements: u64,
+    pub chunks: u64,
+    pub metrics: Metrics,
+}
+
+/// A chunk's operand payload: scalar pairs for element-wise arithmetic,
+/// per-row element vectors for sort jobs.
+enum Payload {
+    Pairs(Vec<(u64, u64)>),
+    Rows(Vec<Vec<u64>>),
+}
+
+struct Chunk {
+    job: u64,
+    offset: usize,
+    payload: Payload,
+}
+
+enum DoneValues {
+    Scalars(Vec<u64>),
+    Rows(Vec<Vec<u64>>),
+}
+
+struct ChunkDone {
+    job: u64,
+    offset: usize,
+    values: DoneValues,
+    metrics: Metrics,
+}
+
+/// A running PIM service: a bank of crossbar workers behind a batching
+/// controller. Submit jobs with [`PimService::submit`]; shut down with
+/// [`PimService::shutdown`] to retrieve aggregate statistics.
+pub struct PimService {
+    cfg: ServiceConfig,
+    chunk_tx: Vec<Sender<Chunk>>,
+    done_rx: Receiver<ChunkDone>,
+    workers: Vec<JoinHandle<()>>,
+    next_job: u64,
+    next_worker: usize,
+    stats: Arc<Mutex<ServiceStats>>,
+    /// Cycles one full batch costs (for throughput reporting).
+    pub batch_cycles: usize,
+}
+
+impl PimService {
+    /// Start the bank: spawns `n_crossbars` worker threads, each owning one
+    /// simulated crossbar with the compiled workload program.
+    pub fn start(cfg: ServiceConfig) -> Result<Self> {
+        ensure!(cfg.n_crossbars >= 1, "need at least one crossbar");
+        let geom = workload_geometry(cfg.kind, cfg.model, cfg.rows);
+        let (done_tx, done_rx) = channel::<ChunkDone>();
+        let stats = Arc::new(Mutex::new(ServiceStats::default()));
+        let mut chunk_tx = Vec::new();
+        let mut workers = Vec::new();
+        let probe = Worker::new(cfg.kind, cfg.model, geom)?;
+        let batch_cycles = probe.batch_cycles();
+        for _ in 0..cfg.n_crossbars {
+            let (tx, rx) = channel::<Chunk>();
+            chunk_tx.push(tx);
+            let done_tx = done_tx.clone();
+            let stats = Arc::clone(&stats);
+            let mut worker = Worker::new(cfg.kind, cfg.model, geom)?;
+            workers.push(std::thread::spawn(move || {
+                while let Ok(chunk) = rx.recv() {
+                    let (values, metrics, n) = match &chunk.payload {
+                        Payload::Pairs(pairs) => {
+                            let (v, m) = worker.run_batch(pairs).expect("workload program validated at compile time");
+                            let n = v.len();
+                            (DoneValues::Scalars(v), m, n)
+                        }
+                        Payload::Rows(rows_data) => {
+                            let (v, m) = worker.run_sort_batch(rows_data).expect("workload program validated at compile time");
+                            let n = v.len();
+                            (DoneValues::Rows(v), m, n)
+                        }
+                    };
+                    {
+                        let mut s = stats.lock().unwrap();
+                        s.chunks += 1;
+                        s.elements += n as u64;
+                        s.metrics.add(&metrics);
+                    }
+                    if done_tx.send(ChunkDone { job: chunk.job, offset: chunk.offset, values, metrics }).is_err() {
+                        break;
+                    }
+                }
+            }));
+        }
+        Ok(Self { cfg, chunk_tx, done_rx, workers, next_job: 0, next_worker: 0, stats, batch_cycles })
+    }
+
+    /// Submit an element-wise job and wait for its completion (the
+    /// controller splits it into row-chunks spread across the bank).
+    pub fn submit(&mut self, a: &[u64], b: &[u64]) -> Result<JobResult> {
+        ensure!(a.len() == b.len(), "operand vectors differ in length");
+        ensure!(!a.is_empty(), "empty job");
+        let start = Instant::now();
+        let id = self.next_job;
+        self.next_job += 1;
+        let mut outstanding = 0usize;
+        for (ci, chunk) in a.chunks(self.cfg.rows).enumerate() {
+            let offset = ci * self.cfg.rows;
+            let pairs: Vec<(u64, u64)> = chunk.iter().zip(&b[offset..offset + chunk.len()]).map(|(&x, &y)| (x, y)).collect();
+            let w = self.next_worker;
+            self.next_worker = (self.next_worker + 1) % self.chunk_tx.len();
+            self.chunk_tx[w].send(Chunk { job: id, offset, payload: Payload::Pairs(pairs) }).context("worker hung up")?;
+            outstanding += 1;
+        }
+        let mut values = vec![0u64; a.len()];
+        let mut sim_cycles = 0u64;
+        let mut control_bits = 0u64;
+        while outstanding > 0 {
+            let done = self.done_rx.recv().context("workers hung up")?;
+            ensure!(done.job == id, "out-of-order completion: job {} while waiting for {id}", done.job);
+            let DoneValues::Scalars(vs) = done.values else {
+                anyhow::bail!("scalar job received row results");
+            };
+            for (i, v) in vs.iter().enumerate() {
+                values[done.offset + i] = *v;
+            }
+            sim_cycles += done.metrics.cycles;
+            control_bits += done.metrics.control_bits;
+            outstanding -= 1;
+        }
+        {
+            let mut s = self.stats.lock().unwrap();
+            s.jobs += 1;
+        }
+        Ok(JobResult { id, values, sim_cycles, control_bits, wall: start.elapsed() })
+    }
+
+    /// Submit a sort job: each entry of `rows_data` is one vector to sort
+    /// (one crossbar row). Returns the sorted vectors.
+    pub fn submit_sort(&mut self, rows_data: &[Vec<u64>]) -> Result<(Vec<Vec<u64>>, u64, u64)> {
+        ensure!(self.cfg.kind == WorkloadKind::Sort16, "service is not a sort workload");
+        ensure!(!rows_data.is_empty(), "empty job");
+        let id = self.next_job;
+        self.next_job += 1;
+        let mut outstanding = 0usize;
+        for (ci, chunk) in rows_data.chunks(self.cfg.rows).enumerate() {
+            let w = self.next_worker;
+            self.next_worker = (self.next_worker + 1) % self.chunk_tx.len();
+            self.chunk_tx[w]
+                .send(Chunk { job: id, offset: ci * self.cfg.rows, payload: Payload::Rows(chunk.to_vec()) })
+                .context("worker hung up")?;
+            outstanding += 1;
+        }
+        let mut values: Vec<Vec<u64>> = vec![Vec::new(); rows_data.len()];
+        let mut sim_cycles = 0u64;
+        let mut control_bits = 0u64;
+        while outstanding > 0 {
+            let done = self.done_rx.recv().context("workers hung up")?;
+            ensure!(done.job == id, "out-of-order completion");
+            let DoneValues::Rows(rows) = done.values else {
+                anyhow::bail!("sort job received scalar results");
+            };
+            for (i, v) in rows.into_iter().enumerate() {
+                values[done.offset + i] = v;
+            }
+            sim_cycles += done.metrics.cycles;
+            control_bits += done.metrics.control_bits;
+            outstanding -= 1;
+        }
+        self.stats.lock().unwrap().jobs += 1;
+        Ok((values, sim_cycles, control_bits))
+    }
+
+    /// Aggregate statistics so far.
+    pub fn stats(&self) -> ServiceStats {
+        *self.stats.lock().unwrap()
+    }
+
+    /// Stop the workers and return the final statistics.
+    pub fn shutdown(self) -> ServiceStats {
+        drop(self.chunk_tx);
+        for w in self.workers {
+            let _ = w.join();
+        }
+        *self.stats.lock().unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn service_end_to_end_multiply() {
+        let mut svc = PimService::start(ServiceConfig {
+            kind: WorkloadKind::Mul32,
+            model: ModelKind::Minimal,
+            n_crossbars: 2,
+            rows: 8,
+        })
+        .unwrap();
+        let a: Vec<u64> = (0..50).map(|i| 0x9e3779b9u64.wrapping_mul(i + 1) & 0xffff_ffff).collect();
+        let b: Vec<u64> = (0..50).map(|i| 0x85ebca6bu64.wrapping_mul(i + 7) & 0xffff_ffff).collect();
+        let res = svc.submit(&a, &b).unwrap();
+        for i in 0..50 {
+            assert_eq!(res.values[i], a[i] * b[i], "element {i}");
+        }
+        assert!(res.control_bits > 0);
+        let stats = svc.shutdown();
+        assert_eq!(stats.jobs, 1);
+        assert_eq!(stats.elements, 50);
+        assert_eq!(stats.chunks, 7); // ceil(50 / 8)
+    }
+
+    #[test]
+    fn service_multiple_jobs_accumulate_stats() {
+        let mut svc = PimService::start(ServiceConfig {
+            kind: WorkloadKind::Add32,
+            model: ModelKind::Standard,
+            n_crossbars: 3,
+            rows: 4,
+        })
+        .unwrap();
+        for j in 0..5u64 {
+            let a: Vec<u64> = (0..10).map(|i| i * 1000 + j).collect();
+            let b: Vec<u64> = (0..10).map(|i| i + 42).collect();
+            let res = svc.submit(&a, &b).unwrap();
+            for i in 0..10usize {
+                assert_eq!(res.values[i], a[i] + b[i]);
+            }
+        }
+        let stats = svc.shutdown();
+        assert_eq!(stats.jobs, 5);
+        assert_eq!(stats.elements, 50);
+        assert!(stats.metrics.control_bits > 0);
+    }
+}

@@ -1,0 +1,260 @@
+//! Crossbar worker: owns one simulated crossbar plus the compiled program
+//! for its workload, and executes row-batches end-to-end through the
+//! control-message path.
+
+use crate::algorithms::addition::{build_adder, build_adder_aligned, Adder, AlignedAdder};
+use crate::algorithms::mult_serial::{build_serial_multiplier, SerialMultiplier};
+use crate::algorithms::multpim::{build_multpim, MultPim, MultPimVariant};
+use crate::algorithms::program::Program;
+use crate::crossbar::crossbar::{Crossbar, Metrics};
+use crate::crossbar::gate::GateSet;
+use crate::crossbar::geometry::Geometry;
+use crate::isa::models::ModelKind;
+use crate::isa::schedule::pack_program;
+use anyhow::{bail, Result};
+
+/// Which vectored operation this service instance executes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WorkloadKind {
+    /// Element-wise 32-bit multiply via the partitioned MultPIM program
+    /// (or the serial baseline when the model is `Baseline`).
+    Mul32,
+    /// Element-wise 32-bit add (serial single-row ripple adder).
+    Add32,
+    /// Per-row sort of 16 six-bit elements (partitioned bitonic network;
+    /// serial network on the baseline).
+    Sort16,
+}
+
+/// Elements a sort job handles per row.
+pub const SORT_ELEMS: usize = 16;
+/// Element width of the sort workload.
+pub const SORT_BITS: usize = 6;
+
+/// The operand loader / result reader for a compiled workload.
+/// Opaque compiled-workload handle (loader/reader dispatch).
+pub enum Compiled {
+    MultPim(MultPim),
+    MultSerial(SerialMultiplier),
+    Adder(Adder),
+    AlignedAdder(AlignedAdder),
+    Sorter(crate::algorithms::sort::Sorter),
+}
+
+/// One crossbar plus its compiled program.
+pub struct Worker {
+    pub crossbar: Crossbar,
+    pub model: ModelKind,
+    program: Program,
+    /// Wire messages pre-encoded once at compile time and streamed to every
+    /// batch (see EXPERIMENTS.md §Perf: removes per-batch encode cost).
+    encoded: crate::algorithms::program::EncodedProgram,
+    compiled: Compiled,
+}
+
+/// Build the workload program for `model` on `geom`, applying the paper's
+/// Section 5 methodology: build the most permissive variant the model can
+/// host, then legalize/pack for the model.
+pub fn compile_workload(kind: WorkloadKind, model: ModelKind, geom: Geometry) -> Result<(Program, Compiled)> {
+    match kind {
+        WorkloadKind::Mul32 => match model {
+            ModelKind::Baseline => {
+                let m = build_serial_multiplier(geom, 32)?;
+                Ok((m.program.clone(), Compiled::MultSerial(m)))
+            }
+            ModelKind::Minimal => {
+                let m = build_multpim(geom, MultPimVariant::Plain)?;
+                m.program.check_model(ModelKind::Minimal)?;
+                Ok((m.program.clone(), Compiled::MultPim(m)))
+            }
+            ModelKind::Standard => {
+                let m = build_multpim(geom, MultPimVariant::Fast)?;
+                m.program.check_model(ModelKind::Standard)?;
+                Ok((m.program.clone(), Compiled::MultPim(m)))
+            }
+            ModelKind::Unlimited => {
+                let mut m = build_multpim(geom, MultPimVariant::Fast)?;
+                let (packed, _) = pack_program(&m.program.ops, ModelKind::Unlimited, &geom, GateSet::NotNor);
+                m.program.ops = packed;
+                Ok((m.program.clone(), Compiled::MultPim(m)))
+            }
+        },
+        WorkloadKind::Sort16 => {
+            if model == ModelKind::Baseline {
+                let s = crate::algorithms::sort::build_sorter_serial(geom, SORT_ELEMS, SORT_BITS)?;
+                return Ok((s.program.clone(), Compiled::Sorter(s)));
+            }
+            let s = crate::algorithms::sort::build_sorter_partitioned(geom, SORT_BITS)?;
+            // The bitonic network mixes intra indices across ascending /
+            // descending compare-exchange pairs: legalize for the stricter
+            // models, pack for unlimited (Section 5 methodology).
+            let prog = match model {
+                ModelKind::Unlimited => {
+                    let (packed, _) = pack_program(&s.program.ops, ModelKind::Unlimited, &geom, GateSet::NotNor);
+                    Program { ops: packed, ..s.program.clone() }
+                }
+                _ => {
+                    let (legal, _) = s.program.legalize(model, &crate::isa::lower::LegalizeConfig::default())?;
+                    legal
+                }
+            };
+            Ok((prog, Compiled::Sorter(s)))
+        }
+        WorkloadKind::Add32 => {
+            if model == ModelKind::Baseline {
+                let a = build_adder(geom, 32)?;
+                return Ok((a.program.clone(), Compiled::Adder(a)));
+            }
+            // Partitioned crossbars need the partition-aligned mapping
+            // (No Split-Input, footnote 3); pack what the model allows.
+            let a = build_adder_aligned(geom, 32)?;
+            let mut prog = a.program.clone();
+            let (packed, _) = pack_program(&prog.ops, model, &geom, GateSet::NotNor);
+            prog.ops = packed;
+            Ok((prog, Compiled::AlignedAdder(a)))
+        }
+    }
+}
+
+impl Worker {
+    pub fn new(kind: WorkloadKind, model: ModelKind, geom: Geometry) -> Result<Self> {
+        let (program, compiled) = compile_workload(kind, model, geom)?;
+        let encoded = program.encode_for(model)?;
+        Ok(Self { crossbar: Crossbar::new(geom, GateSet::NotNor), model, program, encoded, compiled })
+    }
+
+    /// Geometry this worker serves.
+    pub fn geom(&self) -> Geometry {
+        self.crossbar.geom
+    }
+
+    /// Per-batch latency in simulated cycles.
+    pub fn batch_cycles(&self) -> usize {
+        self.program.stats().cycles
+    }
+
+    /// Execute one row-batch of element pairs end-to-end through the
+    /// message path; returns the per-element results and the metrics delta.
+    pub fn run_batch(&mut self, pairs: &[(u64, u64)]) -> Result<(Vec<u64>, Metrics)> {
+        let rows = self.crossbar.geom.rows;
+        if pairs.len() > rows {
+            bail!("batch of {} exceeds {} rows", pairs.len(), rows);
+        }
+        let before = self.crossbar.metrics;
+        for (r, &(a, b)) in pairs.iter().enumerate() {
+            match &self.compiled {
+                Compiled::MultPim(m) => m.load(&mut self.crossbar, r, a, b)?,
+                Compiled::MultSerial(m) => m.load(&mut self.crossbar, r, a, b)?,
+                Compiled::Adder(m) => m.load(&mut self.crossbar, r, a, b)?,
+                Compiled::AlignedAdder(m) => m.load(&mut self.crossbar, r, a, b)?,
+                Compiled::Sorter(_) => bail!("sort workloads take per-row element vectors; use run_sort_batch"),
+            }
+        }
+        self.encoded.run(&mut self.crossbar)?;
+        let mut out = Vec::with_capacity(pairs.len());
+        for r in 0..pairs.len() {
+            let v = match &self.compiled {
+                Compiled::MultPim(m) => m.read_product(&self.crossbar, r)?,
+                Compiled::MultSerial(m) => m.read_product(&self.crossbar, r)?,
+                Compiled::Adder(m) => m.read_sum(&self.crossbar, r)?,
+                Compiled::AlignedAdder(m) => m.read_sum(&self.crossbar, r)?,
+                Compiled::Sorter(_) => unreachable!(),
+            };
+            out.push(v);
+        }
+        Ok((out, self.metrics_delta(before)))
+    }
+
+    /// Execute one row-batch of sort jobs (one 16-element vector per row).
+    pub fn run_sort_batch(&mut self, rows_data: &[Vec<u64>]) -> Result<(Vec<Vec<u64>>, Metrics)> {
+        let Compiled::Sorter(sorter) = &self.compiled else {
+            bail!("run_sort_batch on a non-sort workload");
+        };
+        if rows_data.len() > self.crossbar.geom.rows {
+            bail!("batch of {} exceeds {} rows", rows_data.len(), self.crossbar.geom.rows);
+        }
+        let before = self.crossbar.metrics;
+        for (r, vals) in rows_data.iter().enumerate() {
+            sorter.load(&mut self.crossbar, r, vals)?;
+        }
+        self.encoded.run(&mut self.crossbar)?;
+        let mut out = Vec::with_capacity(rows_data.len());
+        for r in 0..rows_data.len() {
+            out.push(sorter.read(&self.crossbar, r)?);
+        }
+        Ok((out, self.metrics_delta(before)))
+    }
+
+    fn metrics_delta(&self, before: Metrics) -> Metrics {
+        let mut delta = self.crossbar.metrics;
+        delta.cycles -= before.cycles;
+        delta.gate_cycles -= before.gate_cycles;
+        delta.init_cycles -= before.init_cycles;
+        delta.gate_events -= before.gate_events;
+        delta.switch_events -= before.switch_events;
+        delta.control_bits -= before.control_bits;
+        delta.messages -= before.messages;
+        delta
+    }
+}
+
+/// Choose the geometry a workload/model combination needs.
+pub fn workload_geometry(kind: WorkloadKind, model: ModelKind, rows: usize) -> Geometry {
+    match (kind, model) {
+        // Serial baselines run on a partition-free crossbar.
+        (_, ModelKind::Baseline) => Geometry::new(1024, 1, rows).expect("static geometry"),
+        // MultPIM at paper scale: n=1024, k=32 (one partition per bit).
+        (WorkloadKind::Mul32, _) => Geometry::paper(rows),
+        (WorkloadKind::Add32, _) => Geometry::new(1024, 32, rows).expect("static geometry"),
+        // One element per partition: 16 partitions.
+        (WorkloadKind::Sort16, _) => Geometry::new(512, SORT_ELEMS, rows).expect("static geometry"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn worker_multiplies_batches() {
+        for model in [ModelKind::Baseline, ModelKind::Minimal, ModelKind::Standard, ModelKind::Unlimited] {
+            let geom = workload_geometry(WorkloadKind::Mul32, model, 16);
+            let mut w = Worker::new(WorkloadKind::Mul32, model, geom).unwrap();
+            let pairs: Vec<(u64, u64)> = (0..16).map(|i| (0xabcd1234 ^ (i * 77), 0x1357 + i * 991)).collect();
+            let (out, metrics) = w.run_batch(&pairs).unwrap();
+            for (i, &(a, b)) in pairs.iter().enumerate() {
+                assert_eq!(out[i], a * b, "{}*{} under {}", a, b, model.name());
+            }
+            assert!(metrics.cycles > 0 && metrics.control_bits > 0);
+        }
+    }
+
+    #[test]
+    fn worker_adds_batches() {
+        let geom = workload_geometry(WorkloadKind::Add32, ModelKind::Minimal, 8);
+        let mut w = Worker::new(WorkloadKind::Add32, ModelKind::Minimal, geom).unwrap();
+        let pairs: Vec<(u64, u64)> = (0..8).map(|i| (0xffff_ffff - i, i * 3)).collect();
+        let (out, _) = w.run_batch(&pairs).unwrap();
+        for (i, &(a, b)) in pairs.iter().enumerate() {
+            assert_eq!(out[i], a + b);
+        }
+    }
+
+    /// The model hierarchy must order latency: unlimited <= standard <= minimal,
+    /// all far below the serial baseline (Figure 6(a) shape).
+    #[test]
+    fn model_latency_ordering() {
+        let cycles = |model: ModelKind| {
+            let geom = workload_geometry(WorkloadKind::Mul32, model, 1);
+            Worker::new(WorkloadKind::Mul32, model, geom).unwrap().batch_cycles()
+        };
+        let (base, unl, std_, min) = (
+            cycles(ModelKind::Baseline),
+            cycles(ModelKind::Unlimited),
+            cycles(ModelKind::Standard),
+            cycles(ModelKind::Minimal),
+        );
+        assert!(unl <= std_ && std_ <= min, "unl={unl} std={std_} min={min}");
+        assert!(base > 5 * min, "serial baseline {base} must dwarf partitioned {min}");
+    }
+}

@@ -1,0 +1,184 @@
+//! The cycle-accurate crossbar: state + metrics + the two execution paths
+//! (direct abstract operations, and full message decode through the
+//! periphery — the production path the coordinator uses).
+
+use crate::crossbar::gate::GateSet;
+use crate::crossbar::geometry::Geometry;
+use crate::crossbar::state::BitMatrix;
+use crate::isa::encode::{self, BitVec};
+use crate::isa::models::ModelKind;
+use crate::isa::operation::Operation;
+use crate::periphery;
+use anyhow::Result;
+
+/// Architectural counters accumulated by a crossbar.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Metrics {
+    /// Total simulated cycles (gate cycles + init cycles).
+    pub cycles: u64,
+    /// Stateful-logic cycles.
+    pub gate_cycles: u64,
+    /// Initialization (write) cycles.
+    pub init_cycles: u64,
+    /// Total gates executed (the paper's energy proxy, Section 5.4: energy
+    /// "is approximated by the total gate count" [18]).
+    pub gate_events: u64,
+    /// Memristor switching events (bit flips) — the physical energy driver.
+    pub switch_events: u64,
+    /// Control-message traffic received, in bits.
+    pub control_bits: u64,
+    /// Control messages received.
+    pub messages: u64,
+}
+
+impl Metrics {
+    pub fn add(&mut self, other: &Metrics) {
+        self.cycles += other.cycles;
+        self.gate_cycles += other.gate_cycles;
+        self.init_cycles += other.init_cycles;
+        self.gate_events += other.gate_events;
+        self.switch_events += other.switch_events;
+        self.control_bits += other.control_bits;
+        self.messages += other.messages;
+    }
+}
+
+/// Control traffic charged per initialization write (a plain write command,
+/// outside the paper's gate-operation formats — see DESIGN.md): one
+/// baseline-style `3·log2(n)`-bit message.
+pub fn init_message_bits(geom: &Geometry) -> usize {
+    3 * geom.log2_n()
+}
+
+/// A partitioned memristive crossbar.
+#[derive(Debug, Clone)]
+pub struct Crossbar {
+    pub geom: Geometry,
+    pub gate_set: GateSet,
+    pub state: BitMatrix,
+    pub metrics: Metrics,
+}
+
+impl Crossbar {
+    pub fn new(geom: Geometry, gate_set: GateSet) -> Self {
+        let state = BitMatrix::new(geom.rows, geom.n);
+        Self { geom, gate_set, state, metrics: Metrics::default() }
+    }
+
+    /// The paper's headline configuration (n=1024, k=32).
+    pub fn paper(rows: usize) -> Self {
+        Self::new(Geometry::paper(rows), GateSet::NotNor)
+    }
+
+    /// Execute one abstract operation (one simulated cycle), validating the
+    /// physical constraints (column ranges, section disjointness, gate set)
+    /// but **not** any model's control restrictions — that is the
+    /// controller's job (see [`Crossbar::execute_message`]).
+    pub fn execute(&mut self, op: &Operation) -> Result<()> {
+        op.validate(&self.geom, self.gate_set)?;
+        self.execute_trusted(op)
+    }
+
+    /// Execute a cycle that is already known valid — the message path uses
+    /// this after periphery reconstruction (which guarantees disjoint
+    /// sections and alias-free NOT/NOR gates by construction), avoiding a
+    /// second validation pass per message (see EXPERIMENTS.md §Perf).
+    fn execute_trusted(&mut self, op: &Operation) -> Result<()> {
+        match op {
+            Operation::Init { cols, value } => {
+                let sw = self.state.init_columns(cols, *value)?;
+                self.metrics.cycles += 1;
+                self.metrics.init_cycles += 1;
+                self.metrics.switch_events += sw;
+            }
+            Operation::Gates(gates) => {
+                for g in gates {
+                    let sw = self.state.apply_gate(g.gate, &g.ins, g.out)?;
+                    self.metrics.switch_events += sw;
+                }
+                self.metrics.cycles += 1;
+                self.metrics.gate_cycles += 1;
+                self.metrics.gate_events += gates.len() as u64;
+            }
+        }
+        Ok(())
+    }
+
+    /// Execute a sequence of operations.
+    pub fn execute_all(&mut self, ops: &[Operation]) -> Result<()> {
+        for op in ops {
+            self.execute(op)?;
+        }
+        Ok(())
+    }
+
+    /// The production path: receive a wire-format control message, decode it
+    /// through the periphery of `model`, and execute the reconstructed
+    /// gates. Control traffic is metered here.
+    pub fn execute_message(&mut self, model: ModelKind, bits: &BitVec) -> Result<()> {
+        let msg = encode::decode(model, bits, &self.geom)?;
+        let op = periphery::reconstruct(&msg, &self.geom)?;
+        self.metrics.control_bits += bits.len() as u64;
+        self.metrics.messages += 1;
+        self.execute_trusted(&op)
+    }
+
+    /// The production path for initialization writes (charged
+    /// [`init_message_bits`] of control traffic).
+    pub fn execute_init(&mut self, cols: &[usize], value: bool) -> Result<()> {
+        self.metrics.control_bits += init_message_bits(&self.geom) as u64;
+        self.metrics.messages += 1;
+        self.execute(&Operation::Init { cols: cols.to_vec(), value })
+    }
+
+    /// Reset counters (state is preserved).
+    pub fn reset_metrics(&mut self) {
+        self.metrics = Metrics::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::operation::GateOp;
+
+    #[test]
+    fn execute_counts_cycles_and_gates() {
+        let mut xb = Crossbar::new(Geometry::new(256, 8, 64).unwrap(), GateSet::NotNor);
+        xb.execute(&Operation::init1(vec![2])).unwrap();
+        xb.execute(&Operation::Gates(vec![GateOp::nor(0, 1, 2), GateOp::nor(32, 33, 34)])).unwrap();
+        assert_eq!(xb.metrics.cycles, 2);
+        assert_eq!(xb.metrics.init_cycles, 1);
+        assert_eq!(xb.metrics.gate_cycles, 1);
+        assert_eq!(xb.metrics.gate_events, 2);
+    }
+
+    #[test]
+    fn message_path_equals_direct_path() {
+        let geom = Geometry::new(256, 8, 64).unwrap();
+        let op = Operation::Gates((0..8).map(|p| GateOp::nor(p * 32, p * 32 + 1, p * 32 + 3)).collect());
+
+        let mut direct = Crossbar::new(geom, GateSet::NotNor);
+        direct.state.fill_random(99);
+        let wired = direct.clone();
+
+        direct.execute(&op).unwrap();
+        for model in [ModelKind::Unlimited, ModelKind::Standard, ModelKind::Minimal] {
+            let mut xb = wired.clone();
+            let bits = encode::encode(model, &op, &geom).unwrap();
+            xb.execute_message(model, &bits).unwrap();
+            assert_eq!(xb.state, direct.state, "state diverged via {} message path", model.name());
+            assert_eq!(xb.metrics.control_bits, bits.len() as u64);
+        }
+    }
+
+    #[test]
+    fn model_restrictions_enforced_at_decode() {
+        // A physically valid op that the standard codec cannot express
+        // (split input) must fail at encode time, not corrupt the crossbar.
+        let geom = Geometry::new(256, 8, 64).unwrap();
+        let op = Operation::serial(GateOp::nor(0, 40, 80)); // inputs in p0, p1
+        assert!(encode::encode(ModelKind::Standard, &op, &geom).is_err());
+        assert!(encode::encode(ModelKind::Unlimited, &op, &geom).is_ok());
+    }
+}

@@ -1,0 +1,138 @@
+//! Fault injection: stuck-at faults in memristor cells (the reliability
+//! concern of the authors' companion work [13], *Making Memristive
+//! Processing-in-Memory Reliable*). Used by the failure-injection tests to
+//! show the architectural counters and result verification catch silent
+//! data corruption.
+
+use crate::crossbar::crossbar::Crossbar;
+use crate::crossbar::state::BitMatrix;
+use anyhow::{ensure, Result};
+
+/// A stuck-at fault at one memristor cell.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StuckAt {
+    pub row: usize,
+    pub col: usize,
+    pub value: bool,
+}
+
+/// A fault map applied after every cycle (stuck cells override whatever the
+/// gate or write produced — the physical behaviour of a stuck device).
+#[derive(Debug, Clone, Default)]
+pub struct FaultMap {
+    pub faults: Vec<StuckAt>,
+}
+
+impl FaultMap {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn stuck(mut self, row: usize, col: usize, value: bool) -> Self {
+        self.faults.push(StuckAt { row, col, value });
+        self
+    }
+
+    /// Pseudo-random fault population at a given cell failure rate.
+    pub fn random(rows: usize, cols: usize, rate: f64, seed: u64) -> Self {
+        let mut s = seed.max(1);
+        let mut faults = Vec::new();
+        let threshold = (rate * u64::MAX as f64) as u64;
+        for row in 0..rows {
+            for col in 0..cols {
+                s ^= s << 13;
+                s ^= s >> 7;
+                s ^= s << 17;
+                if s < threshold {
+                    faults.push(StuckAt { row, col, value: s & 1 == 1 });
+                }
+            }
+        }
+        Self { faults }
+    }
+
+    /// Force the stuck values into the state.
+    pub fn apply(&self, state: &mut BitMatrix) -> Result<()> {
+        for f in &self.faults {
+            ensure!(f.row < state.rows() && f.col < state.cols(), "fault at ({}, {}) outside the array", f.row, f.col);
+            state.set(f.row, f.col, f.value);
+        }
+        Ok(())
+    }
+}
+
+/// Execute a program on a faulty crossbar: the fault map is re-applied
+/// after every cycle (stuck devices never change state).
+pub fn run_with_faults(xb: &mut Crossbar, ops: &[crate::isa::operation::Operation], faults: &FaultMap) -> Result<()> {
+    faults.apply(&mut xb.state)?;
+    for op in ops {
+        xb.execute(op)?;
+        faults.apply(&mut xb.state)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::multpim::{build_multpim, MultPimVariant};
+    use crate::crossbar::gate::GateSet;
+    use crate::crossbar::geometry::Geometry;
+
+    #[test]
+    fn fault_free_map_is_identity() {
+        let geom = Geometry::new(128, 4, 8).unwrap();
+        let mult = build_multpim(geom, MultPimVariant::Plain).unwrap();
+        let mut a = Crossbar::new(geom, GateSet::NotNor);
+        mult.load(&mut a, 0, 9, 13).unwrap();
+        let mut b = a.clone();
+        a.execute_all(&mult.program.ops).unwrap();
+        run_with_faults(&mut b, &mult.program.ops, &FaultMap::new()).unwrap();
+        assert_eq!(a.state, b.state);
+    }
+
+    /// A single stuck cell in the datapath corrupts the product — the
+    /// failure-injection check that end-to-end verification would catch.
+    #[test]
+    fn stuck_cell_corrupts_result() {
+        let geom = Geometry::new(128, 4, 8).unwrap();
+        let mult = build_multpim(geom, MultPimVariant::Plain).unwrap();
+        // Stick the partial-product column of partition 1 at 1.
+        let faults = FaultMap::new().stuck(0, geom.col(1, crate::algorithms::multpim::intra::PP), true);
+        let mut xb = Crossbar::new(geom, GateSet::NotNor);
+        mult.load(&mut xb, 0, 5, 3).unwrap();
+        run_with_faults(&mut xb, &mult.program.ops, &faults).unwrap();
+        assert_ne!(mult.read_product(&xb, 0).unwrap(), 15, "stuck-at fault must corrupt the product");
+    }
+
+    /// Faults in unused columns are harmless — the mapping's spare columns
+    /// give natural fault tolerance (the premise of remapping in [13]).
+    #[test]
+    fn fault_in_unused_column_is_harmless() {
+        let geom = Geometry::new(128, 4, 8).unwrap();
+        let mult = build_multpim(geom, MultPimVariant::Plain).unwrap();
+        // intra column 30 is outside the 23-column MultPIM layout.
+        let faults = FaultMap::new().stuck(0, geom.col(2, 30), true);
+        let mut xb = Crossbar::new(geom, GateSet::NotNor);
+        mult.load(&mut xb, 0, 11, 12).unwrap();
+        run_with_faults(&mut xb, &mult.program.ops, &faults).unwrap();
+        assert_eq!(mult.read_product(&xb, 0).unwrap(), 132);
+    }
+
+    #[test]
+    fn random_fault_rate_scales() {
+        let f0 = FaultMap::random(64, 256, 0.0, 3);
+        assert!(f0.faults.is_empty());
+        let f1 = FaultMap::random(64, 256, 0.01, 3);
+        let expected = (64.0 * 256.0 * 0.01) as usize;
+        assert!(f1.faults.len() > expected / 3 && f1.faults.len() < expected * 3, "{} faults", f1.faults.len());
+    }
+
+    #[test]
+    fn out_of_range_fault_rejected() {
+        let geom = Geometry::new(128, 4, 8).unwrap();
+        let mut xb = Crossbar::new(geom, GateSet::NotNor);
+        let faults = FaultMap::new().stuck(99, 0, true);
+        assert!(faults.apply(&mut xb.state).is_err());
+    }
+}

@@ -1,0 +1,167 @@
+//! Stateful-logic gate semantics.
+//!
+//! MAGIC [12] provides single-cycle NOT and NOR; FELIX [8] extends the set
+//! with OR, NAND and Minority3. The paper's evaluation (Section 5) restricts
+//! itself to the NOT/NOR implementation of MultPIM "for simplicity", which we
+//! mirror with [`GateSet::NotNor`]; [`GateSet::Felix`] is the generalization
+//! the paper's footnote 2 describes.
+
+use anyhow::{bail, Result};
+
+/// A single-cycle stateful logic gate type.
+///
+/// `Init1`/`Init0` model the initialization write that stateful logic
+/// requires before executing a gate into an output memristor (MAGIC requires
+/// the output pre-set to logical 1). Initialization is a *write* operation,
+/// not a stateful gate: it may set any number of columns in one cycle and
+/// does not interact with partition isolation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum GateType {
+    /// `out = NOT(a)` — MAGIC, 1 input.
+    Not,
+    /// `out = NOR(a, b)` — MAGIC, 2 inputs.
+    Nor,
+    /// `out = OR(a, b)` — FELIX, 2 inputs.
+    Or,
+    /// `out = NAND(a, b)` — FELIX, 2 inputs.
+    Nand,
+    /// `out = AND(a, b)` — FELIX-derived, 2 inputs.
+    And,
+    /// `out = Minority3(a, b, c)` — FELIX, 3 inputs.
+    Min3,
+    /// `out = 1` — initialization write (SET).
+    Init1,
+    /// `out = 0` — initialization write (RESET).
+    Init0,
+}
+
+impl GateType {
+    /// Number of input columns this gate consumes.
+    #[inline]
+    pub fn arity(&self) -> usize {
+        match self {
+            GateType::Not => 1,
+            GateType::Nor | GateType::Or | GateType::Nand | GateType::And => 2,
+            GateType::Min3 => 3,
+            GateType::Init1 | GateType::Init0 => 0,
+        }
+    }
+
+    /// True for initialization writes (not stateful gates).
+    #[inline]
+    pub fn is_init(&self) -> bool {
+        matches!(self, GateType::Init1 | GateType::Init0)
+    }
+
+    /// Evaluate the gate on 64 rows at once (one word per column).
+    ///
+    /// `ins` must hold exactly `arity()` meaningful words.
+    #[inline]
+    pub fn eval_word(&self, ins: &[u64]) -> u64 {
+        match self {
+            GateType::Not => !ins[0],
+            GateType::Nor => !(ins[0] | ins[1]),
+            GateType::Or => ins[0] | ins[1],
+            GateType::Nand => !(ins[0] & ins[1]),
+            GateType::And => ins[0] & ins[1],
+            GateType::Min3 => {
+                let (a, b, c) = (ins[0], ins[1], ins[2]);
+                !((a & b) | (a & c) | (b & c))
+            }
+            GateType::Init1 => !0u64,
+            GateType::Init0 => 0u64,
+        }
+    }
+
+    /// Evaluate on single-bit booleans (used by the pure-semantics oracle in
+    /// unit tests; the simulator itself uses [`GateType::eval_word`]).
+    pub fn eval_bool(&self, ins: &[bool]) -> bool {
+        let words: Vec<u64> = ins.iter().map(|&b| if b { !0 } else { 0 }).collect();
+        self.eval_word(&words) & 1 == 1
+    }
+}
+
+/// The gate set a crossbar supports; restricts which operations validate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GateSet {
+    /// MAGIC NOT/NOR only — the paper's evaluation configuration.
+    NotNor,
+    /// FELIX extension: NOT/NOR/OR/NAND/AND/Min3 (footnote 2 of the paper).
+    Felix,
+}
+
+impl GateSet {
+    /// Check whether `gate` is executable under this gate set.
+    pub fn check(&self, gate: GateType) -> Result<()> {
+        if gate.is_init() {
+            return Ok(());
+        }
+        match self {
+            GateSet::NotNor => match gate {
+                GateType::Not | GateType::Nor => Ok(()),
+                other => bail!("gate {other:?} not available in the NOT/NOR gate set"),
+            },
+            GateSet::Felix => Ok(()),
+        }
+    }
+
+    /// Number of distinct (non-init) gate types, for control-message sizing.
+    pub fn num_gate_types(&self) -> usize {
+        match self {
+            // NOT is NOR with InA = InB, so a single opcode suffices — this is
+            // why the paper's message formulas carry no gate-type field.
+            GateSet::NotNor => 1,
+            GateSet::Felix => 6,
+        }
+    }
+
+    /// Maximum gate arity (2 for the paper's configuration, 3 with Min3).
+    pub fn max_arity(&self) -> usize {
+        match self {
+            GateSet::NotNor => 2,
+            GateSet::Felix => 3,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn truth_tables() {
+        let f = false;
+        let t = true;
+        assert_eq!(GateType::Nor.eval_bool(&[f, f]), t);
+        assert_eq!(GateType::Nor.eval_bool(&[t, f]), f);
+        assert_eq!(GateType::Nor.eval_bool(&[f, t]), f);
+        assert_eq!(GateType::Nor.eval_bool(&[t, t]), f);
+        assert_eq!(GateType::Not.eval_bool(&[f]), t);
+        assert_eq!(GateType::Not.eval_bool(&[t]), f);
+        assert_eq!(GateType::Nand.eval_bool(&[t, t]), f);
+        assert_eq!(GateType::And.eval_bool(&[t, t]), t);
+        assert_eq!(GateType::Or.eval_bool(&[f, t]), t);
+        // Minority3 = NOT(majority)
+        assert_eq!(GateType::Min3.eval_bool(&[t, t, f]), f);
+        assert_eq!(GateType::Min3.eval_bool(&[t, f, f]), t);
+        assert_eq!(GateType::Min3.eval_bool(&[f, f, f]), t);
+        assert_eq!(GateType::Min3.eval_bool(&[t, t, t]), f);
+    }
+
+    #[test]
+    fn not_is_nor_with_equal_inputs() {
+        for v in [0u64, !0u64, 0xdeadbeefdeadbeef] {
+            assert_eq!(GateType::Not.eval_word(&[v]), GateType::Nor.eval_word(&[v, v]));
+        }
+    }
+
+    #[test]
+    fn gate_set_restrictions() {
+        assert!(GateSet::NotNor.check(GateType::Nor).is_ok());
+        assert!(GateSet::NotNor.check(GateType::Init1).is_ok());
+        assert!(GateSet::NotNor.check(GateType::Min3).is_err());
+        assert!(GateSet::Felix.check(GateType::Min3).is_ok());
+        assert_eq!(GateSet::NotNor.num_gate_types(), 1);
+        assert_eq!(GateSet::NotNor.max_arity(), 2);
+    }
+}

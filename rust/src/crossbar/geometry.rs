@@ -1,0 +1,115 @@
+//! Crossbar geometry: bitline count `n`, partition count `k`, row count.
+
+use anyhow::{ensure, Result};
+
+/// Static geometry of a partitioned crossbar.
+///
+/// `n` bitlines (columns) are divided into `k` evenly-spaced partitions of
+/// `m = n/k` bitlines each by `k-1` isolation transistors per row. The paper's
+/// headline configuration is `n = 1024`, `k = 32` (m = 32).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Geometry {
+    /// Number of bitlines (columns). Must be a power of two.
+    pub n: usize,
+    /// Number of partitions. Must be a power of two dividing `n`.
+    pub k: usize,
+    /// Number of wordlines (rows); each row computes independently.
+    pub rows: usize,
+}
+
+impl Geometry {
+    /// Create a geometry, validating the paper's structural assumptions.
+    pub fn new(n: usize, k: usize, rows: usize) -> Result<Self> {
+        ensure!(n.is_power_of_two(), "n={n} must be a power of two");
+        ensure!(k.is_power_of_two(), "k={k} must be a power of two");
+        ensure!(k >= 1 && k <= n, "k={k} must be in 1..=n ({n})");
+        ensure!(n % k == 0, "k={k} must divide n={n}");
+        ensure!(n / k >= 4, "partitions narrower than 4 columns (m={}) cannot hold a two-input gate plus scratch", n / k);
+        ensure!(rows >= 1, "rows must be >= 1");
+        Ok(Self { n, k, rows })
+    }
+
+    /// The paper's headline configuration: n=1024, k=32.
+    pub fn paper(rows: usize) -> Self {
+        Self { n: 1024, k: 32, rows }
+    }
+
+    /// Width of each partition in bitlines (`m = n/k`).
+    #[inline]
+    pub fn m(&self) -> usize {
+        self.n / self.k
+    }
+
+    /// Partition index containing absolute column `col`.
+    #[inline]
+    pub fn partition_of(&self, col: usize) -> usize {
+        debug_assert!(col < self.n);
+        col / self.m()
+    }
+
+    /// Intra-partition index of absolute column `col` (i.e. `col mod m`).
+    #[inline]
+    pub fn intra(&self, col: usize) -> usize {
+        col % self.m()
+    }
+
+    /// Absolute column for (`partition`, `intra`) coordinates.
+    #[inline]
+    pub fn col(&self, partition: usize, intra: usize) -> usize {
+        debug_assert!(partition < self.k && intra < self.m());
+        partition * self.m() + intra
+    }
+
+    /// `log2(n)` — bits to address a bitline (baseline decoder width).
+    #[inline]
+    pub fn log2_n(&self) -> usize {
+        self.n.trailing_zeros() as usize
+    }
+
+    /// `log2(k)` — bits to address a partition.
+    #[inline]
+    pub fn log2_k(&self) -> usize {
+        self.k.trailing_zeros() as usize
+    }
+
+    /// `log2(m)` — bits to address a column within a partition.
+    #[inline]
+    pub fn log2_m(&self) -> usize {
+        self.m().trailing_zeros() as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_geometry() {
+        let g = Geometry::paper(64);
+        assert_eq!(g.n, 1024);
+        assert_eq!(g.k, 32);
+        assert_eq!(g.m(), 32);
+        assert_eq!(g.log2_n(), 10);
+        assert_eq!(g.log2_k(), 5);
+        assert_eq!(g.log2_m(), 5);
+    }
+
+    #[test]
+    fn coordinates_roundtrip() {
+        let g = Geometry::new(256, 8, 16).unwrap();
+        for col in 0..g.n {
+            let (p, i) = (g.partition_of(col), g.intra(col));
+            assert_eq!(g.col(p, i), col);
+            assert!(p < g.k && i < g.m());
+        }
+    }
+
+    #[test]
+    fn rejects_bad_geometry() {
+        assert!(Geometry::new(1000, 32, 64).is_err()); // n not pow2
+        assert!(Geometry::new(1024, 3, 64).is_err()); // k not pow2
+        assert!(Geometry::new(1024, 2048, 64).is_err()); // k > n
+        assert!(Geometry::new(64, 32, 64).is_err()); // m < 4
+        assert!(Geometry::new(1024, 32, 0).is_err()); // no rows
+    }
+}

@@ -1,0 +1,23 @@
+//! Cycle-accurate memristive crossbar simulator.
+//!
+//! The crossbar stores one bit per memristor in an `rows × n` array. Stateful
+//! logic executes *column* gates: applying voltages on a handful of bitlines
+//! computes, e.g., `out[r] = NOR(a[r], b[r])` **in every row simultaneously**
+//! in a single cycle (Figure 1 of the paper). Partitions insert `k-1`
+//! isolation transistors per row so that several column gates can execute
+//! concurrently in disjoint *sections* of the same row (Figure 2).
+//!
+//! The simulator is bit-packed column-major: each column is a `rows/64`-word
+//! bitvector, so a row-parallel gate is a handful of word-wide boolean ops —
+//! this is the L3 hot path (see `benches/sim_throughput.rs`).
+
+pub mod crossbar;
+pub mod faults;
+pub mod gate;
+pub mod geometry;
+pub mod state;
+
+pub use crossbar::{Crossbar, Metrics};
+pub use gate::{GateSet, GateType};
+pub use geometry::Geometry;
+pub use state::BitMatrix;

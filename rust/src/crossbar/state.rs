@@ -1,0 +1,298 @@
+//! Bit-packed crossbar state.
+//!
+//! Column-major packing: each column (bitline) is a contiguous
+//! `ceil(rows/64)`-word bitvector over the rows. A row-parallel column gate
+//! (the fundamental stateful-logic primitive) is then a word-wide boolean
+//! loop over `rows/64` words — the hot path of the whole simulator.
+
+use crate::crossbar::gate::GateType;
+use anyhow::{ensure, Result};
+
+/// A `rows × cols` bit matrix stored column-major in 64-bit words.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BitMatrix {
+    rows: usize,
+    cols: usize,
+    /// Words per column: `ceil(rows / 64)`.
+    wpc: usize,
+    /// Mask of valid bits in the last word of each column.
+    tail_mask: u64,
+    data: Vec<u64>,
+}
+
+impl BitMatrix {
+    /// All-zero matrix.
+    pub fn new(rows: usize, cols: usize) -> Self {
+        assert!(rows > 0 && cols > 0);
+        let wpc = rows.div_ceil(64);
+        let rem = rows % 64;
+        let tail_mask = if rem == 0 { !0u64 } else { (1u64 << rem) - 1 };
+        Self { rows, cols, wpc, tail_mask, data: vec![0; wpc * cols] }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Words backing column `c`.
+    #[inline]
+    pub fn col(&self, c: usize) -> &[u64] {
+        debug_assert!(c < self.cols);
+        &self.data[c * self.wpc..(c + 1) * self.wpc]
+    }
+
+    /// Mutable words backing column `c`.
+    #[inline]
+    pub fn col_mut(&mut self, c: usize) -> &mut [u64] {
+        debug_assert!(c < self.cols);
+        &mut self.data[c * self.wpc..(c + 1) * self.wpc]
+    }
+
+    /// Read bit (`r`, `c`).
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> bool {
+        debug_assert!(r < self.rows && c < self.cols);
+        (self.data[c * self.wpc + r / 64] >> (r % 64)) & 1 == 1
+    }
+
+    /// Write bit (`r`, `c`).
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: bool) {
+        debug_assert!(r < self.rows && c < self.cols);
+        let w = &mut self.data[c * self.wpc + r / 64];
+        if v {
+            *w |= 1 << (r % 64);
+        } else {
+            *w &= !(1 << (r % 64));
+        }
+    }
+
+    /// Mask applied to the last word of a column (invalid high bits are kept
+    /// zero by all mutating operations).
+    #[inline]
+    fn masked(&self, word_idx: usize, w: u64) -> u64 {
+        if word_idx + 1 == self.wpc {
+            w & self.tail_mask
+        } else {
+            w
+        }
+    }
+
+    /// Apply a row-parallel stateful gate: `out[r] = gate(ins[0][r], ...)` for
+    /// every row `r`, in one simulated cycle.
+    ///
+    /// Returns the number of memristor *switching events* (bit flips in the
+    /// output column), the physical quantity that dominates stateful-logic
+    /// energy [19].
+    pub fn apply_gate(&mut self, gate: GateType, ins: &[usize], out: usize) -> Result<u64> {
+        ensure!(ins.len() == gate.arity(), "gate {gate:?} expects {} inputs, got {}", gate.arity(), ins.len());
+        ensure!(out < self.cols, "output column {out} out of range ({})", self.cols);
+        for &i in ins {
+            ensure!(i < self.cols, "input column {i} out of range ({})", self.cols);
+            ensure!(i != out, "stateful gate output column {out} must differ from its inputs");
+        }
+        let wpc = self.wpc;
+        let out_off = out * wpc;
+        let mut switches = 0u64;
+        let mut in_words = [0u64; 3];
+        for w in 0..wpc {
+            for (slot, &i) in ins.iter().enumerate() {
+                in_words[slot] = self.data[i * wpc + w];
+            }
+            let new = self.masked(w, gate.eval_word(&in_words[..ins.len().max(1)]));
+            let old = self.data[out_off + w];
+            switches += (new ^ old).count_ones() as u64;
+            self.data[out_off + w] = new;
+        }
+        Ok(switches)
+    }
+
+    /// Initialization write: set every column in `cols` to `value` in one
+    /// cycle (multi-column SET/RESET). Returns switching events.
+    pub fn init_columns(&mut self, cols: &[usize], value: bool) -> Result<u64> {
+        let mut switches = 0u64;
+        for &c in cols {
+            ensure!(c < self.cols, "init column {c} out of range ({})", self.cols);
+            let wpc = self.wpc;
+            for w in 0..wpc {
+                let new = self.masked(w, if value { !0u64 } else { 0u64 });
+                let old = self.data[c * wpc + w];
+                switches += (new ^ old).count_ones() as u64;
+                self.data[c * wpc + w] = new;
+            }
+        }
+        Ok(switches)
+    }
+
+    /// Write an unsigned little-endian bit field into row `r`:
+    /// `value` bit `i` lands in column `start + i`.
+    pub fn write_field(&mut self, r: usize, start: usize, width: usize, value: u64) -> Result<()> {
+        ensure!(width <= 64 && start + width <= self.cols, "field [{start}, {start}+{width}) out of range");
+        for i in 0..width {
+            self.set(r, start + i, (value >> i) & 1 == 1);
+        }
+        Ok(())
+    }
+
+    /// Read an unsigned little-endian bit field from row `r`.
+    pub fn read_field(&self, r: usize, start: usize, width: usize) -> Result<u64> {
+        ensure!(width <= 64 && start + width <= self.cols, "field [{start}, {start}+{width}) out of range");
+        let mut v = 0u64;
+        for i in 0..width {
+            if self.get(r, start + i) {
+                v |= 1 << i;
+            }
+        }
+        Ok(v)
+    }
+
+    /// Write a bit field at (`partition`, `intra`) coordinates where bit `i`
+    /// of `value` lands at intra-column `intra` of partition `start_part + i`
+    /// (one bit per partition — the MultPIM operand layout).
+    pub fn write_strided(&mut self, r: usize, start_col: usize, stride: usize, width: usize, value: u64) -> Result<()> {
+        ensure!(width <= 64, "width > 64");
+        for i in 0..width {
+            let c = start_col + i * stride;
+            ensure!(c < self.cols, "strided column {c} out of range");
+            self.set(r, c, (value >> i) & 1 == 1);
+        }
+        Ok(())
+    }
+
+    /// Read a strided bit field (see [`BitMatrix::write_strided`]).
+    pub fn read_strided(&self, r: usize, start_col: usize, stride: usize, width: usize) -> Result<u64> {
+        ensure!(width <= 64, "width > 64");
+        let mut v = 0u64;
+        for i in 0..width {
+            let c = start_col + i * stride;
+            ensure!(c < self.cols, "strided column {c} out of range");
+            if self.get(r, c) {
+                v |= 1 << i;
+            }
+        }
+        Ok(v)
+    }
+
+    /// Fill with deterministic pseudo-random bits (xorshift64*), for tests
+    /// and benches.
+    pub fn fill_random(&mut self, seed: u64) {
+        let mut s = seed.wrapping_mul(0x9e3779b97f4a7c15).max(1);
+        for c in 0..self.cols {
+            let wpc = self.wpc;
+            for w in 0..wpc {
+                s ^= s << 13;
+                s ^= s >> 7;
+                s ^= s << 17;
+                self.data[c * wpc + w] = self.masked(w, s.wrapping_mul(0x2545f4914f6cdd1d));
+            }
+        }
+    }
+
+    /// Dense `f32` row-major copy of the state (`1.0` / `0.0` per bit) —
+    /// the interchange layout of the XLA/Pallas backend.
+    pub fn to_f32_row_major(&self) -> Vec<f32> {
+        let mut v = vec![0f32; self.rows * self.cols];
+        for c in 0..self.cols {
+            let col = self.col(c);
+            for r in 0..self.rows {
+                if (col[r / 64] >> (r % 64)) & 1 == 1 {
+                    v[r * self.cols + c] = 1.0;
+                }
+            }
+        }
+        v
+    }
+
+    /// Inverse of [`BitMatrix::to_f32_row_major`] (values must be 0.0/1.0).
+    pub fn from_f32_row_major(rows: usize, cols: usize, v: &[f32]) -> Result<Self> {
+        ensure!(v.len() == rows * cols, "expected {} values, got {}", rows * cols, v.len());
+        let mut m = Self::new(rows, cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                let x = v[r * cols + c];
+                ensure!(x == 0.0 || x == 1.0, "non-binary value {x} at ({r}, {c})");
+                if x == 1.0 {
+                    m.set(r, c, true);
+                }
+            }
+        }
+        Ok(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn get_set_roundtrip() {
+        let mut m = BitMatrix::new(70, 8); // non-multiple-of-64 rows
+        m.set(0, 0, true);
+        m.set(69, 7, true);
+        m.set(64, 3, true);
+        assert!(m.get(0, 0) && m.get(69, 7) && m.get(64, 3));
+        assert!(!m.get(1, 0) && !m.get(68, 7));
+        m.set(69, 7, false);
+        assert!(!m.get(69, 7));
+    }
+
+    #[test]
+    fn nor_matches_scalar_semantics() {
+        let mut m = BitMatrix::new(130, 4);
+        m.fill_random(42);
+        let a: Vec<bool> = (0..130).map(|r| m.get(r, 0)).collect();
+        let b: Vec<bool> = (0..130).map(|r| m.get(r, 1)).collect();
+        m.apply_gate(GateType::Nor, &[0, 1], 2).unwrap();
+        for r in 0..130 {
+            assert_eq!(m.get(r, 2), !(a[r] | b[r]), "row {r}");
+        }
+    }
+
+    #[test]
+    fn switching_energy_counts_flips() {
+        let mut m = BitMatrix::new(64, 3);
+        // a = all ones, b = all ones -> NOR = 0; out starts at 1 (init).
+        m.init_columns(&[0, 1, 2], true).unwrap();
+        let sw = m.apply_gate(GateType::Nor, &[0, 1], 2).unwrap();
+        assert_eq!(sw, 64); // all 64 output bits flipped 1 -> 0
+        let sw2 = m.apply_gate(GateType::Nor, &[0, 1], 2).unwrap();
+        assert_eq!(sw2, 0); // already 0
+    }
+
+    #[test]
+    fn init_tail_masked() {
+        let mut m = BitMatrix::new(65, 1);
+        let sw = m.init_columns(&[0], true).unwrap();
+        assert_eq!(sw, 65); // only valid bits counted
+    }
+
+    #[test]
+    fn rejects_in_place_gate() {
+        let mut m = BitMatrix::new(64, 2);
+        assert!(m.apply_gate(GateType::Not, &[0], 0).is_err());
+    }
+
+    #[test]
+    fn field_roundtrip() {
+        let mut m = BitMatrix::new(8, 80);
+        m.write_field(3, 10, 32, 0xdeadbeef).unwrap();
+        assert_eq!(m.read_field(3, 10, 32).unwrap(), 0xdeadbeef);
+        m.write_strided(5, 2, 5, 16, 0xabcd).unwrap();
+        assert_eq!(m.read_strided(5, 2, 5, 16).unwrap(), 0xabcd);
+    }
+
+    #[test]
+    fn f32_roundtrip() {
+        let mut m = BitMatrix::new(66, 12);
+        m.fill_random(7);
+        let dense = m.to_f32_row_major();
+        let back = BitMatrix::from_f32_row_major(66, 12, &dense).unwrap();
+        assert_eq!(m, back);
+    }
+}

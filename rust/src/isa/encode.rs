@@ -1,0 +1,464 @@
+//! Bit-exact control-message codecs for every partition design.
+//!
+//! The controller⇄crossbar message is the paper's central practicality
+//! concern. For `n = 1024`, `k = 32` (NOT/NOR gate set) the per-cycle gate
+//! message lengths are:
+//!
+//! | design    | format                                            | bits |
+//! |-----------|---------------------------------------------------|------|
+//! | baseline  | `3·log2(n)`                                       | 30   |
+//! | unlimited | `3k·log2(n/k) + 3k + (k-1)`                       | 607  |
+//! | standard  | `3·log2(n/k) + (2k-1) + 1`                        | 79   |
+//! | minimal   | `3·log2(n/k) + 3·log2(k) + log2(k) + 1`           | 36   |
+//!
+//! Encoding happens in the controller (`operation → Message → bits`),
+//! decoding in the crossbar periphery (`bits → Message`, then
+//! [`crate::periphery`] reconstructs the executed gates). Round-trip tests
+//! assert `decode(encode(op)) ≡ op` for every model.
+//!
+//! Initialization writes travel on the ordinary write path and are *not*
+//! part of these formats (the paper's formulas cover gate operations only);
+//! the coordinator charges them one baseline-write message each — see
+//! `DESIGN.md`.
+
+use crate::crossbar::geometry::Geometry;
+use crate::isa::models::ModelKind;
+use crate::isa::opcode::Opcode;
+use crate::isa::operation::{Direction, GateOp, Operation};
+use anyhow::{bail, ensure, Result};
+
+// ---------------------------------------------------------------------------
+// Bit-level message buffer
+// ---------------------------------------------------------------------------
+
+/// A fixed-width bit string (MSB-first within each pushed field), packed
+/// into 64-bit words — this is wire traffic on the hot path, so pushes and
+/// reads are word-wise shifts, not per-bool vector ops.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BitVec {
+    words: Vec<u64>,
+    len: usize,
+}
+
+impl BitVec {
+    pub fn new() -> Self {
+        Self { words: Vec::new(), len: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    fn mask(width: usize) -> u64 {
+        if width >= 64 {
+            !0
+        } else {
+            (1u64 << width) - 1
+        }
+    }
+
+    /// Append `width` bits of `value` (MSB first). `width <= 64`.
+    pub fn push_bits(&mut self, value: usize, width: usize) {
+        debug_assert!(width <= 64);
+        let mut remaining = width;
+        let mut v = (value as u64) & Self::mask(width);
+        while remaining > 0 {
+            let bit_off = self.len % 64;
+            if bit_off == 0 {
+                self.words.push(0);
+            }
+            let space = 64 - bit_off;
+            let take = remaining.min(space);
+            // Highest `take` bits of the remaining value.
+            let chunk = (v >> (remaining - take)) & Self::mask(take);
+            let w = self.words.last_mut().unwrap();
+            *w |= chunk << (space - take);
+            v &= Self::mask(remaining - take);
+            self.len += take;
+            remaining -= take;
+        }
+    }
+
+    pub fn push_bit(&mut self, b: bool) {
+        self.push_bits(b as usize, 1);
+    }
+
+    /// Bit at position `i` (MSB-first order).
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        (self.words[i / 64] >> (63 - i % 64)) & 1 == 1
+    }
+
+    /// Flip bit `i` — used by the fuzzing tests to corrupt wire traffic.
+    pub fn flip(&mut self, i: usize) {
+        assert!(i < self.len);
+        self.words[i / 64] ^= 1u64 << (63 - i % 64);
+    }
+}
+
+impl Default for BitVec {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Sequential reader over a [`BitVec`].
+pub struct BitReader<'a> {
+    bv: &'a BitVec,
+    pos: usize,
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(bv: &'a BitVec) -> Self {
+        Self { bv, pos: 0 }
+    }
+
+    pub fn read_bits(&mut self, width: usize) -> Result<usize> {
+        ensure!(self.pos + width <= self.bv.len, "message truncated: need {width} bits at offset {}", self.pos);
+        let mut v = 0u64;
+        let mut remaining = width;
+        while remaining > 0 {
+            let bit_off = self.pos % 64;
+            let space = 64 - bit_off;
+            let take = remaining.min(space);
+            let word = self.bv.words[self.pos / 64];
+            let chunk = (word >> (space - take)) & if take == 64 { !0 } else { (1u64 << take) - 1 };
+            // take == 64 only on the first (aligned, full-word) chunk, where
+            // v is still 0 — avoid the UB-adjacent 64-bit shift.
+            v = if take == 64 { chunk } else { (v << take) | chunk };
+            self.pos += take;
+            remaining -= take;
+        }
+        Ok(v as usize)
+    }
+
+    pub fn read_bit(&mut self) -> Result<bool> {
+        Ok(self.read_bits(1)? == 1)
+    }
+
+    pub fn finish(&self) -> Result<()> {
+        ensure!(self.pos == self.bv.len, "trailing bits: consumed {} of {}", self.pos, self.bv.len);
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Decoded message structure (what the periphery sees on its input pins)
+// ---------------------------------------------------------------------------
+
+/// Per-partition fields of an unlimited-model message.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PartitionFields {
+    /// Intra-partition index fed to the `InA` decoder unit.
+    pub ia: usize,
+    /// Intra-partition index fed to the `InB` decoder unit.
+    pub ib: usize,
+    /// Intra-partition index fed to the `Out` decoder unit.
+    pub io: usize,
+    /// The half-gate opcode (Table 1).
+    pub opcode: Opcode,
+}
+
+/// A decoded control message, one variant per design.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Message {
+    /// Baseline crossbar: three absolute bitline indices.
+    Baseline { ia: usize, ib: usize, io: usize },
+    /// Unlimited: per-partition indices + opcodes, plus transistor selects
+    /// (`true` = non-conducting / isolating).
+    Unlimited { parts: Vec<PartitionFields>, selects: Vec<bool> },
+    /// Standard: shared intra indices, per-partition enables, transistor
+    /// selects, and the global direction bit.
+    Standard { ia: usize, ib: usize, io: usize, enables: Vec<bool>, selects: Vec<bool>, dir: Direction },
+    /// Minimal: shared intra indices, range-generator parameters
+    /// (`p_start`, `p_end`, period `t`), partition distance, direction.
+    Minimal { ia: usize, ib: usize, io: usize, p_start: usize, p_end: usize, t: usize, distance: usize, dir: Direction },
+}
+
+// ---------------------------------------------------------------------------
+// Message lengths (the paper's formulas)
+// ---------------------------------------------------------------------------
+
+/// Gate-operation message length in bits for `model` on `geom` (NOT/NOR gate
+/// set, as in the paper's evaluation).
+pub fn message_bits(model: ModelKind, geom: &Geometry) -> usize {
+    let (ln, lk, lm, k) = (geom.log2_n(), geom.log2_k(), geom.log2_m(), geom.k);
+    match model {
+        ModelKind::Baseline => 3 * ln,
+        ModelKind::Unlimited => 3 * k * lm + 3 * k + (k - 1),
+        ModelKind::Standard => 3 * lm + (2 * k - 1) + 1,
+        ModelKind::Minimal => 3 * lm + 3 * lk + lk + 1,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Controller side: operation -> Message
+// ---------------------------------------------------------------------------
+
+/// Effective `(InA, InB)` columns of a gate: a NOT gate drives both input
+/// decoder units with the same index (`NOR(a, a) = NOT(a)`), which is why the
+/// paper's NOT/NOR message formats carry no gate-type field.
+fn in_cols(g: &GateOp) -> Result<(usize, usize)> {
+    match g.ins.len() {
+        1 => Ok((g.ins[0], g.ins[0])),
+        2 => Ok((g.ins[0], g.ins[1])),
+        n => bail!("{n}-input gates are outside the paper's two-input message formats (footnote 2 generalization not encoded)"),
+    }
+}
+
+/// Build the message a controller sends for `op` under `model`.
+///
+/// The operation must already be legal for the model
+/// ([`ModelKind::check`]); initialization writes are rejected here — they
+/// use the write path, not the gate-operation formats.
+pub fn to_message(model: ModelKind, op: &Operation, geom: &Geometry) -> Result<Message> {
+    let Operation::Gates(gates) = op else {
+        bail!("initialization writes are not gate-operation messages");
+    };
+    match model {
+        ModelKind::Baseline => {
+            ensure!(gates.len() == 1, "baseline encodes a single gate");
+            let g = &gates[0];
+            let (a, b) = in_cols(g)?;
+            Ok(Message::Baseline { ia: a, ib: b, io: g.out })
+        }
+        ModelKind::Unlimited => {
+            let mut parts = vec![PartitionFields { ia: 0, ib: 0, io: 0, opcode: Opcode::IDLE }; geom.k];
+            for g in gates {
+                let (a, b) = in_cols(g)?;
+                let (pa, pb, po) = (geom.partition_of(a), geom.partition_of(b), geom.partition_of(g.out));
+                parts[pa].ia = geom.intra(a);
+                parts[pa].opcode.in_a = true;
+                parts[pb].ib = geom.intra(b);
+                parts[pb].opcode.in_b = true;
+                parts[po].io = geom.intra(g.out);
+                parts[po].opcode.out = true;
+            }
+            Ok(Message::Unlimited { parts, selects: op.tight_selects(geom) })
+        }
+        ModelKind::Standard => {
+            let g0 = &gates[0];
+            let (a0, b0) = in_cols(g0)?;
+            let (ia, ib, io) = (geom.intra(a0), geom.intra(b0), geom.intra(g0.out));
+            let mut enables = vec![false; geom.k];
+            for g in gates {
+                let pi = g.input_partition(geom).ok_or_else(|| anyhow::anyhow!("split-input gate is not standard-legal"))?;
+                enables[pi] = true;
+                enables[geom.partition_of(g.out)] = true;
+            }
+            let dir = op.uniform_direction(geom)?.unwrap_or(Direction::InputsLeft);
+            Ok(Message::Standard { ia, ib, io, enables, selects: op.tight_selects(geom), dir })
+        }
+        ModelKind::Minimal => {
+            let g0 = &gates[0];
+            let (a0, b0) = in_cols(g0)?;
+            let (ia, ib, io) = (geom.intra(a0), geom.intra(b0), geom.intra(g0.out));
+            let mut inputs: Vec<usize> = gates
+                .iter()
+                .map(|g| g.input_partition(geom).ok_or_else(|| anyhow::anyhow!("split-input gate is not minimal-legal")))
+                .collect::<Result<_>>()?;
+            inputs.sort_unstable();
+            let distance = gates[0].distance(geom).expect("input partition exists").unsigned_abs();
+            let dir = op.uniform_direction(geom)?.unwrap_or(Direction::InputsLeft);
+            let (p_start, p_end) = (inputs[0], *inputs.last().unwrap());
+            let t = if inputs.len() >= 2 { inputs[1] - inputs[0] } else { distance + 1 };
+            ensure!(t >= 1 && t > distance || inputs.len() == 1, "period {t} must exceed distance {distance}");
+            Ok(Message::Minimal { ia, ib, io, p_start, p_end, t, distance, dir })
+        }
+    }
+}
+
+/// Serialize a [`Message`] to its bit-exact wire format.
+pub fn message_to_bits(msg: &Message, geom: &Geometry) -> BitVec {
+    let (ln, lk, lm) = (geom.log2_n(), geom.log2_k(), geom.log2_m());
+    let mut bv = BitVec::new();
+    match msg {
+        Message::Baseline { ia, ib, io } => {
+            bv.push_bits(*ia, ln);
+            bv.push_bits(*ib, ln);
+            bv.push_bits(*io, ln);
+        }
+        Message::Unlimited { parts, selects } => {
+            for p in parts {
+                bv.push_bits(p.ia, lm);
+                bv.push_bits(p.ib, lm);
+                bv.push_bits(p.io, lm);
+            }
+            for p in parts {
+                bv.push_bits(p.opcode.index() as usize, 3);
+            }
+            for &s in selects {
+                bv.push_bit(s);
+            }
+        }
+        Message::Standard { ia, ib, io, enables, selects, dir } => {
+            bv.push_bits(*ia, lm);
+            bv.push_bits(*ib, lm);
+            bv.push_bits(*io, lm);
+            for &e in enables {
+                bv.push_bit(e);
+            }
+            for &s in selects {
+                bv.push_bit(s);
+            }
+            bv.push_bit(matches!(dir, Direction::OutputsLeft));
+        }
+        Message::Minimal { ia, ib, io, p_start, p_end, t, distance, dir } => {
+            bv.push_bits(*ia, lm);
+            bv.push_bits(*ib, lm);
+            bv.push_bits(*io, lm);
+            bv.push_bits(*p_start, lk);
+            bv.push_bits(*p_end, lk);
+            bv.push_bits(*t - 1, lk); // T ∈ 1..=k encoded as T-1
+            bv.push_bits(*distance, lk);
+            bv.push_bit(matches!(dir, Direction::OutputsLeft));
+        }
+    }
+    bv
+}
+
+/// Controller entry point: encode `op` for `model`. The result is exactly
+/// [`message_bits`] long.
+pub fn encode(model: ModelKind, op: &Operation, geom: &Geometry) -> Result<BitVec> {
+    let msg = to_message(model, op, geom)?;
+    let bv = message_to_bits(&msg, geom);
+    debug_assert_eq!(bv.len(), message_bits(model, geom), "wire format length drifted from the paper formula");
+    Ok(bv)
+}
+
+/// Crossbar-periphery entry point: parse the wire bits back into a
+/// [`Message`]. Gate reconstruction happens in [`crate::periphery`].
+pub fn decode(model: ModelKind, bits: &BitVec, geom: &Geometry) -> Result<Message> {
+    ensure!(bits.len() == message_bits(model, geom), "wrong message length for {}: got {}, expected {}", model.name(), bits.len(), message_bits(model, geom));
+    let (ln, lk, lm, k) = (geom.log2_n(), geom.log2_k(), geom.log2_m(), geom.k);
+    let mut r = BitReader::new(bits);
+    let msg = match model {
+        ModelKind::Baseline => {
+            let ia = r.read_bits(ln)?;
+            let ib = r.read_bits(ln)?;
+            let io = r.read_bits(ln)?;
+            Message::Baseline { ia, ib, io }
+        }
+        ModelKind::Unlimited => {
+            let mut parts = vec![PartitionFields { ia: 0, ib: 0, io: 0, opcode: Opcode::IDLE }; k];
+            for p in parts.iter_mut() {
+                p.ia = r.read_bits(lm)?;
+                p.ib = r.read_bits(lm)?;
+                p.io = r.read_bits(lm)?;
+            }
+            for p in parts.iter_mut() {
+                p.opcode = Opcode::from_index(r.read_bits(3)? as u8);
+            }
+            let selects = (0..k - 1).map(|_| r.read_bit()).collect::<Result<Vec<_>>>()?;
+            Message::Unlimited { parts, selects }
+        }
+        ModelKind::Standard => {
+            let ia = r.read_bits(lm)?;
+            let ib = r.read_bits(lm)?;
+            let io = r.read_bits(lm)?;
+            let enables = (0..k).map(|_| r.read_bit()).collect::<Result<Vec<_>>>()?;
+            let selects = (0..k - 1).map(|_| r.read_bit()).collect::<Result<Vec<_>>>()?;
+            let dir = if r.read_bit()? { Direction::OutputsLeft } else { Direction::InputsLeft };
+            Message::Standard { ia, ib, io, enables, selects, dir }
+        }
+        ModelKind::Minimal => {
+            let ia = r.read_bits(lm)?;
+            let ib = r.read_bits(lm)?;
+            let io = r.read_bits(lm)?;
+            let p_start = r.read_bits(lk)?;
+            let p_end = r.read_bits(lk)?;
+            let t = r.read_bits(lk)? + 1;
+            let distance = r.read_bits(lk)?;
+            let dir = if r.read_bit()? { Direction::OutputsLeft } else { Direction::InputsLeft };
+            Message::Minimal { ia, ib, io, p_start, p_end, t, distance, dir }
+        }
+    };
+    r.finish()?;
+    Ok(msg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crossbar::gate::GateSet;
+
+    fn paper_geom() -> Geometry {
+        Geometry::paper(64)
+    }
+
+    /// Section 5.2 / Figure 6(b): the exact message lengths.
+    #[test]
+    fn paper_message_lengths() {
+        let g = paper_geom();
+        assert_eq!(message_bits(ModelKind::Baseline, &g), 30);
+        assert_eq!(message_bits(ModelKind::Unlimited, &g), 607);
+        assert_eq!(message_bits(ModelKind::Standard, &g), 79);
+        assert_eq!(message_bits(ModelKind::Minimal, &g), 36);
+    }
+
+    #[test]
+    fn bitvec_roundtrip() {
+        let mut bv = BitVec::new();
+        bv.push_bits(0b1011, 4);
+        bv.push_bit(true);
+        bv.push_bits(7, 5);
+        let mut r = BitReader::new(&bv);
+        assert_eq!(r.read_bits(4).unwrap(), 0b1011);
+        assert!(r.read_bit().unwrap());
+        assert_eq!(r.read_bits(5).unwrap(), 7);
+        r.finish().unwrap();
+    }
+
+    #[test]
+    fn encode_lengths_match_formula() {
+        let g = paper_geom();
+        let serial = Operation::serial(GateOp::nor(g.col(2, 1), g.col(2, 3), g.col(7, 5)));
+        for m in [ModelKind::Baseline, ModelKind::Unlimited, ModelKind::Standard, ModelKind::Minimal] {
+            m.check(&serial, &g, GateSet::NotNor).unwrap();
+            let bits = encode(m, &serial, &g).unwrap();
+            assert_eq!(bits.len(), message_bits(m, &g), "{}", m.name());
+            // decode parses without error and round-trips structurally
+            let msg = decode(m, &bits, &g).unwrap();
+            let again = message_to_bits(&msg, &g);
+            assert_eq!(again, bits, "{} bit round-trip", m.name());
+        }
+    }
+
+    #[test]
+    fn unlimited_encodes_split_input() {
+        let g = paper_geom();
+        let op = Operation::serial(GateOp::nor(g.col(0, 4), g.col(3, 9), g.col(5, 2)));
+        let bits = encode(ModelKind::Unlimited, &op, &g).unwrap();
+        let Message::Unlimited { parts, selects } = decode(ModelKind::Unlimited, &bits, &g).unwrap() else {
+            panic!("wrong variant")
+        };
+        assert_eq!(parts[0].opcode, Opcode { in_a: true, in_b: false, out: false });
+        assert_eq!(parts[3].opcode, Opcode { in_a: false, in_b: true, out: false });
+        assert_eq!(parts[5].opcode, Opcode::OUTPUT);
+        assert_eq!(parts[0].ia, 4);
+        assert_eq!(parts[3].ib, 9);
+        assert_eq!(parts[5].io, 2);
+        // conducting exactly inside [0, 5]
+        assert_eq!(selects.iter().filter(|&&s| !s).count(), 5);
+    }
+
+    #[test]
+    fn init_rejected_by_gate_codec() {
+        let g = paper_geom();
+        let op = Operation::init1(vec![0, 1]);
+        assert!(encode(ModelKind::Standard, &op, &g).is_err());
+    }
+
+    #[test]
+    fn wrong_length_rejected() {
+        let g = paper_geom();
+        let mut bv = BitVec::new();
+        bv.push_bits(0, 35);
+        assert!(decode(ModelKind::Minimal, &bv, &g).is_err());
+    }
+}

@@ -1,0 +1,25 @@
+//! The partition instruction-set architecture.
+//!
+//! * [`operation`] — abstract operations: one stateful-logic cycle executing
+//!   a set of concurrent gates in disjoint *sections* (serial / parallel /
+//!   semi-parallel, Section 2.1 of the paper), or an initialization write.
+//! * [`models`] — the three designs: **unlimited** (Section 2), **standard**
+//!   (Section 3: identical intra-partition indices, no split-input, uniform
+//!   direction) and **minimal** (Section 4: uniform partition distance,
+//!   periodic), as operation validators.
+//! * [`opcode`] — the per-partition half-gate opcode of Table 1.
+//! * [`encode`] — bit-exact control-message codecs for every model
+//!   (30 / 607 / 79 / 36 bits at n=1024, k=32, NOT/NOR gate set).
+//! * [`lower`] — the legalizer: rewrites operations that a model does not
+//!   support into sequences of supported alternatives (Section 5).
+
+pub mod encode;
+pub mod lower;
+pub mod models;
+pub mod opcode;
+pub mod operation;
+pub mod schedule;
+
+pub use encode::{decode, encode, message_bits, BitVec};
+pub use models::ModelKind;
+pub use operation::{Direction, GateOp, OpKind, Operation};

@@ -1,0 +1,251 @@
+//! The three partition designs as operation validators.
+//!
+//! * **Unlimited** (Section 2): any set of concurrent gates in disjoint
+//!   sections — including split-input gates and per-partition indices.
+//! * **Standard** (Section 3): adds *Identical Indices*, *No Split-Input*
+//!   and *Uniform Direction*.
+//! * **Minimal** (Section 4): adds *Uniform Partition-Distance* and
+//!   *Periodic* (gates repeat every `T` partitions, `T` greater than the
+//!   partition distance).
+//! * **Baseline**: a crossbar without partitions — serial gates only.
+
+use crate::crossbar::gate::GateSet;
+use crate::crossbar::geometry::Geometry;
+use crate::isa::operation::Operation;
+use anyhow::{ensure, Result};
+
+/// Which design a controller / crossbar pair implements.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ModelKind {
+    /// No partitions: one gate per cycle, 3·log2(n)-bit messages.
+    Baseline,
+    /// Section 2: full generality, 3k·log2(n/k) + 3k + (k-1)-bit messages.
+    Unlimited,
+    /// Section 3: shared intra-partition indices + generated opcodes,
+    /// 3·log2(n/k) + (2k-1) + 1-bit messages.
+    Standard,
+    /// Section 4: periodic inter-partition patterns + range generator,
+    /// 3·log2(n/k) + 4·log2(k) + 1-bit messages.
+    Minimal,
+}
+
+impl ModelKind {
+    pub const ALL: [ModelKind; 4] = [ModelKind::Baseline, ModelKind::Unlimited, ModelKind::Standard, ModelKind::Minimal];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ModelKind::Baseline => "baseline",
+            ModelKind::Unlimited => "unlimited",
+            ModelKind::Standard => "standard",
+            ModelKind::Minimal => "minimal",
+        }
+    }
+
+    /// Validate `op` against this model's operation set. Initialization
+    /// writes are legal in every model (they are write commands, outside the
+    /// paper's gate-operation formats — see DESIGN.md).
+    pub fn check(&self, op: &Operation, geom: &Geometry, gate_set: GateSet) -> Result<()> {
+        op.validate(geom, gate_set)?;
+        if matches!(op, Operation::Init { .. }) {
+            return Ok(());
+        }
+        match self {
+            ModelKind::Baseline => check_baseline(op, geom),
+            ModelKind::Unlimited => Ok(()),
+            ModelKind::Standard => check_standard(op, geom),
+            ModelKind::Minimal => {
+                check_standard(op, geom)?;
+                check_minimal(op, geom)
+            }
+        }
+    }
+
+    /// Whether `op` is legal under this model.
+    pub fn supports(&self, op: &Operation, geom: &Geometry, gate_set: GateSet) -> bool {
+        self.check(op, geom, gate_set).is_ok()
+    }
+}
+
+fn check_baseline(op: &Operation, _geom: &Geometry) -> Result<()> {
+    let Operation::Gates(gates) = op else { return Ok(()) };
+    ensure!(gates.len() == 1, "baseline crossbar executes a single gate per cycle, got {}", gates.len());
+    Ok(())
+}
+
+/// Section 3.1 criteria.
+fn check_standard(op: &Operation, geom: &Geometry) -> Result<()> {
+    let Operation::Gates(gates) = op else { return Ok(()) };
+
+    // No Split-Input: inputs of each gate share a partition.
+    for g in gates {
+        ensure!(g.input_partition(geom).is_some(), "split-input gate (inputs span partitions) requires the unlimited model");
+    }
+
+    // Identical Indices: intra-partition (ia, ib, io) identical across gates.
+    // A NOT gate occupies both input slots (InB := InA).
+    let tuple = |g: &crate::isa::operation::GateOp| {
+        let ia = geom.intra(g.ins[0]);
+        let ib = geom.intra(*g.ins.get(1).unwrap_or(&g.ins[0]));
+        (ia, ib, geom.intra(g.out))
+    };
+    let first = tuple(&gates[0]);
+    for g in &gates[1..] {
+        let t = tuple(g);
+        ensure!(t == first, "identical-indices violation: intra indices {t:?} differ from {first:?}");
+    }
+
+    // Uniform Direction.
+    op.uniform_direction(geom)?;
+    Ok(())
+}
+
+/// Section 4.1 criteria (on top of standard).
+fn check_minimal(op: &Operation, geom: &Geometry) -> Result<()> {
+    let Operation::Gates(gates) = op else { return Ok(()) };
+
+    // Uniform Partition-Distance: |distance| identical for all gates
+    // (signs are already uniform by the standard Uniform Direction check).
+    let dist = |g: &crate::isa::operation::GateOp| g.distance(geom).expect("split-input rejected by standard check").unsigned_abs();
+    let d = dist(&gates[0]);
+    for g in &gates[1..] {
+        let di = dist(g);
+        ensure!(di == d, "uniform-distance violation: distances {di} and {d} mixed in one operation");
+    }
+
+    // Periodic: input partitions form a contiguous arithmetic progression
+    // with period T > d (so consecutive sections do not overlap).
+    let mut inputs: Vec<usize> = gates.iter().map(|g| g.input_partition(geom).unwrap()).collect();
+    inputs.sort_unstable();
+    for w in inputs.windows(2) {
+        ensure!(w[0] != w[1], "two gates share input partition {}", w[0]);
+    }
+    if inputs.len() >= 2 {
+        let t = inputs[1] - inputs[0];
+        ensure!(t > d, "period T={t} must exceed the partition distance d={d}");
+        for w in inputs.windows(2) {
+            let ti = w[1] - w[0];
+            ensure!(ti == t, "aperiodic gate placement: gaps {ti} and {t} differ");
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::operation::GateOp;
+
+    fn geom() -> Geometry {
+        Geometry::new(256, 8, 8).unwrap() // m = 32, k = 8
+    }
+
+    /// Figure 2(a): a serial gate — legal everywhere.
+    #[test]
+    fn fig2a_serial_supported_by_all() {
+        let g = geom();
+        let op = Operation::serial(GateOp::nor(g.col(1, 0), g.col(1, 1), g.col(4, 3)));
+        for m in ModelKind::ALL {
+            assert!(m.supports(&op, &g, GateSet::NotNor), "{}", m.name());
+        }
+    }
+
+    /// Figure 2(b): fully parallel — legal in all partition models.
+    #[test]
+    fn fig2b_parallel() {
+        let g = geom();
+        let op = Operation::Gates((0..8).map(|p| GateOp::nor(g.col(p, 0), g.col(p, 1), g.col(p, 3))).collect());
+        assert!(!ModelKind::Baseline.supports(&op, &g, GateSet::NotNor));
+        assert!(ModelKind::Unlimited.supports(&op, &g, GateSet::NotNor));
+        assert!(ModelKind::Standard.supports(&op, &g, GateSet::NotNor));
+        assert!(ModelKind::Minimal.supports(&op, &g, GateSet::NotNor));
+    }
+
+    /// Figure 2(c): distances (1,1), periodic — legal in standard & minimal.
+    #[test]
+    fn fig2c_semi_parallel() {
+        let g = geom();
+        let op = Operation::Gates(vec![
+            GateOp::nor(g.col(0, 0), g.col(0, 1), g.col(1, 3)),
+            GateOp::nor(g.col(2, 0), g.col(2, 1), g.col(3, 3)),
+            GateOp::nor(g.col(4, 0), g.col(4, 1), g.col(5, 3)),
+            GateOp::nor(g.col(6, 0), g.col(6, 1), g.col(7, 3)),
+        ]);
+        assert!(ModelKind::Standard.supports(&op, &g, GateSet::NotNor));
+        assert!(ModelKind::Minimal.supports(&op, &g, GateSet::NotNor));
+    }
+
+    /// Figure 2(d): distances (0,1,0) — standard yes, minimal no
+    /// ("Figure 2(d) is rarely used — e.g., not at all in MultPIM").
+    #[test]
+    fn fig2d_mixed_distance_not_minimal() {
+        let g = geom();
+        let op = Operation::Gates(vec![
+            GateOp::nor(g.col(0, 0), g.col(0, 1), g.col(0, 3)), // d=0
+            GateOp::nor(g.col(2, 0), g.col(2, 1), g.col(3, 3)), // d=1
+            GateOp::nor(g.col(5, 0), g.col(5, 1), g.col(5, 3)), // d=0
+        ]);
+        assert!(ModelKind::Unlimited.supports(&op, &g, GateSet::NotNor));
+        assert!(ModelKind::Standard.supports(&op, &g, GateSet::NotNor));
+        assert!(!ModelKind::Minimal.supports(&op, &g, GateSet::NotNor));
+    }
+
+    #[test]
+    fn identical_indices_enforced() {
+        let g = geom();
+        let op = Operation::Gates(vec![
+            GateOp::nor(g.col(0, 0), g.col(0, 1), g.col(0, 3)),
+            GateOp::nor(g.col(2, 0), g.col(2, 2), g.col(2, 3)), // ib differs
+        ]);
+        assert!(ModelKind::Unlimited.supports(&op, &g, GateSet::NotNor));
+        assert!(!ModelKind::Standard.supports(&op, &g, GateSet::NotNor));
+    }
+
+    #[test]
+    fn split_input_only_unlimited() {
+        let g = geom();
+        let op = Operation::serial(GateOp::nor(g.col(0, 0), g.col(1, 1), g.col(2, 3)));
+        assert!(ModelKind::Unlimited.supports(&op, &g, GateSet::NotNor));
+        assert!(!ModelKind::Standard.supports(&op, &g, GateSet::NotNor));
+        assert!(!ModelKind::Minimal.supports(&op, &g, GateSet::NotNor));
+    }
+
+    #[test]
+    fn aperiodic_rejected_by_minimal() {
+        let g = geom();
+        // Inputs at partitions 0, 1, 4 (gaps 1 and 3): aperiodic.
+        let op = Operation::Gates(vec![
+            GateOp::nor(g.col(0, 0), g.col(0, 1), g.col(0, 3)),
+            GateOp::nor(g.col(1, 0), g.col(1, 1), g.col(1, 3)),
+            GateOp::nor(g.col(4, 0), g.col(4, 1), g.col(4, 3)),
+        ]);
+        assert!(ModelKind::Standard.supports(&op, &g, GateSet::NotNor));
+        assert!(!ModelKind::Minimal.supports(&op, &g, GateSet::NotNor));
+    }
+
+    #[test]
+    fn period_must_exceed_distance() {
+        let g = geom();
+        // d=1 with T=1 would overlap sections; construction is physically
+        // invalid so even Unlimited rejects (sections overlap).
+        let op = Operation::Gates(vec![
+            GateOp::nor(g.col(0, 0), g.col(0, 1), g.col(1, 3)),
+            GateOp::nor(g.col(1, 0), g.col(1, 1), g.col(2, 3)),
+        ]);
+        assert!(!ModelKind::Unlimited.supports(&op, &g, GateSet::NotNor));
+        // d=1 with T=2 is fine.
+        let op2 = Operation::Gates(vec![
+            GateOp::nor(g.col(0, 0), g.col(0, 1), g.col(1, 3)),
+            GateOp::nor(g.col(2, 0), g.col(2, 1), g.col(3, 3)),
+        ]);
+        assert!(ModelKind::Minimal.supports(&op2, &g, GateSet::NotNor));
+    }
+
+    #[test]
+    fn inits_legal_everywhere() {
+        let g = geom();
+        let op = Operation::init1(vec![0, 5, 100, 255]);
+        for m in ModelKind::ALL {
+            assert!(m.supports(&op, &g, GateSet::NotNor), "{}", m.name());
+        }
+    }
+}

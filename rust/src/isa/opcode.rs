@@ -1,0 +1,104 @@
+//! The per-partition half-gate opcode (Table 1 of the paper).
+//!
+//! Under the half-gates technique each partition's column decoder receives a
+//! 3-bit opcode: two bits enable the input decoder units (`InA`, `InB`) and
+//! one bit enables the output decoder unit (`Out`). A partition applying only
+//! input voltages or only output voltages executes *half* a gate; the
+//! combination of half-gates within one section forms a valid gate.
+
+use std::fmt;
+
+/// Table 1: the opcode of an individual partition.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct Opcode {
+    /// Apply `V_IN` at the partition's `InA` index.
+    pub in_a: bool,
+    /// Apply `V_IN` at the partition's `InB` index.
+    pub in_b: bool,
+    /// Apply `V_OUT` at the partition's `Out` index.
+    pub out: bool,
+}
+
+impl Opcode {
+    /// `000` — apply no voltages (unused / intermediate partition).
+    pub const IDLE: Opcode = Opcode { in_a: false, in_b: false, out: false };
+    /// `111` — full gate within this partition.
+    pub const FULL: Opcode = Opcode { in_a: true, in_b: true, out: true };
+    /// `110` — `Gate(InA, InB) → ?`: the input half of a half-gate pair.
+    pub const INPUTS: Opcode = Opcode { in_a: true, in_b: true, out: false };
+    /// `001` — `? → Out`: the output half of a half-gate pair.
+    pub const OUTPUT: Opcode = Opcode { in_a: false, in_b: false, out: true };
+
+    /// Table 1 index: `InA·4 + InB·2 + Out`.
+    #[inline]
+    pub fn index(&self) -> u8 {
+        (self.in_a as u8) << 2 | (self.in_b as u8) << 1 | self.out as u8
+    }
+
+    /// Inverse of [`Opcode::index`].
+    #[inline]
+    pub fn from_index(i: u8) -> Opcode {
+        Opcode { in_a: i & 4 != 0, in_b: i & 2 != 0, out: i & 1 != 0 }
+    }
+
+    /// Whether this partition applies any voltage at all.
+    #[inline]
+    pub fn is_active(&self) -> bool {
+        self.in_a || self.in_b || self.out
+    }
+}
+
+impl fmt::Display for Opcode {
+    /// Renders the Table 1 description, e.g. `Gate(InA,?) -> Out` for 101.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if !self.is_active() {
+            return write!(f, "-");
+        }
+        if self.in_a || self.in_b {
+            let a = if self.in_a { "InA" } else { "?" };
+            let b = if self.in_b { "InB" } else { "?" };
+            let o = if self.out { "Out" } else { "?" };
+            write!(f, "Gate({a},{b}) -> {o}")
+        } else {
+            write!(f, "? -> Out")
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn index_roundtrip_all_eight() {
+        for i in 0..8u8 {
+            assert_eq!(Opcode::from_index(i).index(), i);
+        }
+    }
+
+    /// Reproduces Table 1 verbatim (experiment E1).
+    #[test]
+    fn table1_descriptions() {
+        let expect = [
+            (0b000, "-"),
+            (0b001, "? -> Out"),
+            (0b010, "Gate(?,InB) -> ?"),
+            (0b011, "Gate(?,InB) -> Out"),
+            (0b100, "Gate(InA,?) -> ?"),
+            (0b101, "Gate(InA,?) -> Out"),
+            (0b110, "Gate(InA,InB) -> ?"),
+            (0b111, "Gate(InA,InB) -> Out"),
+        ];
+        for (idx, s) in expect {
+            assert_eq!(Opcode::from_index(idx).to_string(), s, "opcode {idx:03b}");
+        }
+    }
+
+    #[test]
+    fn named_constants() {
+        assert_eq!(Opcode::IDLE.index(), 0b000);
+        assert_eq!(Opcode::OUTPUT.index(), 0b001);
+        assert_eq!(Opcode::INPUTS.index(), 0b110);
+        assert_eq!(Opcode::FULL.index(), 0b111);
+    }
+}

@@ -1,0 +1,324 @@
+//! Abstract partition operations and their section structure.
+
+use crate::crossbar::gate::{GateSet, GateType};
+use crate::crossbar::geometry::Geometry;
+use anyhow::{bail, ensure, Result};
+
+/// A single stateful-logic gate within an operation: `out = gate(ins...)`,
+/// all columns given as absolute bitline indices.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct GateOp {
+    pub gate: GateType,
+    pub ins: Vec<usize>,
+    pub out: usize,
+}
+
+impl GateOp {
+    pub fn nor(a: usize, b: usize, out: usize) -> Self {
+        Self { gate: GateType::Nor, ins: vec![a, b], out }
+    }
+
+    pub fn not(a: usize, out: usize) -> Self {
+        Self { gate: GateType::Not, ins: vec![a], out }
+    }
+
+    /// Inclusive partition interval spanned by this gate (its *section* in a
+    /// tight division).
+    pub fn span(&self, geom: &Geometry) -> (usize, usize) {
+        let mut lo = geom.partition_of(self.out);
+        let mut hi = lo;
+        for &c in &self.ins {
+            let p = geom.partition_of(c);
+            lo = lo.min(p);
+            hi = hi.max(p);
+        }
+        (lo, hi)
+    }
+
+    /// Partition holding the inputs, if they all share one (`None` for
+    /// split-input gates, which only the unlimited model supports).
+    pub fn input_partition(&self, geom: &Geometry) -> Option<usize> {
+        let mut it = self.ins.iter().map(|&c| geom.partition_of(c));
+        let first = it.next()?;
+        it.all(|p| p == first).then_some(first)
+    }
+
+    /// Signed partition distance `partition(out) - partition(ins)`
+    /// (`None` for split-input gates).
+    pub fn distance(&self, geom: &Geometry) -> Option<isize> {
+        let pi = self.input_partition(geom)?;
+        Some(geom.partition_of(self.out) as isize - pi as isize)
+    }
+
+    /// The gate's direction, if it crosses partitions.
+    pub fn direction(&self, geom: &Geometry) -> Option<Direction> {
+        match self.distance(geom) {
+            Some(d) if d > 0 => Some(Direction::InputsLeft),
+            Some(d) if d < 0 => Some(Direction::OutputsLeft),
+            _ => None,
+        }
+    }
+}
+
+/// Global direction of a semi-parallel operation (Section 3.1: *Uniform
+/// Direction* — "inputs left of outputs" or "outputs left of inputs").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Direction {
+    /// Inputs are in partitions left of (below) their outputs.
+    InputsLeft,
+    /// Outputs are in partitions left of (below) their inputs.
+    OutputsLeft,
+}
+
+/// Classification of an operation per Section 2.1 / Figure 2.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpKind {
+    /// One gate, transistors conducting across its span (Figure 2(a)).
+    Serial,
+    /// One gate per partition, all transistors isolating (Figure 2(b)).
+    Parallel,
+    /// Anything in between (Figures 2(c,d)).
+    SemiParallel,
+    /// Initialization write (not a stateful-logic cycle).
+    Init,
+}
+
+/// One simulated cycle of the crossbar.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Operation {
+    /// A stateful-logic cycle: a set of gates executing concurrently in
+    /// pairwise-disjoint sections.
+    Gates(Vec<GateOp>),
+    /// An initialization write cycle: set `cols` to `value`. Writes do not
+    /// involve partition isolation and may touch any number of columns.
+    Init { cols: Vec<usize>, value: bool },
+}
+
+impl Operation {
+    /// Single-gate (serial) operation.
+    pub fn serial(g: GateOp) -> Self {
+        Operation::Gates(vec![g])
+    }
+
+    /// Initialization of `cols` to logical one (the MAGIC precondition).
+    pub fn init1(cols: Vec<usize>) -> Self {
+        Operation::Init { cols, value: true }
+    }
+
+    /// Number of stateful gates executed by this cycle (0 for inits).
+    pub fn gate_count(&self) -> usize {
+        match self {
+            Operation::Gates(gs) => gs.len(),
+            Operation::Init { .. } => 0,
+        }
+    }
+
+    /// Validate the operation against the crossbar structure: column ranges,
+    /// gate-set membership, output/input aliasing, and pairwise-disjoint
+    /// sections (the physical isolation requirement).
+    pub fn validate(&self, geom: &Geometry, gate_set: GateSet) -> Result<()> {
+        match self {
+            Operation::Init { cols, .. } => {
+                ensure!(!cols.is_empty(), "empty init operation");
+                for &c in cols {
+                    ensure!(c < geom.n, "init column {c} out of range (n={})", geom.n);
+                }
+                Ok(())
+            }
+            Operation::Gates(gates) => {
+                ensure!(!gates.is_empty(), "empty gate operation");
+                let mut spans: Vec<(usize, usize)> = Vec::with_capacity(gates.len());
+                for g in gates {
+                    ensure!(!g.gate.is_init(), "init pseudo-gate {:?} inside a Gates cycle; use Operation::Init", g.gate);
+                    gate_set.check(g.gate)?;
+                    ensure!(g.ins.len() == g.gate.arity(), "gate {:?} expects {} inputs, got {}", g.gate, g.gate.arity(), g.ins.len());
+                    ensure!(g.out < geom.n, "output column {} out of range (n={})", g.out, geom.n);
+                    for &c in &g.ins {
+                        ensure!(c < geom.n, "input column {c} out of range (n={})", geom.n);
+                        ensure!(c != g.out, "gate output column {} aliases an input", g.out);
+                    }
+                    spans.push(g.span(geom));
+                }
+                spans.sort_unstable();
+                for w in spans.windows(2) {
+                    ensure!(w[0].1 < w[1].0, "sections {:?} and {:?} overlap: concurrent gates must occupy disjoint partition intervals", w[0], w[1]);
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// The sections of a *tight* division (Section 3.2.2): one inclusive
+    /// partition interval per gate, sorted. Partitions not covered form
+    /// implicit single-partition gate-less sections.
+    pub fn sections(&self, geom: &Geometry) -> Vec<(usize, usize)> {
+        match self {
+            Operation::Init { .. } => vec![],
+            Operation::Gates(gates) => {
+                let mut s: Vec<(usize, usize)> = gates.iter().map(|g| g.span(geom)).collect();
+                s.sort_unstable();
+                s
+            }
+        }
+    }
+
+    /// Transistor selects of the tight division: `selects[t]` is `true` when
+    /// the transistor between partitions `t` and `t+1` is **non-conducting**
+    /// (isolating). Tight: conducting only strictly inside a gate's span.
+    pub fn tight_selects(&self, geom: &Geometry) -> Vec<bool> {
+        let sections = self.sections(geom);
+        let mut selects = vec![true; geom.k.saturating_sub(1)];
+        for (lo, hi) in sections {
+            for t in lo..hi {
+                selects[t] = false;
+            }
+        }
+        selects
+    }
+
+    /// Classify per Section 2.1.
+    pub fn kind(&self, geom: &Geometry) -> OpKind {
+        match self {
+            Operation::Init { .. } => OpKind::Init,
+            Operation::Gates(gates) => {
+                if gates.len() == 1 {
+                    OpKind::Serial
+                } else if gates.iter().all(|g| {
+                    let (lo, hi) = g.span(geom);
+                    lo == hi
+                }) && gates.len() == geom.k
+                {
+                    OpKind::Parallel
+                } else {
+                    OpKind::SemiParallel
+                }
+            }
+        }
+    }
+
+    /// The uniform direction of the operation if one exists: `Ok(None)` when
+    /// no gate crosses partitions, `Err` when gates disagree.
+    pub fn uniform_direction(&self, geom: &Geometry) -> Result<Option<Direction>> {
+        let Operation::Gates(gates) = self else {
+            return Ok(None);
+        };
+        let mut dir: Option<Direction> = None;
+        for g in gates {
+            if let Some(d) = g.direction(geom) {
+                match dir {
+                    None => dir = Some(d),
+                    Some(prev) if prev == d => {}
+                    Some(prev) => bail!("mixed directions {prev:?} and {d:?} in one operation"),
+                }
+            }
+        }
+        Ok(dir)
+    }
+
+    /// Canonical form for comparing reconstructed operations: `NOR(a, a)` is
+    /// normalized to `NOT(a)`, gates are sorted by output column.
+    pub fn normalized(&self) -> Operation {
+        match self {
+            Operation::Init { cols, value } => {
+                let mut c = cols.clone();
+                c.sort_unstable();
+                c.dedup();
+                Operation::Init { cols: c, value: *value }
+            }
+            Operation::Gates(gates) => {
+                let mut gs: Vec<GateOp> = gates
+                    .iter()
+                    .map(|g| {
+                        if g.gate == GateType::Nor && g.ins.len() == 2 && g.ins[0] == g.ins[1] {
+                            GateOp::not(g.ins[0], g.out)
+                        } else {
+                            g.clone()
+                        }
+                    })
+                    .collect();
+                gs.sort_by_key(|g| g.out);
+                Operation::Gates(gs)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn geom() -> Geometry {
+        Geometry::new(256, 8, 8).unwrap() // m = 32
+    }
+
+    #[test]
+    fn serial_operation_validates() {
+        let g = geom();
+        let op = Operation::serial(GateOp::nor(0, 1, 100));
+        op.validate(&g, GateSet::NotNor).unwrap();
+        assert_eq!(op.kind(&g), OpKind::Serial);
+        assert_eq!(op.sections(&g), vec![(0, 3)]);
+        // Tight selects: conducting only inside [0, 3].
+        assert_eq!(op.tight_selects(&g), vec![false, false, false, true, true, true, true]);
+    }
+
+    #[test]
+    fn parallel_operation() {
+        let g = geom();
+        let gates: Vec<GateOp> = (0..8).map(|p| GateOp::nor(g.col(p, 0), g.col(p, 1), g.col(p, 2))).collect();
+        let op = Operation::Gates(gates);
+        op.validate(&g, GateSet::NotNor).unwrap();
+        assert_eq!(op.kind(&g), OpKind::Parallel);
+        assert!(op.tight_selects(&g).iter().all(|&s| s));
+    }
+
+    #[test]
+    fn semi_parallel_fig2c() {
+        // Figure 2(c): two concurrent gates, each input partition p, output
+        // partition p+1 — distances (1, 1).
+        let g = geom();
+        let op = Operation::Gates(vec![
+            GateOp::nor(g.col(0, 0), g.col(0, 1), g.col(1, 3)),
+            GateOp::nor(g.col(2, 0), g.col(2, 1), g.col(3, 3)),
+        ]);
+        op.validate(&g, GateSet::NotNor).unwrap();
+        assert_eq!(op.kind(&g), OpKind::SemiParallel);
+        assert_eq!(op.sections(&g), vec![(0, 1), (2, 3)]);
+        assert_eq!(op.uniform_direction(&g).unwrap(), Some(Direction::InputsLeft));
+    }
+
+    #[test]
+    fn overlapping_sections_rejected() {
+        let g = geom();
+        let op = Operation::Gates(vec![
+            GateOp::nor(g.col(0, 0), g.col(0, 1), g.col(2, 3)), // span [0,2]
+            GateOp::nor(g.col(1, 0), g.col(1, 1), g.col(1, 3)), // span [1,1]
+        ]);
+        assert!(op.validate(&g, GateSet::NotNor).is_err());
+    }
+
+    #[test]
+    fn mixed_direction_detected() {
+        let g = geom();
+        let op = Operation::Gates(vec![
+            GateOp::nor(g.col(0, 0), g.col(0, 1), g.col(1, 3)), // rightward
+            GateOp::nor(g.col(5, 0), g.col(5, 1), g.col(4, 3)), // leftward
+        ]);
+        op.validate(&g, GateSet::NotNor).unwrap(); // physically fine
+        assert!(op.uniform_direction(&g).is_err()); // but not standard-legal
+    }
+
+    #[test]
+    fn split_input_distance_none() {
+        let g = geom();
+        let gate = GateOp::nor(g.col(0, 0), g.col(1, 1), g.col(2, 3));
+        assert_eq!(gate.input_partition(&g), None);
+        assert_eq!(gate.distance(&g), None);
+    }
+
+    #[test]
+    fn normalization_folds_nor_self_to_not() {
+        let op = Operation::Gates(vec![GateOp { gate: GateType::Nor, ins: vec![5, 5], out: 9 }]);
+        assert_eq!(op.normalized(), Operation::Gates(vec![GateOp::not(5, 9)]));
+    }
+}

@@ -1,0 +1,121 @@
+//! The operation packer: merges adjacent independent cycles into one
+//! semi-parallel cycle when the target model can express the combination.
+//!
+//! This is how the *unlimited* model earns its latency edge in Section 5:
+//! cycles whose gates live in disjoint sections but use different
+//! intra-partition indices (or mixed distances) can only execute together
+//! under unlimited. Merging is semantics-preserving because concurrent gates
+//! occupy disjoint sections — column sets cannot overlap, so no data hazard
+//! can exist within a merged cycle.
+
+use crate::crossbar::gate::GateSet;
+use crate::crossbar::geometry::Geometry;
+use crate::isa::models::ModelKind;
+use crate::isa::operation::Operation;
+
+/// Statistics of one packing run.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PackStats {
+    pub ops_in: usize,
+    pub ops_out: usize,
+    pub merges: usize,
+}
+
+/// Greedily merge adjacent `Gates` cycles while the combined cycle stays
+/// physically valid (disjoint sections) and legal under `model`.
+/// Initialization cycles act as barriers (writes cannot share a cycle with
+/// stateful gates).
+pub fn pack_program(ops: &[Operation], model: ModelKind, geom: &Geometry, gate_set: GateSet) -> (Vec<Operation>, PackStats) {
+    let mut stats = PackStats { ops_in: ops.len(), ..Default::default() };
+    let mut out: Vec<Operation> = Vec::with_capacity(ops.len());
+    for op in ops {
+        if let (Some(Operation::Gates(prev)), Operation::Gates(cur)) = (out.last(), op) {
+            let mut merged = prev.clone();
+            merged.extend(cur.iter().cloned());
+            let cand = Operation::Gates(merged);
+            // validate() guarantees disjoint sections => disjoint columns =>
+            // merging two sequential cycles cannot change semantics.
+            if cand.validate(geom, gate_set).is_ok() && model.supports(&cand, geom, gate_set) {
+                *out.last_mut().unwrap() = cand;
+                stats.merges += 1;
+                continue;
+            }
+        }
+        out.push(op.clone());
+    }
+    stats.ops_out = out.len();
+    (out, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crossbar::crossbar::Crossbar;
+    use crate::isa::operation::GateOp;
+
+    fn geom() -> Geometry {
+        Geometry::new(256, 8, 32).unwrap()
+    }
+
+    #[test]
+    fn merges_disjoint_cycles_under_unlimited() {
+        let g = geom();
+        // Two cycles with different intra indices in disjoint partitions:
+        // only unlimited can merge them.
+        let ops = vec![
+            Operation::serial(GateOp::nor(g.col(0, 0), g.col(0, 1), g.col(0, 2))),
+            Operation::serial(GateOp::nor(g.col(3, 4), g.col(3, 5), g.col(3, 6))),
+        ];
+        let (unl, s_unl) = pack_program(&ops, ModelKind::Unlimited, &g, GateSet::NotNor);
+        assert_eq!(unl.len(), 1);
+        assert_eq!(s_unl.merges, 1);
+        let (std_, s_std) = pack_program(&ops, ModelKind::Standard, &g, GateSet::NotNor);
+        assert_eq!(std_.len(), 2);
+        assert_eq!(s_std.merges, 0);
+    }
+
+    #[test]
+    fn never_merges_overlapping_sections() {
+        let g = geom();
+        // Second cycle reads the first one's output — sections overlap, so
+        // the merge is rejected and semantics preserved.
+        let ops = vec![
+            Operation::serial(GateOp::nor(g.col(0, 0), g.col(0, 1), g.col(0, 2))),
+            Operation::serial(GateOp::nor(g.col(0, 2), g.col(0, 3), g.col(0, 4))),
+        ];
+        let (packed, stats) = pack_program(&ops, ModelKind::Unlimited, &g, GateSet::NotNor);
+        assert_eq!(packed.len(), 2);
+        assert_eq!(stats.merges, 0);
+    }
+
+    #[test]
+    fn init_cycles_are_barriers() {
+        let g = geom();
+        let ops = vec![
+            Operation::serial(GateOp::nor(g.col(0, 0), g.col(0, 1), g.col(0, 2))),
+            Operation::init1(vec![g.col(5, 0)]),
+            Operation::serial(GateOp::nor(g.col(3, 4), g.col(3, 5), g.col(3, 6))),
+        ];
+        let (packed, _) = pack_program(&ops, ModelKind::Unlimited, &g, GateSet::NotNor);
+        assert_eq!(packed.len(), 3);
+    }
+
+    #[test]
+    fn packing_preserves_execution_semantics() {
+        let g = geom();
+        // A chain of independent cycles across different partitions.
+        let ops: Vec<Operation> = (0..8)
+            .map(|p| Operation::serial(GateOp::nor(g.col(p, 0), g.col(p, 1), g.col(p, 2 + p % 3))))
+            .collect();
+        let (packed, stats) = pack_program(&ops, ModelKind::Unlimited, &g, GateSet::NotNor);
+        assert!(stats.merges > 0);
+
+        let mut a = Crossbar::new(g, GateSet::NotNor);
+        a.state.fill_random(11);
+        let mut b = a.clone();
+        a.execute_all(&ops).unwrap();
+        b.execute_all(&packed).unwrap();
+        assert_eq!(a.state, b.state);
+        assert!(b.metrics.cycles < a.metrics.cycles);
+    }
+}

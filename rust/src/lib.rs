@@ -1,0 +1,63 @@
+//! # PartitionPIM — practical memristive partitions for fast processing-in-memory
+//!
+//! Full-system reproduction of *PartitionPIM: Practical Memristive Partitions
+//! for Fast Processing-in-Memory* (Leitersdorf, Ronen, Kvatinsky — cs.AR 2022).
+//!
+//! The paper designs the **practical periphery and control** for memristive
+//! crossbar *partitions*: isolation transistors that let several stateful
+//! logic gates (MAGIC NOR / NOT, FELIX) execute concurrently **within each
+//! row**, on top of the inherent row-parallelism of stateful logic.
+//!
+//! Because the paper's substrate is memristive hardware, this crate builds the
+//! entire stack as a cycle-accurate architectural simulation:
+//!
+//! * [`crossbar`] — bit-packed, cycle-accurate crossbar simulator with
+//!   stateful-logic gate semantics, partition transistors and section
+//!   isolation, plus latency / energy (gate-count & switching) metrics.
+//! * [`isa`] — the partition operation model (serial / parallel /
+//!   semi-parallel), the three designs of the paper (**unlimited**,
+//!   **standard**, **minimal**) as validators, bit-exact control-message
+//!   codecs for each (30 / 607 / 79 / 36 bits at n=1024, k=32), and the
+//!   legalizer that rewrites unsupported operations into supported
+//!   alternatives (Section 5 of the paper).
+//! * [`periphery`] — structural + functional models of the decoders: the
+//!   *half-gates* technique (Table 1 opcodes), the standard model's opcode
+//!   generator, the minimal model's range generator, and CMOS gate-count
+//!   area models (including the naive Ω(k²) decoder stack for comparison).
+//! * [`algorithms`] — PIM algorithms as micro-op programs: NOR full adders,
+//!   N-bit addition, the optimized serial multiplier baseline, a
+//!   MultPIM-style partitioned multiplier, and partitioned bitonic sorting.
+//! * [`analysis`] — the combinatorial lower bounds on message length
+//!   (443 / 46 / 25 bits) via a small big-integer implementation.
+//! * [`coordinator`] — the L3 runtime: a tokio controller that batches
+//!   vectored arithmetic jobs onto crossbar rows, streams *encoded* control
+//!   messages through the periphery decode path, and meters latency,
+//!   energy, and control traffic.
+//! * [`runtime`] — PJRT/XLA execution of the AOT-compiled JAX/Pallas
+//!   crossbar-step artifact (`artifacts/*.hlo.txt`), used as an independent
+//!   backend to cross-check the rust simulator (python never runs at
+//!   request time).
+//!
+//! See `DESIGN.md` for the full system inventory and the experiment index,
+//! and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod algorithms;
+pub mod figures;
+pub mod analysis;
+pub mod bench_support;
+pub mod coordinator;
+pub mod crossbar;
+pub mod isa;
+pub mod periphery;
+pub mod runtime;
+
+pub use crossbar::{
+    crossbar::{Crossbar, Metrics},
+    gate::{GateSet, GateType},
+    geometry::Geometry,
+    state::BitMatrix,
+};
+pub use isa::{
+    models::ModelKind,
+    operation::{GateOp, Operation},
+};

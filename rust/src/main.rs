@@ -1,0 +1,253 @@
+//! `repro` — the PartitionPIM command-line driver.
+//!
+//! Subcommands (no clap vendored in this environment; see
+//! DESIGN.md §Substitutions):
+//!
+//! ```text
+//! repro report                      control formats, lower bounds, periphery
+//! repro figure6                     regenerate Figure 6 (latency/control/area)
+//! repro sort                        sorting speedup table (intro claim)
+//! repro serve [--model M] [--crossbars N] [--rows R] [--jobs J] [--len L]
+//!                                   end-to-end vector-multiply service demo
+//! repro xla-parity [--artifacts D] [--n N] [--k K] [--rows R]
+//!                                   cross-check rust sim vs the XLA artifact
+//! ```
+
+use anyhow::{bail, Context, Result};
+use partition_pim::algorithms::multpim::{build_multpim, MultPimVariant};
+use partition_pim::coordinator::{PimService, ServiceConfig, WorkloadKind};
+use partition_pim::crossbar::crossbar::Crossbar;
+use partition_pim::crossbar::gate::GateSet;
+use partition_pim::crossbar::geometry::Geometry;
+use partition_pim::figures;
+use partition_pim::isa::models::ModelKind;
+use partition_pim::runtime::XlaCrossbar;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::time::Instant;
+
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            let val = args.get(i + 1).cloned().unwrap_or_default();
+            flags.insert(key.to_string(), val);
+            i += 2;
+        } else {
+            i += 1;
+        }
+    }
+    flags
+}
+
+fn parse_model(s: &str) -> Result<ModelKind> {
+    Ok(match s {
+        "baseline" => ModelKind::Baseline,
+        "unlimited" => ModelKind::Unlimited,
+        "standard" => ModelKind::Standard,
+        "minimal" => ModelKind::Minimal,
+        other => bail!("unknown model '{other}' (baseline|unlimited|standard|minimal)"),
+    })
+}
+
+fn cmd_report() -> Result<()> {
+    let geom = Geometry::paper(64);
+    println!("PartitionPIM control & periphery report (n={}, k={}, NOT/NOR)\n", geom.n, geom.k);
+
+    println!("Control-message formats vs combinatorial lower bounds (E2-E5):");
+    println!("{:<11} {:>12} {:>13}  operation count", "model", "format bits", "lower bound");
+    for r in figures::control_table(&geom) {
+        let count = if r.operation_count_decimal.len() > 32 {
+            format!("{}... ({} digits)", &r.operation_count_decimal[..24], r.operation_count_decimal.len())
+        } else {
+            r.operation_count_decimal.clone()
+        };
+        println!("{:<11} {:>12} {:>13}  {}", r.model.name(), r.format_bits, r.lower_bound_bits, count);
+    }
+
+    println!("\nPeriphery structural cost (E12):");
+    println!("{:<22} {:>12} {:>13} {:>12}", "design", "CMOS gates", "analog muxes", "extra logic");
+    for r in figures::periphery_table(&geom) {
+        println!("{:<22} {:>12} {:>13} {:>12}", r.name, r.area.cmos_gates, r.area.analog_muxes, r.area.extra_logic_gates);
+    }
+
+    println!("\nIsolation-transistor area overhead: {:.2}% (paper cites ~3% [8])", 100.0 * figures::transistor_overhead(&geom));
+    Ok(())
+}
+
+fn cmd_figure6() -> Result<()> {
+    println!("Figure 6 — 32-bit multiplication, n=1024, k=32 (paper values in parens)\n");
+    println!(
+        "{:<11} {:>8} {:>12} {:>9} {:>10} {:>9} {:>10} {:>10}",
+        "model", "cycles", "speedup", "msg bits", "ctrl x", "memrist.", "area x", "energy x"
+    );
+    let paper = |m: ModelKind| match m {
+        ModelKind::Baseline => ("1.0", "1.0", "1.00", "1.0"),
+        ModelKind::Unlimited => ("11.3", "20.2", "~1.4", "2.1"),
+        ModelKind::Standard => ("9.2", "2.6", "~1.4", "2.1"),
+        ModelKind::Minimal => ("8.6", "1.2", "~1.4", "2.1"),
+    };
+    for r in figures::figure6()? {
+        let p = paper(r.model);
+        println!(
+            "{:<11} {:>8} {:>5.1}x ({:>4}) {:>9} {:>4.1} ({:>4}) {:>9} {:>4.2} ({:>4}) {:>4.2} ({:>3})",
+            r.model.name(),
+            r.stats.cycles,
+            r.speedup_vs_serial,
+            p.0,
+            r.message_bits,
+            r.control_overhead,
+            p.1,
+            r.stats.footprint_cols,
+            r.area_ratio,
+            p.2,
+            r.energy_ratio,
+            p.3,
+        );
+    }
+    println!("\nMultiplication scaling (N, serial cycles, partitioned cycles, speedup):");
+    for (n, s, p, sp) in figures::mult_scaling()? {
+        println!("  N={n:<3} serial={s:<7} partitioned={p:<6} speedup={sp:.2}x");
+    }
+    Ok(())
+}
+
+fn cmd_sweep() -> Result<()> {
+    println!("Partition-count sweep — the paper's central trade-off (n=1024):\n");
+    println!("{:>4} {:>9} {:>10} {:>9} {:>9} {:>12}", "k", "speedup", "unlimited", "standard", "minimal", "transistors");
+    for r in figures::partition_sweep()? {
+        println!(
+            "{:>4} {:>8.2}x {:>7} bits {:>5} bits {:>4} bits {:>11.2}%",
+            r.k,
+            r.speedup,
+            r.bits_unlimited,
+            r.bits_standard,
+            r.bits_minimal,
+            100.0 * r.transistor_overhead
+        );
+    }
+    println!("\n(speedup and unlimited-message length both grow with k; the minimal");
+    println!(" design keeps control near the 30-bit baseline at every scale)");
+    Ok(())
+}
+
+fn cmd_sort() -> Result<()> {
+    println!("Sorting speedup (E10; paper intro cites 14x at 16 partitions [1]):\n");
+    println!("{:>6} {:>7} {:>14} {:>19} {:>9}", "elems", "w bits", "serial cycles", "partitioned cycles", "speedup");
+    for r in figures::sort_table(6)? {
+        println!("{:>6} {:>7} {:>14} {:>19} {:>8.2}x", r.elems, r.w_bits, r.serial_cycles, r.partitioned_cycles, r.speedup);
+    }
+    Ok(())
+}
+
+fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
+    let model = parse_model(flags.get("model").map(String::as_str).unwrap_or("minimal"))?;
+    let n_crossbars: usize = flags.get("crossbars").map(String::as_str).unwrap_or("4").parse()?;
+    let rows: usize = flags.get("rows").map(String::as_str).unwrap_or("64").parse()?;
+    let jobs: usize = flags.get("jobs").map(String::as_str).unwrap_or("8").parse()?;
+    let len: usize = flags.get("len").map(String::as_str).unwrap_or("256").parse()?;
+
+    println!("Starting PIM service: model={}, {} crossbars x {} rows", model.name(), n_crossbars, rows);
+    let mut svc = PimService::start(ServiceConfig { kind: WorkloadKind::Mul32, model, n_crossbars, rows })?;
+    println!("batch latency: {} crossbar cycles\n", svc.batch_cycles);
+
+    let t0 = Instant::now();
+    let mut seed = 0x243f6a8885a308d3u64;
+    let mut rnd = move || {
+        seed ^= seed << 13;
+        seed ^= seed >> 7;
+        seed ^= seed << 17;
+        seed & 0xffff_ffff
+    };
+    for j in 0..jobs {
+        let a: Vec<u64> = (0..len).map(|_| rnd()).collect();
+        let b: Vec<u64> = (0..len).map(|_| rnd()).collect();
+        let res = svc.submit(&a, &b)?;
+        for i in 0..len {
+            anyhow::ensure!(res.values[i] == a[i] * b[i], "wrong product at job {j} element {i}");
+        }
+        println!(
+            "job {j:>3}: {len} elements  sim_cycles={:<8} control={:>7} bits  wall={:?}",
+            res.sim_cycles, res.control_bits, res.wall
+        );
+    }
+    let wall = t0.elapsed();
+    let stats = svc.shutdown();
+    let elems = stats.elements as f64;
+    println!("\n{} jobs, {} elements in {:?}", stats.jobs, stats.elements, wall);
+    println!(
+        "throughput: {:.0} mults/s (wall)  |  {:.2} elements/kilocycle (simulated)",
+        elems / wall.as_secs_f64(),
+        1000.0 * elems / stats.metrics.cycles as f64
+    );
+    println!("control traffic: {} bits total ({:.1} bits/element)", stats.metrics.control_bits, stats.metrics.control_bits as f64 / elems);
+    println!("energy proxy: {} gate events, {} switch events", stats.metrics.gate_events, stats.metrics.switch_events);
+    Ok(())
+}
+
+fn cmd_xla_parity(flags: &HashMap<String, String>) -> Result<()> {
+    let dir = PathBuf::from(flags.get("artifacts").map(String::as_str).unwrap_or("artifacts"));
+    let n: usize = flags.get("n").map(String::as_str).unwrap_or("256").parse()?;
+    let k: usize = flags.get("k").map(String::as_str).unwrap_or("8").parse()?;
+    let rows: usize = flags.get("rows").map(String::as_str).unwrap_or("16").parse()?;
+    let geom = Geometry::new(n, k, rows)?;
+    println!("XLA parity check on n={n}, k={k}, rows={rows} (artifact dir {})", dir.display());
+
+    let mult = build_multpim(geom, MultPimVariant::Plain)?;
+    let mut sim = Crossbar::new(geom, GateSet::NotNor);
+    let mut expect = Vec::new();
+    let mut seed = 99u64;
+    for r in 0..rows {
+        seed = seed.wrapping_mul(6364136223846793005).wrapping_add(1);
+        let a = (seed >> 33) & ((1 << k) - 1);
+        let b = (seed >> 11) & ((1 << k) - 1);
+        mult.load(&mut sim, r, a, b)?;
+        expect.push(a * b);
+    }
+    let mut xla = XlaCrossbar::new(geom, &dir).context("loading step artifact (run `make artifacts`)")?;
+    xla.load_state(&sim.state);
+
+    let t0 = Instant::now();
+    sim.execute_all(&mult.program.ops)?;
+    let t_sim = t0.elapsed();
+    let t1 = Instant::now();
+    xla.execute_all(&mult.program.ops)?;
+    let t_xla = t1.elapsed();
+
+    let xb = xla.state_bits()?;
+    anyhow::ensure!(xb == sim.state, "XLA backend state diverged from the bit-packed simulator");
+    for r in 0..rows {
+        anyhow::ensure!(mult.read_product(&sim, r)? == expect[r], "bad product row {r}");
+    }
+    println!("parity OK over {} cycles ({} rows)", mult.program.ops.len(), rows);
+    println!("bit-packed sim: {t_sim:?}   XLA backend: {t_xla:?}");
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let flags = parse_flags(&args[1.min(args.len())..]);
+    match cmd {
+        "report" => cmd_report(),
+        "figure6" => cmd_figure6(),
+        "sweep" => cmd_sweep(),
+        "sort" => cmd_sort(),
+        "serve" => cmd_serve(&flags),
+        "xla-parity" => cmd_xla_parity(&flags),
+        _ => {
+            println!("PartitionPIM reproduction driver\n");
+            println!("usage: repro <report|figure6|sort|serve|xla-parity> [--flag value]...");
+            println!("  report      control formats, lower bounds, periphery areas");
+            println!("  figure6     regenerate Figure 6 (latency / control / area / energy)");
+            println!("  sweep       speedup vs control-overhead across partition counts");
+            println!("  sort        sorting speedup table");
+            println!("  serve       end-to-end vector-multiply service demo");
+            println!("              [--model minimal] [--crossbars 4] [--rows 64] [--jobs 8] [--len 256]");
+            println!("  xla-parity  rust simulator vs AOT XLA artifact cross-check");
+            println!("              [--artifacts artifacts] [--n 256] [--k 8] [--rows 16]");
+            Ok(())
+        }
+    }
+}

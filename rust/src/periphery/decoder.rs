@@ -1,0 +1,106 @@
+//! Structural model of the column-decoder building blocks (Figure 3(a)).
+//!
+//! A *decoder unit* receives one index and drives a fixed voltage at that
+//! bitline. It consists of a CMOS decoder (providing the select lines) plus
+//! one analog multiplexer per bitline [4, 17, 19]. A *column decoder* is
+//! three decoder units (InA, InB, Out). These counts feed the area
+//! comparison of Section 2.2 / 5.3.1.
+
+/// A `w`-bit CMOS decoder (`w → 2^w` one-hot).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CmosDecoder {
+    /// Address width in bits.
+    pub width: usize,
+}
+
+impl CmosDecoder {
+    pub fn new(width: usize) -> Self {
+        Self { width }
+    }
+
+    /// Number of one-hot output lines.
+    pub fn lines(&self) -> usize {
+        1usize << self.width
+    }
+
+    /// Two-input-gate equivalents: each of the `2^w` output AND gates costs
+    /// `w - 1` two-input gates, plus `w` input inverters.
+    pub fn gate_count(&self) -> usize {
+        if self.width == 0 {
+            return 0;
+        }
+        self.lines() * (self.width - 1) + self.width
+    }
+}
+
+/// One decoder unit: a CMOS decoder plus an analog multiplexer per bitline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DecoderUnit {
+    pub cmos: CmosDecoder,
+    /// Bitlines covered (= analog multiplexers).
+    pub bitlines: usize,
+}
+
+impl DecoderUnit {
+    /// Unit addressing `bitlines` columns.
+    pub fn for_bitlines(bitlines: usize) -> Self {
+        assert!(bitlines.is_power_of_two());
+        Self { cmos: CmosDecoder::new(bitlines.trailing_zeros() as usize), bitlines }
+    }
+
+    pub fn cmos_gates(&self) -> usize {
+        self.cmos.gate_count()
+    }
+
+    /// Analog multiplexers (pass structures) — identical across all designs,
+    /// as the paper stresses: only the CMOS select logic changes.
+    pub fn analog_muxes(&self) -> usize {
+        self.bitlines
+    }
+}
+
+/// A full column decoder: three decoder units (InA, InB, Out).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ColumnDecoder {
+    pub unit: DecoderUnit,
+}
+
+impl ColumnDecoder {
+    pub fn for_bitlines(bitlines: usize) -> Self {
+        Self { unit: DecoderUnit::for_bitlines(bitlines) }
+    }
+
+    pub fn cmos_gates(&self) -> usize {
+        3 * self.unit.cmos_gates()
+    }
+
+    pub fn analog_muxes(&self) -> usize {
+        3 * self.unit.analog_muxes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cmos_decoder_costs() {
+        // 10-bit decoder: 1024·9 + 10.
+        assert_eq!(CmosDecoder::new(10).gate_count(), 1024 * 9 + 10);
+        // 5-bit decoder: 32·4 + 5.
+        assert_eq!(CmosDecoder::new(5).gate_count(), 32 * 4 + 5);
+    }
+
+    /// Section 2.2: k small decoders use fewer CMOS gates than one big one,
+    /// because log2(n/k) < log2(n).
+    #[test]
+    fn k_small_decoders_cheaper_than_one_big() {
+        let n = 1024;
+        let k = 32;
+        let baseline = ColumnDecoder::for_bitlines(n);
+        let per_partition = ColumnDecoder::for_bitlines(n / k);
+        assert!(k * per_partition.cmos_gates() < baseline.cmos_gates());
+        // Analog mux count is unchanged in aggregate.
+        assert_eq!(k * per_partition.analog_muxes(), baseline.analog_muxes());
+    }
+}

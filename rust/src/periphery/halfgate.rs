@@ -1,0 +1,221 @@
+//! Functional half-gate decoding: from a decoded [`Message`] to the gates the
+//! crossbar physically executes.
+//!
+//! Each partition's decoder applies voltages according to its opcode
+//! (Table 1): `V_IN` at its `InA`/`InB` indices, `V_OUT` at its `Out` index.
+//! The isolation transistors split the row into *sections* (maximal runs of
+//! conducting transistors); the voltages applied inside one section combine
+//! into a single stateful gate — each partition only executes *half* a gate
+//! and trusts its section peers for the other half.
+
+use crate::crossbar::geometry::Geometry;
+use crate::isa::encode::{Message, PartitionFields};
+use crate::isa::opcode::Opcode;
+use crate::isa::operation::{GateOp, Operation};
+use crate::periphery::{opcode_gen, range_gen};
+use anyhow::{bail, ensure, Result};
+
+/// Split partitions `0..k` into sections at the non-conducting transistors.
+/// `selects[t] == true` means the transistor between partitions `t` and
+/// `t+1` is non-conducting (isolating).
+pub fn sections_from_selects(selects: &[bool]) -> Vec<(usize, usize)> {
+    let k = selects.len() + 1;
+    let mut sections = Vec::new();
+    let mut lo = 0usize;
+    for t in 0..k - 1 {
+        if selects[t] {
+            sections.push((lo, t));
+            lo = t + 1;
+        }
+    }
+    sections.push((lo, k - 1));
+    sections
+}
+
+/// Reconstruct the executed operation from per-partition decoder fields and
+/// transistor selects — the shared back-end of all three designs.
+pub fn reconstruct_from_fields(parts: &[PartitionFields], selects: &[bool], geom: &Geometry) -> Result<Operation> {
+    ensure!(parts.len() == geom.k, "expected {} partition field sets, got {}", geom.k, parts.len());
+    ensure!(selects.len() == geom.k - 1, "expected {} transistor selects, got {}", geom.k - 1, selects.len());
+    let mut gates = Vec::new();
+    for (lo, hi) in sections_from_selects(selects) {
+        let mut a: Option<usize> = None; // absolute column receiving V_IN via InA
+        let mut b: Option<usize> = None;
+        let mut o: Option<usize> = None;
+        for p in lo..=hi {
+            let f = &parts[p];
+            if f.opcode.in_a {
+                ensure!(a.is_none(), "two InA half-gates in section [{lo}, {hi}]");
+                a = Some(geom.col(p, f.ia));
+            }
+            if f.opcode.in_b {
+                ensure!(b.is_none(), "two InB half-gates in section [{lo}, {hi}]");
+                b = Some(geom.col(p, f.ib));
+            }
+            if f.opcode.out {
+                ensure!(o.is_none(), "two Out half-gates in section [{lo}, {hi}]");
+                o = Some(geom.col(p, f.io));
+            }
+        }
+        match (a, b, o) {
+            (None, None, None) => continue, // idle section
+            (Some(ca), Some(cb), Some(co)) => {
+                ensure!(co != ca && co != cb, "output column {co} aliases a gate input in section [{lo}, {hi}]");
+                // NOR(a, a) is physically a NOT — normalize so the
+                // reconstructed operation matches the controller's intent.
+                if ca == cb {
+                    gates.push(GateOp::not(ca, co));
+                } else {
+                    gates.push(GateOp::nor(ca, cb, co));
+                }
+            }
+            _ => bail!("dangling half-gate in section [{lo}, {hi}]: InA={a:?} InB={b:?} Out={o:?} do not compose into a valid gate"),
+        }
+    }
+    ensure!(!gates.is_empty(), "message decodes to no gates");
+    Ok(Operation::Gates(gates))
+}
+
+/// Decode a [`Message`] into the operation the crossbar executes.
+///
+/// This is the functional model of the periphery of Figure 3(c) (unlimited),
+/// Figure 5 (standard) and Section 4.2 (minimal).
+pub fn reconstruct(msg: &Message, geom: &Geometry) -> Result<Operation> {
+    match msg {
+        Message::Baseline { ia, ib, io } => {
+            ensure!(*ia < geom.n && *ib < geom.n && *io < geom.n, "baseline index out of range");
+            ensure!(*io != *ia && *io != *ib, "baseline output aliases an input");
+            if ia == ib {
+                Ok(Operation::serial(GateOp::not(*ia, *io)))
+            } else {
+                Ok(Operation::serial(GateOp::nor(*ia, *ib, *io)))
+            }
+        }
+        Message::Unlimited { parts, selects } => reconstruct_from_fields(parts, selects, geom),
+        Message::Standard { ia, ib, io, enables, selects, dir } => {
+            ensure!(enables.len() == geom.k, "expected {} enables", geom.k);
+            let opcodes = opcode_gen::generate(enables, selects, *dir)?;
+            let parts: Vec<PartitionFields> =
+                opcodes.into_iter().map(|opcode| PartitionFields { ia: *ia, ib: *ib, io: *io, opcode }).collect();
+            reconstruct_from_fields(&parts, selects, geom)
+        }
+        Message::Minimal { ia, ib, io, p_start, p_end, t, distance, dir } => {
+            let params = range_gen::RangeParams { p_start: *p_start, p_end: *p_end, t: *t, distance: *distance, dir: *dir };
+            let expansion = range_gen::expand(&params, geom.k)?;
+            let parts: Vec<PartitionFields> = (0..geom.k)
+                .map(|p| PartitionFields {
+                    ia: *ia,
+                    ib: *ib,
+                    io: *io,
+                    opcode: Opcode { in_a: expansion.in_mask[p], in_b: expansion.in_mask[p], out: expansion.out_mask[p] },
+                })
+                .collect();
+            reconstruct_from_fields(&parts, &expansion.selects, geom)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crossbar::gate::GateSet;
+    use crate::isa::encode::{decode, encode};
+    use crate::isa::models::ModelKind;
+    use crate::isa::operation::Direction;
+
+    fn geom() -> Geometry {
+        Geometry::new(256, 8, 8).unwrap()
+    }
+
+    #[test]
+    fn sections_split_correctly() {
+        // selects between 8 partitions: isolate after p1 and p4.
+        let selects = [false, true, false, false, true, false, false];
+        assert_eq!(sections_from_selects(&selects), vec![(0, 1), (2, 4), (5, 7)]);
+        let all = [true; 7];
+        assert_eq!(sections_from_selects(&all).len(), 8);
+        let none = [false; 7];
+        assert_eq!(sections_from_selects(&none), vec![(0, 7)]);
+    }
+
+    /// Figure 4: the opcode assignment for the operation of Figure 2(d),
+    /// decoded back into gates.
+    #[test]
+    fn figure4_opcode_assignment() {
+        let g = geom();
+        // Gates: d=0 in p0; p2 -> p3 (half-gate pair); d=0 in p5.
+        let op = Operation::Gates(vec![
+            GateOp::nor(g.col(0, 0), g.col(0, 1), g.col(0, 3)),
+            GateOp::nor(g.col(2, 0), g.col(2, 1), g.col(3, 3)),
+            GateOp::nor(g.col(5, 0), g.col(5, 1), g.col(5, 3)),
+        ]);
+        let bits = encode(ModelKind::Unlimited, &op, &g).unwrap();
+        let msg = decode(ModelKind::Unlimited, &bits, &g).unwrap();
+        let Message::Unlimited { ref parts, .. } = msg else { panic!() };
+        assert_eq!(parts[0].opcode, Opcode::FULL); //   111
+        assert_eq!(parts[1].opcode, Opcode::IDLE); //   000
+        assert_eq!(parts[2].opcode, Opcode::INPUTS); // 110 (half-gate)
+        assert_eq!(parts[3].opcode, Opcode::OUTPUT); // 001 (half-gate)
+        assert_eq!(parts[5].opcode, Opcode::FULL);
+        let rec = reconstruct(&msg, &g).unwrap();
+        assert_eq!(rec.normalized(), op.normalized());
+    }
+
+    #[test]
+    fn full_pipeline_roundtrip_all_models() {
+        let g = geom();
+        let cases = vec![
+            (vec![ModelKind::Baseline, ModelKind::Unlimited, ModelKind::Standard, ModelKind::Minimal],
+             Operation::serial(GateOp::nor(g.col(1, 2), g.col(1, 7), g.col(6, 9)))),
+            (vec![ModelKind::Unlimited, ModelKind::Standard, ModelKind::Minimal],
+             Operation::Gates((0..8).map(|p| GateOp::nor(g.col(p, 0), g.col(p, 1), g.col(p, 3))).collect())),
+            (vec![ModelKind::Unlimited, ModelKind::Standard, ModelKind::Minimal],
+             Operation::Gates(vec![
+                 GateOp::not(g.col(0, 5), g.col(1, 9)),
+                 GateOp::not(g.col(4, 5), g.col(5, 9)),
+             ])),
+        ];
+        for (models, op) in cases {
+            for m in models {
+                m.check(&op, &g, GateSet::NotNor).unwrap();
+                let bits = encode(m, &op, &g).unwrap();
+                let msg = decode(m, &bits, &g).unwrap();
+                let rec = reconstruct(&msg, &g).unwrap();
+                assert_eq!(rec.normalized(), op.normalized(), "model {}", m.name());
+            }
+        }
+    }
+
+    #[test]
+    fn dangling_half_gate_rejected() {
+        let g = geom();
+        // Inputs in p0 but the section [0,0] has no output half.
+        let mut parts = vec![PartitionFields { ia: 0, ib: 1, io: 2, opcode: Opcode::IDLE }; 8];
+        parts[0].opcode = Opcode::INPUTS;
+        let selects = vec![true; 7];
+        assert!(reconstruct_from_fields(&parts, &selects, &g).is_err());
+    }
+
+    #[test]
+    fn conflicting_half_gates_rejected() {
+        let g = geom();
+        // Two Out halves in one section.
+        let mut parts = vec![PartitionFields { ia: 0, ib: 1, io: 2, opcode: Opcode::IDLE }; 8];
+        parts[0].opcode = Opcode::INPUTS;
+        parts[1].opcode = Opcode::OUTPUT;
+        parts[2].opcode = Opcode::OUTPUT;
+        let selects = vec![false; 7];
+        assert!(reconstruct_from_fields(&parts, &selects, &g).is_err());
+    }
+
+    #[test]
+    fn minimal_periodic_reconstruction() {
+        let g = geom();
+        let msg = Message::Minimal { ia: 0, ib: 1, io: 3, p_start: 0, p_end: 6, t: 2, distance: 1, dir: Direction::InputsLeft };
+        let rec = reconstruct(&msg, &g).unwrap();
+        let expect = Operation::Gates(
+            (0..4).map(|j| GateOp::nor(g.col(2 * j, 0), g.col(2 * j, 1), g.col(2 * j + 1, 3))).collect(),
+        );
+        assert_eq!(rec.normalized(), expect.normalized());
+    }
+}

@@ -1,0 +1,23 @@
+//! Crossbar periphery: the decoders that turn control messages into applied
+//! voltages, and their structural (gate-count) area models.
+//!
+//! * [`halfgate`] — the functional core: per-partition opcodes + indices +
+//!   transistor selects → sections → executed gates (Section 2.2, Figure 3(c),
+//!   Figure 4).
+//! * [`opcode_gen`] — the standard model's opcode generator: opcodes derived
+//!   from transistor selects, per-partition enables and the global direction
+//!   (Section 3.2.2, Figure 5 — two 2:1 multiplexers per partition).
+//! * [`range_gen`] — the minimal model's pattern generators: the *range
+//!   generator* for input opcodes, the distance shifter for output opcodes,
+//!   and the transistor-select derivation (Section 4.2).
+//! * [`decoder`] / [`area`] — structural CMOS-gate-count models of every
+//!   design, including the naive Ω(k²) decoder stack (Figure 3(b)) the
+//!   half-gates technique replaces.
+
+pub mod area;
+pub mod decoder;
+pub mod halfgate;
+pub mod opcode_gen;
+pub mod range_gen;
+
+pub use halfgate::reconstruct;

@@ -1,0 +1,96 @@
+//! The standard model's opcode generator (Section 3.2.2, Figure 5).
+//!
+//! In a *tight* section division the first and last partitions of every
+//! gate-containing section apply voltages, and intermediate partitions are
+//! idle. The opcode of each partition is therefore derivable from (a) the
+//! transistor selects, (b) a per-partition enable bit, and (c) the global
+//! direction bit — realized in hardware by two 2:1 multiplexers per
+//! partition, O(k) gates total.
+
+use crate::isa::opcode::Opcode;
+use crate::isa::operation::Direction;
+use anyhow::{ensure, Result};
+
+/// Derive the per-partition opcodes. For direction *inputs left of outputs*:
+/// the input bits of partition `p` are one when the transistor to its left
+/// is selected (or `p` is the crossbar edge), the output bit when the
+/// transistor to its right is selected — and vice versa for *outputs left of
+/// inputs*; everything ANDed with the partition's enable.
+pub fn generate(enables: &[bool], selects: &[bool], dir: Direction) -> Result<Vec<Opcode>> {
+    let k = enables.len();
+    ensure!(selects.len() + 1 == k, "expected {} selects for {k} partitions, got {}", k - 1, selects.len());
+    let mut opcodes = Vec::with_capacity(k);
+    for p in 0..k {
+        let left_boundary = p == 0 || selects[p - 1];
+        let right_boundary = p == k - 1 || selects[p];
+        let (in_bit, out_bit) = match dir {
+            Direction::InputsLeft => (left_boundary, right_boundary),
+            Direction::OutputsLeft => (right_boundary, left_boundary),
+        };
+        opcodes.push(Opcode {
+            in_a: in_bit && enables[p],
+            in_b: in_bit && enables[p],
+            out: out_bit && enables[p],
+        });
+    }
+    Ok(opcodes)
+}
+
+/// Hardware cost of the opcode generator: two 2:1 multiplexers per partition
+/// (each ≈ 3 two-input gate equivalents) — negligible next to the
+/// `O(n log k)` decoder gates, as the paper notes.
+pub fn gate_cost(k: usize) -> usize {
+    2 * k * 3
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_partition_section_gets_full_opcode() {
+        // k = 4, all transistors selected, p1 enabled: in-place gate in p1.
+        let opcodes = generate(&[false, true, false, false], &[true, true, true], Direction::InputsLeft).unwrap();
+        assert_eq!(opcodes[1], Opcode::FULL);
+        assert_eq!(opcodes[0], Opcode::IDLE);
+        assert_eq!(opcodes[2], Opcode::IDLE);
+    }
+
+    #[test]
+    fn two_partition_section_splits_into_half_gates() {
+        // k = 4, section [1, 2] (selects: t0 = isolate, t1 = conduct,
+        // t2 = isolate), p1 and p2 enabled, inputs left.
+        let opcodes = generate(&[false, true, true, false], &[true, false, true], Direction::InputsLeft).unwrap();
+        assert_eq!(opcodes[1], Opcode::INPUTS); // 110
+        assert_eq!(opcodes[2], Opcode::OUTPUT); // 001
+    }
+
+    #[test]
+    fn direction_flips_half_gate_roles() {
+        let opcodes = generate(&[false, true, true, false], &[true, false, true], Direction::OutputsLeft).unwrap();
+        assert_eq!(opcodes[1], Opcode::OUTPUT);
+        assert_eq!(opcodes[2], Opcode::INPUTS);
+    }
+
+    #[test]
+    fn intermediate_partitions_idle() {
+        // k = 4, single section [0, 3], only edges enabled.
+        let opcodes = generate(&[true, false, false, true], &[false, false, false], Direction::InputsLeft).unwrap();
+        assert_eq!(opcodes[0], Opcode::INPUTS);
+        assert_eq!(opcodes[1], Opcode::IDLE);
+        assert_eq!(opcodes[2], Opcode::IDLE);
+        assert_eq!(opcodes[3], Opcode::OUTPUT);
+    }
+
+    #[test]
+    fn disabled_partitions_never_drive() {
+        let opcodes = generate(&[false; 4], &[true, true, true], Direction::InputsLeft).unwrap();
+        assert!(opcodes.iter().all(|o| !o.is_active()));
+    }
+
+    #[test]
+    fn cost_is_linear_in_k() {
+        assert_eq!(gate_cost(32), 192);
+        assert!(gate_cost(32) < 1024); // negligible vs O(n log k)
+    }
+}

@@ -1,0 +1,157 @@
+//! The minimal model's pattern generators (Section 4.2).
+//!
+//! * **Range generator** — input opcodes: logical one every period `T`, from
+//!   `p_start` to `p_end` (two shifters + a period decoder on width `k`).
+//! * **Distance shifter** — output opcodes: the input opcode vector shifted
+//!   by the partition distance in the global direction (up to `k` in either
+//!   direction).
+//! * **Select derivation** — a separation transistor is non-conducting when
+//!   its left neighbour partition emits output voltages or its right
+//!   neighbour emits input voltages (for direction *inputs left of outputs*;
+//!   mirrored otherwise).
+
+use crate::isa::operation::Direction;
+use anyhow::{ensure, Result};
+
+/// The wire-level parameters of a minimal-model gate message.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RangeParams {
+    /// First input partition.
+    pub p_start: usize,
+    /// Last input partition (inclusive).
+    pub p_end: usize,
+    /// Period in partitions (`T ≥ 1`; `T > distance` when more than one gate
+    /// fires).
+    pub t: usize,
+    /// Partition distance between each gate's inputs and output.
+    pub distance: usize,
+    /// Global direction.
+    pub dir: Direction,
+}
+
+/// The pattern-generator outputs: which partitions drive input voltages,
+/// which drive output voltages, and the derived transistor selects
+/// (`true` = non-conducting).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Expansion {
+    pub in_mask: Vec<bool>,
+    pub out_mask: Vec<bool>,
+    pub selects: Vec<bool>,
+}
+
+/// Expand range parameters into per-partition masks — the functional model
+/// of the minimal periphery.
+pub fn expand(params: &RangeParams, k: usize) -> Result<Expansion> {
+    let RangeParams { p_start, p_end, t, distance, dir } = *params;
+    ensure!(t >= 1, "period T must be at least 1");
+    ensure!(p_start < k && p_end < k, "range [{p_start}, {p_end}] exceeds k={k}");
+    ensure!(p_start <= p_end, "p_start {p_start} > p_end {p_end}");
+    ensure!(distance < k, "distance {distance} exceeds k={k}");
+    if p_end > p_start {
+        ensure!(t > distance, "period T={t} must exceed distance d={distance} (sections would overlap)");
+    }
+
+    // Range generator: ones every T from p_start to p_end.
+    let mut in_mask = vec![false; k];
+    let mut p = p_start;
+    while p <= p_end {
+        in_mask[p] = true;
+        p += t;
+    }
+
+    // Distance shifter: outputs at inputs ± distance.
+    let mut out_mask = vec![false; k];
+    for p in 0..k {
+        if in_mask[p] {
+            let q = match dir {
+                Direction::InputsLeft => p.checked_add(distance).filter(|&q| q < k),
+                Direction::OutputsLeft => p.checked_sub(distance),
+            };
+            let q = q.ok_or_else(|| anyhow::anyhow!("gate at partition {p} shifts out of the crossbar (distance {distance}, {dir:?})"))?;
+            out_mask[q] = true;
+        }
+    }
+
+    // Select derivation.
+    let mut selects = vec![false; k - 1];
+    for tr in 0..k - 1 {
+        selects[tr] = match dir {
+            // Inputs left: isolate when the left neighbour already emitted
+            // its output, or the right neighbour starts a new gate.
+            Direction::InputsLeft => out_mask[tr] || in_mask[tr + 1],
+            Direction::OutputsLeft => in_mask[tr] || out_mask[tr + 1],
+        };
+    }
+    Ok(Expansion { in_mask, out_mask, selects })
+}
+
+/// Hardware cost of the minimal periphery's pattern logic: two `k`-wide
+/// barrel shifters for `p_start`/`p_end`, a period decoder, and the distance
+/// shifter — all on width `k`, not `n`.
+pub fn gate_cost(k: usize) -> usize {
+    let lk = (k as f64).log2().ceil() as usize;
+    // Three barrel shifters (k muxes per stage, log2 k stages, ~3 gates/mux)
+    // plus a log2(k)-to-k period decoder.
+    3 * (k * lk * 3) + (k * (lk.saturating_sub(1)) + lk)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parallel_pattern() {
+        // d=0, T=1, full range: every partition an in-place gate;
+        // all transistors isolate.
+        let e = expand(&RangeParams { p_start: 0, p_end: 7, t: 1, distance: 0, dir: Direction::InputsLeft }, 8).unwrap();
+        assert!(e.in_mask.iter().all(|&b| b));
+        assert_eq!(e.in_mask, e.out_mask);
+        assert!(e.selects.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn fig2c_pattern() {
+        // d=1, T=2: gates 0->1, 2->3, 4->5, 6->7.
+        let e = expand(&RangeParams { p_start: 0, p_end: 6, t: 2, distance: 1, dir: Direction::InputsLeft }, 8).unwrap();
+        assert_eq!(e.in_mask, vec![true, false, true, false, true, false, true, false]);
+        assert_eq!(e.out_mask, vec![false, true, false, true, false, true, false, true]);
+        // Conducting inside each pair, isolating between pairs.
+        assert_eq!(e.selects, vec![false, true, false, true, false, true, false]);
+    }
+
+    #[test]
+    fn serial_gate_with_intermediates() {
+        // Single gate partition 2 -> 5 (distance 3).
+        let e = expand(&RangeParams { p_start: 2, p_end: 2, t: 4, distance: 3, dir: Direction::InputsLeft }, 8).unwrap();
+        assert_eq!(e.in_mask[2], true);
+        assert_eq!(e.out_mask[5], true);
+        // Section [2, 5] conducting; isolated at 1|2 and 5|6.
+        assert_eq!(e.selects, vec![false, true, false, false, false, true, false]);
+    }
+
+    #[test]
+    fn leftward_direction() {
+        // d=1 leftward: gates 1->0, 3->2, 5->4, 7->6.
+        let e = expand(&RangeParams { p_start: 1, p_end: 7, t: 2, distance: 1, dir: Direction::OutputsLeft }, 8).unwrap();
+        assert_eq!(e.in_mask, vec![false, true, false, true, false, true, false, true]);
+        assert_eq!(e.out_mask, vec![true, false, true, false, true, false, true, false]);
+        assert_eq!(e.selects, vec![false, true, false, true, false, true, false]);
+    }
+
+    #[test]
+    fn out_of_range_shift_rejected() {
+        assert!(expand(&RangeParams { p_start: 6, p_end: 6, t: 4, distance: 3, dir: Direction::InputsLeft }, 8).is_err());
+        assert!(expand(&RangeParams { p_start: 1, p_end: 1, t: 4, distance: 2, dir: Direction::OutputsLeft }, 8).is_err());
+    }
+
+    #[test]
+    fn overlap_guard() {
+        // Two gates with T <= d must be rejected.
+        assert!(expand(&RangeParams { p_start: 0, p_end: 4, t: 2, distance: 2, dir: Direction::InputsLeft }, 8).is_err());
+    }
+
+    #[test]
+    fn pattern_cost_scales_with_k_not_n() {
+        assert!(gate_cost(32) < 2000, "range generator must stay O(k log k): {}", gate_cost(32));
+    }
+}

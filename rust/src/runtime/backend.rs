@@ -1,0 +1,46 @@
+//! An XLA-backed crossbar: same observable semantics as the bit-packed
+//! [`crate::crossbar::Crossbar`], but every cycle executes through the
+//! AOT-compiled Pallas gate-step kernel on the PJRT CPU client.
+
+use crate::crossbar::geometry::Geometry;
+use crate::crossbar::state::BitMatrix;
+use crate::isa::operation::Operation;
+use crate::runtime::stepper::{ops_to_steps, XlaStepper};
+use anyhow::{ensure, Result};
+use std::path::Path;
+
+/// Crossbar whose state transitions run on XLA.
+pub struct XlaCrossbar {
+    pub geom: Geometry,
+    stepper: XlaStepper,
+    /// Dense row-major 0/1 image of the crossbar.
+    state: Vec<f32>,
+}
+
+impl XlaCrossbar {
+    /// Load the matching step artifact from `dir` (gate width = `k`, the
+    /// maximum concurrent gates a partitioned operation can hold).
+    pub fn new(geom: Geometry, dir: &Path) -> Result<Self> {
+        let stepper = XlaStepper::load(dir, geom.rows, geom.n, geom.k)?;
+        ensure!(stepper.matches(&geom), "artifact shape mismatch");
+        Ok(Self { geom, stepper, state: vec![0.0; geom.rows * geom.n] })
+    }
+
+    /// Overwrite the state from a bit matrix.
+    pub fn load_state(&mut self, m: &BitMatrix) {
+        self.state = m.to_f32_row_major();
+    }
+
+    /// Snapshot the state as a bit matrix.
+    pub fn state_bits(&self) -> Result<BitMatrix> {
+        BitMatrix::from_f32_row_major(self.geom.rows, self.geom.n, &self.state)
+    }
+
+    /// Execute a sequence of operations through the XLA step kernel.
+    pub fn execute_all(&mut self, ops: &[Operation]) -> Result<()> {
+        for step in ops_to_steps(ops, self.stepper.gates)? {
+            self.state = self.stepper.step(&self.state, &step)?;
+        }
+        Ok(())
+    }
+}

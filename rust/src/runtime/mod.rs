@@ -1,0 +1,15 @@
+//! PJRT/XLA execution of the AOT-compiled JAX/Pallas crossbar step.
+//!
+//! The build-time python stack (`python/compile/`) lowers the Pallas
+//! gate-step kernel — one simulated stateful-logic cycle over the whole
+//! crossbar, formulated as MXU matmuls over one-hot column selectors — to
+//! HLO **text** (`artifacts/step_*.hlo.txt`). This module loads those
+//! artifacts with the `xla` crate's PJRT CPU client and exposes them as an
+//! alternative crossbar backend, used to cross-check the bit-packed rust
+//! simulator (experiment E14). Python never runs at request time.
+
+pub mod backend;
+pub mod stepper;
+
+pub use backend::XlaCrossbar;
+pub use stepper::{artifact_path, ops_to_steps, GateSlot, XlaStepper};

@@ -1,0 +1,105 @@
+//! Loading and invoking the AOT gate-step artifact.
+
+use crate::crossbar::geometry::Geometry;
+use crate::isa::operation::Operation;
+use anyhow::{ensure, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One gate slot of a step: `(in_a, in_b, out, mode)` with `-1` marking an
+/// unused index and `mode = 1` turning the slot into a write-0
+/// (initialization to 1 is `NOR(0, 0)` with both inputs unused).
+pub type GateSlot = [i32; 4];
+
+/// Path of the step artifact for a given shape.
+pub fn artifact_path(dir: &Path, rows: usize, cols: usize, gates: usize) -> PathBuf {
+    dir.join(format!("step_r{rows}_c{cols}_g{gates}.hlo.txt"))
+}
+
+/// Convert a program's operations into padded step descriptors for the
+/// artifact's fixed `gates` width. Gate cycles map 1:1; initialization
+/// writes expand into `ceil(columns / gates)` steps of write slots.
+pub fn ops_to_steps(ops: &[Operation], gates: usize) -> Result<Vec<Vec<GateSlot>>> {
+    let mut steps = Vec::new();
+    for op in ops {
+        match op {
+            Operation::Gates(gs) => {
+                ensure!(gs.len() <= gates, "operation has {} gates, artifact supports {gates}", gs.len());
+                let mut step: Vec<GateSlot> = gs
+                    .iter()
+                    .map(|g| {
+                        let a = g.ins[0] as i32;
+                        let b = *g.ins.get(1).unwrap_or(&g.ins[0]) as i32;
+                        [a, b, g.out as i32, 0]
+                    })
+                    .collect();
+                step.resize(gates, [-1, -1, -1, 0]);
+                steps.push(step);
+            }
+            Operation::Init { cols, value } => {
+                let mode = if *value { 0 } else { 1 };
+                // Deduplicate: the one-hot output scatter must see each
+                // column at most once per step (writing twice is idempotent
+                // for an init anyway).
+                let mut cols = cols.clone();
+                cols.sort_unstable();
+                cols.dedup();
+                for chunk in cols.chunks(gates) {
+                    let mut step: Vec<GateSlot> = chunk.iter().map(|&c| [-1, -1, c as i32, mode]).collect();
+                    step.resize(gates, [-1, -1, -1, 0]);
+                    steps.push(step);
+                }
+            }
+        }
+    }
+    Ok(steps)
+}
+
+/// A compiled PJRT executable for one step shape.
+pub struct XlaStepper {
+    exe: xla::PjRtLoadedExecutable,
+    pub rows: usize,
+    pub cols: usize,
+    pub gates: usize,
+}
+
+impl XlaStepper {
+    /// Load `step_r{rows}_c{cols}_g{gates}.hlo.txt` from `dir` and compile
+    /// it on the PJRT CPU client.
+    pub fn load(dir: &Path, rows: usize, cols: usize, gates: usize) -> Result<Self> {
+        let path = artifact_path(dir, rows, cols, gates);
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT client: {e}"))?;
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().context("non-utf8 path")?)
+            .map_err(|e| anyhow::anyhow!("loading {}: {e} (run `make artifacts` first)", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).map_err(|e| anyhow::anyhow!("compiling {}: {e}", path.display()))?;
+        Ok(Self { exe, rows, cols, gates })
+    }
+
+    /// Execute one simulated cycle: `state` is the dense row-major 0/1
+    /// `f32` crossbar image.
+    pub fn step(&self, state: &[f32], slots: &[GateSlot]) -> Result<Vec<f32>> {
+        ensure!(state.len() == self.rows * self.cols, "state size mismatch");
+        ensure!(slots.len() == self.gates, "expected {} gate slots, got {}", self.gates, slots.len());
+        let state_lit = xla::Literal::vec1(state)
+            .reshape(&[self.rows as i64, self.cols as i64])
+            .map_err(|e| anyhow::anyhow!("state literal: {e}"))?;
+        let flat: Vec<i32> = slots.iter().flatten().copied().collect();
+        let idx_lit = xla::Literal::vec1(&flat)
+            .reshape(&[self.gates as i64, 4])
+            .map_err(|e| anyhow::anyhow!("idx literal: {e}"))?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[state_lit, idx_lit])
+            .map_err(|e| anyhow::anyhow!("execute: {e}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch: {e}"))?;
+        // Lowered with return_tuple=True: unwrap the 1-tuple.
+        let out = result.to_tuple1().map_err(|e| anyhow::anyhow!("tuple: {e}"))?;
+        out.to_vec::<f32>().map_err(|e| anyhow::anyhow!("to_vec: {e}"))
+    }
+
+    /// Stepper shape compatible with `geom`?
+    pub fn matches(&self, geom: &Geometry) -> bool {
+        self.rows == geom.rows && self.cols == geom.n
+    }
+}

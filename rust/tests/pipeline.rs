@@ -1,0 +1,216 @@
+//! Integration: the full control pipeline — abstract operation → controller
+//! encode → wire bits → periphery decode → reconstructed gates → crossbar —
+//! must be an identity on semantics for every model, and must reject
+//! malformed traffic without corrupting state.
+
+use partition_pim::crossbar::crossbar::Crossbar;
+use partition_pim::crossbar::gate::GateSet;
+use partition_pim::crossbar::geometry::Geometry;
+use partition_pim::isa::encode::{decode, encode, message_bits, BitVec};
+use partition_pim::isa::models::ModelKind;
+use partition_pim::isa::operation::{GateOp, Operation};
+use partition_pim::periphery;
+
+/// Deterministic xorshift for reproducible randomized tests.
+struct Rng(u64);
+impl Rng {
+    fn next(&mut self) -> u64 {
+        self.0 ^= self.0 << 13;
+        self.0 ^= self.0 >> 7;
+        self.0 ^= self.0 << 17;
+        self.0
+    }
+    fn below(&mut self, n: usize) -> usize {
+        (self.next() % n as u64) as usize
+    }
+}
+
+/// Generate a random operation legal under `model`.
+fn random_legal_op(rng: &mut Rng, geom: &Geometry, model: ModelKind) -> Operation {
+    let m = geom.m();
+    loop {
+        let candidate = match model {
+            ModelKind::Baseline => {
+                let a = rng.below(geom.n);
+                let b = rng.below(geom.n);
+                let mut o = rng.below(geom.n);
+                while o == a || o == b {
+                    o = rng.below(geom.n);
+                }
+                Operation::serial(if rng.below(4) == 0 { GateOp::not(a, o) } else { GateOp::nor(a, b, o) })
+            }
+            _ => {
+                // Random periodic pattern (minimal-legal => legal everywhere).
+                let d = rng.below(geom.k.min(4));
+                let t = d + 1 + rng.below(3);
+                let p_start = rng.below(geom.k - d);
+                let count = 1 + rng.below(((geom.k - d - p_start - 1) / t.max(1)).max(1));
+                let ia = rng.below(m);
+                let mut ib = rng.below(m);
+                let mut io = rng.below(m);
+                while io == ia || io == ib {
+                    io = rng.below(m);
+                }
+                if rng.below(4) == 0 {
+                    ib = ia; // NOT
+                }
+                let gates: Vec<GateOp> = (0..count)
+                    .map(|j| {
+                        let p = p_start + j * t;
+                        let g = if ia == ib {
+                            GateOp::not(geom.col(p, ia), geom.col(p + d, io))
+                        } else {
+                            GateOp::nor(geom.col(p, ia), geom.col(p, ib), geom.col(p + d, io))
+                        };
+                        g
+                    })
+                    .collect();
+                Operation::Gates(gates)
+            }
+        };
+        if model.supports(&candidate, geom, GateSet::NotNor) {
+            return candidate;
+        }
+    }
+}
+
+#[test]
+fn randomized_roundtrip_all_models() {
+    let geom = Geometry::new(512, 16, 64).unwrap();
+    let mut rng = Rng(0xfeedface);
+    for model in ModelKind::ALL {
+        for trial in 0..200 {
+            let op = random_legal_op(&mut rng, &geom, model);
+            let bits = encode(model, &op, &geom)
+                .unwrap_or_else(|e| panic!("{} trial {trial}: encode failed: {e}\n{op:?}", model.name()));
+            assert_eq!(bits.len(), message_bits(model, &geom));
+            let msg = decode(model, &bits, &geom).expect("decode");
+            let rec = periphery::reconstruct(&msg, &geom).expect("reconstruct");
+            assert_eq!(rec.normalized(), op.normalized(), "{} trial {trial}", model.name());
+        }
+    }
+}
+
+#[test]
+fn randomized_execution_equivalence() {
+    let geom = Geometry::new(512, 16, 96).unwrap();
+    let mut rng = Rng(0xdecade);
+    for model in [ModelKind::Unlimited, ModelKind::Standard, ModelKind::Minimal] {
+        let mut direct = Crossbar::new(geom, GateSet::NotNor);
+        direct.state.fill_random(17);
+        let mut wired = direct.clone();
+        for _ in 0..100 {
+            let op = random_legal_op(&mut rng, &geom, model);
+            direct.execute(&op).expect("direct");
+            let bits = encode(model, &op, &geom).expect("encode");
+            wired.execute_message(model, &bits).expect("message");
+        }
+        assert_eq!(direct.state, wired.state, "{} diverged", model.name());
+        assert_eq!(wired.metrics.messages, 100);
+        assert_eq!(wired.metrics.control_bits, 100 * message_bits(model, &geom) as u64);
+    }
+}
+
+/// Bit-flip fuzzing: corrupted control messages must either decode to a
+/// *valid* operation or be rejected — never panic, never execute an
+/// inconsistent half-gate combination.
+#[test]
+fn corrupted_messages_never_panic() {
+    let geom = Geometry::new(512, 16, 8).unwrap();
+    let mut rng = Rng(0xc0ffee);
+    for model in ModelKind::ALL {
+        for _ in 0..300 {
+            let op = random_legal_op(&mut rng, &geom, model);
+            let bits = encode(model, &op, &geom).expect("encode");
+            // Flip 1-3 random bits.
+            let mut corrupted = bits.clone();
+            for _ in 0..1 + rng.below(3) {
+                corrupted.flip(rng.below(corrupted.len()));
+            }
+            let mut xb = Crossbar::new(geom, GateSet::NotNor);
+            xb.state.fill_random(5);
+            // Either executes a (different but physically valid) op, or errors.
+            let _ = xb.execute_message(model, &corrupted);
+        }
+    }
+}
+
+#[test]
+fn truncated_messages_rejected() {
+    let geom = Geometry::new(512, 16, 8).unwrap();
+    let op = Operation::serial(GateOp::nor(0, 1, 40));
+    for model in ModelKind::ALL {
+        let bits = encode(model, &op, &geom).expect("encode");
+        let mut short = BitVec::new();
+        for i in 0..bits.len() - 1 {
+            short.push_bit(bits.get(i));
+        }
+        assert!(decode(model, &short, &geom).is_err(), "{}", model.name());
+    }
+}
+
+/// Cross-model agreement: the same minimal-legal operation must execute to
+/// the same state through all four wire formats.
+#[test]
+fn cross_model_state_agreement() {
+    let geom = Geometry::new(512, 16, 64).unwrap();
+    let mut rng = Rng(0xabcdef);
+    for _ in 0..50 {
+        let op = random_legal_op(&mut rng, &geom, ModelKind::Minimal);
+        let mut reference: Option<partition_pim::crossbar::state::BitMatrix> = None;
+        for model in [ModelKind::Unlimited, ModelKind::Standard, ModelKind::Minimal] {
+            let mut xb = Crossbar::new(geom, GateSet::NotNor);
+            xb.state.fill_random(11);
+            let bits = encode(model, &op, &geom).expect("encode");
+            xb.execute_message(model, &bits).expect("execute");
+            match &reference {
+                None => reference = Some(xb.state.clone()),
+                Some(r) => assert_eq!(&xb.state, r, "{} disagrees", model.name()),
+            }
+        }
+    }
+}
+
+/// Geometry sweep: the codecs and periphery must work at every partition
+/// count, and the wire-format lengths must follow the paper's formulas as
+/// k scales (the control/flexibility trade-off curve).
+#[test]
+fn geometry_sweep_roundtrips() {
+    let mut rng = Rng(0xbead);
+    for (n, k) in [(64usize, 2usize), (64, 4), (256, 4), (256, 32), (1024, 2), (1024, 64), (4096, 32)] {
+        let geom = Geometry::new(n, k, 8).unwrap();
+        for model in ModelKind::ALL {
+            // Formula consistency.
+            let (ln, lk, lm) = (geom.log2_n(), geom.log2_k(), geom.log2_m());
+            let expect = match model {
+                ModelKind::Baseline => 3 * ln,
+                ModelKind::Unlimited => 3 * k * lm + 3 * k + (k - 1),
+                ModelKind::Standard => 3 * lm + (2 * k - 1) + 1,
+                ModelKind::Minimal => 3 * lm + 3 * lk + lk + 1,
+            };
+            assert_eq!(message_bits(model, &geom), expect, "{} n={n} k={k}", model.name());
+            // Round-trip a batch of random legal ops.
+            for _ in 0..20 {
+                let op = random_legal_op(&mut rng, &geom, model);
+                let bits = encode(model, &op, &geom).expect("encode");
+                let rec = periphery::reconstruct(&decode(model, &bits, &geom).expect("decode"), &geom).expect("reconstruct");
+                assert_eq!(rec.normalized(), op.normalized(), "{} n={n} k={k}", model.name());
+            }
+        }
+    }
+}
+
+/// The minimal model's control advantage grows with k while standard's
+/// shrinks relative to unlimited — the scaling behind Figure 6(b).
+#[test]
+fn control_overhead_scaling_with_k() {
+    let mut prev_ratio = 0.0;
+    for k in [2usize, 8, 32] {
+        let geom = Geometry::new(1024, k, 1).unwrap();
+        let unl = message_bits(ModelKind::Unlimited, &geom) as f64;
+        let min = message_bits(ModelKind::Minimal, &geom) as f64;
+        let ratio = unl / min;
+        assert!(ratio > prev_ratio, "unlimited/minimal ratio must grow with k");
+        prev_ratio = ratio;
+    }
+}

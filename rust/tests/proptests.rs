@@ -1,0 +1,378 @@
+//! Hand-rolled property-based tests (proptest is not in the offline vendor
+//! set — see DESIGN.md §Substitutions). Each property runs hundreds of
+//! randomized cases from a deterministic PRNG and shrinks failures by
+//! printing the seed.
+//!
+//! Properties:
+//!  P1  simulator gate semantics == naive bool-matrix model
+//!  P2  legalizer preserves program semantics for every model
+//!  P3  packer preserves semantics and never increases cycle count
+//!  P4  tight section division is consistent with operation spans
+//!  P5  opcode generator output composes into valid half-gate pairs
+//!  P6  range-generator expansion matches the minimal-model validator
+//!  P7  coordinator batching: any split of a job gives identical results
+
+use partition_pim::algorithms::program::Builder;
+use partition_pim::coordinator::{PimService, ServiceConfig, WorkloadKind};
+use partition_pim::crossbar::crossbar::Crossbar;
+use partition_pim::crossbar::gate::{GateSet, GateType};
+use partition_pim::crossbar::geometry::Geometry;
+use partition_pim::isa::lower::{legalize_program, LegalizeConfig};
+use partition_pim::isa::models::ModelKind;
+use partition_pim::isa::operation::{Direction, GateOp, Operation};
+use partition_pim::isa::schedule::pack_program;
+use partition_pim::periphery::{halfgate, opcode_gen, range_gen};
+
+struct Rng(u64);
+impl Rng {
+    fn new(seed: u64) -> Self {
+        Rng(seed.max(1))
+    }
+    fn next(&mut self) -> u64 {
+        self.0 ^= self.0 << 13;
+        self.0 ^= self.0 >> 7;
+        self.0 ^= self.0 << 17;
+        self.0
+    }
+    fn below(&mut self, n: usize) -> usize {
+        (self.next() % n.max(1) as u64) as usize
+    }
+    fn flag(&mut self) -> bool {
+        self.next() & 1 == 1
+    }
+}
+
+/// Random physically-valid (unlimited-legal) operation.
+fn random_op(rng: &mut Rng, geom: &Geometry) -> Operation {
+    if rng.below(5) == 0 {
+        let cols: Vec<usize> = (0..1 + rng.below(8)).map(|_| rng.below(geom.n)).collect();
+        return Operation::Init { cols, value: rng.flag() };
+    }
+    // Build gates over random disjoint partition intervals.
+    let mut gates = Vec::new();
+    let mut p = 0usize;
+    while p < geom.k {
+        if rng.below(3) == 0 {
+            let span = 1 + rng.below((geom.k - p).min(3));
+            let (plo, phi) = (p, p + span - 1);
+            let pick = |rng: &mut Rng| plo + rng.below(phi - plo + 1);
+            let pa = pick(rng);
+            let pb = pick(rng);
+            let po = if rng.flag() { plo } else { phi };
+            let a = geom.col(pa, rng.below(geom.m()));
+            let b = geom.col(pb, rng.below(geom.m()));
+            let mut o = geom.col(po, rng.below(geom.m()));
+            let mut guard = 0;
+            while (o == a || o == b) && guard < 50 {
+                o = geom.col(po, rng.below(geom.m()));
+                guard += 1;
+            }
+            if o != a && o != b {
+                gates.push(if rng.below(4) == 0 { GateOp::not(a, o) } else { GateOp::nor(a, b, o) });
+            }
+            p += span;
+        } else {
+            p += 1;
+        }
+    }
+    if gates.is_empty() {
+        let a = geom.col(0, 0);
+        gates.push(GateOp::not(a, geom.col(0, 1)));
+    }
+    Operation::Gates(gates)
+}
+
+/// P1: word-packed simulator == naive per-bit model.
+#[test]
+fn p1_simulator_matches_naive_model() {
+    let geom = Geometry::new(128, 4, 70).unwrap(); // odd row count: tail masking
+    for seed in 1..40u64 {
+        let mut rng = Rng::new(seed * 7919);
+        let mut xb = Crossbar::new(geom, GateSet::NotNor);
+        xb.state.fill_random(seed);
+        // Naive model: Vec<Vec<bool>> [row][col].
+        let mut naive: Vec<Vec<bool>> = (0..geom.rows).map(|r| (0..geom.n).map(|c| xb.state.get(r, c)).collect()).collect();
+        for _ in 0..30 {
+            let op = random_op(&mut rng, &geom);
+            xb.execute(&op).expect("execute");
+            match &op {
+                Operation::Init { cols, value } => {
+                    for &c in cols {
+                        for row in naive.iter_mut() {
+                            row[c] = *value;
+                        }
+                    }
+                }
+                Operation::Gates(gates) => {
+                    let snapshot = naive.clone();
+                    for g in gates {
+                        for r in 0..geom.rows {
+                            let ins: Vec<bool> = g.ins.iter().map(|&c| snapshot[r][c]).collect();
+                            naive[r][g.out] = match g.gate {
+                                GateType::Not => !ins[0],
+                                GateType::Nor => !(ins[0] | ins[1]),
+                                _ => unreachable!(),
+                            };
+                        }
+                    }
+                }
+            }
+        }
+        for r in 0..geom.rows {
+            for c in 0..geom.n {
+                assert_eq!(xb.state.get(r, c), naive[r][c], "seed {seed} at ({r}, {c})");
+            }
+        }
+    }
+}
+
+/// P2: legalization preserves semantics under every model.
+#[test]
+fn p2_legalizer_preserves_semantics() {
+    let geom = Geometry::new(256, 8, 33).unwrap();
+    let cfg = LegalizeConfig { scratch_intra: Some((30, 31)) };
+    for seed in 1..30u64 {
+        let mut rng = Rng::new(seed * 104729);
+        // Random program avoiding the reserved scratch columns.
+        let mut ops = Vec::new();
+        for _ in 0..15 {
+            let op = random_op(&mut rng, &geom);
+            let uses_scratch = match &op {
+                Operation::Init { cols, .. } => cols.iter().any(|&c| geom.intra(c) >= 30),
+                Operation::Gates(gs) => gs.iter().any(|g| geom.intra(g.out) >= 30 || g.ins.iter().any(|&c| geom.intra(c) >= 30)),
+            };
+            if !uses_scratch {
+                ops.push(op);
+            }
+        }
+        if ops.is_empty() {
+            continue;
+        }
+        for model in ModelKind::ALL {
+            let (legal, _) = legalize_program(&ops, model, &geom, GateSet::NotNor, &cfg)
+                .unwrap_or_else(|e| panic!("seed {seed} {}: {e}", model.name()));
+            for op in &legal {
+                model.check(op, &geom, GateSet::NotNor).expect("legalized op must validate");
+            }
+            let mut a = Crossbar::new(geom, GateSet::NotNor);
+            a.state.fill_random(seed);
+            let mut b = a.clone();
+            a.execute_all(&ops).expect("original");
+            b.execute_all(&legal).expect("legalized");
+            // Compare everything except the reserved scratch columns.
+            for r in 0..geom.rows {
+                for c in 0..geom.n {
+                    if geom.intra(c) >= 30 {
+                        continue;
+                    }
+                    assert_eq!(a.state.get(r, c), b.state.get(r, c), "seed {seed} {} at ({r}, {c})", model.name());
+                }
+            }
+        }
+    }
+}
+
+/// P3: the packer preserves semantics and only shortens programs.
+#[test]
+fn p3_packer_preserves_semantics() {
+    let geom = Geometry::new(256, 8, 65).unwrap();
+    for seed in 1..40u64 {
+        let mut rng = Rng::new(seed * 31337);
+        let ops: Vec<Operation> = (0..20).map(|_| random_op(&mut rng, &geom)).collect();
+        for model in [ModelKind::Unlimited, ModelKind::Standard, ModelKind::Minimal] {
+            let (packed, stats) = pack_program(&ops, model, &geom, GateSet::NotNor);
+            assert!(packed.len() <= ops.len());
+            assert_eq!(stats.ops_in - stats.merges, packed.len());
+            let mut a = Crossbar::new(geom, GateSet::NotNor);
+            a.state.fill_random(seed);
+            let mut b = a.clone();
+            a.execute_all(&ops).expect("original");
+            b.execute_all(&packed).expect("packed");
+            assert_eq!(a.state, b.state, "seed {seed} {}", model.name());
+        }
+    }
+}
+
+/// P4: tight selects conduct exactly inside gate spans.
+#[test]
+fn p4_tight_selects_match_spans() {
+    let geom = Geometry::new(256, 8, 8).unwrap();
+    for seed in 1..100u64 {
+        let mut rng = Rng::new(seed * 3);
+        let op = random_op(&mut rng, &geom);
+        if matches!(op, Operation::Init { .. }) {
+            continue;
+        }
+        let selects = op.tight_selects(&geom);
+        let sections = op.sections(&geom);
+        for t in 0..geom.k - 1 {
+            let inside = sections.iter().any(|&(lo, hi)| t >= lo && t < hi);
+            assert_eq!(!selects[t], inside, "seed {seed} transistor {t}");
+        }
+    }
+}
+
+/// P5: generated opcodes always reconstruct (no dangling half-gates) for
+/// arbitrary tight divisions with edge-enabled sections.
+#[test]
+fn p5_opcode_generator_composes() {
+    let geom = Geometry::new(256, 8, 8).unwrap();
+    for seed in 1..200u64 {
+        let mut rng = Rng::new(seed * 17);
+        // Random section division; enable first+last partition of randomly
+        // chosen sections.
+        let selects: Vec<bool> = (0..geom.k - 1).map(|_| rng.flag()).collect();
+        let mut enables = vec![false; geom.k];
+        let mut any = false;
+        for (lo, hi) in halfgate::sections_from_selects(&selects) {
+            if rng.flag() {
+                enables[lo] = true;
+                enables[hi] = true;
+                any = true;
+            }
+        }
+        if !any {
+            continue;
+        }
+        let dir = if rng.flag() { Direction::InputsLeft } else { Direction::OutputsLeft };
+        let opcodes = opcode_gen::generate(&enables, &selects, dir).expect("generate");
+        // Compose into fields with shared indices and reconstruct.
+        let parts: Vec<partition_pim::isa::encode::PartitionFields> =
+            opcodes.into_iter().map(|opcode| partition_pim::isa::encode::PartitionFields { ia: 0, ib: 1, io: 3, opcode }).collect();
+        halfgate::reconstruct_from_fields(&parts, &selects, &geom)
+            .unwrap_or_else(|e| panic!("seed {seed}: dangling half-gates from generated opcodes: {e}"));
+    }
+}
+
+/// P6: range-generator expansions are exactly the operations the minimal
+/// validator accepts.
+#[test]
+fn p6_range_generator_matches_validator() {
+    let geom = Geometry::new(256, 8, 8).unwrap();
+    for seed in 1..300u64 {
+        let mut rng = Rng::new(seed * 23);
+        let d = rng.below(4);
+        let t = 1 + rng.below(6);
+        let p_start = rng.below(geom.k);
+        let p_end = p_start + rng.below(geom.k - p_start);
+        let dir = if rng.flag() { Direction::InputsLeft } else { Direction::OutputsLeft };
+        let params = range_gen::RangeParams { p_start, p_end, t, distance: d, dir };
+        match range_gen::expand(&params, geom.k) {
+            Err(_) => {} // rejected patterns are fine
+            Ok(e) => {
+                // Build the operation the expansion implies and check it is
+                // minimal-legal.
+                let gates: Vec<GateOp> = (0..geom.k)
+                    .filter(|&p| e.in_mask[p])
+                    .map(|p| {
+                        let q = match dir {
+                            Direction::InputsLeft => p + d,
+                            Direction::OutputsLeft => p - d,
+                        };
+                        GateOp::nor(geom.col(p, 0), geom.col(p, 1), geom.col(q, 3))
+                    })
+                    .collect();
+                let op = Operation::Gates(gates);
+                ModelKind::Minimal
+                    .check(&op, &geom, GateSet::NotNor)
+                    .unwrap_or_else(|err| panic!("seed {seed}: expansion {params:?} not minimal-legal: {err}"));
+            }
+        }
+    }
+}
+
+/// P7: splitting a job across different chunk sizes / bank widths never
+/// changes results.
+#[test]
+fn p7_batching_invariance() {
+    let (a, b): (Vec<u64>, Vec<u64>) = {
+        let mut rng = Rng::new(777);
+        ((0..33).map(|_| rng.next() & 0xffff_ffff).collect(), (0..33).map(|_| rng.next() & 0xffff_ffff).collect())
+    };
+    let mut reference: Option<Vec<u64>> = None;
+    for (crossbars, rows) in [(1usize, 33usize), (2, 8), (4, 5), (3, 1)] {
+        let mut svc = PimService::start(ServiceConfig { kind: WorkloadKind::Mul32, model: ModelKind::Minimal, n_crossbars: crossbars, rows })
+            .expect("service");
+        let res = svc.submit(&a, &b).expect("submit");
+        svc.shutdown();
+        match &reference {
+            None => reference = Some(res.values),
+            Some(r) => assert_eq!(&res.values, r, "{crossbars} crossbars x {rows} rows"),
+        }
+    }
+}
+
+/// Builder misuse is rejected (negative-space checks).
+#[test]
+fn builder_rejects_invalid_programs() {
+    let geom = Geometry::new(256, 8, 8).unwrap();
+    let mut b = Builder::new(geom, GateSet::NotNor);
+    assert!(b.nor(0, 1, 0).is_err()); // out aliases input
+    assert!(b.nor(0, 1, 999).is_err()); // out of range
+    assert!(b.push(Operation::Gates(vec![])).is_err()); // empty cycle
+    assert!(b
+        .push(Operation::Gates(vec![
+            GateOp::nor(geom.col(0, 0), geom.col(0, 1), geom.col(1, 3)),
+            GateOp::nor(geom.col(1, 0), geom.col(1, 1), geom.col(1, 5)),
+        ]))
+        .is_err()); // overlapping sections
+}
+
+/// P8: BitVec push/read round-trips for arbitrary field sequences — the
+/// wire format's foundation after the u64-packing optimization.
+#[test]
+fn p8_bitvec_roundtrip() {
+    use partition_pim::isa::encode::{BitReader, BitVec};
+    for seed in 1..200u64 {
+        let mut rng = Rng::new(seed * 41);
+        let fields: Vec<(usize, usize)> = (0..1 + rng.below(40))
+            .map(|_| {
+                let width = 1 + rng.below(64);
+                let value = (rng.next() as usize) & if width >= 64 { usize::MAX } else { (1usize << width) - 1 };
+                (value, width)
+            })
+            .collect();
+        let mut bv = BitVec::new();
+        for &(v, w) in &fields {
+            bv.push_bits(v, w);
+        }
+        assert_eq!(bv.len(), fields.iter().map(|&(_, w)| w).sum::<usize>());
+        let mut r = BitReader::new(&bv);
+        for &(v, w) in &fields {
+            assert_eq!(r.read_bits(w).unwrap(), v, "seed {seed} width {w}");
+        }
+        r.finish().unwrap();
+        // get() agrees with sequential reads.
+        let mut r2 = BitReader::new(&bv);
+        for i in 0..bv.len() {
+            assert_eq!(r2.read_bit().unwrap(), bv.get(i), "seed {seed} bit {i}");
+        }
+    }
+}
+
+/// P9: flipping any single bit of a valid message never round-trips to the
+/// original operation unchanged *and* undetected in length — i.e. the
+/// codec has no dead bits for the operations it encodes... except fields
+/// that are genuinely don't-care for the op (e.g. unused partitions'
+/// indices in the unlimited format). Here we assert the weaker, always-true
+/// property: decode never panics and lengths are always enforced.
+#[test]
+fn p9_single_bitflip_safety() {
+    use partition_pim::isa::encode::{decode, encode};
+    use partition_pim::periphery;
+    let geom = Geometry::new(256, 8, 8).unwrap();
+    let op = Operation::Gates((0..8).map(|p| GateOp::nor(geom.col(p, 0), geom.col(p, 1), geom.col(p, 3))).collect());
+    for model in [ModelKind::Unlimited, ModelKind::Standard, ModelKind::Minimal] {
+        let bits = encode(model, &op, &geom).unwrap();
+        for i in 0..bits.len() {
+            let mut corrupted = bits.clone();
+            corrupted.flip(i);
+            if let Ok(msg) = decode(model, &corrupted, &geom) {
+                // Reconstruction either fails cleanly or yields a valid op.
+                if let Ok(rec) = periphery::reconstruct(&msg, &geom) {
+                    rec.validate(&geom, GateSet::NotNor).expect("reconstructed ops are always physically valid");
+                }
+            }
+        }
+    }
+}

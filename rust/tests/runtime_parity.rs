@@ -1,0 +1,112 @@
+//! Experiment E14: the bit-packed rust simulator and the AOT-compiled
+//! JAX/Pallas gate-step kernel (via PJRT) must agree bit-for-bit — on
+//! random programs and on a full MultPIM multiplication.
+//!
+//! Requires `make artifacts` (the tests skip with a loud message when the
+//! artifacts are absent, e.g. under a bare `cargo test` before the python
+//! build step).
+
+use partition_pim::algorithms::multpim::{build_multpim, MultPimVariant};
+use partition_pim::crossbar::crossbar::Crossbar;
+use partition_pim::crossbar::gate::GateSet;
+use partition_pim::crossbar::geometry::Geometry;
+use partition_pim::isa::operation::{GateOp, Operation};
+use partition_pim::runtime::{artifact_path, XlaCrossbar};
+use std::path::PathBuf;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if artifact_path(&dir, 16, 256, 8).exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts missing at {dir:?} — run `make artifacts` first");
+        None
+    }
+}
+
+fn geom() -> Geometry {
+    Geometry::new(256, 8, 16).unwrap()
+}
+
+struct Rng(u64);
+impl Rng {
+    fn below(&mut self, n: usize) -> usize {
+        self.0 ^= self.0 << 13;
+        self.0 ^= self.0 >> 7;
+        self.0 ^= self.0 << 17;
+        (self.0 % n as u64) as usize
+    }
+}
+
+#[test]
+fn random_programs_parity() {
+    let Some(dir) = artifacts_dir() else { return };
+    let g = geom();
+    let mut xla = XlaCrossbar::new(g, &dir).expect("load artifact");
+    let mut rng = Rng(0x5eed);
+
+    for trial in 0..5 {
+        let mut sim = Crossbar::new(g, GateSet::NotNor);
+        sim.state.fill_random(trial as u64 + 1);
+        xla.load_state(&sim.state);
+
+        // Random valid program: parallel ops + serial ops + inits.
+        let mut ops = Vec::new();
+        for _ in 0..30 {
+            match rng.below(3) {
+                0 => {
+                    // parallel in-place ops
+                    let ia = rng.below(g.m());
+                    let mut io = rng.below(g.m());
+                    while io == ia {
+                        io = rng.below(g.m());
+                    }
+                    ops.push(Operation::Gates((0..g.k).map(|p| GateOp::not(g.col(p, ia), g.col(p, io))).collect()));
+                }
+                1 => {
+                    let a = rng.below(g.n);
+                    let b = rng.below(g.n);
+                    let mut o = rng.below(g.n);
+                    while o == a || o == b {
+                        o = rng.below(g.n);
+                    }
+                    ops.push(Operation::serial(GateOp::nor(a, b, o)));
+                }
+                _ => {
+                    let cols: Vec<usize> = (0..1 + rng.below(20)).map(|_| rng.below(g.n)).collect();
+                    ops.push(Operation::Init { cols, value: rng.below(2) == 0 });
+                }
+            }
+        }
+
+        sim.execute_all(&ops).expect("sim");
+        xla.execute_all(&ops).expect("xla");
+        assert_eq!(xla.state_bits().expect("state"), sim.state, "trial {trial}");
+    }
+}
+
+#[test]
+fn multpim_program_parity() {
+    let Some(dir) = artifacts_dir() else { return };
+    let g = geom();
+    let mult = build_multpim(g, MultPimVariant::Fast).expect("build");
+
+    let mut sim = Crossbar::new(g, GateSet::NotNor);
+    let cases: Vec<(u64, u64)> = (0..16).map(|i| ((i * 37 + 11) % 256, (i * 91 + 5) % 256)).collect();
+    for (r, &(a, b)) in cases.iter().enumerate() {
+        mult.load(&mut sim, r, a, b).expect("load");
+    }
+    let mut xla = XlaCrossbar::new(g, &dir).expect("load artifact");
+    xla.load_state(&sim.state);
+
+    sim.execute_all(&mult.program.ops).expect("sim");
+    xla.execute_all(&mult.program.ops).expect("xla");
+    assert_eq!(xla.state_bits().expect("state"), sim.state);
+
+    // And the products are right on both backends.
+    let xla_as_crossbar = Crossbar { state: xla.state_bits().expect("state"), ..sim.clone() };
+    for (r, &(a, b)) in cases.iter().enumerate() {
+        assert_eq!(mult.read_product(&sim, r).expect("read"), a * b);
+        assert_eq!(mult.read_product(&xla_as_crossbar, r).expect("read"), a * b);
+    }
+}
