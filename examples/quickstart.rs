@@ -9,10 +9,11 @@
 
 use anyhow::Result;
 use partition_pim::algorithms::program::{emit_fa_serial, Builder};
+use partition_pim::backend::{ExecPipeline, PimBackend};
 use partition_pim::crossbar::crossbar::Crossbar;
 use partition_pim::crossbar::gate::GateSet;
 use partition_pim::crossbar::geometry::Geometry;
-use partition_pim::isa::encode::{encode, message_bits};
+use partition_pim::isa::encode::message_bits;
 use partition_pim::isa::models::ModelKind;
 use partition_pim::isa::opcode::Opcode;
 use partition_pim::isa::operation::{GateOp, Operation};
@@ -36,14 +37,20 @@ fn main() -> Result<()> {
     xb.execute(&op)?;
     println!("\nparallel op: {} NOR gates in 1 cycle (cycles={})", op.gate_count(), xb.metrics.cycles);
 
-    // --- The same cycle through each model's wire format ------------------
+    // --- The same cycle through each model's wire pipeline ----------------
+    // ExecPipeline::wire encodes the cycle to its bit-exact control message,
+    // decodes it through the periphery model, and executes it — metering the
+    // control traffic at the decode boundary.
     println!("\ncontrol messages for that cycle:");
+    let mut total_control_bits = 0;
     for model in [ModelKind::Unlimited, ModelKind::Standard, ModelKind::Minimal] {
-        let bits = encode(model, &op, &geom)?;
-        println!("  {:<10} {:>4} bits (formula: {})", model.name(), bits.len(), message_bits(model, &geom));
-        xb.execute_message(model, &bits)?; // decoded by the periphery model
+        let mut pipe = ExecPipeline::wire(model, &mut xb);
+        pipe.run_op(&op)?;
+        let stats = pipe.stats();
+        println!("  {:<10} {:>4} bits (formula: {})", model.name(), stats.control_bits, message_bits(model, &geom));
+        total_control_bits += stats.control_bits;
     }
-    println!("  total control traffic so far: {} bits", xb.metrics.control_bits);
+    println!("  total control traffic so far: {total_control_bits} bits");
 
     // --- A full adder over every row at once ------------------------------
     let mut b = Builder::new(geom, GateSet::NotNor);
@@ -60,7 +67,7 @@ fn main() -> Result<()> {
         xb2.state.set(r, 1, r & 2 != 0);
         xb2.state.set(r, 2, r & 4 != 0);
     }
-    fa.run(&mut xb2)?;
+    fa.execute(&mut ExecPipeline::direct(&mut xb2))?;
     println!("\nfull adder, all 8 input combinations in 8 rows, {} cycles:", fa.stats().cycles);
     for r in 0..8 {
         println!(

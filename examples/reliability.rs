@@ -39,12 +39,12 @@ fn main() -> Result<()> {
             let mut xb = Crossbar::new(geom, GateSet::NotNor);
             let cases: Vec<(u64, u64)> = (0..geom.rows).map(|_| (rnd(), rnd())).collect();
             for (r, &(a, b)) in cases.iter().enumerate() {
-                mult.load(&mut xb, r, a, b)?;
+                mult.load(&mut xb.state, r, a, b)?;
             }
             run_with_faults(&mut xb, &mult.program.ops, &faults)?;
             for (r, &(a, b)) in cases.iter().enumerate() {
                 total += 1;
-                if mult.read_product(&xb, r)? != a * b {
+                if mult.read_product(&xb.state, r)? != a * b {
                     wrong += 1;
                 }
             }

@@ -5,6 +5,7 @@
 
 use anyhow::Result;
 use partition_pim::algorithms::sort::{build_sorter_partitioned, build_sorter_serial};
+use partition_pim::backend::ExecPipeline;
 use partition_pim::crossbar::crossbar::Crossbar;
 use partition_pim::crossbar::gate::GateSet;
 use partition_pim::crossbar::geometry::Geometry;
@@ -26,22 +27,22 @@ fn main() -> Result<()> {
                 (seed >> 40) % 64
             })
             .collect();
-        sorter.load(&mut xb, r, &vals)?;
+        sorter.load(&mut xb.state, r, &vals)?;
         inputs.push(vals);
     }
 
-    sorter.program.run(&mut xb)?;
+    sorter.program.execute(&mut ExecPipeline::direct(&mut xb))?;
     let stats = sorter.program.stats();
     println!("partitioned bitonic sort: 32 rows x 16 elements in {} cycles\n", stats.cycles);
     for r in [0usize, 1] {
-        let sorted = sorter.read(&xb, r)?;
+        let sorted = sorter.read(&xb.state, r)?;
         println!("row {r}:  {:?}\n    ->  {:?}", inputs[r], sorted);
         let mut expect = inputs[r].clone();
         expect.sort_unstable();
         anyhow::ensure!(sorted == expect, "row {r} not sorted");
     }
     for r in 0..32 {
-        let sorted = sorter.read(&xb, r)?;
+        let sorted = sorter.read(&xb.state, r)?;
         let mut expect = inputs[r].clone();
         expect.sort_unstable();
         anyhow::ensure!(sorted == expect, "row {r} not sorted");

@@ -8,6 +8,7 @@
 
 use anyhow::{Context, Result};
 use partition_pim::algorithms::multpim::{build_multpim, MultPimVariant};
+use partition_pim::backend::{ExecPipeline, PimBackend};
 use partition_pim::crossbar::crossbar::Crossbar;
 use partition_pim::crossbar::gate::GateSet;
 use partition_pim::crossbar::geometry::Geometry;
@@ -23,24 +24,25 @@ fn main() -> Result<()> {
     let mut sim = Crossbar::new(geom, GateSet::NotNor);
     let cases: Vec<(u64, u64)> = (0..16).map(|i| ((i * 13 + 7) % 256, (i * 29 + 3) % 256)).collect();
     for (r, &(a, b)) in cases.iter().enumerate() {
-        mult.load(&mut sim, r, a, b)?;
+        mult.load(&mut sim.state, r, a, b)?;
     }
 
     let mut xla = XlaCrossbar::new(geom, Path::new("artifacts"))
-        .context("loading artifacts/step_r16_c256_g8.hlo.txt — run `make artifacts`")?;
-    xla.load_state(&sim.state);
+        .context("loading artifacts/step_r16_c256_g8.hlo.txt — run `make artifacts` (and build with `--features xla`)")?;
+    xla.load_state(&sim.state)?;
 
+    // One program, one pipeline API, two physical backends.
     let t = Instant::now();
-    sim.execute_all(&mult.program.ops)?;
+    mult.program.execute(&mut ExecPipeline::direct(&mut sim))?;
     println!("bit-packed simulator: {:?}", t.elapsed());
 
     let t = Instant::now();
-    xla.execute_all(&mult.program.ops)?;
+    mult.program.execute(&mut ExecPipeline::direct(&mut xla))?;
     println!("XLA/PJRT backend:     {:?}", t.elapsed());
 
     anyhow::ensure!(xla.state_bits()? == sim.state, "backends diverged");
     for (r, &(a, b)) in cases.iter().enumerate() {
-        let p = mult.read_product(&sim, r)?;
+        let p = mult.read_product(&sim.state, r)?;
         anyhow::ensure!(p == a * b, "bad product");
         if r < 4 {
             println!("row {r}: {a} x {b} = {p}");

@@ -2,6 +2,7 @@
 //! energy (gate count) per model, plus wall-clock simulator timing of each
 //! program (experiments E6, E9).
 
+use partition_pim::backend::ExecPipeline;
 use partition_pim::bench_support::{bench, section, throughput};
 use partition_pim::coordinator::worker::{compile_workload, workload_geometry, WorkloadKind};
 use partition_pim::crossbar::crossbar::Crossbar;
@@ -30,8 +31,9 @@ fn main() {
         let (prog, _) = compile_workload(WorkloadKind::Mul32, model, geom).expect("compile");
         let mut xb = Crossbar::new(geom, GateSet::NotNor);
         xb.state.fill_random(1);
+        let mut pipe = ExecPipeline::direct(&mut xb);
         let res = bench(&format!("mult32/{}/direct", model.name()), || {
-            prog.run(&mut xb).expect("run");
+            prog.execute(&mut pipe).expect("run");
         });
         throughput(&res, prog.stats().cycles as f64, "cycles");
     }
@@ -42,8 +44,9 @@ fn main() {
         let (prog, _) = compile_workload(WorkloadKind::Mul32, model, geom).expect("compile");
         let mut xb = Crossbar::new(geom, GateSet::NotNor);
         xb.state.fill_random(1);
+        let mut pipe = ExecPipeline::wire(model, &mut xb);
         let res = bench(&format!("mult32/{}/messages", model.name()), || {
-            prog.run_via_messages(&mut xb, model).expect("run");
+            prog.execute(&mut pipe).expect("run");
         });
         throughput(&res, prog.stats().cycles as f64, "cycles");
     }
@@ -52,11 +55,12 @@ fn main() {
     for model in [ModelKind::Unlimited, ModelKind::Standard, ModelKind::Minimal] {
         let geom = workload_geometry(WorkloadKind::Mul32, model, 64);
         let (prog, _) = compile_workload(WorkloadKind::Mul32, model, geom).expect("compile");
-        let encoded = prog.encode_for(model).expect("encode");
         let mut xb = Crossbar::new(geom, GateSet::NotNor);
         xb.state.fill_random(1);
+        let mut pipe = ExecPipeline::wire(model, &mut xb);
+        let prepared = prog.prepare(&mut pipe).expect("prepare");
         let res = bench(&format!("mult32/{}/pre-encoded", model.name()), || {
-            encoded.run(&mut xb).expect("run");
+            pipe.run_prepared(&prepared).expect("run");
         });
         throughput(&res, prog.stats().cycles as f64, "cycles");
     }

@@ -1,11 +1,11 @@
 //! L3 hot-path throughput: row-gates/second of the bit-packed simulator
 //! (the §Perf target: ≥ 1e8 row-gates/s), across geometries and paths.
 
+use partition_pim::backend::{ExecPipeline, PimBackend};
 use partition_pim::bench_support::{bench, section, throughput};
 use partition_pim::crossbar::crossbar::Crossbar;
 use partition_pim::crossbar::gate::GateSet;
 use partition_pim::crossbar::geometry::Geometry;
-use partition_pim::isa::encode::encode;
 use partition_pim::isa::models::ModelKind;
 use partition_pim::isa::operation::{GateOp, Operation};
 
@@ -32,9 +32,11 @@ fn main() {
         let mut xb = Crossbar::new(geom, GateSet::NotNor);
         xb.state.fill_random(7);
         let op = parallel_op(&geom);
-        let bits = encode(ModelKind::Minimal, &op, &geom).expect("encode");
+        // Pre-encode once; each iteration replays the decode + execute side.
+        let mut pipe = ExecPipeline::wire(ModelKind::Minimal, &mut xb);
+        let prepared = pipe.prepare(std::slice::from_ref(&op)).expect("prepare");
         let res = bench(&format!("message/n1024k32r{rows}"), || {
-            xb.execute_message(ModelKind::Minimal, &bits).expect("execute");
+            pipe.run_prepared(&prepared).expect("execute");
         });
         throughput(&res, (geom.k * rows) as f64, "row-gates");
     }

@@ -2,6 +2,7 @@
 //! intro cites 14x with 16 partitions [1]).
 
 use partition_pim::algorithms::sort::{build_sorter_partitioned, build_sorter_serial};
+use partition_pim::backend::ExecPipeline;
 use partition_pim::bench_support::{bench, section, throughput};
 use partition_pim::crossbar::crossbar::Crossbar;
 use partition_pim::crossbar::gate::GateSet;
@@ -20,8 +21,9 @@ fn main() {
     let par = build_sorter_partitioned(geom, 6).expect("partitioned sorter");
     let mut xb = Crossbar::new(geom, GateSet::NotNor);
     xb.state.fill_random(3);
+    let mut pipe = ExecPipeline::direct(&mut xb);
     let res = bench("sort16x6/partitioned/64rows", || {
-        par.program.run(&mut xb).expect("run");
+        par.program.execute(&mut pipe).expect("run");
     });
     throughput(&res, 64.0 * 16.0, "elements");
 
@@ -29,8 +31,9 @@ fn main() {
     let ser = build_sorter_serial(sgeom, 16, 6).expect("serial sorter");
     let mut sxb = Crossbar::new(sgeom, GateSet::NotNor);
     sxb.state.fill_random(3);
+    let mut spipe = ExecPipeline::direct(&mut sxb);
     let res = bench("sort16x6/serial/64rows", || {
-        ser.program.run(&mut sxb).expect("run");
+        ser.program.execute(&mut spipe).expect("run");
     });
     throughput(&res, 64.0 * 16.0, "elements");
 }

@@ -6,9 +6,9 @@
 //! 12-gate adder lands at `N·13 + 2` cycles).
 
 use crate::algorithms::program::{emit_fa_serial, Builder, Program};
-use crate::crossbar::crossbar::Crossbar;
 use crate::crossbar::gate::GateSet;
 use crate::crossbar::geometry::Geometry;
+use crate::crossbar::state::BitMatrix;
 use anyhow::{ensure, Result};
 
 /// Column layout of the serial ripple adder within a row.
@@ -77,16 +77,16 @@ pub fn build_adder(geom: Geometry, n_bits: usize) -> Result<Adder> {
 }
 
 impl Adder {
-    /// Load operands into `row`.
-    pub fn load(&self, xb: &mut Crossbar, row: usize, a: u64, bval: u64) -> Result<()> {
-        xb.state.write_field(row, self.layout.a0, self.layout.n_bits, a)?;
-        xb.state.write_field(row, self.layout.b0, self.layout.n_bits, bval)?;
+    /// Load operands into `row` of a backend state image.
+    pub fn load(&self, state: &mut BitMatrix, row: usize, a: u64, bval: u64) -> Result<()> {
+        state.write_field(row, self.layout.a0, self.layout.n_bits, a)?;
+        state.write_field(row, self.layout.b0, self.layout.n_bits, bval)?;
         Ok(())
     }
 
     /// Read the (n+1)-bit sum from `row`.
-    pub fn read_sum(&self, xb: &Crossbar, row: usize) -> Result<u64> {
-        xb.state.read_field(row, self.layout.s0, self.layout.n_bits + 1)
+    pub fn read_sum(&self, state: &BitMatrix, row: usize) -> Result<u64> {
+        state.read_field(row, self.layout.s0, self.layout.n_bits + 1)
     }
 }
 
@@ -140,20 +140,22 @@ pub fn build_adder_aligned(geom: Geometry, n_bits: usize) -> Result<AlignedAdder
 }
 
 impl AlignedAdder {
-    pub fn load(&self, xb: &mut Crossbar, row: usize, a: u64, bval: u64) -> Result<()> {
-        xb.state.write_strided(row, BA, BLOCK, self.n_bits, a)?;
-        xb.state.write_strided(row, BB_, BLOCK, self.n_bits, bval)?;
+    pub fn load(&self, state: &mut BitMatrix, row: usize, a: u64, bval: u64) -> Result<()> {
+        state.write_strided(row, BA, BLOCK, self.n_bits, a)?;
+        state.write_strided(row, BB_, BLOCK, self.n_bits, bval)?;
         Ok(())
     }
 
-    pub fn read_sum(&self, xb: &Crossbar, row: usize) -> Result<u64> {
-        xb.state.read_strided(row, BS, BLOCK, self.n_bits + 1)
+    pub fn read_sum(&self, state: &BitMatrix, row: usize) -> Result<u64> {
+        state.read_strided(row, BS, BLOCK, self.n_bits + 1)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::backend::ExecPipeline;
+    use crate::crossbar::crossbar::Crossbar;
 
     #[test]
     fn adds_exhaustive_4bit() {
@@ -163,15 +165,15 @@ mod tests {
         let mut row = 0;
         for a in 0..16u64 {
             for b in 0..16u64 {
-                adder.load(&mut xb, row, a, b).unwrap();
+                adder.load(&mut xb.state, row, a, b).unwrap();
                 row += 1;
             }
         }
-        adder.program.run(&mut xb).unwrap();
+        adder.program.execute(&mut ExecPipeline::direct(&mut xb)).unwrap();
         row = 0;
         for a in 0..16u64 {
             for b in 0..16u64 {
-                assert_eq!(adder.read_sum(&xb, row).unwrap(), a + b, "{a}+{b}");
+                assert_eq!(adder.read_sum(&xb.state, row).unwrap(), a + b, "{a}+{b}");
                 row += 1;
             }
         }
@@ -189,12 +191,12 @@ mod tests {
             let a = seed >> 32;
             seed = seed.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
             let b = seed >> 32;
-            adder.load(&mut xb, r, a, b).unwrap();
+            adder.load(&mut xb.state, r, a, b).unwrap();
             expect.push(a + b);
         }
-        adder.program.run(&mut xb).unwrap();
+        adder.program.execute(&mut ExecPipeline::direct(&mut xb)).unwrap();
         for r in 0..64 {
-            assert_eq!(adder.read_sum(&xb, r).unwrap(), expect[r], "row {r}");
+            assert_eq!(adder.read_sum(&xb.state, r).unwrap(), expect[r], "row {r}");
         }
     }
 

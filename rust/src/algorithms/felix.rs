@@ -81,14 +81,14 @@ pub fn build_adder_felix(geom: Geometry, n_bits: usize) -> Result<FelixAdder> {
 }
 
 impl FelixAdder {
-    pub fn load(&self, xb: &mut crate::crossbar::crossbar::Crossbar, row: usize, a: u64, bval: u64) -> Result<()> {
-        xb.state.write_field(row, self.a0, self.n_bits, a)?;
-        xb.state.write_field(row, self.b0, self.n_bits, bval)?;
+    pub fn load(&self, state: &mut crate::crossbar::state::BitMatrix, row: usize, a: u64, bval: u64) -> Result<()> {
+        state.write_field(row, self.a0, self.n_bits, a)?;
+        state.write_field(row, self.b0, self.n_bits, bval)?;
         Ok(())
     }
 
-    pub fn read_sum(&self, xb: &crate::crossbar::crossbar::Crossbar, row: usize) -> Result<u64> {
-        xb.state.read_field(row, self.s0, self.n_bits + 1)
+    pub fn read_sum(&self, state: &crate::crossbar::state::BitMatrix, row: usize) -> Result<u64> {
+        state.read_field(row, self.s0, self.n_bits + 1)
     }
 }
 
@@ -112,6 +112,7 @@ pub fn extended_message_bits(model: ModelKind, geom: &Geometry) -> usize {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::backend::{ExecPipeline, PimBackend};
     use crate::crossbar::crossbar::Crossbar;
 
     #[test]
@@ -132,7 +133,7 @@ mod tests {
             xb.state.set(r, 1, r & 2 != 0);
             xb.state.set(r, 2, r & 4 != 0);
         }
-        prog.run(&mut xb).unwrap();
+        prog.execute(&mut ExecPipeline::direct(&mut xb)).unwrap();
         for r in 0..8 {
             let total = (r & 1) + ((r >> 1) & 1) + ((r >> 2) & 1);
             assert_eq!(xb.state.get(r, 3), total & 1 == 1, "sum row {r}");
@@ -155,12 +156,12 @@ mod tests {
             seed = seed.wrapping_mul(6364136223846793005).wrapping_add(1);
             let a = (seed >> 40) & 0xffff;
             let b = (seed >> 20) & 0xffff;
-            felix.load(&mut xb, r, a, b).unwrap();
+            felix.load(&mut xb.state, r, a, b).unwrap();
             expect.push(a + b);
         }
-        felix.program.run(&mut xb).unwrap();
+        felix.program.execute(&mut ExecPipeline::direct(&mut xb)).unwrap();
         for r in 0..32 {
-            assert_eq!(felix.read_sum(&xb, r).unwrap(), expect[r], "row {r}");
+            assert_eq!(felix.read_sum(&xb.state, r).unwrap(), expect[r], "row {r}");
         }
     }
 
@@ -169,7 +170,7 @@ mod tests {
         let geom = Geometry::new(256, 1, 8).unwrap();
         let felix = build_adder_felix(geom, 8).unwrap();
         let mut strict = Crossbar::new(geom, GateSet::NotNor);
-        assert!(felix.program.run(&mut strict).is_err());
+        assert!(strict.execute_ops(&felix.program.ops).is_err());
     }
 
     /// Extended formats stay ordered like the paper's: unlimited >> standard

@@ -7,9 +7,9 @@
 //! and cycles, as in [9].
 
 use crate::algorithms::program::{emit_fa_serial, Builder, Program};
-use crate::crossbar::crossbar::Crossbar;
 use crate::crossbar::gate::GateSet;
 use crate::crossbar::geometry::Geometry;
+use crate::crossbar::state::BitMatrix;
 use anyhow::{ensure, Result};
 
 /// Column layout of the serial multiplier within a row.
@@ -110,23 +110,25 @@ pub fn build_serial_multiplier(geom: Geometry, n_bits: usize) -> Result<SerialMu
 }
 
 impl SerialMultiplier {
-    /// Load operands into `row`.
-    pub fn load(&self, xb: &mut Crossbar, row: usize, a: u64, bval: u64) -> Result<()> {
+    /// Load operands into `row` of a backend state image.
+    pub fn load(&self, state: &mut BitMatrix, row: usize, a: u64, bval: u64) -> Result<()> {
         ensure!(a < 1 << self.layout.n_bits && bval < 1 << self.layout.n_bits, "operand exceeds {} bits", self.layout.n_bits);
-        xb.state.write_field(row, self.layout.a0, self.layout.n_bits, a)?;
-        xb.state.write_field(row, self.layout.b0, self.layout.n_bits, bval)?;
+        state.write_field(row, self.layout.a0, self.layout.n_bits, a)?;
+        state.write_field(row, self.layout.b0, self.layout.n_bits, bval)?;
         Ok(())
     }
 
     /// Read the 2N-bit product from `row`.
-    pub fn read_product(&self, xb: &Crossbar, row: usize) -> Result<u64> {
-        xb.state.read_field(row, self.layout.p0, 2 * self.layout.n_bits)
+    pub fn read_product(&self, state: &BitMatrix, row: usize) -> Result<u64> {
+        state.read_field(row, self.layout.p0, 2 * self.layout.n_bits)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::backend::ExecPipeline;
+    use crate::crossbar::crossbar::Crossbar;
 
     #[test]
     fn multiplies_exhaustive_4bit() {
@@ -136,15 +138,15 @@ mod tests {
         let mut row = 0;
         for a in 0..16u64 {
             for b in 0..16u64 {
-                mult.load(&mut xb, row, a, b).unwrap();
+                mult.load(&mut xb.state, row, a, b).unwrap();
                 row += 1;
             }
         }
-        mult.program.run(&mut xb).unwrap();
+        mult.program.execute(&mut ExecPipeline::direct(&mut xb)).unwrap();
         row = 0;
         for a in 0..16u64 {
             for b in 0..16u64 {
-                assert_eq!(mult.read_product(&xb, row).unwrap(), a * b, "{a}*{b}");
+                assert_eq!(mult.read_product(&xb.state, row).unwrap(), a * b, "{a}*{b}");
                 row += 1;
             }
         }
@@ -161,12 +163,12 @@ mod tests {
             seed = seed.wrapping_mul(6364136223846793005).wrapping_add(1);
             let a = (seed >> 33) & 0xff;
             let b = (seed >> 17) & 0xff;
-            mult.load(&mut xb, r, a, b).unwrap();
+            mult.load(&mut xb.state, r, a, b).unwrap();
             expect.push(a * b);
         }
-        mult.program.run(&mut xb).unwrap();
+        mult.program.execute(&mut ExecPipeline::direct(&mut xb)).unwrap();
         for r in 0..64 {
-            assert_eq!(mult.read_product(&xb, r).unwrap(), expect[r], "row {r}");
+            assert_eq!(mult.read_product(&xb.state, r).unwrap(), expect[r], "row {r}");
         }
     }
 

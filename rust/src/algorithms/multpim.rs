@@ -24,9 +24,9 @@
 //!   unlimited→standard gap.
 
 use crate::algorithms::program::{emit_fa_parallel, emit_fa_serial, Builder, FaIntra, Program};
-use crate::crossbar::crossbar::Crossbar;
 use crate::crossbar::gate::GateSet;
 use crate::crossbar::geometry::Geometry;
+use crate::crossbar::state::BitMatrix;
 use crate::isa::operation::GateOp;
 use anyhow::{ensure, Result};
 
@@ -227,22 +227,22 @@ pub fn build_multpim(geom: Geometry, variant: MultPimVariant) -> Result<MultPim>
 }
 
 impl MultPim {
-    /// Load operands into `row`: bit `j` of each operand lands in
-    /// partition `j` (MultPIM's strided layout).
-    pub fn load(&self, xb: &mut Crossbar, row: usize, a: u64, bval: u64) -> Result<()> {
+    /// Load operands into `row` of a backend state image: bit `j` of each
+    /// operand lands in partition `j` (MultPIM's strided layout).
+    pub fn load(&self, state: &mut BitMatrix, row: usize, a: u64, bval: u64) -> Result<()> {
         ensure!(self.n_bits >= 64 || (a < 1 << self.n_bits && bval < 1 << self.n_bits), "operand exceeds {} bits", self.n_bits);
-        let m = xb.geom.m();
-        xb.state.write_strided(row, intra::A, m, self.n_bits, a)?;
-        xb.state.write_strided(row, intra::B, m, self.n_bits, bval)?;
+        let m = self.program.geom.m();
+        state.write_strided(row, intra::A, m, self.n_bits, a)?;
+        state.write_strided(row, intra::B, m, self.n_bits, bval)?;
         Ok(())
     }
 
     /// Read the 2N-bit product from `row`: low bits from the `P` stripe,
     /// high bits from the `H` stripe.
-    pub fn read_product(&self, xb: &Crossbar, row: usize) -> Result<u64> {
-        let m = xb.geom.m();
-        let lo = xb.state.read_strided(row, intra::P, m, self.n_bits)?;
-        let hi = xb.state.read_strided(row, intra::H, m, self.n_bits)?;
+    pub fn read_product(&self, state: &BitMatrix, row: usize) -> Result<u64> {
+        let m = self.program.geom.m();
+        let lo = state.read_strided(row, intra::P, m, self.n_bits)?;
+        let hi = state.read_strided(row, intra::H, m, self.n_bits)?;
         Ok(lo | (hi << self.n_bits))
     }
 }
@@ -250,6 +250,8 @@ impl MultPim {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::backend::{ExecPipeline, PimBackend};
+    use crate::crossbar::crossbar::Crossbar;
     use crate::isa::models::ModelKind;
 
     #[test]
@@ -261,15 +263,15 @@ mod tests {
             let mut row = 0;
             for a in 0..16u64 {
                 for b in 0..16u64 {
-                    mult.load(&mut xb, row, a, b).unwrap();
+                    mult.load(&mut xb.state, row, a, b).unwrap();
                     row += 1;
                 }
             }
-            mult.program.run(&mut xb).unwrap();
+            mult.program.execute(&mut ExecPipeline::direct(&mut xb)).unwrap();
             row = 0;
             for a in 0..16u64 {
                 for b in 0..16u64 {
-                    assert_eq!(mult.read_product(&xb, row).unwrap(), a * b, "{a}*{b} ({variant:?})");
+                    assert_eq!(mult.read_product(&xb.state, row).unwrap(), a * b, "{a}*{b} ({variant:?})");
                     row += 1;
                 }
             }
@@ -288,12 +290,12 @@ mod tests {
                 seed = seed.wrapping_mul(6364136223846793005).wrapping_add(1);
                 let a = (seed >> 33) & 0xff;
                 let b = (seed >> 17) & 0xff;
-                mult.load(&mut xb, r, a, b).unwrap();
+                mult.load(&mut xb.state, r, a, b).unwrap();
                 expect.push(a * b);
             }
-            mult.program.run(&mut xb).unwrap();
+            mult.program.execute(&mut ExecPipeline::direct(&mut xb)).unwrap();
             for r in 0..64 {
-                assert_eq!(mult.read_product(&xb, r).unwrap(), expect[r], "row {r} ({variant:?})");
+                assert_eq!(mult.read_product(&xb.state, r).unwrap(), expect[r], "row {r} ({variant:?})");
             }
         }
     }
@@ -333,38 +335,41 @@ mod tests {
         assert!(pstats.merges > 0, "packer must find mergeable cycles");
 
         for (name, ops) in [("legalized", &legal.ops), ("packed", &packed)] {
-            let mut xb = crate::crossbar::crossbar::Crossbar::new(geom, GateSet::NotNor);
+            let mut xb = Crossbar::new(geom, GateSet::NotNor);
             let cases: Vec<(u64, u64)> = (0..16).map(|i| ((i * 31 + 4) % 256, (i * 57 + 9) % 256)).collect();
             for (r, &(a, b)) in cases.iter().enumerate() {
-                fast.load(&mut xb, r, a, b).unwrap();
+                fast.load(&mut xb.state, r, a, b).unwrap();
             }
-            xb.execute_all(ops).unwrap();
+            xb.execute_ops(ops).unwrap();
             for (r, &(a, b)) in cases.iter().enumerate() {
-                assert_eq!(fast.read_product(&xb, r).unwrap(), a * b, "{name} row {r}");
+                assert_eq!(fast.read_product(&xb.state, r).unwrap(), a * b, "{name} row {r}");
             }
         }
     }
 
-    /// The three model programs executed through their *own* wire formats
-    /// (encode → decode → periphery → execute) still multiply correctly.
+    /// The model programs executed through their *own* wire formats
+    /// (encode → decode → periphery → execute), pre-encoded once and
+    /// replayed — the coordinator's streaming path — still multiply
+    /// correctly.
     #[test]
     fn all_models_multiply_via_messages() {
-        use crate::crossbar::gate::GateSet;
-
         for (model, variant) in [
             (ModelKind::Minimal, MultPimVariant::Plain),
             (ModelKind::Standard, MultPimVariant::Fast),
         ] {
             let geom = Geometry::new(256, 8, 8).unwrap();
             let mult = build_multpim(geom, variant).unwrap();
-            let encoded = mult.program.encode_for(model).unwrap();
-            let mut xb = crate::crossbar::crossbar::Crossbar::new(geom, GateSet::NotNor);
+            let mut xb = Crossbar::new(geom, GateSet::NotNor);
             for r in 0..8u64 {
-                mult.load(&mut xb, r as usize, 200 + r, 17 * r + 3).unwrap();
+                mult.load(&mut xb.state, r as usize, 200 + r, 17 * r + 3).unwrap();
             }
-            encoded.run(&mut xb).unwrap();
+            let mut pipe = ExecPipeline::wire(model, &mut xb);
+            let prepared = mult.program.prepare(&mut pipe).unwrap();
+            pipe.run_prepared(&prepared).unwrap();
+            assert!(pipe.stats().control_bits > 0);
+            drop(pipe);
             for r in 0..8u64 {
-                assert_eq!(mult.read_product(&xb, r as usize).unwrap(), (200 + r) * (17 * r + 3), "{}", model.name());
+                assert_eq!(mult.read_product(&xb.state, r as usize).unwrap(), (200 + r) * (17 * r + 3), "{}", model.name());
             }
         }
     }

@@ -1,14 +1,19 @@
 //! Program IR: a named sequence of operations plus the builder API the
 //! algorithm constructors use, and per-program architectural statistics.
+//!
+//! Programs execute exclusively through
+//! [`Program::execute`] / [`Program::prepare`] on an
+//! [`ExecPipeline`] — one API for every backend and control path.
 
-use crate::crossbar::crossbar::{init_message_bits, Crossbar};
+use crate::backend::{ExecPipeline, PimBackend, PreparedProgram};
+use crate::crossbar::crossbar::init_message_bits;
 use crate::crossbar::gate::GateSet;
 use crate::crossbar::geometry::Geometry;
-use crate::isa::encode::{self, message_bits};
+use crate::isa::encode::message_bits;
 use crate::isa::lower::{legalize_program, LegalizeConfig, LegalizeStats};
 use crate::isa::models::ModelKind;
 use crate::isa::operation::{GateOp, Operation};
-use anyhow::Result;
+use anyhow::{ensure, Result};
 
 /// A compiled PIM program: one entry per simulated cycle.
 #[derive(Debug, Clone)]
@@ -66,39 +71,40 @@ impl Program {
             .sum()
     }
 
-    /// Execute directly on a crossbar (abstract-operation path).
-    pub fn run(&self, xb: &mut Crossbar) -> Result<()> {
-        xb.execute_all(&self.ops)
+    /// Execute through a pipeline — the single execution API. The pipeline
+    /// decides the path: [`ExecPipeline::direct`] runs abstract operations,
+    /// [`ExecPipeline::wire`] streams bit-exact control messages through the
+    /// periphery decode (the production path, with control-traffic
+    /// metering), [`ExecPipeline::full`] legalizes first.
+    pub fn execute(&self, pipe: &mut ExecPipeline<'_>) -> Result<()> {
+        self.check_pipeline(pipe)?;
+        pipe.run_ops(&self.ops)
     }
 
-    /// Execute through the full control pipeline: encode each cycle as a
-    /// wire message for `model`, decode through the periphery, execute.
-    /// This is the production path; it also meters control traffic.
-    pub fn run_via_messages(&self, xb: &mut Crossbar, model: ModelKind) -> Result<()> {
-        for op in &self.ops {
-            match op {
-                Operation::Init { cols, value } => xb.execute_init(cols, *value)?,
-                Operation::Gates(_) => {
-                    let bits = encode::encode(model, op, &self.geom)?;
-                    xb.execute_message(model, &bits)?;
-                }
-            }
-        }
+    /// Apply the pipeline's controller-side stages (legalize + encode) once,
+    /// returning a stream that [`ExecPipeline::run_prepared`] can replay for
+    /// every batch — the controller encodes a compiled program a single
+    /// time (see DESIGN.md §Perf).
+    pub fn prepare(&self, pipe: &mut ExecPipeline<'_>) -> Result<PreparedProgram> {
+        self.check_pipeline(pipe)?;
+        pipe.prepare(&self.ops)
+    }
+
+    fn check_pipeline(&self, pipe: &ExecPipeline<'_>) -> Result<()> {
+        let geom = pipe.backend().geom();
+        ensure!(
+            geom == self.geom,
+            "program '{}' was compiled for n={} k={} rows={}, but backend '{}' is n={} k={} rows={}",
+            self.name,
+            self.geom.n,
+            self.geom.k,
+            self.geom.rows,
+            pipe.backend().name(),
+            geom.n,
+            geom.k,
+            geom.rows
+        );
         Ok(())
-    }
-
-    /// Pre-encode every cycle's wire message once (the controller encodes a
-    /// compiled program a single time and then streams it to every batch —
-    /// see EXPERIMENTS.md §Perf).
-    pub fn encode_for(&self, model: ModelKind) -> Result<EncodedProgram> {
-        let mut steps = Vec::with_capacity(self.ops.len());
-        for op in &self.ops {
-            steps.push(match op {
-                Operation::Init { cols, value } => EncodedStep::Init { cols: cols.clone(), value: *value },
-                Operation::Gates(_) => EncodedStep::Gate(encode::encode(model, op, &self.geom)?),
-            });
-        }
-        Ok(EncodedProgram { model, steps })
     }
 
     /// Rewrite into a `model`-legal program (Section 5's "alternatives").
@@ -140,36 +146,6 @@ impl Program {
             }
         }
         self.used_cols = used.iter().enumerate().filter_map(|(c, &u)| u.then_some(c)).collect();
-    }
-}
-
-/// One pre-encoded wire-format cycle.
-#[derive(Debug, Clone)]
-pub enum EncodedStep {
-    /// A gate cycle's control message.
-    Gate(encode::BitVec),
-    /// An initialization write (travels on the write path).
-    Init { cols: Vec<usize>, value: bool },
-}
-
-/// A program encoded once for a model's wire format, ready to stream.
-#[derive(Debug, Clone)]
-pub struct EncodedProgram {
-    pub model: ModelKind,
-    pub steps: Vec<EncodedStep>,
-}
-
-impl EncodedProgram {
-    /// Stream all messages into a crossbar (decode + periphery + execute,
-    /// with control-traffic metering).
-    pub fn run(&self, xb: &mut Crossbar) -> Result<()> {
-        for step in &self.steps {
-            match step {
-                EncodedStep::Gate(bits) => xb.execute_message(self.model, bits)?,
-                EncodedStep::Init { cols, value } => xb.execute_init(cols, *value)?,
-            }
-        }
-        Ok(())
     }
 }
 
@@ -331,6 +307,7 @@ pub fn fa_init_intra(ix: &FaIntra) -> Vec<usize> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::crossbar::crossbar::Crossbar;
 
     #[test]
     fn serial_full_adder_truth_table() {
@@ -351,7 +328,7 @@ mod tests {
             xb.state.set(r, 1, r & 2 == 2);
             xb.state.set(r, 2, r & 4 == 4);
         }
-        prog.run(&mut xb).unwrap();
+        prog.execute(&mut ExecPipeline::direct(&mut xb)).unwrap();
         for r in 0..8 {
             let total = (r & 1) + ((r >> 1) & 1) + ((r >> 2) & 1);
             assert_eq!(xb.state.get(r, 3), total & 1 == 1, "sum row {r}");
@@ -384,12 +361,22 @@ mod tests {
                 inputs.push((r, p, xb.state.get(r, geom.col(p, 0)), xb.state.get(r, geom.col(p, 1)), xb.state.get(r, geom.col(p, 2))));
             }
         }
-        prog.run(&mut xb).unwrap();
+        prog.execute(&mut ExecPipeline::direct(&mut xb)).unwrap();
         for (r, p, a, bb, cin) in inputs {
             let total = a as u8 + bb as u8 + cin as u8;
             assert_eq!(xb.state.get(r, geom.col(p, 3)), total & 1 == 1, "s @ row {r} part {p}");
             assert_eq!(xb.state.get(r, geom.col(p, 4)), total >= 2, "cout @ row {r} part {p}");
         }
+    }
+
+    #[test]
+    fn execute_rejects_geometry_mismatch() {
+        let mut b = Builder::new(Geometry::new(64, 1, 8).unwrap(), GateSet::NotNor);
+        b.init1(vec![0]).unwrap();
+        let prog = b.finish("t");
+        let mut xb = Crossbar::new(Geometry::new(128, 1, 8).unwrap(), GateSet::NotNor);
+        assert!(prog.execute(&mut ExecPipeline::direct(&mut xb)).is_err());
+        assert!(prog.prepare(&mut ExecPipeline::direct(&mut xb)).is_err());
     }
 
     #[test]

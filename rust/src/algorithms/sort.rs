@@ -10,9 +10,9 @@
 //! partition-free crossbar.
 
 use crate::algorithms::program::{Builder, Program};
-use crate::crossbar::crossbar::Crossbar;
 use crate::crossbar::gate::GateSet;
 use crate::crossbar::geometry::Geometry;
+use crate::crossbar::state::BitMatrix;
 use crate::isa::operation::GateOp;
 use anyhow::{ensure, Result};
 
@@ -248,25 +248,28 @@ pub fn build_sorter_serial(geom: Geometry, n_elems: usize, w_bits: usize) -> Res
 }
 
 impl Sorter {
-    /// Load `values` (one per element slot) into `row`.
-    pub fn load(&self, xb: &mut Crossbar, row: usize, values: &[u64]) -> Result<()> {
+    /// Load `values` (one per element slot) into `row` of a backend state
+    /// image.
+    pub fn load(&self, state: &mut BitMatrix, row: usize, values: &[u64]) -> Result<()> {
         ensure!(values.len() == self.n_elems, "expected {} values", self.n_elems);
         for (e, &v) in values.iter().enumerate() {
             ensure!(v < 1 << self.w_bits, "value {v} exceeds {} bits", self.w_bits);
-            xb.state.write_field(row, self.elem_cols[e], self.w_bits, v)?;
+            state.write_field(row, self.elem_cols[e], self.w_bits, v)?;
         }
         Ok(())
     }
 
     /// Read the element vector back from `row`.
-    pub fn read(&self, xb: &Crossbar, row: usize) -> Result<Vec<u64>> {
-        self.elem_cols.iter().map(|&c| xb.state.read_field(row, c, self.w_bits)).collect()
+    pub fn read(&self, state: &BitMatrix, row: usize) -> Result<Vec<u64>> {
+        self.elem_cols.iter().map(|&c| state.read_field(row, c, self.w_bits)).collect()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::backend::ExecPipeline;
+    use crate::crossbar::crossbar::Crossbar;
 
     fn lcg(seed: &mut u64) -> u64 {
         *seed = seed.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
@@ -295,14 +298,14 @@ mod tests {
         let mut expect = Vec::new();
         for r in 0..32 {
             let vals: Vec<u64> = (0..8).map(|_| lcg(&mut seed) % 64).collect();
-            sorter.load(&mut xb, r, &vals).unwrap();
+            sorter.load(&mut xb.state, r, &vals).unwrap();
             let mut s = vals.clone();
             s.sort_unstable();
             expect.push(s);
         }
-        sorter.program.run(&mut xb).unwrap();
+        sorter.program.execute(&mut ExecPipeline::direct(&mut xb)).unwrap();
         for r in 0..32 {
-            assert_eq!(sorter.read(&xb, r).unwrap(), expect[r], "row {r}");
+            assert_eq!(sorter.read(&xb.state, r).unwrap(), expect[r], "row {r}");
         }
     }
 
@@ -315,14 +318,14 @@ mod tests {
         let mut expect = Vec::new();
         for r in 0..16 {
             let vals: Vec<u64> = (0..8).map(|_| lcg(&mut seed) % 64).collect();
-            sorter.load(&mut xb, r, &vals).unwrap();
+            sorter.load(&mut xb.state, r, &vals).unwrap();
             let mut s = vals.clone();
             s.sort_unstable();
             expect.push(s);
         }
-        sorter.program.run(&mut xb).unwrap();
+        sorter.program.execute(&mut ExecPipeline::direct(&mut xb)).unwrap();
         for r in 0..16 {
-            assert_eq!(sorter.read(&xb, r).unwrap(), expect[r], "row {r}");
+            assert_eq!(sorter.read(&xb.state, r).unwrap(), expect[r], "row {r}");
         }
     }
 

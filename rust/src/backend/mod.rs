@@ -1,0 +1,142 @@
+//! The execution seam of the whole system.
+//!
+//! Every way of physically realizing a partition-operation stream — the
+//! bit-packed word-parallel simulator ([`crate::crossbar::Crossbar`]), the
+//! naive scalar reference oracle ([`ScalarCrossbar`]), the AOT-compiled
+//! XLA/Pallas step kernel ([`crate::runtime::XlaCrossbar`]), and any future
+//! backend (GPU, sharded banks) — implements the one [`PimBackend`] trait.
+//! Programs never talk to a backend directly: they flow through an
+//! [`ExecPipeline`], an explicit composition of control stages
+//! (legalize → encode → periphery-decode → backend) that meters latency,
+//! gates, and control traffic uniformly at every stage boundary.
+//!
+//! See `DESIGN.md` §Backends for the architecture rationale.
+
+pub mod pipeline;
+pub mod scalar;
+
+pub use pipeline::{ExecPipeline, PipelineStats, PreparedProgram, Stage};
+pub use scalar::ScalarCrossbar;
+
+use crate::crossbar::crossbar::Metrics;
+use crate::crossbar::gate::GateSet;
+use crate::crossbar::geometry::Geometry;
+use crate::crossbar::state::BitMatrix;
+use crate::isa::operation::Operation;
+use anyhow::Result;
+
+/// Shared [`PimBackend::load_state`] shape validation: every backend must
+/// reject a state image whose dimensions disagree with its geometry, with
+/// one canonical message.
+pub fn check_state_shape(geom: &Geometry, m: &BitMatrix) -> Result<()> {
+    anyhow::ensure!(
+        m.rows() == geom.rows && m.cols() == geom.n,
+        "state shape {}x{} does not match geometry {}x{}",
+        m.rows(),
+        m.cols(),
+        geom.rows,
+        geom.n
+    );
+    Ok(())
+}
+
+/// A device that executes abstract partition operations.
+///
+/// The surface is deliberately minimal: state in, one operation per
+/// simulated cycle, state out, plus the architectural counters. Everything
+/// model-specific (wire formats, legality, periphery decoding) lives in the
+/// [`ExecPipeline`] stages in front of the backend, so a backend never needs
+/// to know which of the paper's designs is driving it.
+pub trait PimBackend {
+    /// Human-readable backend identifier (for reports and error messages).
+    fn name(&self) -> &'static str;
+
+    /// The crossbar geometry this backend simulates.
+    fn geom(&self) -> Geometry;
+
+    /// The stateful-logic gate set this backend supports.
+    fn gate_set(&self) -> GateSet;
+
+    /// Overwrite the full crossbar state.
+    fn load_state(&mut self, m: &BitMatrix) -> Result<()>;
+
+    /// Snapshot the full crossbar state.
+    fn state_bits(&self) -> Result<BitMatrix>;
+
+    /// Execute one abstract operation (one simulated cycle), validating the
+    /// physical constraints (column ranges, section disjointness, gate set).
+    fn execute(&mut self, op: &Operation) -> Result<()>;
+
+    /// Execute a cycle that is already known physically valid — the
+    /// periphery decode stage uses this after message reconstruction (which
+    /// guarantees disjoint sections and alias-free gates by construction),
+    /// so the hot message path does not validate twice. Backends without a
+    /// cheaper trusted path fall back to [`PimBackend::execute`].
+    fn execute_trusted(&mut self, op: &Operation) -> Result<()> {
+        self.execute(op)
+    }
+
+    /// Execute a sequence of operations. This provided method is the single
+    /// op-stream loop in the crate; per-backend copies of it are exactly the
+    /// duplication the trait exists to remove.
+    fn execute_ops(&mut self, ops: &[Operation]) -> Result<()> {
+        for op in ops {
+            self.execute(op)?;
+        }
+        Ok(())
+    }
+
+    /// Architectural counters accumulated by this backend (cycles, gates,
+    /// switching events). Control traffic is metered by the pipeline, not
+    /// the backend — see [`ExecPipeline::metrics`] for the merged view.
+    fn metrics(&self) -> Metrics;
+
+    /// Reset the counters (state is preserved).
+    fn reset_metrics(&mut self);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crossbar::crossbar::Crossbar;
+    use crate::isa::operation::GateOp;
+
+    /// The two CPU backends behave identically through the same trait
+    /// object — the minimal differential smoke test (the full property
+    /// lives in `tests/proptests.rs`).
+    #[test]
+    fn trait_object_backends_agree() {
+        let geom = Geometry::new(128, 4, 16).unwrap();
+        let ops = vec![
+            Operation::init1(vec![2, 40, 70]),
+            Operation::Gates(vec![GateOp::nor(0, 1, 2), GateOp::nor(38, 39, 40)]),
+            Operation::serial(GateOp::not(2, 70)),
+        ];
+        let mut bitpacked = Crossbar::new(geom, GateSet::NotNor);
+        bitpacked.state.fill_random(9);
+        let init = bitpacked.state.clone();
+        let mut scalar = ScalarCrossbar::new(geom, GateSet::NotNor);
+
+        let mut states = Vec::new();
+        for backend in [&mut bitpacked as &mut dyn PimBackend, &mut scalar as &mut dyn PimBackend] {
+            backend.load_state(&init).unwrap();
+            backend.execute_ops(&ops).unwrap();
+            let m = backend.metrics();
+            assert_eq!(m.cycles, 3, "{}", backend.name());
+            assert_eq!(m.gate_events, 3, "{}", backend.name());
+            states.push(backend.state_bits().unwrap());
+        }
+        assert_eq!(states[0], states[1]);
+        assert_eq!(bitpacked.metrics().switch_events, scalar.metrics().switch_events);
+    }
+
+    #[test]
+    fn load_state_rejects_shape_mismatch() {
+        let geom = Geometry::new(128, 4, 16).unwrap();
+        let mut xb = Crossbar::new(geom, GateSet::NotNor);
+        let wrong = BitMatrix::new(8, 128);
+        assert!(PimBackend::load_state(&mut xb, &wrong).is_err());
+        let mut sc = ScalarCrossbar::new(geom, GateSet::NotNor);
+        assert!(sc.load_state(&wrong).is_err());
+    }
+}

@@ -1,0 +1,519 @@
+//! The composable execution pipeline: the one path every program takes to
+//! reach a backend.
+//!
+//! A pipeline is an ordered list of control [`Stage`]s in front of a
+//! [`PimBackend`]:
+//!
+//! ```text
+//!   Program ──ops──▶ Legalize(cfg) ──ops──▶ Encode(model) ──wire bits──▶
+//!            PeripheryDecode(model) ──reconstructed ops──▶ backend
+//! ```
+//!
+//! Every stage is optional; the valid compositions are `Legalize*` followed
+//! by an optional matched `Encode → PeripheryDecode` pair (enforced at
+//! construction, so a mis-ordered pipeline fails fast instead of at the
+//! first operation). The three common shapes have shorthand constructors:
+//!
+//! * [`ExecPipeline::direct`] — abstract operations straight to the backend.
+//! * [`ExecPipeline::wire`] — encode each gate cycle to its bit-exact wire
+//!   message, decode through the periphery model, execute; control traffic
+//!   is metered at the decode boundary (the production path).
+//! * [`ExecPipeline::full`] — additionally legalize every operation for the
+//!   model first (Section 5's "alternatives").
+//!
+//! The controller-side stages (legalize + encode) can be applied once with
+//! [`ExecPipeline::prepare`], yielding a [`PreparedProgram`] that streams to
+//! the crossbar-side stages repeatedly — the coordinator encodes a compiled
+//! program a single time and replays it for every batch (see DESIGN.md
+//! §Perf).
+
+use crate::backend::PimBackend;
+use crate::crossbar::crossbar::{init_message_bits, Metrics};
+use crate::crossbar::gate::GateSet;
+use crate::crossbar::geometry::Geometry;
+use crate::isa::encode::{self, BitVec};
+use crate::isa::lower::{legalize_op, LegalizeConfig, LegalizeStats};
+use crate::isa::models::ModelKind;
+use crate::isa::operation::Operation;
+use crate::periphery;
+use anyhow::{bail, ensure, Result};
+
+/// One control stage of an execution pipeline.
+#[derive(Debug, Clone, Copy)]
+pub enum Stage {
+    /// Rewrite operations the model cannot express into supported
+    /// alternatives (Section 5).
+    Legalize { model: ModelKind, cfg: LegalizeConfig },
+    /// Controller side: encode each gate cycle as the model's bit-exact wire
+    /// message; initialization writes travel on the write path.
+    Encode(ModelKind),
+    /// Crossbar side: decode wire traffic through the periphery model and
+    /// reconstruct the executed gates. Control traffic is metered here.
+    PeripheryDecode(ModelKind),
+}
+
+/// What flows between stages: abstract operations upstream of the encoder,
+/// wire traffic between encoder and periphery.
+#[derive(Debug, Clone)]
+enum Item {
+    Op(Operation),
+    /// A gate cycle's control message.
+    Message(BitVec),
+    /// An initialization write command (travels on the write path; charged
+    /// [`init_message_bits`] of control traffic at the decode boundary).
+    InitWrite { cols: Vec<usize>, value: bool },
+}
+
+/// Counters accumulated at the pipeline's stage boundaries. Backend-side
+/// counters (cycles, gates, switching) live in the backend's [`Metrics`];
+/// [`ExecPipeline::metrics`] merges the two views.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PipelineStats {
+    /// Operations submitted by programs (pre-legalization cycles).
+    pub ops_in: usize,
+    /// Operations delivered to the backend (post-legalization cycles).
+    pub ops_to_backend: usize,
+    /// Legalizer statistics (all Legalize stages combined).
+    pub legalize: LegalizeStats,
+    /// Control-message traffic through the decode boundary, in bits.
+    pub control_bits: u64,
+    /// Control messages (gate messages + write commands) received.
+    pub messages: u64,
+}
+
+/// A program with its controller-side stages already applied, ready to
+/// stream to the crossbar-side stages any number of times. Run it with
+/// [`ExecPipeline::run_prepared`] on a pipeline with the same stage
+/// configuration it was prepared on (a mismatch fails cleanly at the decode
+/// or backend boundary).
+#[derive(Debug, Clone)]
+pub struct PreparedProgram {
+    items: Vec<Item>,
+}
+
+impl PreparedProgram {
+    /// Number of prepared cycles.
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+}
+
+/// An execution pipeline borrowing a backend.
+pub struct ExecPipeline<'a> {
+    stages: Vec<Stage>,
+    backend: &'a mut dyn PimBackend,
+    /// Operations reaching the backend were reconstructed by the periphery
+    /// decode stage — validated by construction, so they execute on the
+    /// trusted path.
+    decoded: bool,
+    stats: PipelineStats,
+}
+
+impl<'a> ExecPipeline<'a> {
+    /// Build a pipeline, validating the stage composition: `Legalize*`
+    /// optionally followed by a matched `Encode → PeripheryDecode` pair.
+    pub fn new(stages: Vec<Stage>, backend: &'a mut dyn PimBackend) -> Result<Self> {
+        let mut i = 0;
+        while i < stages.len() && matches!(stages[i], Stage::Legalize { .. }) {
+            i += 1;
+        }
+        match &stages[i..] {
+            [] => {}
+            [Stage::Encode(e), Stage::PeripheryDecode(d)] => {
+                ensure!(e == d, "encode model {} and decode model {} differ", e.name(), d.name());
+            }
+            rest => bail!(
+                "invalid stage composition {rest:?}: expected Legalize* followed by an optional Encode -> PeripheryDecode pair"
+            ),
+        }
+        let decoded = matches!(stages.last(), Some(Stage::PeripheryDecode(_)));
+        Ok(Self { stages, backend, decoded, stats: PipelineStats::default() })
+    }
+
+    /// Abstract operations straight to the backend.
+    pub fn direct(backend: &'a mut dyn PimBackend) -> Self {
+        Self::new(Vec::new(), backend).expect("an empty stage list is always valid")
+    }
+
+    /// The production control path: encode → periphery decode → execute,
+    /// with control-traffic metering.
+    pub fn wire(model: ModelKind, backend: &'a mut dyn PimBackend) -> Self {
+        Self::new(vec![Stage::Encode(model), Stage::PeripheryDecode(model)], backend).expect("the wire stage pair is always valid")
+    }
+
+    /// Legalize for `model`, then run the wire path.
+    pub fn full(model: ModelKind, cfg: LegalizeConfig, backend: &'a mut dyn PimBackend) -> Self {
+        Self::new(
+            vec![Stage::Legalize { model, cfg }, Stage::Encode(model), Stage::PeripheryDecode(model)],
+            backend,
+        )
+        .expect("the full stage list is always valid")
+    }
+
+    /// The backend behind the pipeline.
+    pub fn backend(&self) -> &dyn PimBackend {
+        &*self.backend
+    }
+
+    pub fn backend_mut(&mut self) -> &mut dyn PimBackend {
+        &mut *self.backend
+    }
+
+    /// The stage composition.
+    pub fn stages(&self) -> &[Stage] {
+        &self.stages
+    }
+
+    /// Pipeline-boundary counters accumulated so far.
+    pub fn stats(&self) -> PipelineStats {
+        self.stats
+    }
+
+    /// The merged architectural view: the backend's execution counters plus
+    /// the control traffic metered at the pipeline's decode boundary.
+    pub fn metrics(&self) -> Metrics {
+        let mut m = self.backend.metrics();
+        m.control_bits += self.stats.control_bits;
+        m.messages += self.stats.messages;
+        m
+    }
+
+    /// Reset both the pipeline counters and the backend counters.
+    pub fn reset_metrics(&mut self) {
+        self.stats = PipelineStats::default();
+        self.backend.reset_metrics();
+    }
+
+    /// Index of the first crossbar-side stage (everything before it is
+    /// controller-side and can be pre-applied by [`ExecPipeline::prepare`]).
+    fn front_len(&self) -> usize {
+        self.stages.len() - usize::from(self.decoded)
+    }
+
+    /// The decode model, when the pipeline ends in a periphery-decode stage.
+    fn decode_model(&self) -> Option<ModelKind> {
+        match self.stages.last() {
+            Some(Stage::PeripheryDecode(m)) => Some(*m),
+            _ => None,
+        }
+    }
+
+    /// Apply the controller-side stages in `range` to `items` (stages are
+    /// `Copy`, so the index walk sidesteps borrowing `self.stages` across
+    /// the `&mut self` stage application).
+    fn apply_stages(&mut self, range: std::ops::Range<usize>, mut items: Vec<Item>, geom: &Geometry, gate_set: GateSet) -> Result<Vec<Item>> {
+        let mut i = range.start;
+        while i < range.end {
+            let stage = self.stages[i];
+            items = self.apply_stage(stage, items, geom, gate_set)?;
+            i += 1;
+        }
+        Ok(items)
+    }
+
+    fn apply_stage(&mut self, stage: Stage, items: Vec<Item>, geom: &Geometry, gate_set: GateSet) -> Result<Vec<Item>> {
+        let mut out = Vec::with_capacity(items.len());
+        for item in items {
+            match (stage, item) {
+                (Stage::Legalize { model, cfg }, Item::Op(op)) => {
+                    for legal in legalize_op(&op, model, geom, gate_set, &cfg, &mut self.stats.legalize)? {
+                        out.push(Item::Op(legal));
+                    }
+                }
+                (Stage::Encode(model), Item::Op(op)) => out.push(Self::encode_item(model, &op, geom)?),
+                (Stage::PeripheryDecode(_), _) => {
+                    bail!("periphery decode is a crossbar-side stage; it is consumed at the decode boundary, not applied in the controller-side stage walk")
+                }
+                (Stage::Legalize { .. } | Stage::Encode(_), other) => {
+                    bail!("stage {stage:?} expects abstract operations, got already-encoded {other:?}")
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Consume one staged item by reference at the crossbar boundary: the
+    /// decode stage (when present) meters control traffic and reconstructs
+    /// the executed gates, then the backend runs the cycle. This is the
+    /// single decode-and-execute path shared by [`ExecPipeline::run_op`],
+    /// [`ExecPipeline::run_prepared`] and [`ExecPipeline::run_wire`] — no
+    /// per-replay cloning of the prepared stream.
+    fn consume_item(&mut self, item: &Item, geom: &Geometry) -> Result<()> {
+        match (self.decode_model(), item) {
+            (Some(model), Item::Message(bits)) => {
+                self.stats.control_bits += bits.len() as u64;
+                self.stats.messages += 1;
+                let msg = encode::decode(model, bits, geom)?;
+                let op = periphery::reconstruct(&msg, geom)?;
+                self.stats.ops_to_backend += 1;
+                self.backend.execute_trusted(&op)
+            }
+            (Some(_), Item::InitWrite { cols, value }) => {
+                self.stats.control_bits += init_message_bits(geom) as u64;
+                self.stats.messages += 1;
+                self.stats.ops_to_backend += 1;
+                // Write commands are not covered by the periphery
+                // reconstruction guarantee, so they take the validating
+                // path: a malformed write must be rejected before any cell
+                // is touched, identically on every backend.
+                self.backend.execute(&Operation::Init { cols: cols.clone(), value: *value })
+            }
+            (Some(_), Item::Op(_)) => {
+                bail!("periphery decode received an abstract operation; it must follow an encode stage")
+            }
+            (None, Item::Op(op)) => {
+                self.stats.ops_to_backend += 1;
+                self.backend.execute(op)
+            }
+            (None, _) => {
+                bail!("pipeline ended with undecoded wire traffic; a PeripheryDecode stage must precede the backend")
+            }
+        }
+    }
+
+    /// Encode one borrowed operation for the wire (the legalize-free fast
+    /// path of [`ExecPipeline::run_op`] — no staging clone per cycle).
+    fn encode_item(model: ModelKind, op: &Operation, geom: &Geometry) -> Result<Item> {
+        Ok(match op {
+            Operation::Init { cols, value } => Item::InitWrite { cols: cols.clone(), value: *value },
+            Operation::Gates(_) => Item::Message(encode::encode(model, op, geom)?),
+        })
+    }
+
+    /// Push one operation through every stage to the backend.
+    pub fn run_op(&mut self, op: &Operation) -> Result<()> {
+        self.stats.ops_in += 1;
+        // Stage-free pipelines are the simulator hot path: hand the
+        // operation to the backend by reference, with no staging allocation.
+        if self.stages.is_empty() {
+            self.stats.ops_to_backend += 1;
+            return self.backend.execute(op);
+        }
+        let geom = self.backend.geom();
+        // A pure wire pipeline encodes straight from the borrowed op — the
+        // production path allocates only the message itself.
+        let wire_model = match (self.front_len(), self.stages[0]) {
+            (1, Stage::Encode(model)) => Some(model),
+            _ => None,
+        };
+        if let Some(model) = wire_model {
+            let item = Self::encode_item(model, op, &geom)?;
+            return self.consume_item(&item, &geom);
+        }
+        let gate_set = self.backend.gate_set();
+        let staged = self.apply_stages(0..self.front_len(), vec![Item::Op(op.clone())], &geom, gate_set)?;
+        for item in &staged {
+            self.consume_item(item, &geom)?;
+        }
+        Ok(())
+    }
+
+    /// Push a sequence of operations through the pipeline.
+    /// [`crate::algorithms::program::Program::execute`] is the usual entry.
+    pub fn run_ops(&mut self, ops: &[Operation]) -> Result<()> {
+        for op in ops {
+            self.run_op(op)?;
+        }
+        Ok(())
+    }
+
+    /// Apply the controller-side stages (legalize + encode) once.
+    pub fn prepare(&mut self, ops: &[Operation]) -> Result<PreparedProgram> {
+        self.stats.ops_in += ops.len();
+        let geom = self.backend.geom();
+        let gate_set = self.backend.gate_set();
+        let items: Vec<Item> = ops.iter().cloned().map(Item::Op).collect();
+        let items = self.apply_stages(0..self.front_len(), items, &geom, gate_set)?;
+        Ok(PreparedProgram { items })
+    }
+
+    /// Stream a prepared program through the crossbar-side stages (decode +
+    /// execute), by reference — no per-replay cloning. May be called any
+    /// number of times; control traffic is metered on every run, exactly as
+    /// a controller re-streaming the same encoded program would generate it.
+    pub fn run_prepared(&mut self, prog: &PreparedProgram) -> Result<()> {
+        let geom = self.backend.geom();
+        for item in &prog.items {
+            self.consume_item(item, &geom)?;
+        }
+        Ok(())
+    }
+
+    /// Inject raw wire traffic at the crossbar boundary, skipping the
+    /// controller-side stages: decode, reconstruct, execute. This models an
+    /// untrusted or faulty controller (the fuzzing tests corrupt messages
+    /// and assert the periphery either rejects them or reconstructs a
+    /// physically valid operation).
+    pub fn run_wire(&mut self, bits: &BitVec) -> Result<()> {
+        ensure!(self.decoded, "pipeline has no periphery decode stage to receive wire traffic");
+        let geom = self.backend.geom();
+        self.consume_item(&Item::Message(bits.clone()), &geom)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::ScalarCrossbar;
+    use crate::crossbar::crossbar::Crossbar;
+    use crate::isa::encode::message_bits;
+    use crate::isa::operation::GateOp;
+
+    fn geom() -> Geometry {
+        Geometry::new(256, 8, 32).unwrap()
+    }
+
+    fn parallel_op(g: &Geometry) -> Operation {
+        Operation::Gates((0..g.k).map(|p| GateOp::nor(g.col(p, 0), g.col(p, 1), g.col(p, 3))).collect())
+    }
+
+    #[test]
+    fn stage_composition_validated() {
+        let g = geom();
+        let mut xb = Crossbar::new(g, GateSet::NotNor);
+        // Decode without encode is rejected.
+        assert!(ExecPipeline::new(vec![Stage::PeripheryDecode(ModelKind::Minimal)], &mut xb).is_err());
+        // Encode without decode is rejected (the backend cannot execute bits).
+        assert!(ExecPipeline::new(vec![Stage::Encode(ModelKind::Minimal)], &mut xb).is_err());
+        // Mismatched encode/decode models are rejected.
+        assert!(ExecPipeline::new(vec![Stage::Encode(ModelKind::Minimal), Stage::PeripheryDecode(ModelKind::Standard)], &mut xb).is_err());
+        // Legalize after encode is rejected.
+        assert!(ExecPipeline::new(
+            vec![
+                Stage::Encode(ModelKind::Minimal),
+                Stage::PeripheryDecode(ModelKind::Minimal),
+                Stage::Legalize { model: ModelKind::Minimal, cfg: LegalizeConfig::default() },
+            ],
+            &mut xb,
+        )
+        .is_err());
+        // The three canonical shapes are valid.
+        ExecPipeline::direct(&mut xb);
+        ExecPipeline::wire(ModelKind::Minimal, &mut xb);
+        ExecPipeline::full(ModelKind::Minimal, LegalizeConfig::default(), &mut xb);
+    }
+
+    #[test]
+    fn wire_path_matches_direct_path_and_meters_control() {
+        let g = geom();
+        let op = parallel_op(&g);
+        let init_op = Operation::init1(vec![g.col(0, 3), g.col(5, 3)]);
+
+        let mut direct = Crossbar::new(g, GateSet::NotNor);
+        direct.state.fill_random(77);
+        let start = direct.state.clone();
+        {
+            let mut pipe = ExecPipeline::direct(&mut direct);
+            pipe.run_ops(&[init_op.clone(), op.clone()]).unwrap();
+            assert_eq!(pipe.stats().control_bits, 0, "direct path carries no wire traffic");
+        }
+
+        for model in [ModelKind::Unlimited, ModelKind::Standard, ModelKind::Minimal] {
+            let mut xb = Crossbar::new(g, GateSet::NotNor);
+            xb.state = start.clone();
+            let mut pipe = ExecPipeline::wire(model, &mut xb);
+            pipe.run_ops(&[init_op.clone(), op.clone()]).unwrap();
+            let stats = pipe.stats();
+            assert_eq!(stats.messages, 2);
+            assert_eq!(stats.control_bits, (message_bits(model, &g) + init_message_bits(&g)) as u64);
+            assert_eq!(pipe.metrics().control_bits, stats.control_bits);
+            drop(pipe);
+            assert_eq!(xb.state, direct.state, "{} wire path diverged", model.name());
+        }
+    }
+
+    #[test]
+    fn full_pipeline_legalizes_illegal_ops() {
+        let g = geom();
+        // Mixed distances (0, 1): standard-legal only after index grouping,
+        // minimal-legal only after distance splitting.
+        let op = Operation::Gates(vec![
+            GateOp::nor(g.col(0, 0), g.col(0, 1), g.col(0, 3)),
+            GateOp::nor(g.col(2, 0), g.col(2, 1), g.col(3, 3)),
+            GateOp::nor(g.col(5, 0), g.col(5, 1), g.col(5, 3)),
+        ]);
+        let mut direct = Crossbar::new(g, GateSet::NotNor);
+        direct.state.fill_random(3);
+        let start = direct.state.clone();
+        ExecPipeline::direct(&mut direct).run_op(&op).unwrap();
+
+        let mut xb = Crossbar::new(g, GateSet::NotNor);
+        xb.state = start;
+        let mut pipe = ExecPipeline::full(ModelKind::Minimal, LegalizeConfig::default(), &mut xb);
+        pipe.run_op(&op).unwrap();
+        let stats = pipe.stats();
+        assert_eq!(stats.ops_in, 1);
+        assert!(stats.ops_to_backend > 1, "minimal must split the mixed-distance cycle");
+        assert_eq!(stats.messages as usize, stats.ops_to_backend);
+        drop(pipe);
+        assert_eq!(xb.state, direct.state);
+        assert!(xb.metrics.cycles > direct.metrics.cycles, "legalization costs extra cycles");
+    }
+
+    #[test]
+    fn malformed_init_on_wire_path_rejected_without_mutation() {
+        let g = geom();
+        let mut xb = Crossbar::new(g, GateSet::NotNor);
+        xb.state.fill_random(5);
+        let before = xb.state.clone();
+        // Out-of-range write command: rejected before any cell is touched,
+        // on the wire path exactly as on the direct path.
+        let bad = Operation::Init { cols: vec![0, g.n + 7], value: true };
+        assert!(ExecPipeline::wire(ModelKind::Minimal, &mut xb).run_op(&bad).is_err());
+        assert!(ExecPipeline::direct(&mut xb).run_op(&bad).is_err());
+        assert_eq!(xb.state, before, "rejected write must not touch any cell");
+        // Empty write commands are rejected on both paths too.
+        let empty = Operation::Init { cols: vec![], value: false };
+        assert!(ExecPipeline::wire(ModelKind::Minimal, &mut xb).run_op(&empty).is_err());
+        assert!(ExecPipeline::direct(&mut xb).run_op(&empty).is_err());
+        assert_eq!(xb.state, before);
+    }
+
+    #[test]
+    fn prepared_program_replays_and_meters_every_run() {
+        let g = geom();
+        let ops = vec![Operation::init1(vec![g.col(0, 3)]), parallel_op(&g)];
+        let mut xb = Crossbar::new(g, GateSet::NotNor);
+        let mut pipe = ExecPipeline::wire(ModelKind::Minimal, &mut xb);
+        let prepared = pipe.prepare(&ops).unwrap();
+        assert_eq!(prepared.len(), 2);
+        pipe.run_prepared(&prepared).unwrap();
+        pipe.run_prepared(&prepared).unwrap();
+        let stats = pipe.stats();
+        assert_eq!(stats.messages, 4, "each replay streams every message again");
+        assert_eq!(pipe.metrics().cycles, 4);
+    }
+
+    #[test]
+    fn prepared_program_rejected_on_mismatched_pipeline() {
+        let g = geom();
+        let ops = vec![parallel_op(&g)];
+        let mut xb = Crossbar::new(g, GateSet::NotNor);
+        let prepared = ExecPipeline::wire(ModelKind::Minimal, &mut xb).prepare(&ops).unwrap();
+        // Running minimal-encoded traffic through a standard decoder fails
+        // at the length check instead of corrupting state.
+        assert!(ExecPipeline::wire(ModelKind::Standard, &mut xb).run_prepared(&prepared).is_err());
+        // Running wire traffic into a direct pipeline fails at the backend
+        // boundary (undecoded items are rejected, not executed).
+        assert!(ExecPipeline::direct(&mut xb).run_prepared(&prepared).is_err());
+    }
+
+    #[test]
+    fn pipeline_works_across_backends() {
+        let g = geom();
+        let ops = vec![Operation::init1(vec![g.col(1, 5)]), parallel_op(&g)];
+        let mut bitpacked = Crossbar::new(g, GateSet::NotNor);
+        bitpacked.state.fill_random(21);
+        let start = bitpacked.state.clone();
+        let mut scalar = ScalarCrossbar::new(g, GateSet::NotNor);
+        scalar.load_state(&start).unwrap();
+
+        ExecPipeline::wire(ModelKind::Minimal, &mut bitpacked).run_ops(&ops).unwrap();
+        ExecPipeline::wire(ModelKind::Minimal, &mut scalar).run_ops(&ops).unwrap();
+        assert_eq!(bitpacked.state_bits().unwrap(), scalar.state_bits().unwrap());
+    }
+}

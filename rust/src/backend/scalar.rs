@@ -1,0 +1,159 @@
+//! The naive scalar reference backend: one `bool` per memristor, one
+//! explicit loop per row — deliberately the dumbest possible realization of
+//! the operation semantics, kept free of every optimization the bit-packed
+//! simulator carries (word packing, tail masks, trusted fast paths).
+//!
+//! Its only job is to be *obviously correct* so it can serve as the
+//! differential-testing oracle for every other [`PimBackend`]
+//! (`tests/proptests.rs` P10/P11): if the two disagree, the clever one is
+//! wrong.
+
+use crate::backend::PimBackend;
+use crate::crossbar::crossbar::Metrics;
+use crate::crossbar::gate::GateSet;
+use crate::crossbar::geometry::Geometry;
+use crate::crossbar::state::BitMatrix;
+use crate::isa::operation::Operation;
+use anyhow::Result;
+
+/// A scalar (per-bit) crossbar model.
+#[derive(Debug, Clone)]
+pub struct ScalarCrossbar {
+    geom: Geometry,
+    gate_set: GateSet,
+    /// Plain row-major booleans: `state[row][col]`.
+    state: Vec<Vec<bool>>,
+    metrics: Metrics,
+}
+
+impl ScalarCrossbar {
+    pub fn new(geom: Geometry, gate_set: GateSet) -> Self {
+        Self { geom, gate_set, state: vec![vec![false; geom.n]; geom.rows], metrics: Metrics::default() }
+    }
+
+    /// Read one cell (test convenience).
+    pub fn get(&self, row: usize, col: usize) -> bool {
+        self.state[row][col]
+    }
+}
+
+impl PimBackend for ScalarCrossbar {
+    fn name(&self) -> &'static str {
+        "scalar-reference"
+    }
+
+    fn geom(&self) -> Geometry {
+        self.geom
+    }
+
+    fn gate_set(&self) -> GateSet {
+        self.gate_set
+    }
+
+    fn load_state(&mut self, m: &BitMatrix) -> Result<()> {
+        crate::backend::check_state_shape(&self.geom, m)?;
+        for (r, row) in self.state.iter_mut().enumerate() {
+            for (c, cell) in row.iter_mut().enumerate() {
+                *cell = m.get(r, c);
+            }
+        }
+        Ok(())
+    }
+
+    fn state_bits(&self) -> Result<BitMatrix> {
+        let mut m = BitMatrix::new(self.geom.rows, self.geom.n);
+        for (r, row) in self.state.iter().enumerate() {
+            for (c, &v) in row.iter().enumerate() {
+                if v {
+                    m.set(r, c, true);
+                }
+            }
+        }
+        Ok(m)
+    }
+
+    fn execute(&mut self, op: &Operation) -> Result<()> {
+        op.validate(&self.geom, self.gate_set)?;
+        match op {
+            Operation::Init { cols, value } => {
+                for row in self.state.iter_mut() {
+                    for &c in cols {
+                        if row[c] != *value {
+                            self.metrics.switch_events += 1;
+                            row[c] = *value;
+                        }
+                    }
+                }
+                self.metrics.cycles += 1;
+                self.metrics.init_cycles += 1;
+            }
+            Operation::Gates(gates) => {
+                // Concurrent gates occupy pairwise-disjoint sections, so no
+                // column is both read and written within the cycle and the
+                // per-gate order is immaterial.
+                for g in gates {
+                    for r in 0..self.geom.rows {
+                        let ins: Vec<bool> = g.ins.iter().map(|&c| self.state[r][c]).collect();
+                        let v = g.gate.eval_bool(&ins);
+                        if self.state[r][g.out] != v {
+                            self.metrics.switch_events += 1;
+                            self.state[r][g.out] = v;
+                        }
+                    }
+                }
+                self.metrics.cycles += 1;
+                self.metrics.gate_cycles += 1;
+                self.metrics.gate_events += gates.len() as u64;
+            }
+        }
+        Ok(())
+    }
+
+    fn metrics(&self) -> Metrics {
+        self.metrics
+    }
+
+    fn reset_metrics(&mut self) {
+        self.metrics = Metrics::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::operation::GateOp;
+
+    #[test]
+    fn nor_semantics_and_switch_count() {
+        let geom = Geometry::new(64, 1, 8).unwrap();
+        let mut sc = ScalarCrossbar::new(geom, GateSet::NotNor);
+        // a = 0, b = 0 in every row; out initialized to 1 -> NOR = 1, no flips.
+        sc.execute(&Operation::init1(vec![2])).unwrap();
+        assert_eq!(sc.metrics().switch_events, 8);
+        sc.execute(&Operation::serial(GateOp::nor(0, 1, 2))).unwrap();
+        assert_eq!(sc.metrics().switch_events, 8, "NOR(0,0)=1 flips nothing");
+        for r in 0..8 {
+            assert!(sc.get(r, 2));
+        }
+        assert_eq!(sc.metrics().cycles, 2);
+        assert_eq!(sc.metrics().gate_cycles, 1);
+    }
+
+    #[test]
+    fn state_roundtrip() {
+        let geom = Geometry::new(64, 1, 70).unwrap(); // non-multiple-of-64 rows
+        let mut m = BitMatrix::new(70, 64);
+        m.fill_random(13);
+        let mut sc = ScalarCrossbar::new(geom, GateSet::NotNor);
+        sc.load_state(&m).unwrap();
+        assert_eq!(sc.state_bits().unwrap(), m);
+    }
+
+    #[test]
+    fn rejects_unsupported_gate() {
+        let geom = Geometry::new(64, 1, 4).unwrap();
+        let mut sc = ScalarCrossbar::new(geom, GateSet::NotNor);
+        let op = Operation::serial(GateOp { gate: crate::crossbar::gate::GateType::And, ins: vec![0, 1], out: 2 });
+        assert!(sc.execute(&op).is_err());
+    }
+}

@@ -1,14 +1,16 @@
 //! Crossbar worker: owns one simulated crossbar plus the compiled program
 //! for its workload, and executes row-batches end-to-end through the
-//! control-message path.
+//! production control pipeline (encode → periphery decode → execute).
 
 use crate::algorithms::addition::{build_adder, build_adder_aligned, Adder, AlignedAdder};
 use crate::algorithms::mult_serial::{build_serial_multiplier, SerialMultiplier};
 use crate::algorithms::multpim::{build_multpim, MultPim, MultPimVariant};
 use crate::algorithms::program::Program;
+use crate::backend::{ExecPipeline, PreparedProgram};
 use crate::crossbar::crossbar::{Crossbar, Metrics};
 use crate::crossbar::gate::GateSet;
 use crate::crossbar::geometry::Geometry;
+use crate::crossbar::state::BitMatrix;
 use crate::isa::models::ModelKind;
 use crate::isa::schedule::pack_program;
 use anyhow::{bail, Result};
@@ -41,14 +43,36 @@ pub enum Compiled {
     Sorter(crate::algorithms::sort::Sorter),
 }
 
-/// One crossbar plus its compiled program.
+impl Compiled {
+    fn load_pair(&self, state: &mut BitMatrix, row: usize, a: u64, b: u64) -> Result<()> {
+        match self {
+            Compiled::MultPim(m) => m.load(state, row, a, b),
+            Compiled::MultSerial(m) => m.load(state, row, a, b),
+            Compiled::Adder(m) => m.load(state, row, a, b),
+            Compiled::AlignedAdder(m) => m.load(state, row, a, b),
+            Compiled::Sorter(_) => bail!("sort workloads take per-row element vectors; use run_sort_batch"),
+        }
+    }
+
+    fn read_result(&self, state: &BitMatrix, row: usize) -> Result<u64> {
+        match self {
+            Compiled::MultPim(m) => m.read_product(state, row),
+            Compiled::MultSerial(m) => m.read_product(state, row),
+            Compiled::Adder(m) => m.read_sum(state, row),
+            Compiled::AlignedAdder(m) => m.read_sum(state, row),
+            Compiled::Sorter(_) => bail!("sort workloads read element vectors; use run_sort_batch"),
+        }
+    }
+}
+
+/// One crossbar plus its compiled program, prepared once for the wire
+/// pipeline (the controller encodes a compiled program a single time and
+/// streams it to every batch — see DESIGN.md §Perf).
 pub struct Worker {
     pub crossbar: Crossbar,
     pub model: ModelKind,
     program: Program,
-    /// Wire messages pre-encoded once at compile time and streamed to every
-    /// batch (see EXPERIMENTS.md §Perf: removes per-batch encode cost).
-    encoded: crate::algorithms::program::EncodedProgram,
+    prepared: PreparedProgram,
     compiled: Compiled,
 }
 
@@ -119,8 +143,9 @@ pub fn compile_workload(kind: WorkloadKind, model: ModelKind, geom: Geometry) ->
 impl Worker {
     pub fn new(kind: WorkloadKind, model: ModelKind, geom: Geometry) -> Result<Self> {
         let (program, compiled) = compile_workload(kind, model, geom)?;
-        let encoded = program.encode_for(model)?;
-        Ok(Self { crossbar: Crossbar::new(geom, GateSet::NotNor), model, program, encoded, compiled })
+        let mut crossbar = Crossbar::new(geom, GateSet::NotNor);
+        let prepared = program.prepare(&mut ExecPipeline::wire(model, &mut crossbar))?;
+        Ok(Self { crossbar, model, program, prepared, compiled })
     }
 
     /// Geometry this worker serves.
@@ -133,6 +158,18 @@ impl Worker {
         self.program.stats().cycles
     }
 
+    /// Stream the prepared program through the wire pipeline once and fold
+    /// the pipeline-metered control traffic into the batch delta.
+    fn run_prepared_batch(&mut self, before: Metrics) -> Result<Metrics> {
+        let mut pipe = ExecPipeline::wire(self.model, &mut self.crossbar);
+        pipe.run_prepared(&self.prepared)?;
+        let wire = pipe.stats();
+        let mut delta = self.crossbar.metrics.delta_since(&before);
+        delta.control_bits += wire.control_bits;
+        delta.messages += wire.messages;
+        Ok(delta)
+    }
+
     /// Execute one row-batch of element pairs end-to-end through the
     /// message path; returns the per-element results and the metrics delta.
     pub fn run_batch(&mut self, pairs: &[(u64, u64)]) -> Result<(Vec<u64>, Metrics)> {
@@ -142,27 +179,14 @@ impl Worker {
         }
         let before = self.crossbar.metrics;
         for (r, &(a, b)) in pairs.iter().enumerate() {
-            match &self.compiled {
-                Compiled::MultPim(m) => m.load(&mut self.crossbar, r, a, b)?,
-                Compiled::MultSerial(m) => m.load(&mut self.crossbar, r, a, b)?,
-                Compiled::Adder(m) => m.load(&mut self.crossbar, r, a, b)?,
-                Compiled::AlignedAdder(m) => m.load(&mut self.crossbar, r, a, b)?,
-                Compiled::Sorter(_) => bail!("sort workloads take per-row element vectors; use run_sort_batch"),
-            }
+            self.compiled.load_pair(&mut self.crossbar.state, r, a, b)?;
         }
-        self.encoded.run(&mut self.crossbar)?;
+        let delta = self.run_prepared_batch(before)?;
         let mut out = Vec::with_capacity(pairs.len());
         for r in 0..pairs.len() {
-            let v = match &self.compiled {
-                Compiled::MultPim(m) => m.read_product(&self.crossbar, r)?,
-                Compiled::MultSerial(m) => m.read_product(&self.crossbar, r)?,
-                Compiled::Adder(m) => m.read_sum(&self.crossbar, r)?,
-                Compiled::AlignedAdder(m) => m.read_sum(&self.crossbar, r)?,
-                Compiled::Sorter(_) => unreachable!(),
-            };
-            out.push(v);
+            out.push(self.compiled.read_result(&self.crossbar.state, r)?);
         }
-        Ok((out, self.metrics_delta(before)))
+        Ok((out, delta))
     }
 
     /// Execute one row-batch of sort jobs (one 16-element vector per row).
@@ -175,26 +199,15 @@ impl Worker {
         }
         let before = self.crossbar.metrics;
         for (r, vals) in rows_data.iter().enumerate() {
-            sorter.load(&mut self.crossbar, r, vals)?;
+            sorter.load(&mut self.crossbar.state, r, vals)?;
         }
-        self.encoded.run(&mut self.crossbar)?;
+        let delta = self.run_prepared_batch(before)?;
+        let Compiled::Sorter(sorter) = &self.compiled else { unreachable!() };
         let mut out = Vec::with_capacity(rows_data.len());
         for r in 0..rows_data.len() {
-            out.push(sorter.read(&self.crossbar, r)?);
+            out.push(sorter.read(&self.crossbar.state, r)?);
         }
-        Ok((out, self.metrics_delta(before)))
-    }
-
-    fn metrics_delta(&self, before: Metrics) -> Metrics {
-        let mut delta = self.crossbar.metrics;
-        delta.cycles -= before.cycles;
-        delta.gate_cycles -= before.gate_cycles;
-        delta.init_cycles -= before.init_cycles;
-        delta.gate_events -= before.gate_events;
-        delta.switch_events -= before.switch_events;
-        delta.control_bits -= before.control_bits;
-        delta.messages -= before.messages;
-        delta
+        Ok((out, delta))
     }
 }
 
@@ -256,5 +269,20 @@ mod tests {
         );
         assert!(unl <= std_ && std_ <= min, "unl={unl} std={std_} min={min}");
         assert!(base > 5 * min, "serial baseline {base} must dwarf partitioned {min}");
+    }
+
+    /// The per-batch metrics delta must charge exactly the wire format's
+    /// control bits per gate cycle plus one write command per init cycle.
+    #[test]
+    fn batch_delta_meters_control_exactly() {
+        let model = ModelKind::Minimal;
+        let geom = workload_geometry(WorkloadKind::Mul32, model, 4);
+        let mut w = Worker::new(WorkloadKind::Mul32, model, geom).unwrap();
+        let pairs: Vec<(u64, u64)> = (0..4).map(|i| (i + 1, 3 * i + 2)).collect();
+        let (_, m) = w.run_batch(&pairs).unwrap();
+        let gate_msg = crate::isa::encode::message_bits(model, &geom) as u64;
+        let init_msg = crate::crossbar::crossbar::init_message_bits(&geom) as u64;
+        assert_eq!(m.control_bits, m.gate_cycles * gate_msg + m.init_cycles * init_msg);
+        assert_eq!(m.messages, m.cycles);
     }
 }

@@ -1,17 +1,17 @@
-//! The cycle-accurate crossbar: state + metrics + the two execution paths
-//! (direct abstract operations, and full message decode through the
-//! periphery — the production path the coordinator uses).
+//! The cycle-accurate bit-packed crossbar: state plus architectural
+//! counters. Execution happens exclusively through the
+//! [`crate::backend::PimBackend`] implementation at the bottom of this file;
+//! the control paths (wire encode/decode, legalization) live in
+//! [`crate::backend::pipeline`].
 
+use crate::backend::PimBackend;
 use crate::crossbar::gate::GateSet;
 use crate::crossbar::geometry::Geometry;
 use crate::crossbar::state::BitMatrix;
-use crate::isa::encode::{self, BitVec};
-use crate::isa::models::ModelKind;
 use crate::isa::operation::Operation;
-use crate::periphery;
 use anyhow::Result;
 
-/// Architectural counters accumulated by a crossbar.
+/// Architectural counters accumulated by a backend / pipeline.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct Metrics {
     /// Total simulated cycles (gate cycles + init cycles).
@@ -25,7 +25,8 @@ pub struct Metrics {
     pub gate_events: u64,
     /// Memristor switching events (bit flips) — the physical energy driver.
     pub switch_events: u64,
-    /// Control-message traffic received, in bits.
+    /// Control-message traffic received, in bits (metered at the pipeline's
+    /// periphery-decode boundary).
     pub control_bits: u64,
     /// Control messages received.
     pub messages: u64,
@@ -41,6 +42,20 @@ impl Metrics {
         self.control_bits += other.control_bits;
         self.messages += other.messages;
     }
+
+    /// Field-wise difference against an earlier snapshot (for per-batch
+    /// accounting). Saturates instead of panicking on counter resets.
+    pub fn delta_since(&self, before: &Metrics) -> Metrics {
+        Metrics {
+            cycles: self.cycles.saturating_sub(before.cycles),
+            gate_cycles: self.gate_cycles.saturating_sub(before.gate_cycles),
+            init_cycles: self.init_cycles.saturating_sub(before.init_cycles),
+            gate_events: self.gate_events.saturating_sub(before.gate_events),
+            switch_events: self.switch_events.saturating_sub(before.switch_events),
+            control_bits: self.control_bits.saturating_sub(before.control_bits),
+            messages: self.messages.saturating_sub(before.messages),
+        }
+    }
 }
 
 /// Control traffic charged per initialization write (a plain write command,
@@ -50,7 +65,7 @@ pub fn init_message_bits(geom: &Geometry) -> usize {
     3 * geom.log2_n()
 }
 
-/// A partitioned memristive crossbar.
+/// A partitioned memristive crossbar (the bit-packed production backend).
 #[derive(Debug, Clone)]
 pub struct Crossbar {
     pub geom: Geometry,
@@ -70,20 +85,9 @@ impl Crossbar {
         Self::new(Geometry::paper(rows), GateSet::NotNor)
     }
 
-    /// Execute one abstract operation (one simulated cycle), validating the
-    /// physical constraints (column ranges, section disjointness, gate set)
-    /// but **not** any model's control restrictions — that is the
-    /// controller's job (see [`Crossbar::execute_message`]).
-    pub fn execute(&mut self, op: &Operation) -> Result<()> {
-        op.validate(&self.geom, self.gate_set)?;
-        self.execute_trusted(op)
-    }
-
-    /// Execute a cycle that is already known valid — the message path uses
-    /// this after periphery reconstruction (which guarantees disjoint
-    /// sections and alias-free NOT/NOR gates by construction), avoiding a
-    /// second validation pass per message (see EXPERIMENTS.md §Perf).
-    fn execute_trusted(&mut self, op: &Operation) -> Result<()> {
+    /// Apply one already-validated cycle and account for it. Shared by the
+    /// validating and trusted trait paths.
+    fn step_trusted(&mut self, op: &Operation) -> Result<()> {
         match op {
             Operation::Init { cols, value } => {
                 let sw = self.state.init_columns(cols, *value)?;
@@ -103,36 +107,48 @@ impl Crossbar {
         }
         Ok(())
     }
+}
 
-    /// Execute a sequence of operations.
-    pub fn execute_all(&mut self, ops: &[Operation]) -> Result<()> {
-        for op in ops {
-            self.execute(op)?;
-        }
+impl PimBackend for Crossbar {
+    fn name(&self) -> &'static str {
+        "bit-packed"
+    }
+
+    fn geom(&self) -> Geometry {
+        self.geom
+    }
+
+    fn gate_set(&self) -> GateSet {
+        self.gate_set
+    }
+
+    fn load_state(&mut self, m: &BitMatrix) -> Result<()> {
+        crate::backend::check_state_shape(&self.geom, m)?;
+        self.state = m.clone();
         Ok(())
     }
 
-    /// The production path: receive a wire-format control message, decode it
-    /// through the periphery of `model`, and execute the reconstructed
-    /// gates. Control traffic is metered here.
-    pub fn execute_message(&mut self, model: ModelKind, bits: &BitVec) -> Result<()> {
-        let msg = encode::decode(model, bits, &self.geom)?;
-        let op = periphery::reconstruct(&msg, &self.geom)?;
-        self.metrics.control_bits += bits.len() as u64;
-        self.metrics.messages += 1;
-        self.execute_trusted(&op)
+    fn state_bits(&self) -> Result<BitMatrix> {
+        Ok(self.state.clone())
     }
 
-    /// The production path for initialization writes (charged
-    /// [`init_message_bits`] of control traffic).
-    pub fn execute_init(&mut self, cols: &[usize], value: bool) -> Result<()> {
-        self.metrics.control_bits += init_message_bits(&self.geom) as u64;
-        self.metrics.messages += 1;
-        self.execute(&Operation::Init { cols: cols.to_vec(), value })
+    fn execute(&mut self, op: &Operation) -> Result<()> {
+        op.validate(&self.geom, self.gate_set)?;
+        self.step_trusted(op)
     }
 
-    /// Reset counters (state is preserved).
-    pub fn reset_metrics(&mut self) {
+    /// The periphery decode stage reconstructs only physically valid
+    /// operations, so the message path skips the second validation pass
+    /// (see DESIGN.md §Perf).
+    fn execute_trusted(&mut self, op: &Operation) -> Result<()> {
+        self.step_trusted(op)
+    }
+
+    fn metrics(&self) -> Metrics {
+        self.metrics
+    }
+
+    fn reset_metrics(&mut self) {
         self.metrics = Metrics::default();
     }
 }
@@ -140,6 +156,9 @@ impl Crossbar {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::backend::ExecPipeline;
+    use crate::isa::encode;
+    use crate::isa::models::ModelKind;
     use crate::isa::operation::GateOp;
 
     #[test]
@@ -166,19 +185,36 @@ mod tests {
         for model in [ModelKind::Unlimited, ModelKind::Standard, ModelKind::Minimal] {
             let mut xb = wired.clone();
             let bits = encode::encode(model, &op, &geom).unwrap();
-            xb.execute_message(model, &bits).unwrap();
+            let mut pipe = ExecPipeline::wire(model, &mut xb);
+            pipe.run_op(&op).unwrap();
+            assert_eq!(pipe.metrics().control_bits, bits.len() as u64);
+            drop(pipe);
             assert_eq!(xb.state, direct.state, "state diverged via {} message path", model.name());
-            assert_eq!(xb.metrics.control_bits, bits.len() as u64);
         }
     }
 
     #[test]
-    fn model_restrictions_enforced_at_decode() {
+    fn model_restrictions_enforced_at_encode() {
         // A physically valid op that the standard codec cannot express
         // (split input) must fail at encode time, not corrupt the crossbar.
         let geom = Geometry::new(256, 8, 64).unwrap();
         let op = Operation::serial(GateOp::nor(0, 40, 80)); // inputs in p0, p1
         assert!(encode::encode(ModelKind::Standard, &op, &geom).is_err());
         assert!(encode::encode(ModelKind::Unlimited, &op, &geom).is_ok());
+        // And the wire pipeline surfaces the same error without executing.
+        let mut xb = Crossbar::new(geom, GateSet::NotNor);
+        let mut pipe = ExecPipeline::wire(ModelKind::Standard, &mut xb);
+        assert!(pipe.run_op(&op).is_err());
+        assert_eq!(pipe.metrics().cycles, 0);
+    }
+
+    #[test]
+    fn metrics_delta() {
+        let a = Metrics { cycles: 10, gate_events: 7, ..Default::default() };
+        let b = Metrics { cycles: 25, gate_events: 9, control_bits: 36, ..a };
+        let d = b.delta_since(&a);
+        assert_eq!(d.cycles, 15);
+        assert_eq!(d.gate_events, 2);
+        assert_eq!(d.control_bits, 36);
     }
 }

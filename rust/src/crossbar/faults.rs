@@ -4,6 +4,7 @@
 //! show the architectural counters and result verification catch silent
 //! data corruption.
 
+use crate::backend::PimBackend;
 use crate::crossbar::crossbar::Crossbar;
 use crate::crossbar::state::BitMatrix;
 use anyhow::{ensure, Result};
@@ -62,7 +63,10 @@ impl FaultMap {
 }
 
 /// Execute a program on a faulty crossbar: the fault map is re-applied
-/// after every cycle (stuck devices never change state).
+/// after every cycle (stuck devices never change state). This is a fault
+/// *harness* around the backend's per-cycle [`PimBackend::execute`], not an
+/// execution path of its own; it stays on the bit-packed crossbar because it
+/// needs cheap direct state access between cycles.
 pub fn run_with_faults(xb: &mut Crossbar, ops: &[crate::isa::operation::Operation], faults: &FaultMap) -> Result<()> {
     faults.apply(&mut xb.state)?;
     for op in ops {
@@ -84,9 +88,9 @@ mod tests {
         let geom = Geometry::new(128, 4, 8).unwrap();
         let mult = build_multpim(geom, MultPimVariant::Plain).unwrap();
         let mut a = Crossbar::new(geom, GateSet::NotNor);
-        mult.load(&mut a, 0, 9, 13).unwrap();
+        mult.load(&mut a.state, 0, 9, 13).unwrap();
         let mut b = a.clone();
-        a.execute_all(&mult.program.ops).unwrap();
+        a.execute_ops(&mult.program.ops).unwrap();
         run_with_faults(&mut b, &mult.program.ops, &FaultMap::new()).unwrap();
         assert_eq!(a.state, b.state);
     }
@@ -100,9 +104,9 @@ mod tests {
         // Stick the partial-product column of partition 1 at 1.
         let faults = FaultMap::new().stuck(0, geom.col(1, crate::algorithms::multpim::intra::PP), true);
         let mut xb = Crossbar::new(geom, GateSet::NotNor);
-        mult.load(&mut xb, 0, 5, 3).unwrap();
+        mult.load(&mut xb.state, 0, 5, 3).unwrap();
         run_with_faults(&mut xb, &mult.program.ops, &faults).unwrap();
-        assert_ne!(mult.read_product(&xb, 0).unwrap(), 15, "stuck-at fault must corrupt the product");
+        assert_ne!(mult.read_product(&xb.state, 0).unwrap(), 15, "stuck-at fault must corrupt the product");
     }
 
     /// Faults in unused columns are harmless — the mapping's spare columns
@@ -114,9 +118,9 @@ mod tests {
         // intra column 30 is outside the 23-column MultPIM layout.
         let faults = FaultMap::new().stuck(0, geom.col(2, 30), true);
         let mut xb = Crossbar::new(geom, GateSet::NotNor);
-        mult.load(&mut xb, 0, 11, 12).unwrap();
+        mult.load(&mut xb.state, 0, 11, 12).unwrap();
         run_with_faults(&mut xb, &mult.program.ops, &faults).unwrap();
-        assert_eq!(mult.read_product(&xb, 0).unwrap(), 132);
+        assert_eq!(mult.read_product(&xb.state, 0).unwrap(), 132);
     }
 
     #[test]

@@ -53,6 +53,15 @@ impl GateType {
         matches!(self, GateType::Init1 | GateType::Init0)
     }
 
+    /// Whether the gate's truth table is symmetric in its inputs. All the
+    /// MAGIC/FELIX gates are (NOR, OR, NAND, AND and Minority3 are
+    /// input-order invariant), so input order is not observable on the wire
+    /// and canonical forms may sort it away.
+    #[inline]
+    pub fn commutative(&self) -> bool {
+        !matches!(self, GateType::Not)
+    }
+
     /// Evaluate the gate on 64 rows at once (one word per column).
     ///
     /// `ins` must hold exactly `arity()` meaningful words.
@@ -153,6 +162,18 @@ mod tests {
         for v in [0u64, !0u64, 0xdeadbeefdeadbeef] {
             assert_eq!(GateType::Not.eval_word(&[v]), GateType::Nor.eval_word(&[v, v]));
         }
+    }
+
+    #[test]
+    fn commutativity() {
+        assert!(!GateType::Not.commutative());
+        for g in [GateType::Nor, GateType::Or, GateType::Nand, GateType::And] {
+            assert!(g.commutative());
+            for (a, b) in [(false, true), (true, false), (true, true), (false, false)] {
+                assert_eq!(g.eval_bool(&[a, b]), g.eval_bool(&[b, a]), "{g:?}");
+            }
+        }
+        assert!(GateType::Min3.commutative());
     }
 
     #[test]

@@ -193,6 +193,7 @@ pub fn legalize_program(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::backend::PimBackend;
     use crate::crossbar::crossbar::Crossbar;
 
     fn geom() -> Geometry {
@@ -266,7 +267,7 @@ mod tests {
         direct.state.fill_random(5);
         let mut legal = direct.clone();
         direct.execute(&op).unwrap();
-        legal.execute_all(&out).unwrap();
+        legal.execute_ops(&out).unwrap();
         for r in 0..g.rows {
             assert_eq!(direct.state.get(r, g.col(5, 9)), legal.state.get(r, g.col(5, 9)), "row {r}");
         }

@@ -216,7 +216,9 @@ impl Operation {
     }
 
     /// Canonical form for comparing reconstructed operations: `NOR(a, a)` is
-    /// normalized to `NOT(a)`, gates are sorted by output column.
+    /// normalized to `NOT(a)`, commutative gates get their input columns
+    /// sorted (input order is not observable on the wire or in the executed
+    /// semantics), and gates are sorted by output column.
     pub fn normalized(&self) -> Operation {
         match self {
             Operation::Init { cols, value } => {
@@ -232,7 +234,11 @@ impl Operation {
                         if g.gate == GateType::Nor && g.ins.len() == 2 && g.ins[0] == g.ins[1] {
                             GateOp::not(g.ins[0], g.out)
                         } else {
-                            g.clone()
+                            let mut g = g.clone();
+                            if g.gate.commutative() {
+                                g.ins.sort_unstable();
+                            }
+                            g
                         }
                     })
                     .collect();
@@ -320,5 +326,18 @@ mod tests {
     fn normalization_folds_nor_self_to_not() {
         let op = Operation::Gates(vec![GateOp { gate: GateType::Nor, ins: vec![5, 5], out: 9 }]);
         assert_eq!(op.normalized(), Operation::Gates(vec![GateOp::not(5, 9)]));
+    }
+
+    #[test]
+    fn normalization_sorts_commutative_inputs() {
+        // NOR is commutative, so the two reconstructions of the same wire
+        // message must compare equal regardless of input-slot order.
+        let ab = Operation::Gates(vec![GateOp::nor(3, 7, 9)]);
+        let ba = Operation::Gates(vec![GateOp::nor(7, 3, 9)]);
+        assert_ne!(ab, ba);
+        assert_eq!(ab.normalized(), ba.normalized());
+        // NOT has one input: nothing to sort, nothing lost.
+        let n = Operation::serial(GateOp::not(4, 6));
+        assert_eq!(n.normalized(), n);
     }
 }

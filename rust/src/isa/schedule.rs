@@ -50,6 +50,7 @@ pub fn pack_program(ops: &[Operation], model: ModelKind, geom: &Geometry, gate_s
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::backend::PimBackend;
     use crate::crossbar::crossbar::Crossbar;
     use crate::isa::operation::GateOp;
 
@@ -113,8 +114,8 @@ mod tests {
         let mut a = Crossbar::new(g, GateSet::NotNor);
         a.state.fill_random(11);
         let mut b = a.clone();
-        a.execute_all(&ops).unwrap();
-        b.execute_all(&packed).unwrap();
+        a.execute_ops(&ops).unwrap();
+        b.execute_ops(&packed).unwrap();
         assert_eq!(a.state, b.state);
         assert!(b.metrics.cycles < a.metrics.cycles);
     }

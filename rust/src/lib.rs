@@ -11,7 +11,13 @@
 //! Because the paper's substrate is memristive hardware, this crate builds the
 //! entire stack as a cycle-accurate architectural simulation:
 //!
-//! * [`crossbar`] — bit-packed, cycle-accurate crossbar simulator with
+//! * [`backend`] — the execution seam: the [`backend::PimBackend`] trait
+//!   every physical realization implements (bit-packed, scalar reference,
+//!   XLA/PJRT), and the composable [`backend::ExecPipeline`]
+//!   (legalize → encode → periphery-decode → backend) that every program
+//!   executes through, with uniform metering of cycles, gates and control
+//!   traffic at the stage boundaries.
+//! * [`crossbar`] — the bit-packed, cycle-accurate crossbar simulator with
 //!   stateful-logic gate semantics, partition transistors and section
 //!   isolation, plus latency / energy (gate-count & switching) metrics.
 //! * [`isa`] — the partition operation model (serial / parallel /
@@ -27,30 +33,34 @@
 //! * [`algorithms`] — PIM algorithms as micro-op programs: NOR full adders,
 //!   N-bit addition, the optimized serial multiplier baseline, a
 //!   MultPIM-style partitioned multiplier, and partitioned bitonic sorting.
+//!   Programs execute via `Program::execute(&mut ExecPipeline)` — one API
+//!   for every backend and control path.
 //! * [`analysis`] — the combinatorial lower bounds on message length
 //!   (443 / 46 / 25 bits) via a small big-integer implementation.
-//! * [`coordinator`] — the L3 runtime: a tokio controller that batches
-//!   vectored arithmetic jobs onto crossbar rows, streams *encoded* control
-//!   messages through the periphery decode path, and meters latency,
-//!   energy, and control traffic.
+//! * [`coordinator`] — the L3 runtime: a controller that batches vectored
+//!   arithmetic jobs onto crossbar rows, streams pre-encoded control
+//!   messages through the periphery decode stage of an `ExecPipeline`, and
+//!   meters latency, energy, and control traffic.
 //! * [`runtime`] — PJRT/XLA execution of the AOT-compiled JAX/Pallas
-//!   crossbar-step artifact (`artifacts/*.hlo.txt`), used as an independent
-//!   backend to cross-check the rust simulator (python never runs at
-//!   request time).
+//!   crossbar-step artifact (`artifacts/*.hlo.txt`) as an independent
+//!   `PimBackend`, used to cross-check the rust simulator (python never
+//!   runs at request time). Gated behind the `xla` cargo feature.
 //!
-//! See `DESIGN.md` for the full system inventory and the experiment index,
-//! and `EXPERIMENTS.md` for paper-vs-measured results.
+//! See `DESIGN.md` for the module map, the backend/pipeline architecture,
+//! the experiment index, and the offline-environment substitutions.
 
 pub mod algorithms;
-pub mod figures;
 pub mod analysis;
+pub mod backend;
 pub mod bench_support;
 pub mod coordinator;
 pub mod crossbar;
+pub mod figures;
 pub mod isa;
 pub mod periphery;
 pub mod runtime;
 
+pub use backend::{ExecPipeline, PimBackend, PipelineStats, PreparedProgram, ScalarCrossbar, Stage};
 pub use crossbar::{
     crossbar::{Crossbar, Metrics},
     gate::{GateSet, GateType},

@@ -15,6 +15,7 @@
 
 use anyhow::{bail, Context, Result};
 use partition_pim::algorithms::multpim::{build_multpim, MultPimVariant};
+use partition_pim::backend::{ExecPipeline, PimBackend};
 use partition_pim::coordinator::{PimService, ServiceConfig, WorkloadKind};
 use partition_pim::crossbar::crossbar::Crossbar;
 use partition_pim::crossbar::gate::GateSet;
@@ -202,23 +203,25 @@ fn cmd_xla_parity(flags: &HashMap<String, String>) -> Result<()> {
         seed = seed.wrapping_mul(6364136223846793005).wrapping_add(1);
         let a = (seed >> 33) & ((1 << k) - 1);
         let b = (seed >> 11) & ((1 << k) - 1);
-        mult.load(&mut sim, r, a, b)?;
+        mult.load(&mut sim.state, r, a, b)?;
         expect.push(a * b);
     }
     let mut xla = XlaCrossbar::new(geom, &dir).context("loading step artifact (run `make artifacts`)")?;
-    xla.load_state(&sim.state);
+    xla.load_state(&sim.state)?;
 
+    // The same program object runs both backends through the same pipeline
+    // API — that is the whole point of the PimBackend seam.
     let t0 = Instant::now();
-    sim.execute_all(&mult.program.ops)?;
+    mult.program.execute(&mut ExecPipeline::direct(&mut sim))?;
     let t_sim = t0.elapsed();
     let t1 = Instant::now();
-    xla.execute_all(&mult.program.ops)?;
+    mult.program.execute(&mut ExecPipeline::direct(&mut xla))?;
     let t_xla = t1.elapsed();
 
     let xb = xla.state_bits()?;
     anyhow::ensure!(xb == sim.state, "XLA backend state diverged from the bit-packed simulator");
     for r in 0..rows {
-        anyhow::ensure!(mult.read_product(&sim, r)? == expect[r], "bad product row {r}");
+        anyhow::ensure!(mult.read_product(&sim.state, r)? == expect[r], "bad product row {r}");
     }
     println!("parity OK over {} cycles ({} rows)", mult.program.ops.len(), rows);
     println!("bit-packed sim: {t_sim:?}   XLA backend: {t_xla:?}");

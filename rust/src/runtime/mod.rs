@@ -5,11 +5,22 @@
 //! crossbar, formulated as MXU matmuls over one-hot column selectors — to
 //! HLO **text** (`artifacts/step_*.hlo.txt`). This module loads those
 //! artifacts with the `xla` crate's PJRT CPU client and exposes them as an
-//! alternative crossbar backend, used to cross-check the bit-packed rust
-//! simulator (experiment E14). Python never runs at request time.
+//! alternative [`crate::backend::PimBackend`], used to cross-check the
+//! bit-packed rust simulator (experiment E14). Python never runs at request
+//! time.
+//!
+//! The `xla` crate is not part of the offline vendor set, so the real
+//! backend compiles only behind the `xla` cargo feature (see DESIGN.md
+//! §Substitutions). Without it, [`XlaCrossbar::new`] returns an error and
+//! everything else (including the operation→step lowering in [`steps`],
+//! which has no XLA dependency) still builds and tests.
 
 pub mod backend;
+pub mod steps;
+#[cfg(feature = "xla")]
 pub mod stepper;
 
 pub use backend::XlaCrossbar;
-pub use stepper::{artifact_path, ops_to_steps, GateSlot, XlaStepper};
+pub use steps::{artifact_path, ops_to_steps, GateSlot};
+#[cfg(feature = "xla")]
+pub use stepper::XlaStepper;

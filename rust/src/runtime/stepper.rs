@@ -1,58 +1,10 @@
-//! Loading and invoking the AOT gate-step artifact.
+//! Loading and invoking the AOT gate-step artifact (real PJRT client —
+//! compiled only with the `xla` feature; see `runtime/mod.rs`).
 
 use crate::crossbar::geometry::Geometry;
-use crate::isa::operation::Operation;
+use crate::runtime::steps::{artifact_path, GateSlot};
 use anyhow::{ensure, Context, Result};
-use std::path::{Path, PathBuf};
-
-/// One gate slot of a step: `(in_a, in_b, out, mode)` with `-1` marking an
-/// unused index and `mode = 1` turning the slot into a write-0
-/// (initialization to 1 is `NOR(0, 0)` with both inputs unused).
-pub type GateSlot = [i32; 4];
-
-/// Path of the step artifact for a given shape.
-pub fn artifact_path(dir: &Path, rows: usize, cols: usize, gates: usize) -> PathBuf {
-    dir.join(format!("step_r{rows}_c{cols}_g{gates}.hlo.txt"))
-}
-
-/// Convert a program's operations into padded step descriptors for the
-/// artifact's fixed `gates` width. Gate cycles map 1:1; initialization
-/// writes expand into `ceil(columns / gates)` steps of write slots.
-pub fn ops_to_steps(ops: &[Operation], gates: usize) -> Result<Vec<Vec<GateSlot>>> {
-    let mut steps = Vec::new();
-    for op in ops {
-        match op {
-            Operation::Gates(gs) => {
-                ensure!(gs.len() <= gates, "operation has {} gates, artifact supports {gates}", gs.len());
-                let mut step: Vec<GateSlot> = gs
-                    .iter()
-                    .map(|g| {
-                        let a = g.ins[0] as i32;
-                        let b = *g.ins.get(1).unwrap_or(&g.ins[0]) as i32;
-                        [a, b, g.out as i32, 0]
-                    })
-                    .collect();
-                step.resize(gates, [-1, -1, -1, 0]);
-                steps.push(step);
-            }
-            Operation::Init { cols, value } => {
-                let mode = if *value { 0 } else { 1 };
-                // Deduplicate: the one-hot output scatter must see each
-                // column at most once per step (writing twice is idempotent
-                // for an init anyway).
-                let mut cols = cols.clone();
-                cols.sort_unstable();
-                cols.dedup();
-                for chunk in cols.chunks(gates) {
-                    let mut step: Vec<GateSlot> = chunk.iter().map(|&c| [-1, -1, c as i32, mode]).collect();
-                    step.resize(gates, [-1, -1, -1, 0]);
-                    steps.push(step);
-                }
-            }
-        }
-    }
-    Ok(steps)
-}
+use std::path::Path;
 
 /// A compiled PJRT executable for one step shape.
 pub struct XlaStepper {

@@ -1,0 +1,83 @@
+//! Lowering abstract operations to the gate-step artifact's input layout.
+//! This is pure data transformation with no XLA dependency, so it compiles
+//! (and is unit-tested) with or without the `xla` feature.
+
+use crate::isa::operation::Operation;
+use anyhow::{ensure, Result};
+use std::path::{Path, PathBuf};
+
+/// One gate slot of a step: `(in_a, in_b, out, mode)` with `-1` marking an
+/// unused index and `mode = 1` turning the slot into a write-0
+/// (initialization to 1 is `NOR(0, 0)` with both inputs unused).
+pub type GateSlot = [i32; 4];
+
+/// Path of the step artifact for a given shape.
+pub fn artifact_path(dir: &Path, rows: usize, cols: usize, gates: usize) -> PathBuf {
+    dir.join(format!("step_r{rows}_c{cols}_g{gates}.hlo.txt"))
+}
+
+/// Convert a program's operations into padded step descriptors for the
+/// artifact's fixed `gates` width. Gate cycles map 1:1; initialization
+/// writes expand into `ceil(columns / gates)` steps of write slots.
+pub fn ops_to_steps(ops: &[Operation], gates: usize) -> Result<Vec<Vec<GateSlot>>> {
+    let mut steps = Vec::new();
+    for op in ops {
+        match op {
+            Operation::Gates(gs) => {
+                ensure!(gs.len() <= gates, "operation has {} gates, artifact supports {gates}", gs.len());
+                let mut step: Vec<GateSlot> = gs
+                    .iter()
+                    .map(|g| {
+                        let a = g.ins[0] as i32;
+                        let b = *g.ins.get(1).unwrap_or(&g.ins[0]) as i32;
+                        [a, b, g.out as i32, 0]
+                    })
+                    .collect();
+                step.resize(gates, [-1, -1, -1, 0]);
+                steps.push(step);
+            }
+            Operation::Init { cols, value } => {
+                let mode = if *value { 0 } else { 1 };
+                // Deduplicate: the one-hot output scatter must see each
+                // column at most once per step (writing twice is idempotent
+                // for an init anyway).
+                let mut cols = cols.clone();
+                cols.sort_unstable();
+                cols.dedup();
+                for chunk in cols.chunks(gates) {
+                    let mut step: Vec<GateSlot> = chunk.iter().map(|&c| [-1, -1, c as i32, mode]).collect();
+                    step.resize(gates, [-1, -1, -1, 0]);
+                    steps.push(step);
+                }
+            }
+        }
+    }
+    Ok(steps)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::operation::GateOp;
+
+    #[test]
+    fn gate_cycles_map_one_to_one() {
+        let op = Operation::Gates(vec![GateOp::nor(0, 1, 2), GateOp::not(8, 9)]);
+        let steps = ops_to_steps(std::slice::from_ref(&op), 4).unwrap();
+        assert_eq!(steps.len(), 1);
+        assert_eq!(steps[0], vec![[0, 1, 2, 0], [8, 8, 9, 0], [-1, -1, -1, 0], [-1, -1, -1, 0]]);
+    }
+
+    #[test]
+    fn wide_inits_chunk_and_dedup() {
+        let op = Operation::Init { cols: vec![5, 1, 5, 3], value: false };
+        let steps = ops_to_steps(std::slice::from_ref(&op), 2).unwrap();
+        assert_eq!(steps, vec![vec![[-1, -1, 1, 1], [-1, -1, 3, 1]], vec![[-1, -1, 5, 1], [-1, -1, -1, 0]]]);
+    }
+
+    #[test]
+    fn oversized_cycle_rejected() {
+        let op = Operation::Gates((0..5).map(|i| GateOp::not(i * 2, i * 2 + 1)).collect());
+        assert!(ops_to_steps(std::slice::from_ref(&op), 4).is_err());
+    }
+}

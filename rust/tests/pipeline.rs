@@ -3,6 +3,7 @@
 //! must be an identity on semantics for every model, and must reject
 //! malformed traffic without corrupting state.
 
+use partition_pim::backend::{ExecPipeline, PimBackend};
 use partition_pim::crossbar::crossbar::Crossbar;
 use partition_pim::crossbar::gate::GateSet;
 use partition_pim::crossbar::geometry::Geometry;
@@ -99,15 +100,17 @@ fn randomized_execution_equivalence() {
         let mut direct = Crossbar::new(geom, GateSet::NotNor);
         direct.state.fill_random(17);
         let mut wired = direct.clone();
+        let mut pipe = ExecPipeline::wire(model, &mut wired);
         for _ in 0..100 {
             let op = random_legal_op(&mut rng, &geom, model);
             direct.execute(&op).expect("direct");
-            let bits = encode(model, &op, &geom).expect("encode");
-            wired.execute_message(model, &bits).expect("message");
+            pipe.run_op(&op).expect("message");
         }
+        let stats = pipe.stats();
+        drop(pipe);
         assert_eq!(direct.state, wired.state, "{} diverged", model.name());
-        assert_eq!(wired.metrics.messages, 100);
-        assert_eq!(wired.metrics.control_bits, 100 * message_bits(model, &geom) as u64);
+        assert_eq!(stats.messages, 100);
+        assert_eq!(stats.control_bits, 100 * message_bits(model, &geom) as u64);
     }
 }
 
@@ -130,7 +133,7 @@ fn corrupted_messages_never_panic() {
             let mut xb = Crossbar::new(geom, GateSet::NotNor);
             xb.state.fill_random(5);
             // Either executes a (different but physically valid) op, or errors.
-            let _ = xb.execute_message(model, &corrupted);
+            let _ = ExecPipeline::wire(model, &mut xb).run_wire(&corrupted);
         }
     }
 }
@@ -161,8 +164,7 @@ fn cross_model_state_agreement() {
         for model in [ModelKind::Unlimited, ModelKind::Standard, ModelKind::Minimal] {
             let mut xb = Crossbar::new(geom, GateSet::NotNor);
             xb.state.fill_random(11);
-            let bits = encode(model, &op, &geom).expect("encode");
-            xb.execute_message(model, &bits).expect("execute");
+            ExecPipeline::wire(model, &mut xb).run_op(&op).expect("execute");
             match &reference {
                 None => reference = Some(xb.state.clone()),
                 Some(r) => assert_eq!(&xb.state, r, "{} disagrees", model.name()),

@@ -11,8 +11,14 @@
 //!  P5  opcode generator output composes into valid half-gate pairs
 //!  P6  range-generator expansion matches the minimal-model validator
 //!  P7  coordinator batching: any split of a job gives identical results
+//!  P10 differential: random legal programs execute to the identical
+//!      BitMatrix on the bit-packed and the scalar reference backend,
+//!      driven through the same `&mut dyn PimBackend` trait object
+//!  P11 differential: the wire pipeline (encode → periphery decode) on one
+//!      backend matches the direct pipeline on the other
 
 use partition_pim::algorithms::program::Builder;
+use partition_pim::backend::{ExecPipeline, PimBackend, ScalarCrossbar};
 use partition_pim::coordinator::{PimService, ServiceConfig, WorkloadKind};
 use partition_pim::crossbar::crossbar::Crossbar;
 use partition_pim::crossbar::gate::{GateSet, GateType};
@@ -157,8 +163,8 @@ fn p2_legalizer_preserves_semantics() {
             let mut a = Crossbar::new(geom, GateSet::NotNor);
             a.state.fill_random(seed);
             let mut b = a.clone();
-            a.execute_all(&ops).expect("original");
-            b.execute_all(&legal).expect("legalized");
+            a.execute_ops(&ops).expect("original");
+            b.execute_ops(&legal).expect("legalized");
             // Compare everything except the reserved scratch columns.
             for r in 0..geom.rows {
                 for c in 0..geom.n {
@@ -186,8 +192,8 @@ fn p3_packer_preserves_semantics() {
             let mut a = Crossbar::new(geom, GateSet::NotNor);
             a.state.fill_random(seed);
             let mut b = a.clone();
-            a.execute_all(&ops).expect("original");
-            b.execute_all(&packed).expect("packed");
+            a.execute_ops(&ops).expect("original");
+            b.execute_ops(&packed).expect("packed");
             assert_eq!(a.state, b.state, "seed {seed} {}", model.name());
         }
     }
@@ -347,6 +353,88 @@ fn p8_bitvec_roundtrip() {
         for i in 0..bv.len() {
             assert_eq!(r2.read_bit().unwrap(), bv.get(i), "seed {seed} bit {i}");
         }
+    }
+}
+
+/// Build a `Program` from random physically-valid operations (the builder
+/// validates every cycle, so the result is a *legal* program by
+/// construction).
+fn random_program(rng: &mut Rng, geom: Geometry, len: usize) -> partition_pim::algorithms::program::Program {
+    let mut b = Builder::new(geom, GateSet::NotNor);
+    for _ in 0..len {
+        b.push(random_op(rng, &geom)).expect("random_op generates valid operations");
+    }
+    b.finish("fuzz")
+}
+
+/// P10 (differential): any random legal program executes to the identical
+/// final `BitMatrix` on the bit-packed backend and the scalar reference
+/// backend, driven through the same `&mut dyn PimBackend` trait object —
+/// and the architectural counters (cycles, gates, switching energy) agree
+/// exactly.
+#[test]
+fn p10_backends_agree_on_random_programs() {
+    let geom = Geometry::new(128, 4, 37).unwrap(); // odd rows: tail masking
+    for seed in 1..25u64 {
+        let mut rng = Rng::new(seed * 6151);
+        let prog = random_program(&mut rng, geom, 25);
+        let mut init = partition_pim::crossbar::state::BitMatrix::new(geom.rows, geom.n);
+        init.fill_random(seed);
+
+        let mut bitpacked = Crossbar::new(geom, GateSet::NotNor);
+        let mut scalar = ScalarCrossbar::new(geom, GateSet::NotNor);
+        let mut finals = Vec::new();
+        let mut metrics = Vec::new();
+        let backends: [&mut dyn PimBackend; 2] = [&mut bitpacked, &mut scalar];
+        for backend in backends {
+            backend.load_state(&init).expect("load");
+            prog.execute(&mut ExecPipeline::direct(&mut *backend)).expect("execute");
+            finals.push(backend.state_bits().expect("state"));
+            metrics.push(backend.metrics());
+        }
+        assert_eq!(finals[0], finals[1], "seed {seed}: backends diverged");
+        assert_eq!(metrics[0], metrics[1], "seed {seed}: counters diverged");
+    }
+}
+
+/// P11 (differential): the full wire pipeline (encode → periphery decode →
+/// trusted execute) on the bit-packed backend matches the direct pipeline
+/// on the scalar oracle, and the metered control traffic is exactly
+/// messages x format length.
+#[test]
+fn p11_wire_pipeline_matches_scalar_oracle() {
+    use partition_pim::crossbar::crossbar::init_message_bits;
+    use partition_pim::isa::encode::message_bits;
+    let geom = Geometry::new(256, 8, 18).unwrap();
+    for seed in 1..15u64 {
+        let mut rng = Rng::new(seed * 2861);
+        let prog = random_program(&mut rng, geom, 20);
+        let mut init = partition_pim::crossbar::state::BitMatrix::new(geom.rows, geom.n);
+        init.fill_random(seed * 3 + 1);
+
+        let mut bitpacked = Crossbar::new(geom, GateSet::NotNor);
+        bitpacked.load_state(&init).expect("load");
+        let mut pipe = ExecPipeline::wire(ModelKind::Unlimited, &mut bitpacked);
+        prog.execute(&mut pipe).expect("wire execute");
+        let stats = pipe.stats();
+        let gate_cycles = prog.ops.iter().filter(|op| matches!(op, Operation::Gates(_))).count() as u64;
+        let init_cycles = prog.ops.len() as u64 - gate_cycles;
+        assert_eq!(stats.messages, prog.ops.len() as u64, "seed {seed}");
+        assert_eq!(
+            stats.control_bits,
+            gate_cycles * message_bits(ModelKind::Unlimited, &geom) as u64 + init_cycles * init_message_bits(&geom) as u64,
+            "seed {seed}"
+        );
+        drop(pipe);
+
+        let mut scalar = ScalarCrossbar::new(geom, GateSet::NotNor);
+        scalar.load_state(&init).expect("load");
+        prog.execute(&mut ExecPipeline::direct(&mut scalar)).expect("direct execute");
+        assert_eq!(
+            bitpacked.state_bits().expect("state"),
+            scalar.state_bits().expect("state"),
+            "seed {seed}: wire pipeline diverged from the scalar oracle"
+        );
     }
 }
 

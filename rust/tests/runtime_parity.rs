@@ -1,12 +1,14 @@
 //! Experiment E14: the bit-packed rust simulator and the AOT-compiled
 //! JAX/Pallas gate-step kernel (via PJRT) must agree bit-for-bit — on
-//! random programs and on a full MultPIM multiplication.
+//! random programs and on a full MultPIM multiplication — through the same
+//! `PimBackend` trait the rest of the system uses.
 //!
-//! Requires `make artifacts` (the tests skip with a loud message when the
-//! artifacts are absent, e.g. under a bare `cargo test` before the python
-//! build step).
+//! Requires `make artifacts` and a build with `--features xla` (the tests
+//! skip with a loud message when either is absent, e.g. under a bare
+//! `cargo test` before the python build step).
 
 use partition_pim::algorithms::multpim::{build_multpim, MultPimVariant};
+use partition_pim::backend::{ExecPipeline, PimBackend};
 use partition_pim::crossbar::crossbar::Crossbar;
 use partition_pim::crossbar::gate::GateSet;
 use partition_pim::crossbar::geometry::Geometry;
@@ -21,6 +23,18 @@ fn artifacts_dir() -> Option<PathBuf> {
     } else {
         eprintln!("SKIP: artifacts missing at {dir:?} — run `make artifacts` first");
         None
+    }
+}
+
+/// The XLA backend, or a loud skip when the artifact cannot be loaded
+/// (missing `make artifacts` output, or a build without `--features xla`).
+fn xla_backend(geom: Geometry, dir: &std::path::Path) -> Option<XlaCrossbar> {
+    match XlaCrossbar::new(geom, dir) {
+        Ok(x) => Some(x),
+        Err(e) => {
+            eprintln!("SKIP: XLA backend unavailable: {e}");
+            None
+        }
     }
 }
 
@@ -42,13 +56,13 @@ impl Rng {
 fn random_programs_parity() {
     let Some(dir) = artifacts_dir() else { return };
     let g = geom();
-    let mut xla = XlaCrossbar::new(g, &dir).expect("load artifact");
+    let Some(mut xla) = xla_backend(g, &dir) else { return };
     let mut rng = Rng(0x5eed);
 
     for trial in 0..5 {
         let mut sim = Crossbar::new(g, GateSet::NotNor);
         sim.state.fill_random(trial as u64 + 1);
-        xla.load_state(&sim.state);
+        xla.load_state(&sim.state).expect("load");
 
         // Random valid program: parallel ops + serial ops + inits.
         let mut ops = Vec::new();
@@ -79,8 +93,8 @@ fn random_programs_parity() {
             }
         }
 
-        sim.execute_all(&ops).expect("sim");
-        xla.execute_all(&ops).expect("xla");
+        sim.execute_ops(&ops).expect("sim");
+        xla.execute_ops(&ops).expect("xla");
         assert_eq!(xla.state_bits().expect("state"), sim.state, "trial {trial}");
     }
 }
@@ -94,19 +108,20 @@ fn multpim_program_parity() {
     let mut sim = Crossbar::new(g, GateSet::NotNor);
     let cases: Vec<(u64, u64)> = (0..16).map(|i| ((i * 37 + 11) % 256, (i * 91 + 5) % 256)).collect();
     for (r, &(a, b)) in cases.iter().enumerate() {
-        mult.load(&mut sim, r, a, b).expect("load");
+        mult.load(&mut sim.state, r, a, b).expect("load");
     }
-    let mut xla = XlaCrossbar::new(g, &dir).expect("load artifact");
-    xla.load_state(&sim.state);
+    let Some(mut xla) = xla_backend(g, &dir) else { return };
+    xla.load_state(&sim.state).expect("load");
 
-    sim.execute_all(&mult.program.ops).expect("sim");
-    xla.execute_all(&mult.program.ops).expect("xla");
-    assert_eq!(xla.state_bits().expect("state"), sim.state);
+    // The same program object runs both backends through the pipeline API.
+    mult.program.execute(&mut ExecPipeline::direct(&mut sim)).expect("sim");
+    mult.program.execute(&mut ExecPipeline::direct(&mut xla)).expect("xla");
+    let xla_state = xla.state_bits().expect("state");
+    assert_eq!(xla_state, sim.state);
 
     // And the products are right on both backends.
-    let xla_as_crossbar = Crossbar { state: xla.state_bits().expect("state"), ..sim.clone() };
     for (r, &(a, b)) in cases.iter().enumerate() {
-        assert_eq!(mult.read_product(&sim, r).expect("read"), a * b);
-        assert_eq!(mult.read_product(&xla_as_crossbar, r).expect("read"), a * b);
+        assert_eq!(mult.read_product(&sim.state, r).expect("read"), a * b);
+        assert_eq!(mult.read_product(&xla_state, r).expect("read"), a * b);
     }
 }
