@@ -26,7 +26,7 @@ fn main() -> Result<()> {
 
     let mut baseline_cycles_per_elem = None;
     for model in [ModelKind::Baseline, ModelKind::Unlimited, ModelKind::Standard, ModelKind::Minimal] {
-        let mut svc = PimService::start(ServiceConfig { kind: WorkloadKind::Mul32, model, n_crossbars: 4, rows: 64 })?;
+        let svc = PimService::start(ServiceConfig { kind: WorkloadKind::Mul32, model, n_crossbars: 4, rows: 64 })?;
         let mut seed = 0x1234_5678_9abc_def0u64;
         let mut rnd = move || {
             seed ^= seed << 13;
@@ -36,12 +36,19 @@ fn main() -> Result<()> {
         };
         let t0 = Instant::now();
         let mut verified = 0usize;
+        // All jobs are submitted before any result is awaited: the
+        // scheduler keeps every crossbar busy across job boundaries.
+        let mut pending = Vec::new();
         for _ in 0..n_jobs {
             let a: Vec<u64> = (0..job_len).map(|_| rnd()).collect();
             let b: Vec<u64> = (0..job_len).map(|_| rnd()).collect();
-            let res = svc.submit(&a, &b)?;
+            let handle = svc.submit(&a, &b)?;
+            pending.push((a, b, handle));
+        }
+        for (a, b, handle) in pending {
+            let res = handle.wait()?;
             for i in 0..job_len {
-                anyhow::ensure!(res.values[i] == a[i] * b[i], "wrong product");
+                anyhow::ensure!(res.scalars()[i] == a[i] * b[i], "wrong product");
                 verified += 1;
             }
         }

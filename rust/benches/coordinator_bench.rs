@@ -1,40 +1,115 @@
 //! Experiment E13: end-to-end coordinator throughput — batched 32-bit
-//! vector multiplication served by a bank of crossbars, per model.
+//! vector multiplication served by a bank of crossbars, per model — plus
+//! the concurrent-scheduler ablation (pipelined vs serial submission).
+//!
+//! Emits `BENCH_coordinator.json` (per-model elements/s and sim-cycles per
+//! element) so CI can accumulate the perf trajectory across PRs.
 
 use partition_pim::bench_support::{bench, section, throughput};
 use partition_pim::coordinator::{PimService, ServiceConfig, WorkloadKind};
 use partition_pim::isa::models::ModelKind;
 
+const JOB_LEN: usize = 256;
+const CROSSBARS: usize = 4;
+const ROWS: usize = 64;
+
+struct ModelRow {
+    model: &'static str,
+    elements_per_sec: f64,
+    sim_cycles_per_element: f64,
+    control_bits_per_element: f64,
+}
+
+fn write_json(rows: &[ModelRow], pipelined_speedup: f64) {
+    let mut s = String::from("{\n");
+    s.push_str("  \"bench\": \"coordinator\",\n");
+    s.push_str(&format!(
+        "  \"config\": {{\"crossbars\": {CROSSBARS}, \"rows\": {ROWS}, \"job_len\": {JOB_LEN}}},\n"
+    ));
+    s.push_str("  \"models\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"model\": \"{}\", \"elements_per_sec\": {:.1}, \"sim_cycles_per_element\": {:.3}, \"control_bits_per_element\": {:.3}}}{}\n",
+            r.model,
+            r.elements_per_sec,
+            r.sim_cycles_per_element,
+            r.control_bits_per_element,
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    s.push_str(&format!("  ],\n  \"pipelined_speedup\": {pipelined_speedup:.3}\n}}\n"));
+    match std::fs::write("BENCH_coordinator.json", s) {
+        Ok(()) => println!("\nwrote BENCH_coordinator.json"),
+        Err(e) => println!("\nWARNING: could not write BENCH_coordinator.json: {e}"),
+    }
+}
+
 fn main() {
-    section("service throughput: 256-element multiply jobs, 4 crossbars x 64 rows");
+    let mut json_rows: Vec<ModelRow> = Vec::new();
+    section(&format!("service throughput: {JOB_LEN}-element multiply jobs, {CROSSBARS} crossbars x {ROWS} rows"));
     for model in [ModelKind::Minimal, ModelKind::Standard, ModelKind::Unlimited] {
-        let mut svc = PimService::start(ServiceConfig { kind: WorkloadKind::Mul32, model, n_crossbars: 4, rows: 64 })
+        let svc = PimService::start(ServiceConfig { kind: WorkloadKind::Mul32, model, n_crossbars: CROSSBARS, rows: ROWS })
             .expect("service");
-        let a: Vec<u64> = (0..256).map(|i| (i * 2654435761) & 0xffff_ffff).collect();
-        let b: Vec<u64> = (0..256).map(|i| (i * 40503 + 12345) & 0xffff_ffff).collect();
+        let a: Vec<u64> = (0..JOB_LEN as u64).map(|i| (i * 2654435761) & 0xffff_ffff).collect();
+        let b: Vec<u64> = (0..JOB_LEN as u64).map(|i| (i * 40503 + 12345) & 0xffff_ffff).collect();
         let res = bench(&format!("service/mul32/{}", model.name()), || {
-            let r = svc.submit(&a, &b).expect("submit");
-            assert_eq!(r.values[3], a[3] * b[3]);
+            let r = svc.submit(&a, &b).expect("submit").wait().expect("wait");
+            assert_eq!(r.scalars()[3], a[3] * b[3]);
         });
-        throughput(&res, 256.0, "mults");
+        throughput(&res, JOB_LEN as f64, "mults");
         let stats = svc.shutdown();
+        let sim_cycles_per_element = stats.metrics.cycles as f64 / stats.elements as f64;
+        let control_bits_per_element = stats.metrics.control_bits as f64 / stats.elements as f64;
         println!(
             "      simulated: {:.2} elements/kilocycle, {:.1} control bits/element",
-            1000.0 * stats.elements as f64 / stats.metrics.cycles as f64,
-            stats.metrics.control_bits as f64 / stats.elements as f64
+            1000.0 / sim_cycles_per_element,
+            control_bits_per_element
         );
+        json_rows.push(ModelRow {
+            model: model.name(),
+            elements_per_sec: JOB_LEN as f64 / res.mean.as_secs_f64(),
+            sim_cycles_per_element,
+            control_bits_per_element,
+        });
     }
+
+    section("scheduler ablation: pipelined vs serial submission (minimal, 8 jobs x 128 elements)");
+    let mk = || {
+        PimService::start(ServiceConfig { kind: WorkloadKind::Mul32, model: ModelKind::Minimal, n_crossbars: 4, rows: 16 })
+            .expect("service")
+    };
+    let a: Vec<u64> = (0..128u64).map(|i| (i * 7919) & 0xffff_ffff).collect();
+    let b: Vec<u64> = (0..128u64).map(|i| (i * 104729) & 0xffff_ffff).collect();
+    let svc = mk();
+    let serial = bench("service/submit-serial", || {
+        for _ in 0..8 {
+            svc.submit(&a, &b).expect("submit").wait().expect("wait");
+        }
+    });
+    svc.shutdown();
+    let svc = mk();
+    let pipelined = bench("service/submit-pipelined", || {
+        let handles: Vec<_> = (0..8).map(|_| svc.submit(&a, &b).expect("submit")).collect();
+        for h in handles {
+            h.wait().expect("wait");
+        }
+    });
+    svc.shutdown();
+    let pipelined_speedup = serial.mean_ns() / pipelined.mean_ns();
+    println!("      -> pipelined speedup: {pipelined_speedup:.2}x");
 
     section("batching ablation: rows per crossbar (minimal model)");
     for rows in [8usize, 32, 128] {
-        let mut svc = PimService::start(ServiceConfig { kind: WorkloadKind::Mul32, model: ModelKind::Minimal, n_crossbars: 4, rows })
+        let svc = PimService::start(ServiceConfig { kind: WorkloadKind::Mul32, model: ModelKind::Minimal, n_crossbars: 4, rows })
             .expect("service");
-        let a: Vec<u64> = (0..256).map(|i| (i * 7919) & 0xffff_ffff).collect();
-        let b: Vec<u64> = (0..256).map(|i| (i * 104729) & 0xffff_ffff).collect();
+        let a: Vec<u64> = (0..256u64).map(|i| (i * 7919) & 0xffff_ffff).collect();
+        let b: Vec<u64> = (0..256u64).map(|i| (i * 104729) & 0xffff_ffff).collect();
         let res = bench(&format!("service/batch-rows-{rows}"), || {
-            svc.submit(&a, &b).expect("submit");
+            svc.submit(&a, &b).expect("submit").wait().expect("wait");
         });
         throughput(&res, 256.0, "mults");
         svc.shutdown();
     }
+
+    write_json(&json_rows, pipelined_speedup);
 }

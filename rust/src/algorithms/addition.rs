@@ -79,6 +79,11 @@ pub fn build_adder(geom: Geometry, n_bits: usize) -> Result<Adder> {
 impl Adder {
     /// Load operands into `row` of a backend state image.
     pub fn load(&self, state: &mut BitMatrix, row: usize, a: u64, bval: u64) -> Result<()> {
+        ensure!(
+            a < 1 << self.layout.n_bits && bval < 1 << self.layout.n_bits,
+            "operand exceeds {} bits",
+            self.layout.n_bits
+        );
         state.write_field(row, self.layout.a0, self.layout.n_bits, a)?;
         state.write_field(row, self.layout.b0, self.layout.n_bits, bval)?;
         Ok(())
@@ -141,6 +146,7 @@ pub fn build_adder_aligned(geom: Geometry, n_bits: usize) -> Result<AlignedAdder
 
 impl AlignedAdder {
     pub fn load(&self, state: &mut BitMatrix, row: usize, a: u64, bval: u64) -> Result<()> {
+        ensure!(a < 1 << self.n_bits && bval < 1 << self.n_bits, "operand exceeds {} bits", self.n_bits);
         state.write_strided(row, BA, BLOCK, self.n_bits, a)?;
         state.write_strided(row, BB_, BLOCK, self.n_bits, bval)?;
         Ok(())
@@ -198,6 +204,28 @@ mod tests {
         for r in 0..64 {
             assert_eq!(adder.read_sum(&xb.state, r).unwrap(), expect[r], "row {r}");
         }
+    }
+
+    /// Oversized operands must be rejected at load, never silently
+    /// truncated (they used to alias onto the low n bits).
+    #[test]
+    fn serial_adder_rejects_oversized_operands() {
+        let geom = Geometry::new(256, 1, 4).unwrap();
+        let adder = build_adder(geom, 32).unwrap();
+        let mut xb = Crossbar::new(geom, GateSet::NotNor);
+        assert!(adder.load(&mut xb.state, 0, 1 << 32, 1).is_err());
+        assert!(adder.load(&mut xb.state, 0, 1, 1 << 32).is_err());
+        adder.load(&mut xb.state, 0, u64::from(u32::MAX), u64::from(u32::MAX)).unwrap();
+    }
+
+    #[test]
+    fn aligned_adder_rejects_oversized_operands() {
+        let geom = Geometry::new(1024, 32, 4).unwrap();
+        let adder = build_adder_aligned(geom, 32).unwrap();
+        let mut xb = Crossbar::new(geom, GateSet::NotNor);
+        assert!(adder.load(&mut xb.state, 0, 1 << 32, 1).is_err());
+        assert!(adder.load(&mut xb.state, 0, 1, u64::MAX).is_err());
+        adder.load(&mut xb.state, 0, u64::from(u32::MAX), 0).unwrap();
     }
 
     /// Experiment E11: the 32-bit serial adder's latency is in the

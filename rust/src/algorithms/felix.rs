@@ -82,6 +82,7 @@ pub fn build_adder_felix(geom: Geometry, n_bits: usize) -> Result<FelixAdder> {
 
 impl FelixAdder {
     pub fn load(&self, state: &mut crate::crossbar::state::BitMatrix, row: usize, a: u64, bval: u64) -> Result<()> {
+        ensure!(a < 1 << self.n_bits && bval < 1 << self.n_bits, "operand exceeds {} bits", self.n_bits);
         state.write_field(row, self.a0, self.n_bits, a)?;
         state.write_field(row, self.b0, self.n_bits, bval)?;
         Ok(())
@@ -163,6 +164,18 @@ mod tests {
         for r in 0..32 {
             assert_eq!(felix.read_sum(&xb.state, r).unwrap(), expect[r], "row {r}");
         }
+    }
+
+    /// Oversized operands must be rejected at load, never silently
+    /// truncated (parity with `SerialMultiplier::load`).
+    #[test]
+    fn felix_adder_rejects_oversized_operands() {
+        let geom = Geometry::new(256, 1, 8).unwrap();
+        let felix = build_adder_felix(geom, 16).unwrap();
+        let mut xb = Crossbar::new(geom, GateSet::Felix);
+        assert!(felix.load(&mut xb.state, 0, 1 << 16, 1).is_err());
+        assert!(felix.load(&mut xb.state, 0, 1, 1 << 16).is_err());
+        felix.load(&mut xb.state, 0, 0xffff, 0xffff).unwrap();
     }
 
     #[test]

@@ -1,19 +1,28 @@
-//! The L3 coordinator: a controller + crossbar-bank runtime serving vectored
-//! arithmetic jobs over the partitioned-PIM substrate.
+//! The L3 coordinator: a concurrent, fault-isolated scheduler serving
+//! vectored arithmetic jobs over the partitioned-PIM substrate.
 //!
 //! Architecture (mirroring a PIM memory controller [4, 19]):
 //!
 //! ```text
-//!   clients ──submit──▶ Controller ──chunks──▶ Worker 0 (crossbar 0)
-//!                        │  dynamic batching    Worker 1 (crossbar 1)
-//!                        ◀──results/metrics───  ...
+//!   clients ──submit──▶ JobHandle      Dispatcher ──pull──▶ Worker 0 (crossbar 0)
+//!                │                       │  job table        Worker 1 (crossbar 1)
+//!                └──Register + chunks──▶ │  chunk queue      ...
+//!                       ◀──JobResult─────┴──Done / Exit◀──── results, faults
 //! ```
 //!
-//! * Jobs are element-wise vector operations (32-bit multiply / add);
-//!   each crossbar **row** processes one element pair independently — the
-//!   single-row parallelism stateful logic provides for free.
-//! * The controller batches job elements into row-chunks and dispatches them
-//!   round-robin to worker threads, each owning one simulated crossbar.
+//! * Jobs are element-wise vector operations (32-bit multiply / add) or
+//!   per-row sorts; each crossbar **row** processes one element (pair)
+//!   independently — the single-row parallelism stateful logic provides for
+//!   free.
+//! * [`PimService::submit`] is non-blocking and returns a [`JobHandle`], so
+//!   any number of jobs are in flight at once; a central dispatcher assigns
+//!   row-chunks to *idle* workers (pull model) and routes completions back
+//!   by job id. [`PimService::client`] hands out cloneable `Send`
+//!   submission front-ends for multi-threaded clients.
+//! * Faults are isolated per job and per worker: a malformed operand fails
+//!   only its own job (the worker keeps serving), a crashed worker retires
+//!   from the bank and the chunks it had not executed are requeued to the
+//!   survivors (see DESIGN.md §Coordinator).
 //! * Workers stream the compiled program **as encoded control messages**
 //!   through the periphery decode path (the production path), so control
 //!   traffic, cycles and energy are metered exactly as the paper counts them.
@@ -25,5 +34,5 @@
 pub mod service;
 pub mod worker;
 
-pub use service::{JobResult, PimService, ServiceConfig, ServiceStats};
+pub use service::{JobHandle, JobResult, JobValues, PimClient, PimService, ServiceConfig, ServiceStats};
 pub use worker::WorkloadKind;

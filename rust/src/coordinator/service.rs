@@ -1,11 +1,36 @@
-//! The controller service: accepts vector jobs, batches elements onto
-//! crossbar rows, dispatches chunks to worker threads, and aggregates
-//! results plus architectural metrics.
+//! The controller service: a concurrent, fault-isolated job scheduler over
+//! a bank of crossbar workers.
+//!
+//! Jobs are split into row-chunks that flow through a central dispatcher:
+//!
+//! ```text
+//!   clients ──Register/Enqueue──▶ Dispatcher ──pull──▶ Worker threads
+//!      ▲                             │  job table         │
+//!      └────── JobHandle::wait ◀─────┴──── Done/Exit ◀────┘
+//! ```
+//!
+//! * [`PimService::submit`] / [`PimService::submit_sort`] are non-blocking:
+//!   they hand the job to the dispatcher and return a [`JobHandle`]. Any
+//!   number of jobs can be in flight; completions are routed by job id, so
+//!   chunks of different jobs interleave freely across the bank.
+//! * Workers *pull* chunks (the dispatcher assigns work only to idle, live
+//!   workers), so a dead worker never strands queued work.
+//! * A chunk failure (malformed operand, readback error) fails only its own
+//!   job: the worker reports `Err` and keeps serving, the job's handle
+//!   resolves to `Err` immediately, and the job's remaining chunks are
+//!   drained without poisoning any other job.
+//! * A crashed worker (panic mid-chunk, or [`PimService::kill_worker`])
+//!   retires from the bank; a chunk it had accepted but not executed is
+//!   requeued to the surviving workers. Only when *every* worker is gone do
+//!   pending jobs fail.
 
-use crate::coordinator::worker::{workload_geometry, Worker, WorkloadKind};
+use crate::coordinator::worker::{workload_geometry, ChunkValues, Payload, Worker, WorkloadKind};
 use crate::crossbar::crossbar::Metrics;
 use crate::isa::models::ModelKind;
-use anyhow::{ensure, Context, Result};
+use anyhow::{anyhow, ensure, Context, Result};
+use std::collections::{HashMap, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -28,34 +53,84 @@ impl Default for ServiceConfig {
     }
 }
 
-/// Completed-job report.
+/// Values a completed job produced: scalars for element-wise arithmetic,
+/// one vector per row for sort jobs.
+#[derive(Debug, Clone)]
+pub enum JobValues {
+    Scalars(Vec<u64>),
+    Rows(Vec<Vec<u64>>),
+}
+
+impl JobValues {
+    /// Element-wise results. Panics if the job was a sort job.
+    pub fn scalars(&self) -> &[u64] {
+        match self {
+            JobValues::Scalars(v) => v,
+            JobValues::Rows(_) => panic!("job produced per-row results, not scalars"),
+        }
+    }
+
+    /// Per-row sorted vectors. Panics if the job was element-wise.
+    pub fn rows(&self) -> &[Vec<u64>] {
+        match self {
+            JobValues::Rows(r) => r,
+            JobValues::Scalars(_) => panic!("job produced scalar results, not rows"),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            JobValues::Scalars(v) => v.len(),
+            JobValues::Rows(r) => r.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Completed-job report (shared by element-wise and sort jobs).
 #[derive(Debug, Clone)]
 pub struct JobResult {
     pub id: u64,
-    pub values: Vec<u64>,
+    pub values: JobValues,
     /// Simulated crossbar cycles spent on this job's chunks (summed).
     pub sim_cycles: u64,
     /// Control traffic the job generated, in bits.
     pub control_bits: u64,
-    /// Wall-clock service latency.
+    /// Wall-clock service latency, submit to completion.
     pub wall: std::time::Duration,
+}
+
+impl JobResult {
+    /// Element-wise results (panics on a sort job; see [`JobValues`]).
+    pub fn scalars(&self) -> &[u64] {
+        self.values.scalars()
+    }
+
+    /// Per-row sorted vectors (panics on an element-wise job).
+    pub fn rows(&self) -> &[Vec<u64>] {
+        self.values.rows()
+    }
 }
 
 /// Aggregate service statistics.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct ServiceStats {
+    /// Jobs completed successfully.
     pub jobs: u64,
+    /// Jobs that failed (bad operands, crashed worker, dead bank).
+    pub failed_jobs: u64,
+    /// Elements processed by successfully executed chunks.
     pub elements: u64,
+    /// Chunks executed successfully.
     pub chunks: u64,
     pub metrics: Metrics,
 }
 
-/// A chunk's operand payload: scalar pairs for element-wise arithmetic,
-/// per-row element vectors for sort jobs.
-enum Payload {
-    Pairs(Vec<(u64, u64)>),
-    Rows(Vec<Vec<u64>>),
-}
+/// Job id reserved for fault-injection poison chunks (never a real job).
+const POISON_JOB: u64 = u64::MAX;
 
 struct Chunk {
     job: u64,
@@ -63,28 +138,418 @@ struct Chunk {
     payload: Payload,
 }
 
-enum DoneValues {
-    Scalars(Vec<u64>),
-    Rows(Vec<Vec<u64>>),
+/// Everything the dispatcher hears: job registration and chunk supply from
+/// clients, pull requests and completions from workers, fault injection and
+/// shutdown from the service front-end.
+enum Event {
+    Register { id: u64, accum: JobValues, n_chunks: usize, start: Instant, result_tx: Sender<Result<JobResult>> },
+    Enqueue(Chunk),
+    Ready(usize),
+    Done { job: u64, offset: usize, result: std::result::Result<(ChunkValues, Metrics), String> },
+    WorkerExit { worker: usize, unfinished: Option<Chunk>, crashed: bool },
+    KillWorker(usize),
+    Shutdown,
 }
 
-struct ChunkDone {
-    job: u64,
-    offset: usize,
-    values: DoneValues,
-    metrics: Metrics,
+struct JobState {
+    /// Result accumulator, filled in by offset as completions arrive.
+    accum: JobValues,
+    /// Chunks not yet resolved (completed, failed, or drained).
+    outstanding: usize,
+    sim_cycles: u64,
+    control_bits: u64,
+    start: Instant,
+    /// Taken when the final result (or the first error) is delivered.
+    result_tx: Option<Sender<Result<JobResult>>>,
+    failed: bool,
 }
 
-/// A running PIM service: a bank of crossbar workers behind a batching
-/// controller. Submit jobs with [`PimService::submit`]; shut down with
+struct WorkerPort {
+    /// Dropped to wake and retire the worker.
+    tx: Option<Sender<Chunk>>,
+    /// Abrupt-kill flag: the worker checks it before executing a chunk and
+    /// hands the chunk back unexecuted if set.
+    kill: Arc<AtomicBool>,
+    alive: bool,
+    idle: bool,
+}
+
+/// What happened to one chunk of a job.
+enum ChunkOutcome {
+    Success { offset: usize, values: ChunkValues, metrics: Metrics },
+    Failure(String),
+    /// Queued chunk of an already-failed job, drained without executing.
+    Drained,
+}
+
+struct Dispatcher {
+    rx: Receiver<Event>,
+    ports: Vec<WorkerPort>,
+    queue: VecDeque<Chunk>,
+    jobs: HashMap<u64, JobState>,
+    stats: Arc<Mutex<ServiceStats>>,
+    shutting_down: bool,
+}
+
+impl Dispatcher {
+    fn run(mut self) {
+        while let Ok(ev) = self.rx.recv() {
+            match ev {
+                Event::Register { id, accum, n_chunks, start, result_tx } => {
+                    if self.shutting_down {
+                        self.stats.lock().unwrap().failed_jobs += 1;
+                        let _ = result_tx.send(Err(anyhow!("service is shutting down")));
+                    } else if !self.ports.iter().any(|p| p.alive) {
+                        self.stats.lock().unwrap().failed_jobs += 1;
+                        let _ = result_tx.send(Err(anyhow!("no live crossbar workers left in the bank")));
+                    } else {
+                        self.jobs.insert(
+                            id,
+                            JobState {
+                                accum,
+                                outstanding: n_chunks,
+                                sim_cycles: 0,
+                                control_bits: 0,
+                                start,
+                                result_tx: Some(result_tx),
+                                failed: false,
+                            },
+                        );
+                    }
+                }
+                Event::Enqueue(chunk) => {
+                    // Chunks of a rejected registration are dropped here, as
+                    // are poison chunks aimed at an already-dead bank (they
+                    // could never drain and would wedge shutdown).
+                    let accept = if chunk.job == POISON_JOB {
+                        self.ports.iter().any(|p| p.alive)
+                    } else {
+                        self.jobs.contains_key(&chunk.job)
+                    };
+                    if accept {
+                        self.queue.push_back(chunk);
+                    }
+                }
+                Event::Ready(w) => self.ports[w].idle = true,
+                Event::Done { job, offset, result } => match result {
+                    Ok((values, metrics)) => {
+                        {
+                            let n = match &values {
+                                ChunkValues::Scalars(v) => v.len(),
+                                ChunkValues::Rows(r) => r.len(),
+                            };
+                            let mut s = self.stats.lock().unwrap();
+                            s.chunks += 1;
+                            s.elements += n as u64;
+                            s.metrics.add(&metrics);
+                        }
+                        self.resolve_chunk(job, ChunkOutcome::Success { offset, values, metrics });
+                    }
+                    Err(msg) => {
+                        self.resolve_chunk(job, ChunkOutcome::Failure(format!("chunk at offset {offset}: {msg}")));
+                    }
+                },
+                Event::WorkerExit { worker, unfinished, crashed } => {
+                    let port = &mut self.ports[worker];
+                    port.alive = false;
+                    port.idle = false;
+                    port.tx = None;
+                    match unfinished {
+                        // A panic mid-chunk fails that chunk's job: the chunk
+                        // is the prime suspect, so it is not retried against
+                        // another worker.
+                        Some(chunk) if crashed => self.resolve_chunk(
+                            chunk.job,
+                            ChunkOutcome::Failure(format!("worker {worker} crashed executing chunk at offset {}", chunk.offset)),
+                        ),
+                        // Killed before executing: the chunk is innocent,
+                        // requeue it to the surviving workers.
+                        Some(chunk) => self.queue.push_front(chunk),
+                        None => {}
+                    }
+                    self.fail_all_if_bank_dead();
+                }
+                Event::KillWorker(w) => {
+                    let port = &mut self.ports[w];
+                    if port.alive {
+                        port.kill.store(true, Ordering::SeqCst);
+                        port.alive = false;
+                        // Dropping the channel wakes an idle worker so it can
+                        // observe the kill flag and retire.
+                        port.tx = None;
+                    }
+                    self.fail_all_if_bank_dead();
+                }
+                Event::Shutdown => self.shutting_down = true,
+            }
+            self.assign();
+            if self.shutting_down && self.jobs.is_empty() && self.queue.is_empty() {
+                break;
+            }
+        }
+        // Whatever is still pending when the dispatcher exits resolves to an
+        // error rather than a hang.
+        for (_, job) in self.jobs.drain() {
+            if let Some(tx) = job.result_tx {
+                let _ = tx.send(Err(anyhow!("service shut down before the job completed")));
+            }
+        }
+    }
+
+    /// Fold one chunk resolution into its job; deliver the final result (or
+    /// the first error) and retire the job once every chunk is accounted for.
+    fn resolve_chunk(&mut self, job_id: u64, outcome: ChunkOutcome) {
+        let Some(job) = self.jobs.get_mut(&job_id) else {
+            return; // poison chunk, or a job already finalized
+        };
+        match outcome {
+            ChunkOutcome::Success { offset, values, metrics } => {
+                if !job.failed {
+                    match (&mut job.accum, values) {
+                        (JobValues::Scalars(acc), ChunkValues::Scalars(vs)) => {
+                            for (i, v) in vs.into_iter().enumerate() {
+                                acc[offset + i] = v;
+                            }
+                        }
+                        (JobValues::Rows(acc), ChunkValues::Rows(rs)) => {
+                            for (i, r) in rs.into_iter().enumerate() {
+                                acc[offset + i] = r;
+                            }
+                        }
+                        // Unreachable: a job's payload kind is fixed at submit.
+                        _ => {}
+                    }
+                    job.sim_cycles += metrics.cycles;
+                    job.control_bits += metrics.control_bits;
+                }
+            }
+            ChunkOutcome::Failure(msg) => {
+                if !job.failed {
+                    job.failed = true;
+                    if let Some(tx) = job.result_tx.take() {
+                        let _ = tx.send(Err(anyhow!(msg)));
+                    }
+                    self.stats.lock().unwrap().failed_jobs += 1;
+                }
+            }
+            ChunkOutcome::Drained => {}
+        }
+        let Some(job) = self.jobs.get_mut(&job_id) else { return };
+        job.outstanding -= 1;
+        if job.outstanding == 0 {
+            let job = self.jobs.remove(&job_id).expect("job present");
+            if !job.failed {
+                self.stats.lock().unwrap().jobs += 1;
+                if let Some(tx) = job.result_tx {
+                    let _ = tx.send(Ok(JobResult {
+                        id: job_id,
+                        values: job.accum,
+                        sim_cycles: job.sim_cycles,
+                        control_bits: job.control_bits,
+                        wall: job.start.elapsed(),
+                    }));
+                }
+            }
+        }
+    }
+
+    /// Pop the next chunk that still needs executing, draining queued chunks
+    /// of jobs that have already failed.
+    fn pop_runnable(&mut self) -> Option<Chunk> {
+        while let Some(chunk) = self.queue.pop_front() {
+            if chunk.job == POISON_JOB {
+                return Some(chunk);
+            }
+            match self.jobs.get(&chunk.job).map(|j| j.failed) {
+                Some(false) => return Some(chunk),
+                Some(true) => self.resolve_chunk(chunk.job, ChunkOutcome::Drained),
+                None => {}
+            }
+        }
+        None
+    }
+
+    /// Hand queued chunks to idle, live workers until one of the two runs out.
+    fn assign(&mut self) {
+        loop {
+            let Some(mut chunk) = self.pop_runnable() else { return };
+            loop {
+                let Some(w) = self.ports.iter().position(|p| p.alive && p.idle) else {
+                    self.queue.push_front(chunk);
+                    return;
+                };
+                let Some(tx) = self.ports[w].tx.clone() else {
+                    self.ports[w].alive = false;
+                    continue;
+                };
+                match tx.send(chunk) {
+                    Ok(()) => {
+                        self.ports[w].idle = false;
+                        break;
+                    }
+                    Err(std::sync::mpsc::SendError(c)) => {
+                        // The worker died without telling us yet; its exit
+                        // event will follow. Try the next live worker.
+                        self.ports[w].alive = false;
+                        self.ports[w].tx = None;
+                        chunk = c;
+                    }
+                }
+            }
+        }
+    }
+
+    /// When the last worker retires, every pending job fails cleanly instead
+    /// of hanging its handle.
+    fn fail_all_if_bank_dead(&mut self) {
+        if self.ports.iter().any(|p| p.alive) {
+            return;
+        }
+        self.queue.clear();
+        let mut newly_failed = 0u64;
+        for (_, mut job) in self.jobs.drain() {
+            if !job.failed {
+                newly_failed += 1;
+                if let Some(tx) = job.result_tx.take() {
+                    let _ = tx.send(Err(anyhow!("every crossbar worker in the bank has failed")));
+                }
+            }
+        }
+        if newly_failed > 0 {
+            self.stats.lock().unwrap().failed_jobs += newly_failed;
+        }
+    }
+}
+
+/// Worker thread body: pull a chunk, execute it, report the outcome. Chunk
+/// errors are reported and the loop continues; a panic (simulated hardware
+/// fault) retires the worker after notifying the dispatcher.
+fn worker_loop(i: usize, mut worker: Worker, rx: Receiver<Chunk>, event_tx: Sender<Event>, kill: Arc<AtomicBool>) {
+    loop {
+        if event_tx.send(Event::Ready(i)).is_err() {
+            return;
+        }
+        let chunk = match rx.recv() {
+            Ok(c) => c,
+            Err(_) => {
+                let _ = event_tx.send(Event::WorkerExit { worker: i, unfinished: None, crashed: false });
+                return;
+            }
+        };
+        if kill.load(Ordering::SeqCst) {
+            // Abrupt retirement: hand the accepted-but-unexecuted chunk back.
+            let _ = event_tx.send(Event::WorkerExit { worker: i, unfinished: Some(chunk), crashed: false });
+            return;
+        }
+        match catch_unwind(AssertUnwindSafe(|| worker.run_payload(&chunk.payload))) {
+            Ok(result) => {
+                let result = result.map_err(|e| format!("{e:#}"));
+                if event_tx.send(Event::Done { job: chunk.job, offset: chunk.offset, result }).is_err() {
+                    return;
+                }
+            }
+            Err(_) => {
+                let _ = event_tx.send(Event::WorkerExit { worker: i, unfinished: Some(chunk), crashed: true });
+                return;
+            }
+        }
+    }
+}
+
+/// A pending job. Obtain the [`JobResult`] with [`JobHandle::wait`]; drop
+/// the handle to fire-and-forget (the job still runs to completion).
+pub struct JobHandle {
+    id: u64,
+    rx: Receiver<Result<JobResult>>,
+}
+
+impl JobHandle {
+    /// The job id completions are routed by.
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Block until the job completes. A failed chunk resolves this to `Err`
+    /// as soon as the failure is known, without waiting for the job's
+    /// remaining chunks to drain.
+    pub fn wait(self) -> Result<JobResult> {
+        self.rx.recv().ok().context("scheduler exited without completing the job")?
+    }
+
+    /// Non-blocking poll: `None` while the job is still in flight.
+    pub fn try_wait(&self) -> Option<Result<JobResult>> {
+        match self.rx.try_recv() {
+            Ok(r) => Some(r),
+            Err(std::sync::mpsc::TryRecvError::Empty) => None,
+            Err(std::sync::mpsc::TryRecvError::Disconnected) => {
+                Some(Err(anyhow!("scheduler exited without completing the job")))
+            }
+        }
+    }
+}
+
+/// A cloneable, `Send` submission front-end: hand one to each client thread
+/// to drive the same bank concurrently (the dispatcher multiplexes them).
+#[derive(Clone)]
+pub struct PimClient {
+    cfg: ServiceConfig,
+    event_tx: Sender<Event>,
+    next_job: Arc<AtomicU64>,
+}
+
+impl PimClient {
+    /// Submit an element-wise job; returns immediately with a handle.
+    pub fn submit(&self, a: &[u64], b: &[u64]) -> Result<JobHandle> {
+        ensure!(self.cfg.kind != WorkloadKind::Sort16, "sort services take per-row vectors; use submit_sort");
+        ensure!(a.len() == b.len(), "operand vectors differ in length");
+        ensure!(!a.is_empty(), "empty job");
+        let payloads: Vec<Payload> = a
+            .chunks(self.cfg.rows)
+            .enumerate()
+            .map(|(ci, ch)| {
+                let offset = ci * self.cfg.rows;
+                Payload::Pairs(ch.iter().zip(&b[offset..offset + ch.len()]).map(|(&x, &y)| (x, y)).collect())
+            })
+            .collect();
+        self.dispatch(JobValues::Scalars(vec![0; a.len()]), payloads)
+    }
+
+    /// Submit a sort job (one vector per crossbar row); returns immediately.
+    pub fn submit_sort(&self, rows_data: &[Vec<u64>]) -> Result<JobHandle> {
+        ensure!(self.cfg.kind == WorkloadKind::Sort16, "service is not a sort workload");
+        ensure!(!rows_data.is_empty(), "empty job");
+        let payloads: Vec<Payload> = rows_data.chunks(self.cfg.rows).map(|c| Payload::Rows(c.to_vec())).collect();
+        self.dispatch(JobValues::Rows(vec![Vec::new(); rows_data.len()]), payloads)
+    }
+
+    fn dispatch(&self, accum: JobValues, payloads: Vec<Payload>) -> Result<JobHandle> {
+        let id = self.next_job.fetch_add(1, Ordering::Relaxed);
+        let (result_tx, result_rx) = channel();
+        let start = Instant::now();
+        // The registration is enqueued before any chunk, so the dispatcher
+        // always knows the job before its first completion can arrive.
+        self.event_tx
+            .send(Event::Register { id, accum, n_chunks: payloads.len(), start, result_tx })
+            .ok()
+            .context("scheduler dispatcher exited")?;
+        for (ci, payload) in payloads.into_iter().enumerate() {
+            self.event_tx
+                .send(Event::Enqueue(Chunk { job: id, offset: ci * self.cfg.rows, payload }))
+                .ok()
+                .context("scheduler dispatcher exited")?;
+        }
+        Ok(JobHandle { id, rx: result_rx })
+    }
+}
+
+/// A running PIM service: a bank of crossbar workers behind a concurrent,
+/// fault-isolated scheduler. Submit jobs with [`PimService::submit`] (or
+/// from many threads via [`PimService::client`]); shut down with
 /// [`PimService::shutdown`] to retrieve aggregate statistics.
 pub struct PimService {
-    cfg: ServiceConfig,
-    chunk_tx: Vec<Sender<Chunk>>,
-    done_rx: Receiver<ChunkDone>,
+    client: PimClient,
+    dispatcher: Option<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
-    next_job: u64,
-    next_worker: usize,
     stats: Arc<Mutex<ServiceStats>>,
     /// Cycles one full batch costs (for throughput reporting).
     pub batch_cycles: usize,
@@ -92,125 +557,95 @@ pub struct PimService {
 
 impl PimService {
     /// Start the bank: spawns `n_crossbars` worker threads, each owning one
-    /// simulated crossbar with the compiled workload program.
+    /// simulated crossbar with the compiled workload program, plus the
+    /// dispatcher thread that schedules chunks and routes completions.
     pub fn start(cfg: ServiceConfig) -> Result<Self> {
         ensure!(cfg.n_crossbars >= 1, "need at least one crossbar");
         let geom = workload_geometry(cfg.kind, cfg.model, cfg.rows);
-        let (done_tx, done_rx) = channel::<ChunkDone>();
+        let (event_tx, event_rx) = channel::<Event>();
         let stats = Arc::new(Mutex::new(ServiceStats::default()));
-        let mut chunk_tx = Vec::new();
+        let mut first = Some(Worker::new(cfg.kind, cfg.model, geom)?);
+        let batch_cycles = first.as_ref().expect("just built").batch_cycles();
+        let mut ports = Vec::new();
         let mut workers = Vec::new();
-        let probe = Worker::new(cfg.kind, cfg.model, geom)?;
-        let batch_cycles = probe.batch_cycles();
-        for _ in 0..cfg.n_crossbars {
+        for i in 0..cfg.n_crossbars {
+            let worker = match first.take() {
+                Some(w) => w,
+                None => Worker::new(cfg.kind, cfg.model, geom)?,
+            };
             let (tx, rx) = channel::<Chunk>();
-            chunk_tx.push(tx);
-            let done_tx = done_tx.clone();
-            let stats = Arc::clone(&stats);
-            let mut worker = Worker::new(cfg.kind, cfg.model, geom)?;
-            workers.push(std::thread::spawn(move || {
-                while let Ok(chunk) = rx.recv() {
-                    let (values, metrics, n) = match &chunk.payload {
-                        Payload::Pairs(pairs) => {
-                            let (v, m) = worker.run_batch(pairs).expect("workload program validated at compile time");
-                            let n = v.len();
-                            (DoneValues::Scalars(v), m, n)
-                        }
-                        Payload::Rows(rows_data) => {
-                            let (v, m) = worker.run_sort_batch(rows_data).expect("workload program validated at compile time");
-                            let n = v.len();
-                            (DoneValues::Rows(v), m, n)
-                        }
-                    };
-                    {
-                        let mut s = stats.lock().unwrap();
-                        s.chunks += 1;
-                        s.elements += n as u64;
-                        s.metrics.add(&metrics);
-                    }
-                    if done_tx.send(ChunkDone { job: chunk.job, offset: chunk.offset, values, metrics }).is_err() {
-                        break;
-                    }
-                }
-            }));
+            let kill = Arc::new(AtomicBool::new(false));
+            ports.push(WorkerPort { tx: Some(tx), kill: Arc::clone(&kill), alive: true, idle: false });
+            let event_tx = event_tx.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("pim-worker-{i}"))
+                    .spawn(move || worker_loop(i, worker, rx, event_tx, kill))
+                    .context("spawning worker thread")?,
+            );
         }
-        Ok(Self { cfg, chunk_tx, done_rx, workers, next_job: 0, next_worker: 0, stats, batch_cycles })
+        let dispatcher_stats = Arc::clone(&stats);
+        let dispatcher = std::thread::Builder::new()
+            .name("pim-dispatcher".to_string())
+            .spawn(move || {
+                Dispatcher {
+                    rx: event_rx,
+                    ports,
+                    queue: VecDeque::new(),
+                    jobs: HashMap::new(),
+                    stats: dispatcher_stats,
+                    shutting_down: false,
+                }
+                .run()
+            })
+            .context("spawning dispatcher thread")?;
+        let client = PimClient { cfg, event_tx, next_job: Arc::new(AtomicU64::new(0)) };
+        Ok(Self { client, dispatcher: Some(dispatcher), workers, stats, batch_cycles })
     }
 
-    /// Submit an element-wise job and wait for its completion (the
-    /// controller splits it into row-chunks spread across the bank).
-    pub fn submit(&mut self, a: &[u64], b: &[u64]) -> Result<JobResult> {
-        ensure!(a.len() == b.len(), "operand vectors differ in length");
-        ensure!(!a.is_empty(), "empty job");
-        let start = Instant::now();
-        let id = self.next_job;
-        self.next_job += 1;
-        let mut outstanding = 0usize;
-        for (ci, chunk) in a.chunks(self.cfg.rows).enumerate() {
-            let offset = ci * self.cfg.rows;
-            let pairs: Vec<(u64, u64)> = chunk.iter().zip(&b[offset..offset + chunk.len()]).map(|(&x, &y)| (x, y)).collect();
-            let w = self.next_worker;
-            self.next_worker = (self.next_worker + 1) % self.chunk_tx.len();
-            self.chunk_tx[w].send(Chunk { job: id, offset, payload: Payload::Pairs(pairs) }).context("worker hung up")?;
-            outstanding += 1;
-        }
-        let mut values = vec![0u64; a.len()];
-        let mut sim_cycles = 0u64;
-        let mut control_bits = 0u64;
-        while outstanding > 0 {
-            let done = self.done_rx.recv().context("workers hung up")?;
-            ensure!(done.job == id, "out-of-order completion: job {} while waiting for {id}", done.job);
-            let DoneValues::Scalars(vs) = done.values else {
-                anyhow::bail!("scalar job received row results");
-            };
-            for (i, v) in vs.iter().enumerate() {
-                values[done.offset + i] = *v;
-            }
-            sim_cycles += done.metrics.cycles;
-            control_bits += done.metrics.control_bits;
-            outstanding -= 1;
-        }
-        {
-            let mut s = self.stats.lock().unwrap();
-            s.jobs += 1;
-        }
-        Ok(JobResult { id, values, sim_cycles, control_bits, wall: start.elapsed() })
+    /// A cloneable submission front-end for driving this bank from other
+    /// threads. Clients outlive neither the jobs they submitted nor the
+    /// service: once the service shuts down, their submissions fail cleanly.
+    pub fn client(&self) -> PimClient {
+        self.client.clone()
+    }
+
+    /// This service's configuration.
+    pub fn config(&self) -> ServiceConfig {
+        self.client.cfg
+    }
+
+    /// Submit an element-wise job. Non-blocking: returns a [`JobHandle`];
+    /// call [`JobHandle::wait`] for the classic blocking behavior.
+    pub fn submit(&self, a: &[u64], b: &[u64]) -> Result<JobHandle> {
+        self.client.submit(a, b)
     }
 
     /// Submit a sort job: each entry of `rows_data` is one vector to sort
-    /// (one crossbar row). Returns the sorted vectors.
-    pub fn submit_sort(&mut self, rows_data: &[Vec<u64>]) -> Result<(Vec<Vec<u64>>, u64, u64)> {
-        ensure!(self.cfg.kind == WorkloadKind::Sort16, "service is not a sort workload");
-        ensure!(!rows_data.is_empty(), "empty job");
-        let id = self.next_job;
-        self.next_job += 1;
-        let mut outstanding = 0usize;
-        for (ci, chunk) in rows_data.chunks(self.cfg.rows).enumerate() {
-            let w = self.next_worker;
-            self.next_worker = (self.next_worker + 1) % self.chunk_tx.len();
-            self.chunk_tx[w]
-                .send(Chunk { job: id, offset: ci * self.cfg.rows, payload: Payload::Rows(chunk.to_vec()) })
-                .context("worker hung up")?;
-            outstanding += 1;
-        }
-        let mut values: Vec<Vec<u64>> = vec![Vec::new(); rows_data.len()];
-        let mut sim_cycles = 0u64;
-        let mut control_bits = 0u64;
-        while outstanding > 0 {
-            let done = self.done_rx.recv().context("workers hung up")?;
-            ensure!(done.job == id, "out-of-order completion");
-            let DoneValues::Rows(rows) = done.values else {
-                anyhow::bail!("sort job received scalar results");
-            };
-            for (i, v) in rows.into_iter().enumerate() {
-                values[done.offset + i] = v;
-            }
-            sim_cycles += done.metrics.cycles;
-            control_bits += done.metrics.control_bits;
-            outstanding -= 1;
-        }
-        self.stats.lock().unwrap().jobs += 1;
-        Ok((values, sim_cycles, control_bits))
+    /// (one crossbar row). Non-blocking; the handle resolves to a
+    /// [`JobResult`] whose values are the sorted per-row vectors.
+    pub fn submit_sort(&self, rows_data: &[Vec<u64>]) -> Result<JobHandle> {
+        self.client.submit_sort(rows_data)
+    }
+
+    /// Fault injection: abruptly retire worker `w`, as if its crossbar died.
+    /// A chunk the worker had accepted but not yet executed is requeued to
+    /// the surviving workers; jobs in flight complete unaffected (unless the
+    /// bank is left empty, in which case they fail cleanly).
+    pub fn kill_worker(&self, w: usize) -> Result<()> {
+        ensure!(w < self.client.cfg.n_crossbars, "no worker {w} in a bank of {}", self.client.cfg.n_crossbars);
+        self.client.event_tx.send(Event::KillWorker(w)).ok().context("scheduler dispatcher exited")
+    }
+
+    /// Fault injection: enqueue a poison chunk that panics whichever worker
+    /// picks it up — a crossbar dying mid-operation. The crash is contained:
+    /// that worker retires, every job keeps its correct results.
+    pub fn inject_worker_panic(&self) -> Result<()> {
+        self.client
+            .event_tx
+            .send(Event::Enqueue(Chunk { job: POISON_JOB, offset: 0, payload: Payload::Poison }))
+            .ok()
+            .context("scheduler dispatcher exited")
     }
 
     /// Aggregate statistics so far.
@@ -218,13 +653,28 @@ impl PimService {
         *self.stats.lock().unwrap()
     }
 
-    /// Stop the workers and return the final statistics.
-    pub fn shutdown(self) -> ServiceStats {
-        drop(self.chunk_tx);
-        for w in self.workers {
+    /// Stop the service and return the final statistics. Jobs still in
+    /// flight are allowed to finish first.
+    pub fn shutdown(mut self) -> ServiceStats {
+        self.finish();
+        *self.stats.lock().unwrap()
+    }
+
+    fn finish(&mut self) {
+        let _ = self.client.event_tx.send(Event::Shutdown);
+        if let Some(d) = self.dispatcher.take() {
+            let _ = d.join();
+        }
+        for w in self.workers.drain(..) {
             let _ = w.join();
         }
-        *self.stats.lock().unwrap()
+    }
+}
+
+impl Drop for PimService {
+    fn drop(&mut self) {
+        // Best-effort: let the threads wind down without blocking the drop.
+        let _ = self.client.event_tx.send(Event::Shutdown);
     }
 }
 
@@ -234,7 +684,7 @@ mod tests {
 
     #[test]
     fn service_end_to_end_multiply() {
-        let mut svc = PimService::start(ServiceConfig {
+        let svc = PimService::start(ServiceConfig {
             kind: WorkloadKind::Mul32,
             model: ModelKind::Minimal,
             n_crossbars: 2,
@@ -243,20 +693,21 @@ mod tests {
         .unwrap();
         let a: Vec<u64> = (0..50).map(|i| 0x9e3779b9u64.wrapping_mul(i + 1) & 0xffff_ffff).collect();
         let b: Vec<u64> = (0..50).map(|i| 0x85ebca6bu64.wrapping_mul(i + 7) & 0xffff_ffff).collect();
-        let res = svc.submit(&a, &b).unwrap();
+        let res = svc.submit(&a, &b).unwrap().wait().unwrap();
         for i in 0..50 {
-            assert_eq!(res.values[i], a[i] * b[i], "element {i}");
+            assert_eq!(res.scalars()[i], a[i] * b[i], "element {i}");
         }
         assert!(res.control_bits > 0);
         let stats = svc.shutdown();
         assert_eq!(stats.jobs, 1);
+        assert_eq!(stats.failed_jobs, 0);
         assert_eq!(stats.elements, 50);
         assert_eq!(stats.chunks, 7); // ceil(50 / 8)
     }
 
     #[test]
     fn service_multiple_jobs_accumulate_stats() {
-        let mut svc = PimService::start(ServiceConfig {
+        let svc = PimService::start(ServiceConfig {
             kind: WorkloadKind::Add32,
             model: ModelKind::Standard,
             n_crossbars: 3,
@@ -266,14 +717,73 @@ mod tests {
         for j in 0..5u64 {
             let a: Vec<u64> = (0..10).map(|i| i * 1000 + j).collect();
             let b: Vec<u64> = (0..10).map(|i| i + 42).collect();
-            let res = svc.submit(&a, &b).unwrap();
+            let res = svc.submit(&a, &b).unwrap().wait().unwrap();
             for i in 0..10usize {
-                assert_eq!(res.values[i], a[i] + b[i]);
+                assert_eq!(res.scalars()[i], a[i] + b[i]);
             }
         }
         let stats = svc.shutdown();
         assert_eq!(stats.jobs, 5);
         assert_eq!(stats.elements, 50);
         assert!(stats.metrics.control_bits > 0);
+    }
+
+    /// Regression (the original wedge bug): an out-of-range operand used to
+    /// panic the worker thread and leave `submit` blocked forever. It must
+    /// fail only its own job, and the bank must keep serving.
+    #[test]
+    fn malformed_operand_fails_job_not_service() {
+        let svc = PimService::start(ServiceConfig {
+            kind: WorkloadKind::Mul32,
+            model: ModelKind::Minimal,
+            n_crossbars: 2,
+            rows: 4,
+        })
+        .unwrap();
+        let bad = svc.submit(&[1u64 << 33, 7], &[3, 5]).unwrap().wait();
+        let err = format!("{:#}", bad.expect_err("oversized operand must fail the job"));
+        assert!(err.contains("exceeds"), "unexpected error: {err}");
+
+        // Same service, next job: every worker is still alive and correct.
+        let a: Vec<u64> = (0..20).map(|i| i + 1).collect();
+        let b: Vec<u64> = (0..20).map(|i| 2 * i + 3).collect();
+        let res = svc.submit(&a, &b).unwrap().wait().expect("bank must keep serving after a bad job");
+        for i in 0..20 {
+            assert_eq!(res.scalars()[i], a[i] * b[i]);
+        }
+        let stats = svc.shutdown();
+        assert_eq!(stats.jobs, 1);
+        assert_eq!(stats.failed_jobs, 1);
+    }
+
+    /// Two jobs genuinely in flight: the second (small) job is submitted
+    /// after the first (large) one and completes while the first is still
+    /// outstanding — impossible under the old one-job-at-a-time controller.
+    #[test]
+    fn jobs_overlap_and_complete_out_of_order() {
+        let svc = PimService::start(ServiceConfig {
+            kind: WorkloadKind::Mul32,
+            model: ModelKind::Minimal,
+            n_crossbars: 2,
+            rows: 4,
+        })
+        .unwrap();
+        let big_a: Vec<u64> = (0..64).map(|i| i + 1).collect();
+        let big_b: Vec<u64> = (0..64).map(|i| i + 2).collect();
+        let big = svc.submit(&big_a, &big_b).unwrap();
+        let small = svc.submit(&[3, 4], &[5, 6]).unwrap();
+        assert!(big.id() < small.id());
+
+        // Wait for the later-submitted job first: completion routing by job
+        // id makes the order irrelevant.
+        let small_res = small.wait().unwrap();
+        assert_eq!(small_res.scalars(), &[15, 24]);
+        let big_res = big.wait().unwrap();
+        for i in 0..64 {
+            assert_eq!(big_res.scalars()[i], big_a[i] * big_b[i]);
+        }
+        let stats = svc.shutdown();
+        assert_eq!(stats.jobs, 2);
+        assert_eq!(stats.elements, 66);
     }
 }

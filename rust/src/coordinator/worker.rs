@@ -33,6 +33,41 @@ pub const SORT_ELEMS: usize = 16;
 /// Element width of the sort workload.
 pub const SORT_BITS: usize = 6;
 
+/// A chunk's operand payload: scalar pairs for element-wise arithmetic,
+/// per-row element vectors for sort jobs.
+#[derive(Debug, Clone)]
+pub enum Payload {
+    Pairs(Vec<(u64, u64)>),
+    Rows(Vec<Vec<u64>>),
+    /// Fault injection: executing this payload panics the worker thread,
+    /// simulating a crossbar that dies mid-operation (used by the
+    /// scheduler's resilience tests and `PimService::inject_worker_panic`).
+    #[doc(hidden)]
+    Poison,
+}
+
+impl Payload {
+    /// Elements this payload carries (rows for sort payloads).
+    pub fn len(&self) -> usize {
+        match self {
+            Payload::Pairs(p) => p.len(),
+            Payload::Rows(r) => r.len(),
+            Payload::Poison => 0,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Result values of one executed chunk, mirroring [`Payload`].
+#[derive(Debug, Clone)]
+pub enum ChunkValues {
+    Scalars(Vec<u64>),
+    Rows(Vec<Vec<u64>>),
+}
+
 /// The operand loader / result reader for a compiled workload.
 /// Opaque compiled-workload handle (loader/reader dispatch).
 pub enum Compiled {
@@ -187,6 +222,24 @@ impl Worker {
             out.push(self.compiled.read_result(&self.crossbar.state, r)?);
         }
         Ok((out, delta))
+    }
+
+    /// Execute one chunk payload end-to-end: the single entry point the
+    /// scheduler's worker threads use. Loader or readback errors come back
+    /// as `Err` (they fail the chunk's job, not the worker); only a genuine
+    /// panic — a simulated hardware fault — takes the worker down.
+    pub fn run_payload(&mut self, payload: &Payload) -> Result<(ChunkValues, Metrics)> {
+        match payload {
+            Payload::Pairs(pairs) => {
+                let (v, m) = self.run_batch(pairs)?;
+                Ok((ChunkValues::Scalars(v), m))
+            }
+            Payload::Rows(rows_data) => {
+                let (v, m) = self.run_sort_batch(rows_data)?;
+                Ok((ChunkValues::Rows(v), m))
+            }
+            Payload::Poison => panic!("injected crossbar fault"),
+        }
     }
 
     /// Execute one row-batch of sort jobs (one 16-element vector per row).

@@ -37,10 +37,14 @@
 //!   for every backend and control path.
 //! * [`analysis`] — the combinatorial lower bounds on message length
 //!   (443 / 46 / 25 bits) via a small big-integer implementation.
-//! * [`coordinator`] — the L3 runtime: a controller that batches vectored
-//!   arithmetic jobs onto crossbar rows, streams pre-encoded control
-//!   messages through the periphery decode stage of an `ExecPipeline`, and
-//!   meters latency, energy, and control traffic.
+//! * [`coordinator`] — the L3 runtime: a concurrent, fault-isolated job
+//!   scheduler. `submit` returns a `JobHandle` (any number of jobs in
+//!   flight; completions routed by job id); workers batch job elements
+//!   onto crossbar rows and stream pre-encoded control messages through
+//!   the periphery decode stage of an `ExecPipeline`. A malformed operand
+//!   fails only its own job, and a crashed worker's unexecuted chunks
+//!   requeue to the surviving workers (DESIGN.md §Coordinator). Latency,
+//!   energy, and control traffic are metered per job and per bank.
 //! * [`runtime`] — PJRT/XLA execution of the AOT-compiled JAX/Pallas
 //!   crossbar-step artifact (`artifacts/*.hlo.txt`) as an independent
 //!   `PimBackend`, used to cross-check the rust simulator (python never

@@ -8,7 +8,9 @@
 //! repro figure6                     regenerate Figure 6 (latency/control/area)
 //! repro sort                        sorting speedup table (intro claim)
 //! repro serve [--model M] [--crossbars N] [--rows R] [--jobs J] [--len L]
+//!             [--inject-bad] [--kill W]
 //!                                   end-to-end vector-multiply service demo
+//!                                   (pipelined jobs; optional fault injection)
 //! repro xla-parity [--artifacts D] [--n N] [--k K] [--rows R]
 //!                                   cross-check rust sim vs the XLA artifact
 //! ```
@@ -32,9 +34,17 @@ fn parse_flags(args: &[String]) -> HashMap<String, String> {
     let mut i = 0;
     while i < args.len() {
         if let Some(key) = args[i].strip_prefix("--") {
-            let val = args.get(i + 1).cloned().unwrap_or_default();
-            flags.insert(key.to_string(), val);
-            i += 2;
+            // A flag followed by another flag (or nothing) is boolean.
+            match args.get(i + 1) {
+                Some(v) if !v.starts_with("--") => {
+                    flags.insert(key.to_string(), v.clone());
+                    i += 2;
+                }
+                _ => {
+                    flags.insert(key.to_string(), String::new());
+                    i += 1;
+                }
+            }
         } else {
             i += 1;
         }
@@ -148,9 +158,14 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     let rows: usize = flags.get("rows").map(String::as_str).unwrap_or("64").parse()?;
     let jobs: usize = flags.get("jobs").map(String::as_str).unwrap_or("8").parse()?;
     let len: usize = flags.get("len").map(String::as_str).unwrap_or("256").parse()?;
+    let inject_bad = flags.contains_key("inject-bad");
+    let kill: Option<usize> = match flags.get("kill") {
+        Some(w) => Some(w.parse()?),
+        None => None,
+    };
 
     println!("Starting PIM service: model={}, {} crossbars x {} rows", model.name(), n_crossbars, rows);
-    let mut svc = PimService::start(ServiceConfig { kind: WorkloadKind::Mul32, model, n_crossbars, rows })?;
+    let svc = PimService::start(ServiceConfig { kind: WorkloadKind::Mul32, model, n_crossbars, rows })?;
     println!("batch latency: {} crossbar cycles\n", svc.batch_cycles);
 
     let t0 = Instant::now();
@@ -161,12 +176,32 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         seed ^= seed << 17;
         seed & 0xffff_ffff
     };
-    for j in 0..jobs {
+    // Pipelined submission: every job is in flight before the first result
+    // is read back — the scheduler keeps the whole bank saturated.
+    let mut pending = Vec::new();
+    for _ in 0..jobs {
         let a: Vec<u64> = (0..len).map(|_| rnd()).collect();
         let b: Vec<u64> = (0..len).map(|_| rnd()).collect();
-        let res = svc.submit(&a, &b)?;
+        let handle = svc.submit(&a, &b)?;
+        pending.push((a, b, handle));
+    }
+    if inject_bad {
+        // One tenant misbehaves: an operand outside the 32-bit range. The
+        // job fails; every other job on the bank is unaffected.
+        let handle = svc.submit(&[1u64 << 33, 5], &[3, 4])?;
+        match handle.wait() {
+            Ok(_) => anyhow::bail!("malformed job unexpectedly succeeded"),
+            Err(e) => println!("bad job  : rejected in isolation ({e:#})"),
+        }
+    }
+    if let Some(w) = kill {
+        svc.kill_worker(w)?;
+        println!("fault    : worker {w} killed mid-service; its chunks requeue to the survivors");
+    }
+    for (j, (a, b, handle)) in pending.into_iter().enumerate() {
+        let res = handle.wait()?;
         for i in 0..len {
-            anyhow::ensure!(res.values[i] == a[i] * b[i], "wrong product at job {j} element {i}");
+            anyhow::ensure!(res.scalars()[i] == a[i] * b[i], "wrong product at job {j} element {i}");
         }
         println!(
             "job {j:>3}: {len} elements  sim_cycles={:<8} control={:>7} bits  wall={:?}",
@@ -176,7 +211,7 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     let wall = t0.elapsed();
     let stats = svc.shutdown();
     let elems = stats.elements as f64;
-    println!("\n{} jobs, {} elements in {:?}", stats.jobs, stats.elements, wall);
+    println!("\n{} jobs ({} failed), {} elements in {:?}", stats.jobs, stats.failed_jobs, stats.elements, wall);
     println!(
         "throughput: {:.0} mults/s (wall)  |  {:.2} elements/kilocycle (simulated)",
         elems / wall.as_secs_f64(),
@@ -246,8 +281,10 @@ fn main() -> Result<()> {
             println!("  figure6     regenerate Figure 6 (latency / control / area / energy)");
             println!("  sweep       speedup vs control-overhead across partition counts");
             println!("  sort        sorting speedup table");
-            println!("  serve       end-to-end vector-multiply service demo");
+            println!("  serve       end-to-end vector-multiply service demo (concurrent scheduler)");
             println!("              [--model minimal] [--crossbars 4] [--rows 64] [--jobs 8] [--len 256]");
+            println!("              [--inject-bad]  submit one malformed job, show fault isolation");
+            println!("              [--kill W]      kill worker W mid-service, show chunk requeue");
             println!("  xla-parity  rust simulator vs AOT XLA artifact cross-check");
             println!("              [--artifacts artifacts] [--n 256] [--k 8] [--rows 16]");
             Ok(())

@@ -3,9 +3,9 @@
 //! observed end-to-end through the coordinator (not just program stats).
 
 use partition_pim::coordinator::{PimService, ServiceConfig, WorkloadKind};
+use partition_pim::crossbar::geometry::Geometry;
 use partition_pim::isa::encode::message_bits;
 use partition_pim::isa::models::ModelKind;
-use partition_pim::crossbar::geometry::Geometry;
 
 fn vectors(len: usize, seed: u64) -> (Vec<u64>, Vec<u64>) {
     let mut s = seed;
@@ -21,12 +21,12 @@ fn vectors(len: usize, seed: u64) -> (Vec<u64>, Vec<u64>) {
 #[test]
 fn multiply_service_all_models() {
     for model in ModelKind::ALL {
-        let mut svc = PimService::start(ServiceConfig { kind: WorkloadKind::Mul32, model, n_crossbars: 3, rows: 16 })
+        let svc = PimService::start(ServiceConfig { kind: WorkloadKind::Mul32, model, n_crossbars: 3, rows: 16 })
             .unwrap_or_else(|e| panic!("{}: {e}", model.name()));
         let (a, b) = vectors(100, 42);
-        let res = svc.submit(&a, &b).expect("submit");
+        let res = svc.submit(&a, &b).expect("submit").wait().expect("wait");
         for i in 0..100 {
-            assert_eq!(res.values[i], a[i] * b[i], "{} element {i}", model.name());
+            assert_eq!(res.scalars()[i], a[i] * b[i], "{} element {i}", model.name());
         }
         let stats = svc.shutdown();
         assert_eq!(stats.elements, 100);
@@ -38,12 +38,12 @@ fn multiply_service_all_models() {
 #[test]
 fn add_service_all_models() {
     for model in ModelKind::ALL {
-        let mut svc = PimService::start(ServiceConfig { kind: WorkloadKind::Add32, model, n_crossbars: 2, rows: 8 })
+        let svc = PimService::start(ServiceConfig { kind: WorkloadKind::Add32, model, n_crossbars: 2, rows: 8 })
             .unwrap_or_else(|e| panic!("{}: {e}", model.name()));
         let (a, b) = vectors(40, 7);
-        let res = svc.submit(&a, &b).expect("submit");
+        let res = svc.submit(&a, &b).expect("submit").wait().expect("wait");
         for i in 0..40 {
-            assert_eq!(res.values[i], a[i] + b[i], "{} element {i}", model.name());
+            assert_eq!(res.scalars()[i], a[i] + b[i], "{} element {i}", model.name());
         }
         svc.shutdown();
     }
@@ -57,10 +57,10 @@ fn end_to_end_figure6_orderings() {
     let mut cycles = std::collections::HashMap::new();
     let mut per_cycle_bits = std::collections::HashMap::new();
     for model in ModelKind::ALL {
-        let mut svc = PimService::start(ServiceConfig { kind: WorkloadKind::Mul32, model, n_crossbars: 1, rows: 4 })
+        let svc = PimService::start(ServiceConfig { kind: WorkloadKind::Mul32, model, n_crossbars: 1, rows: 4 })
             .expect("service");
         let (a, b) = vectors(4, 1234);
-        let res = svc.submit(&a, &b).expect("submit");
+        let res = svc.submit(&a, &b).expect("submit").wait().expect("wait");
         cycles.insert(model, res.sim_cycles);
         let stats = svc.shutdown();
         // Gate messages dominate; compare measured bits/gate-cycle to the format.
@@ -82,13 +82,13 @@ fn end_to_end_figure6_orderings() {
 
 #[test]
 fn many_small_jobs_round_robin() {
-    let mut svc = PimService::start(ServiceConfig { kind: WorkloadKind::Mul32, model: ModelKind::Minimal, n_crossbars: 4, rows: 8 })
+    let svc = PimService::start(ServiceConfig { kind: WorkloadKind::Mul32, model: ModelKind::Minimal, n_crossbars: 4, rows: 8 })
         .expect("service");
     for j in 0..20u64 {
         let (a, b) = vectors(3, j + 1);
-        let res = svc.submit(&a, &b).expect("submit");
+        let res = svc.submit(&a, &b).expect("submit").wait().expect("wait");
         for i in 0..3 {
-            assert_eq!(res.values[i], a[i] * b[i]);
+            assert_eq!(res.scalars()[i], a[i] * b[i]);
         }
     }
     let stats = svc.shutdown();
@@ -98,11 +98,12 @@ fn many_small_jobs_round_robin() {
 
 /// Sort jobs through the service, every model: each row's 16-element vector
 /// comes back sorted, and the model ordering holds for sort latency too.
+/// `submit_sort` resolves to the same unified `JobResult` as `submit`.
 #[test]
 fn sort_service_all_models() {
     let mut cycles_by_model = std::collections::HashMap::new();
     for model in ModelKind::ALL {
-        let mut svc = PimService::start(ServiceConfig {
+        let svc = PimService::start(ServiceConfig {
             kind: WorkloadKind::Sort16,
             model,
             n_crossbars: 2,
@@ -120,14 +121,14 @@ fn sort_service_all_models() {
                     .collect()
             })
             .collect();
-        let (sorted, sim_cycles, control_bits) = svc.submit_sort(&rows).expect("submit_sort");
+        let res = svc.submit_sort(&rows).expect("submit_sort").wait().expect("wait");
         for (i, row) in rows.iter().enumerate() {
             let mut expect = row.clone();
             expect.sort_unstable();
-            assert_eq!(sorted[i], expect, "{} row {i}", model.name());
+            assert_eq!(res.rows()[i], expect, "{} row {i}", model.name());
         }
-        assert!(control_bits > 0);
-        cycles_by_model.insert(model, sim_cycles);
+        assert!(res.control_bits > 0);
+        cycles_by_model.insert(model, res.sim_cycles);
         svc.shutdown();
     }
     assert!(cycles_by_model[&ModelKind::Unlimited] <= cycles_by_model[&ModelKind::Standard]);
@@ -135,11 +136,16 @@ fn sort_service_all_models() {
     assert!(cycles_by_model[&ModelKind::Baseline] > cycles_by_model[&ModelKind::Minimal]);
 }
 
-/// Mixing job types is rejected cleanly.
+/// Mixing job types is rejected cleanly, in both directions.
 #[test]
 fn wrong_job_type_rejected() {
-    let mut svc = PimService::start(ServiceConfig { kind: WorkloadKind::Mul32, model: ModelKind::Minimal, n_crossbars: 1, rows: 4 })
+    let svc = PimService::start(ServiceConfig { kind: WorkloadKind::Mul32, model: ModelKind::Minimal, n_crossbars: 1, rows: 4 })
         .expect("service");
     assert!(svc.submit_sort(&[vec![1; 16]]).is_err());
+    svc.shutdown();
+
+    let svc = PimService::start(ServiceConfig { kind: WorkloadKind::Sort16, model: ModelKind::Minimal, n_crossbars: 1, rows: 4 })
+        .expect("service");
+    assert!(svc.submit(&[1, 2], &[3, 4]).is_err());
     svc.shutdown();
 }

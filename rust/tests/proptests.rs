@@ -297,13 +297,14 @@ fn p7_batching_invariance() {
     };
     let mut reference: Option<Vec<u64>> = None;
     for (crossbars, rows) in [(1usize, 33usize), (2, 8), (4, 5), (3, 1)] {
-        let mut svc = PimService::start(ServiceConfig { kind: WorkloadKind::Mul32, model: ModelKind::Minimal, n_crossbars: crossbars, rows })
+        let svc = PimService::start(ServiceConfig { kind: WorkloadKind::Mul32, model: ModelKind::Minimal, n_crossbars: crossbars, rows })
             .expect("service");
-        let res = svc.submit(&a, &b).expect("submit");
+        let res = svc.submit(&a, &b).expect("submit").wait().expect("wait");
         svc.shutdown();
+        let values = res.scalars().to_vec();
         match &reference {
-            None => reference = Some(res.values),
-            Some(r) => assert_eq!(&res.values, r, "{crossbars} crossbars x {rows} rows"),
+            None => reference = Some(values),
+            Some(r) => assert_eq!(&values, r, "{crossbars} crossbars x {rows} rows"),
         }
     }
 }

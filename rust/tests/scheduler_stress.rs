@@ -1,0 +1,196 @@
+//! Scheduler stress and fault-isolation tests: many jobs genuinely in
+//! flight across a small bank, malformed jobs failing in isolation, and
+//! crashed/killed workers whose work requeues to the survivors.
+
+use partition_pim::coordinator::{PimService, ServiceConfig, WorkloadKind};
+use partition_pim::isa::models::ModelKind;
+
+fn vectors(len: usize, seed: u64) -> (Vec<u64>, Vec<u64>) {
+    let mut s = seed.wrapping_mul(0x9e3779b97f4a7c15).wrapping_add(1);
+    let mut next = move || {
+        s ^= s << 13;
+        s ^= s >> 7;
+        s ^= s << 17;
+        s & 0xffff_ffff
+    };
+    ((0..len).map(|_| next()).collect(), (0..len).map(|_| next()).collect())
+}
+
+fn mul_service(n_crossbars: usize, rows: usize) -> PimService {
+    PimService::start(ServiceConfig { kind: WorkloadKind::Mul32, model: ModelKind::Minimal, n_crossbars, rows })
+        .expect("service")
+}
+
+/// Many mixed-size jobs in flight at once; results are checked element-wise
+/// and the aggregate statistics are exact. Handles are awaited in *reverse*
+/// submission order, so early jobs are still pending while later ones are
+/// already being consumed — several jobs genuinely overlap.
+#[test]
+fn stress_mixed_jobs_in_flight() {
+    let rows = 8usize;
+    let svc = mul_service(3, rows);
+    let sizes = [1usize, 5, 8, 9, 17, 24, 31, 40, 64, 70, 3, 12];
+    let mut pending = Vec::new();
+    for (j, &len) in sizes.iter().enumerate() {
+        let (a, b) = vectors(len, j as u64);
+        let handle = svc.submit(&a, &b).expect("submit");
+        pending.push((a, b, handle));
+    }
+    for (a, b, handle) in pending.into_iter().rev() {
+        let res = handle.wait().expect("wait");
+        for i in 0..a.len() {
+            assert_eq!(res.scalars()[i], a[i] * b[i], "job {} element {i}", res.id);
+        }
+        assert!(res.sim_cycles > 0 && res.control_bits > 0);
+    }
+    let stats = svc.shutdown();
+    assert_eq!(stats.jobs, sizes.len() as u64);
+    assert_eq!(stats.failed_jobs, 0);
+    assert_eq!(stats.elements, sizes.iter().sum::<usize>() as u64);
+    assert_eq!(stats.chunks, sizes.iter().map(|s| s.div_ceil(rows)).sum::<usize>() as u64);
+}
+
+/// Multiple client threads drive one bank through cloned [`PimClient`]s —
+/// the multi-tenant scenario. Every job's results are exact and the
+/// aggregate counters add up.
+#[test]
+fn concurrent_clients_from_threads() {
+    let svc = mul_service(4, 8);
+    let n_threads = 4usize;
+    let jobs_per_thread = 5usize;
+    let len = 21usize;
+    let mut joins = Vec::new();
+    for t in 0..n_threads {
+        let client = svc.client();
+        joins.push(std::thread::spawn(move || {
+            for j in 0..jobs_per_thread {
+                let (a, b) = vectors(len, (t * 1000 + j) as u64);
+                let res = client.submit(&a, &b).expect("submit").wait().expect("wait");
+                for i in 0..len {
+                    assert_eq!(res.scalars()[i], a[i] * b[i], "thread {t} job {j} element {i}");
+                }
+            }
+        }));
+    }
+    for j in joins {
+        j.join().expect("client thread");
+    }
+    let stats = svc.shutdown();
+    assert_eq!(stats.jobs, (n_threads * jobs_per_thread) as u64);
+    assert_eq!(stats.failed_jobs, 0);
+    assert_eq!(stats.elements, (n_threads * jobs_per_thread * len) as u64);
+}
+
+/// A malformed job running *concurrently* with a healthy job fails alone:
+/// the healthy job's values and per-job metrics are identical to the same
+/// job run on a pristine service, and the bank keeps serving afterwards.
+#[test]
+fn failed_job_does_not_corrupt_concurrent_job() {
+    let (a, b) = vectors(40, 99);
+
+    // Reference: the healthy job alone on an identical pristine bank (the
+    // simulator is deterministic, so per-job metrics must match exactly).
+    let svc = mul_service(2, 4);
+    let reference = svc.submit(&a, &b).expect("submit").wait().expect("wait");
+    svc.shutdown();
+
+    let svc = mul_service(2, 4);
+    let healthy = svc.submit(&a, &b).expect("submit");
+    // Malformed operand buried in the middle chunk: chunks before and after
+    // it execute, the job still fails as a unit.
+    let mut bad_a = vec![3u64; 12];
+    bad_a[5] = 1 << 33;
+    let bad_b = vec![7u64; 12];
+    let bad = svc.submit(&bad_a, &bad_b).expect("submit");
+
+    let err = bad.wait().expect_err("oversized operand must fail its job");
+    assert!(format!("{err:#}").contains("exceeds"), "unexpected error: {err:#}");
+
+    let res = healthy.wait().expect("healthy job must be unaffected");
+    assert_eq!(res.scalars(), reference.scalars());
+    assert_eq!(res.sim_cycles, reference.sim_cycles, "failed neighbor leaked cycles into the healthy job");
+    assert_eq!(res.control_bits, reference.control_bits, "failed neighbor leaked control traffic");
+
+    // The bank is still fully serviceable.
+    let (a2, b2) = vectors(10, 123);
+    let res2 = svc.submit(&a2, &b2).expect("submit").wait().expect("wait");
+    for i in 0..10 {
+        assert_eq!(res2.scalars()[i], a2[i] * b2[i]);
+    }
+    let stats = svc.shutdown();
+    assert_eq!(stats.jobs, 2);
+    assert_eq!(stats.failed_jobs, 1);
+}
+
+/// Killing a worker mid-job is survivable: the chunk it had accepted but
+/// not executed requeues to the surviving workers and the job completes
+/// with correct results.
+#[test]
+fn killed_worker_chunks_requeue_to_survivors() {
+    let svc = mul_service(3, 4);
+    let (a, b) = vectors(60, 7); // 15 chunks across 3 workers
+    let handle = svc.submit(&a, &b).expect("submit");
+    svc.kill_worker(1).expect("kill");
+    let res = handle.wait().expect("job must survive a killed worker");
+    for i in 0..60 {
+        assert_eq!(res.scalars()[i], a[i] * b[i], "element {i}");
+    }
+    // The two survivors keep serving.
+    let (a2, b2) = vectors(24, 8);
+    let res2 = svc.submit(&a2, &b2).expect("submit").wait().expect("wait");
+    for i in 0..24 {
+        assert_eq!(res2.scalars()[i], a2[i] * b2[i]);
+    }
+    let stats = svc.shutdown();
+    assert_eq!(stats.jobs, 2);
+    assert_eq!(stats.failed_jobs, 0);
+    assert_eq!(stats.elements, 84);
+}
+
+/// A worker panicking mid-chunk (simulated crossbar dying) is contained:
+/// the worker retires, the rest of the bank keeps serving correctly.
+#[test]
+fn worker_panic_is_contained() {
+    let svc = mul_service(4, 8);
+    svc.inject_worker_panic().expect("inject");
+    for j in 0..5u64 {
+        let (a, b) = vectors(30, j + 50);
+        let res = svc.submit(&a, &b).expect("submit").wait().expect("bank must keep serving after a crash");
+        for i in 0..30 {
+            assert_eq!(res.scalars()[i], a[i] * b[i]);
+        }
+    }
+    let stats = svc.shutdown();
+    assert_eq!(stats.jobs, 5);
+}
+
+/// Regression: injecting a fault into an already-dead bank must not wedge
+/// shutdown (the poison chunk used to sit in the queue forever, and the
+/// dispatcher's drain condition never held).
+#[test]
+fn fault_injection_on_dead_bank_does_not_wedge_shutdown() {
+    let svc = mul_service(1, 4);
+    svc.kill_worker(0).expect("kill");
+    svc.inject_worker_panic().expect("inject");
+    let stats = svc.shutdown(); // must return, not deadlock
+    assert_eq!(stats.jobs, 0);
+}
+
+/// When every worker is gone, pending jobs fail cleanly (no handle hangs)
+/// and new submissions are rejected up front.
+#[test]
+fn dead_bank_fails_cleanly_instead_of_hanging() {
+    let svc = mul_service(1, 4);
+    // The poison chunk is queued (and thus executed) before the job's
+    // chunks, so the bank's only worker dies with the job still pending.
+    svc.inject_worker_panic().expect("inject");
+    let (a, b) = vectors(20, 5);
+    let pending = svc.submit(&a, &b).expect("submit");
+    assert!(pending.wait().is_err(), "job on a dead bank must fail, not hang");
+
+    let next = svc.submit(&a, &b).expect("submit");
+    assert!(next.wait().is_err(), "submissions to a dead bank must fail cleanly");
+    let stats = svc.shutdown();
+    assert_eq!(stats.jobs, 0);
+    assert_eq!(stats.failed_jobs, 2);
+}
