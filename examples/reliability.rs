@@ -16,7 +16,7 @@ use partition_pim::crossbar::gate::GateSet;
 use partition_pim::crossbar::geometry::Geometry;
 
 fn main() -> Result<()> {
-    let geom = Geometry::paper(32);
+    let geom = Geometry::paper(32)?;
     let mult = build_multpim(geom, MultPimVariant::Plain)?;
     println!("fault-rate sweep: 32 rows x 32-bit multiplication, stuck-at cell faults\n");
     println!("{:>12} {:>8} {:>14} {:>12}", "cell rate", "faults", "wrong products", "error rate");

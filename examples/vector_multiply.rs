@@ -26,7 +26,13 @@ fn main() -> Result<()> {
 
     let mut baseline_cycles_per_elem = None;
     for model in [ModelKind::Baseline, ModelKind::Unlimited, ModelKind::Standard, ModelKind::Minimal] {
-        let svc = PimService::start(ServiceConfig { kind: WorkloadKind::Mul32, model, n_crossbars: 4, rows: 64 })?;
+        let svc = PimService::start(ServiceConfig {
+            kind: WorkloadKind::Mul32,
+            model,
+            n_crossbars: 4,
+            rows: 64,
+            ..Default::default()
+        })?;
         let mut seed = 0x1234_5678_9abc_def0u64;
         let mut rnd = move || {
             seed ^= seed << 13;

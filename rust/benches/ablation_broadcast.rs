@@ -12,7 +12,7 @@ use partition_pim::isa::models::ModelKind;
 use partition_pim::isa::schedule::pack_program;
 
 fn main() {
-    let geom = Geometry::paper(1);
+    let geom = Geometry::paper(1).expect("paper geometry");
 
     section("broadcast variants (32-bit multiplication, n=1024, k=32)");
     for r in figures::broadcast_ablation(geom).expect("ablation") {

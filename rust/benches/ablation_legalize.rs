@@ -12,7 +12,7 @@ use partition_pim::isa::operation::{GateOp, Operation};
 use partition_pim::isa::schedule::pack_program;
 
 fn main() {
-    let geom = Geometry::paper(1);
+    let geom = Geometry::paper(1).expect("paper geometry");
     let fast = build_multpim(geom, MultPimVariant::Fast).expect("build");
 
     section("legalizing the Fast multiplier for minimal (Section 5 'alternatives')");

@@ -1,0 +1,106 @@
+//! Experiment E15: the coalescing occupancy sweep — small-job traffic
+//! served with and without cross-job chunk coalescing.
+//!
+//! The crossbar is row-parallel, so a shared program replay costs the same
+//! at any occupancy; without coalescing a 1-element job pays the full
+//! batch. The sweep submits a fixed element budget as jobs of 1 / 4 / 16 /
+//! 64 elements (pipelined, so the coalescer sees real queue depth) and
+//! reports elements/s plus the measured mean batch occupancy.
+//!
+//! Emits `BENCH_coalescing.json` alongside `BENCH_coordinator.json` so CI
+//! can track the utilization trajectory across PRs.
+
+use partition_pim::bench_support::{bench, section, throughput};
+use partition_pim::coordinator::{PimService, ServiceConfig, WorkloadKind};
+use partition_pim::isa::models::ModelKind;
+
+const CROSSBARS: usize = 4;
+const ROWS: usize = 64;
+const TOTAL_ELEMS: usize = 256;
+
+struct SweepRow {
+    job_len: usize,
+    coalescing: bool,
+    elements_per_sec: f64,
+    mean_batch_occupancy: f64,
+}
+
+fn run_case(job_len: usize, coalescing: bool) -> SweepRow {
+    let svc = PimService::start(ServiceConfig {
+        kind: WorkloadKind::Mul32,
+        model: ModelKind::Minimal,
+        n_crossbars: CROSSBARS,
+        rows: ROWS,
+        coalescing,
+        ..Default::default()
+    })
+    .expect("service");
+    let jobs = TOTAL_ELEMS / job_len;
+    let a: Vec<u64> = (0..job_len as u64).map(|i| (i * 2654435761) & 0xffff_ffff).collect();
+    let b: Vec<u64> = (0..job_len as u64).map(|i| (i * 40503 + 12345) & 0xffff_ffff).collect();
+    let label = format!("coalesce/{}x{}elem/{}", jobs, job_len, if coalescing { "on" } else { "off" });
+    let res = bench(&label, || {
+        // Pipelined submission: the whole traffic burst is queued before
+        // the first wait, as a loaded service would see it.
+        let handles: Vec<_> = (0..jobs).map(|_| svc.submit(&a, &b).expect("submit")).collect();
+        for h in handles {
+            let r = h.wait().expect("wait");
+            assert_eq!(r.scalars()[0], a[0] * b[0]);
+        }
+    });
+    throughput(&res, TOTAL_ELEMS as f64, "elements");
+    let stats = svc.shutdown();
+    let occupancy = stats.mean_occupancy();
+    println!("      -> mean batch occupancy {:.1}% over {} batches", 100.0 * occupancy, stats.batches);
+    SweepRow {
+        job_len,
+        coalescing,
+        elements_per_sec: TOTAL_ELEMS as f64 / res.mean.as_secs_f64(),
+        mean_batch_occupancy: occupancy,
+    }
+}
+
+fn write_json(rows: &[SweepRow], speedup_1elem: f64) {
+    let mut s = String::from("{\n");
+    s.push_str("  \"bench\": \"coalescing\",\n");
+    s.push_str(&format!(
+        "  \"config\": {{\"crossbars\": {CROSSBARS}, \"rows\": {ROWS}, \"total_elements\": {TOTAL_ELEMS}, \"model\": \"minimal\"}},\n"
+    ));
+    s.push_str("  \"sweep\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"job_len\": {}, \"coalescing\": {}, \"elements_per_sec\": {:.1}, \"mean_batch_occupancy\": {:.4}}}{}\n",
+            r.job_len,
+            r.coalescing,
+            r.elements_per_sec,
+            r.mean_batch_occupancy,
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    s.push_str(&format!("  ],\n  \"speedup_1elem\": {speedup_1elem:.3}\n}}\n"));
+    match std::fs::write("BENCH_coalescing.json", s) {
+        Ok(()) => println!("\nwrote BENCH_coalescing.json"),
+        Err(e) => println!("\nWARNING: could not write BENCH_coalescing.json: {e}"),
+    }
+}
+
+fn main() {
+    section(&format!(
+        "coalescing occupancy sweep: {TOTAL_ELEMS} elements as jobs of 1/4/16/64, {CROSSBARS} crossbars x {ROWS} rows"
+    ));
+    let mut rows = Vec::new();
+    for &job_len in &[1usize, 4, 16, 64] {
+        for coalescing in [false, true] {
+            rows.push(run_case(job_len, coalescing));
+        }
+    }
+    let eps = |coalescing: bool| {
+        rows.iter()
+            .find(|r| r.job_len == 1 && r.coalescing == coalescing)
+            .map(|r| r.elements_per_sec)
+            .unwrap_or(f64::NAN)
+    };
+    let speedup_1elem = eps(true) / eps(false);
+    println!("\ncoalescing speedup on single-element jobs: {speedup_1elem:.2}x");
+    write_json(&rows, speedup_1elem);
+}

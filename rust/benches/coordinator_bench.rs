@@ -48,8 +48,14 @@ fn main() {
     let mut json_rows: Vec<ModelRow> = Vec::new();
     section(&format!("service throughput: {JOB_LEN}-element multiply jobs, {CROSSBARS} crossbars x {ROWS} rows"));
     for model in [ModelKind::Minimal, ModelKind::Standard, ModelKind::Unlimited] {
-        let svc = PimService::start(ServiceConfig { kind: WorkloadKind::Mul32, model, n_crossbars: CROSSBARS, rows: ROWS })
-            .expect("service");
+        let svc = PimService::start(ServiceConfig {
+            kind: WorkloadKind::Mul32,
+            model,
+            n_crossbars: CROSSBARS,
+            rows: ROWS,
+            ..Default::default()
+        })
+        .expect("service");
         let a: Vec<u64> = (0..JOB_LEN as u64).map(|i| (i * 2654435761) & 0xffff_ffff).collect();
         let b: Vec<u64> = (0..JOB_LEN as u64).map(|i| (i * 40503 + 12345) & 0xffff_ffff).collect();
         let res = bench(&format!("service/mul32/{}", model.name()), || {
@@ -75,8 +81,14 @@ fn main() {
 
     section("scheduler ablation: pipelined vs serial submission (minimal, 8 jobs x 128 elements)");
     let mk = || {
-        PimService::start(ServiceConfig { kind: WorkloadKind::Mul32, model: ModelKind::Minimal, n_crossbars: 4, rows: 16 })
-            .expect("service")
+        PimService::start(ServiceConfig {
+            kind: WorkloadKind::Mul32,
+            model: ModelKind::Minimal,
+            n_crossbars: 4,
+            rows: 16,
+            ..Default::default()
+        })
+        .expect("service")
     };
     let a: Vec<u64> = (0..128u64).map(|i| (i * 7919) & 0xffff_ffff).collect();
     let b: Vec<u64> = (0..128u64).map(|i| (i * 104729) & 0xffff_ffff).collect();
@@ -100,8 +112,14 @@ fn main() {
 
     section("batching ablation: rows per crossbar (minimal model)");
     for rows in [8usize, 32, 128] {
-        let svc = PimService::start(ServiceConfig { kind: WorkloadKind::Mul32, model: ModelKind::Minimal, n_crossbars: 4, rows })
-            .expect("service");
+        let svc = PimService::start(ServiceConfig {
+            kind: WorkloadKind::Mul32,
+            model: ModelKind::Minimal,
+            n_crossbars: 4,
+            rows,
+            ..Default::default()
+        })
+        .expect("service");
         let a: Vec<u64> = (0..256u64).map(|i| (i * 7919) & 0xffff_ffff).collect();
         let b: Vec<u64> = (0..256u64).map(|i| (i * 104729) & 0xffff_ffff).collect();
         let res = bench(&format!("service/batch-rows-{rows}"), || {

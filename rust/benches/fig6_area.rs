@@ -12,7 +12,7 @@ fn main() {
         println!("{:<11} {:>14} {:>8.2}x", r.model.name(), r.stats.footprint_cols, r.area_ratio);
     }
 
-    let geom = Geometry::paper(64);
+    let geom = Geometry::paper(64).expect("paper geometry");
     section("physical overhead");
     println!("isolation transistors: {:.2}% of row cells (paper cites ~3% [8])", 100.0 * figures::transistor_overhead(&geom));
     for r in figures::periphery_table(&geom) {

@@ -12,7 +12,7 @@ use partition_pim::isa::operation::{GateOp, Operation};
 use partition_pim::periphery;
 
 fn main() {
-    let geom = Geometry::paper(64);
+    let geom = Geometry::paper(64).expect("paper geometry");
 
     section("Figure 6(b): message formats vs lower bounds (paper: 30/607/79/36 bits)");
     println!("{:<11} {:>12} {:>13} {:>10}", "model", "format bits", "lower bound", "overhead");
@@ -28,7 +28,7 @@ fn main() {
 
     section("total control traffic for one 32-bit multiplication");
     for model in ModelKind::ALL {
-        let g = workload_geometry(WorkloadKind::Mul32, model, 1);
+        let g = workload_geometry(WorkloadKind::Mul32, model, 1).expect("geometry");
         let (prog, _) = compile_workload(WorkloadKind::Mul32, model, g).expect("compile");
         println!(
             "{:<11} {:>10} bits over {:>5} cycles",

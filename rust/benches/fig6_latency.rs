@@ -27,7 +27,7 @@ fn main() {
 
     section("wall-clock: simulator executing one full multiplication program (64 rows)");
     for model in ModelKind::ALL {
-        let geom = workload_geometry(WorkloadKind::Mul32, model, 64);
+        let geom = workload_geometry(WorkloadKind::Mul32, model, 64).expect("geometry");
         let (prog, _) = compile_workload(WorkloadKind::Mul32, model, geom).expect("compile");
         let mut xb = Crossbar::new(geom, GateSet::NotNor);
         xb.state.fill_random(1);
@@ -40,7 +40,7 @@ fn main() {
 
     section("wall-clock: full control-message path (encode -> decode -> periphery -> execute)");
     for model in [ModelKind::Unlimited, ModelKind::Standard, ModelKind::Minimal] {
-        let geom = workload_geometry(WorkloadKind::Mul32, model, 64);
+        let geom = workload_geometry(WorkloadKind::Mul32, model, 64).expect("geometry");
         let (prog, _) = compile_workload(WorkloadKind::Mul32, model, geom).expect("compile");
         let mut xb = Crossbar::new(geom, GateSet::NotNor);
         xb.state.fill_random(1);
@@ -53,7 +53,7 @@ fn main() {
 
     section("wall-clock: pre-encoded message stream (controller encodes once)");
     for model in [ModelKind::Unlimited, ModelKind::Standard, ModelKind::Minimal] {
-        let geom = workload_geometry(WorkloadKind::Mul32, model, 64);
+        let geom = workload_geometry(WorkloadKind::Mul32, model, 64).expect("geometry");
         let (prog, _) = compile_workload(WorkloadKind::Mul32, model, geom).expect("compile");
         let mut xb = Crossbar::new(geom, GateSet::NotNor);
         xb.state.fill_random(1);

@@ -190,7 +190,7 @@ mod tests {
     /// > minimal > baseline, and each costs more than its NOT/NOR original.
     #[test]
     fn extended_format_lengths() {
-        let g = Geometry::paper(1);
+        let g = Geometry::paper(1).unwrap();
         let ext: Vec<usize> = ModelKind::ALL.iter().map(|&m| extended_message_bits(m, &g)).collect();
         let base: Vec<usize> = ModelKind::ALL.iter().map(|&m| crate::isa::encode::message_bits(m, &g)).collect();
         for (e, b) in ext.iter().zip(&base) {

@@ -381,7 +381,7 @@ mod tests {
 
     #[test]
     fn control_bits_accounting() {
-        let geom = Geometry::paper(8);
+        let geom = Geometry::paper(8).unwrap();
         let mut b = Builder::new(geom, GateSet::NotNor);
         b.init1(vec![0, 1]).unwrap();
         b.nor(0, 1, 2).unwrap();

@@ -88,7 +88,7 @@ mod tests {
     use crate::isa::encode::message_bits;
 
     fn paper() -> Geometry {
-        Geometry::paper(64)
+        Geometry::paper(64).unwrap()
     }
 
     /// Section 2.3: "over 2^443 different operations, thus ... at least

@@ -1,0 +1,319 @@
+//! Cross-job chunk coalescing: the dispatcher-side packing policy that
+//! turns per-job partial chunks into full shared row-batches.
+//!
+//! The crossbar is row-parallel by construction — a program replay costs
+//! the same whether 1 or 64 rows hold operands — so shipping a 1-element
+//! job alone wastes almost the whole bank. The [`Coalescer`] holds every
+//! pending segment in arrival order and releases *batches*:
+//!
+//! * **Greedy front-anchored first-fit.** The oldest pending segment always
+//!   opens the batch (so the head of the queue can never starve); younger
+//!   segments that still fit in the remaining rows are pulled in, skipping
+//!   over ones that don't. Relative order among skipped segments is
+//!   preserved. Compatibility is structural: one coalescer serves one bank,
+//!   and a bank fixes workload kind, model and geometry at service start,
+//!   so every segment in the queue is packable with every other.
+//! * **Full batches dispatch immediately.** Occupancy == rows never waits.
+//! * **Linger window.** An underfull batch waits up to `linger` for
+//!   co-tenants, counted from its oldest segment's arrival — a lone tiny
+//!   job is delayed by at most one window, never forever. `flush` (service
+//!   shutdown) overrides the wait, a full segment further back is never
+//!   held behind an open window, and segments requeued after a worker
+//!   death were already dispatchable once, so they never linger again.
+//! * **Poison ships alone.** Fault-injection payloads simulate a crossbar
+//!   dying mid-operation; co-batching one with real traffic would fail
+//!   innocent jobs, so a poison segment is its own batch and an opaque
+//!   barrier to packing across it.
+
+use crate::coordinator::worker::{Payload, Segment};
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+struct Pending {
+    seg: Segment,
+    /// Arrival time (the linger clock).
+    since: Instant,
+    /// Handed back unexecuted by a retiring worker: the segment already
+    /// sat out a window once, so it never lingers again.
+    requeued: bool,
+}
+
+fn is_poison(seg: &Segment) -> bool {
+    matches!(seg.payload, Payload::Poison)
+}
+
+/// The dispatcher's pending-segment queue plus the packing policy.
+pub struct Coalescer {
+    /// Row capacity of one batch (the bank geometry's row count).
+    rows: usize,
+    /// How long an underfull batch may wait for co-tenants.
+    linger: Duration,
+    /// When false, every segment ships alone — the serialized ablation the
+    /// coalescing bench measures against.
+    enabled: bool,
+    pending: VecDeque<Pending>,
+}
+
+impl Coalescer {
+    pub fn new(rows: usize, linger: Duration, enabled: bool) -> Self {
+        Self { rows, linger, enabled, pending: VecDeque::new() }
+    }
+
+    /// Enqueue a freshly submitted segment (its linger clock starts now).
+    pub fn push_back(&mut self, seg: Segment, now: Instant) {
+        self.pending.push_back(Pending { seg, since: now, requeued: false });
+    }
+
+    /// Requeue segments handed back unexecuted (killed worker), ahead of
+    /// everything already waiting and in their original relative order.
+    /// They were already dispatchable once, so they are immediately
+    /// dispatchable again — no second linger window.
+    pub fn push_front(&mut self, segs: Vec<Segment>, now: Instant) {
+        for seg in segs.into_iter().rev() {
+            self.pending.push_front(Pending { seg, since: now, requeued: true });
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Drop every pending segment whose job is dead, returning them so the
+    /// dispatcher can resolve their outstanding-chunk accounting.
+    pub fn drain_dead(&mut self, mut dead: impl FnMut(&Segment) -> bool) -> Vec<Segment> {
+        let mut dropped = Vec::new();
+        self.pending.retain_mut(|p| {
+            if dead(&p.seg) {
+                dropped.push(std::mem::replace(
+                    &mut p.seg,
+                    Segment { job: 0, offset: 0, payload: Payload::Pairs(Vec::new()) },
+                ));
+                false
+            } else {
+                true
+            }
+        });
+        dropped
+    }
+
+    /// When the head batch is underfull, the instant its linger window
+    /// expires and it becomes dispatchable anyway. `None` when the queue is
+    /// empty or coalescing is disabled (everything is dispatchable now).
+    pub fn deadline(&self) -> Option<Instant> {
+        if !self.enabled {
+            return None;
+        }
+        self.pending.front().map(|p| if p.requeued { p.since } else { p.since + self.linger })
+    }
+
+    /// Pop the next dispatchable batch: a full batch whenever the queued
+    /// segments fill `rows`; an underfull batch only once its oldest
+    /// segment has lingered past the window, or when `flush` is set.
+    /// Returns `None` when nothing is dispatchable yet.
+    pub fn pop_batch(&mut self, now: Instant, flush: bool) -> Option<Vec<Segment>> {
+        let (front_poison, front_span, oldest, front_requeued) = {
+            let front = self.pending.front()?;
+            (is_poison(&front.seg), front.seg.payload.len(), front.since, front.requeued)
+        };
+        // Poison ships alone; so does every segment when coalescing is off.
+        // A full segment is its own batch, and an oversized one (which the
+        // submit path never produces) ships alone too, so the worker can
+        // reject it instead of it wedging the queue head forever.
+        if front_poison || !self.enabled || front_span >= self.rows {
+            return Some(vec![self.pending.pop_front().expect("front exists").seg]);
+        }
+        // Greedy first-fit scan. The front segment fits (checked above), so
+        // the batch's linger clock is the front's arrival time.
+        let mut take = Vec::new();
+        let mut fill = 0usize;
+        for (i, p) in self.pending.iter().enumerate() {
+            if is_poison(&p.seg) {
+                break; // never pack across a fault-injection barrier
+            }
+            let span = p.seg.payload.len();
+            if fill + span <= self.rows {
+                take.push(i);
+                fill += span;
+                if fill == self.rows {
+                    break;
+                }
+            }
+        }
+        if fill < self.rows && !flush && !front_requeued && now < oldest + self.linger {
+            // The head batch keeps lingering for co-tenants, but a full
+            // segment further back needs no packing at all — ship it now
+            // rather than stalling it (and an idle crossbar) behind a
+            // younger window. The head's linger clock is unaffected, and a
+            // poison barrier is still never crossed.
+            for (i, p) in self.pending.iter().enumerate() {
+                if is_poison(&p.seg) {
+                    break;
+                }
+                if p.seg.payload.len() >= self.rows {
+                    return Some(vec![self.pending.remove(i).expect("scanned index exists").seg]);
+                }
+            }
+            return None;
+        }
+        let mut batch = Vec::with_capacity(take.len());
+        for &i in take.iter().rev() {
+            batch.push(self.pending.remove(i).expect("scanned index exists").seg);
+        }
+        batch.reverse();
+        Some(batch)
+    }
+
+    /// Drop everything (bank death: the jobs are being failed wholesale, so
+    /// per-segment accounting no longer matters).
+    pub fn clear(&mut self) {
+        self.pending.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seg(job: u64, span: usize) -> Segment {
+        Segment { job, offset: 0, payload: Payload::Pairs(vec![(1, 1); span]) }
+    }
+
+    fn poison() -> Segment {
+        Segment { job: u64::MAX, offset: 0, payload: Payload::Poison }
+    }
+
+    fn spans(batch: &[Segment]) -> Vec<(u64, usize)> {
+        batch.iter().map(|s| (s.job, s.payload.len())).collect()
+    }
+
+    #[test]
+    fn full_batches_dispatch_immediately() {
+        let t0 = Instant::now();
+        let mut c = Coalescer::new(8, Duration::from_secs(3600), true);
+        for j in 0..8 {
+            c.push_back(seg(j, 1), t0);
+        }
+        // No linger elapsed, but occupancy is full.
+        let batch = c.pop_batch(t0, false).expect("full batch must not wait");
+        assert_eq!(batch.len(), 8);
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn underfull_batch_waits_for_linger_then_releases() {
+        let t0 = Instant::now();
+        let linger = Duration::from_millis(5);
+        let mut c = Coalescer::new(8, linger, true);
+        c.push_back(seg(1, 3), t0);
+        assert!(c.pop_batch(t0, false).is_none(), "underfull batch must linger");
+        assert_eq!(c.deadline(), Some(t0 + linger));
+        // Window expired: the lone segment ships underfull.
+        let batch = c.pop_batch(t0 + linger, false).expect("lingered batch must release");
+        assert_eq!(spans(&batch), vec![(1, 3)]);
+    }
+
+    #[test]
+    fn flush_overrides_linger() {
+        let t0 = Instant::now();
+        let mut c = Coalescer::new(8, Duration::from_secs(3600), true);
+        c.push_back(seg(1, 2), t0);
+        let batch = c.pop_batch(t0, true).expect("flush releases underfull batches");
+        assert_eq!(spans(&batch), vec![(1, 2)]);
+    }
+
+    #[test]
+    fn first_fit_skips_oversized_and_preserves_order() {
+        let t0 = Instant::now();
+        let mut c = Coalescer::new(8, Duration::from_secs(3600), true);
+        c.push_back(seg(1, 5), t0); // opens the batch
+        c.push_back(seg(2, 8), t0); // doesn't fit next to 5 → skipped
+        c.push_back(seg(3, 3), t0); // fills the batch to 8
+        let batch = c.pop_batch(t0, false).expect("batch fills to capacity");
+        assert_eq!(spans(&batch), vec![(1, 5), (3, 3)]);
+        // The skipped full-size segment is now the front and ships next.
+        let batch = c.pop_batch(t0, false).expect("full segment is its own batch");
+        assert_eq!(spans(&batch), vec![(2, 8)]);
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn full_segment_is_not_stalled_by_a_lingering_head() {
+        let t0 = Instant::now();
+        let mut c = Coalescer::new(8, Duration::from_secs(3600), true);
+        c.push_back(seg(1, 3), t0); // underfull head, window open
+        c.push_back(seg(2, 8), t0); // full: needs no packing
+        // The full segment ships immediately; the head keeps lingering.
+        let batch = c.pop_batch(t0, false).expect("full occupancy never waits");
+        assert_eq!(spans(&batch), vec![(2, 8)]);
+        assert!(c.pop_batch(t0, false).is_none(), "the head's window is still open");
+        let batch = c.pop_batch(t0 + Duration::from_secs(3600), false).expect("lingered head releases");
+        assert_eq!(spans(&batch), vec![(1, 3)]);
+    }
+
+    #[test]
+    fn disabled_coalescer_ships_each_segment_alone() {
+        let t0 = Instant::now();
+        let mut c = Coalescer::new(8, Duration::from_secs(3600), false);
+        c.push_back(seg(1, 1), t0);
+        c.push_back(seg(2, 1), t0);
+        assert!(c.deadline().is_none(), "disabled coalescing never lingers");
+        assert_eq!(spans(&c.pop_batch(t0, false).unwrap()), vec![(1, 1)]);
+        assert_eq!(spans(&c.pop_batch(t0, false).unwrap()), vec![(2, 1)]);
+    }
+
+    #[test]
+    fn poison_ships_alone_and_blocks_packing_across() {
+        let t0 = Instant::now();
+        let mut c = Coalescer::new(8, Duration::from_secs(3600), true);
+        c.push_back(seg(1, 2), t0);
+        c.push_back(poison(), t0);
+        c.push_back(seg(2, 6), t0);
+        // Packing must not reach past the poison to grab job 2.
+        assert!(c.pop_batch(t0, false).is_none(), "underfull head must not pack across poison");
+        let batch = c.pop_batch(t0, true).expect("flushed head");
+        assert_eq!(spans(&batch), vec![(1, 2)]);
+        let batch = c.pop_batch(t0, false).expect("poison batch");
+        assert!(matches!(batch[0].payload, Payload::Poison));
+        assert_eq!(batch.len(), 1);
+    }
+
+    #[test]
+    fn drain_dead_removes_only_dead_jobs() {
+        let t0 = Instant::now();
+        let mut c = Coalescer::new(8, Duration::from_secs(3600), true);
+        c.push_back(seg(1, 2), t0);
+        c.push_back(seg(2, 2), t0);
+        c.push_back(seg(1, 1), t0);
+        let dropped = c.drain_dead(|s| s.job == 1);
+        assert_eq!(dropped.len(), 2);
+        assert!(dropped.iter().all(|s| s.job == 1));
+        assert_eq!(c.len(), 1);
+        assert_eq!(spans(&c.pop_batch(t0, true).unwrap()), vec![(2, 2)]);
+    }
+
+    #[test]
+    fn requeued_segments_keep_their_order_at_the_front() {
+        let t0 = Instant::now();
+        let mut c = Coalescer::new(8, Duration::from_secs(3600), true);
+        c.push_back(seg(9, 8), t0);
+        c.push_front(vec![seg(1, 4), seg(2, 4)], t0);
+        let batch = c.pop_batch(t0, false).expect("requeued segments fill a batch");
+        assert_eq!(spans(&batch), vec![(1, 4), (2, 4)]);
+    }
+
+    /// A segment handed back by a dying worker already sat out its window
+    /// once: it must be dispatchable again immediately, not re-linger.
+    #[test]
+    fn requeued_segments_do_not_relinger() {
+        let t0 = Instant::now();
+        let mut c = Coalescer::new(8, Duration::from_secs(3600), true);
+        c.push_front(vec![seg(1, 2)], t0);
+        assert_eq!(c.deadline(), Some(t0), "requeued work is due immediately");
+        let batch = c.pop_batch(t0, false).expect("no second linger window");
+        assert_eq!(spans(&batch), vec![(1, 2)]);
+    }
+}

@@ -15,14 +15,22 @@
 //!   independently — the single-row parallelism stateful logic provides for
 //!   free.
 //! * [`PimService::submit`] is non-blocking and returns a [`JobHandle`], so
-//!   any number of jobs are in flight at once; a central dispatcher assigns
-//!   row-chunks to *idle* workers (pull model) and routes completions back
-//!   by job id. [`PimService::client`] hands out cloneable `Send`
-//!   submission front-ends for multi-threaded clients.
-//! * Faults are isolated per job and per worker: a malformed operand fails
-//!   only its own job (the worker keeps serving), a crashed worker retires
-//!   from the bank and the chunks it had not executed are requeued to the
-//!   survivors (see DESIGN.md §Coordinator).
+//!   any number of jobs are in flight at once; a central dispatcher routes
+//!   completions back by job id and assigns work to *idle* workers (pull
+//!   model). [`PimService::client`] hands out cloneable `Send` submission
+//!   front-ends for multi-threaded clients.
+//! * Before work reaches a worker it passes the [`coalesce::Coalescer`]:
+//!   partial row-chunks from different jobs pack into one shared
+//!   full-occupancy batch (the crossbar is row-parallel, so a batch costs
+//!   the same at any occupancy — shipping small jobs alone wasted almost
+//!   the entire bank). Per-job metrics are attributed per segment:
+//!   occupancy-proportional cycles/control traffic, exact row-range
+//!   switching energy.
+//! * Faults are isolated per segment, per batch and per worker: a malformed
+//!   operand fails only its own job while co-batched segments complete (the
+//!   worker keeps serving), a crashed worker retires from the bank and the
+//!   batch it had not executed is requeued to the survivors (see DESIGN.md
+//!   §Coordinator).
 //! * Workers stream the compiled program **as encoded control messages**
 //!   through the periphery decode path (the production path), so control
 //!   traffic, cycles and energy are metered exactly as the paper counts them.
@@ -31,8 +39,9 @@
 //! `mpsc` channels (see DESIGN.md §Substitutions); the architecture is
 //! unchanged.
 
+pub mod coalesce;
 pub mod service;
 pub mod worker;
 
 pub use service::{JobHandle, JobResult, JobValues, PimClient, PimService, ServiceConfig, ServiceStats};
-pub use worker::WorkloadKind;
+pub use worker::{Segment, SegmentReport, WorkloadKind};

@@ -1,40 +1,52 @@
 //! The controller service: a concurrent, fault-isolated job scheduler over
-//! a bank of crossbar workers.
+//! a bank of crossbar workers, with cross-job chunk coalescing.
 //!
-//! Jobs are split into row-chunks that flow through a central dispatcher:
+//! Jobs are split into row-segments that flow through a central dispatcher;
+//! a [`crate::coordinator::coalesce::Coalescer`] packs partial segments
+//! from different jobs into shared full-occupancy row-batches before they
+//! reach a worker:
 //!
 //! ```text
-//!   clients ──Register/Enqueue──▶ Dispatcher ──pull──▶ Worker threads
-//!      ▲                             │  job table         │
-//!      └────── JobHandle::wait ◀─────┴──── Done/Exit ◀────┘
+//!   clients ──Register/Enqueue──▶ Dispatcher ──batches──▶ Worker threads
+//!      ▲                           │ job table │ coalescer   │
+//!      └───── JobHandle::wait ◀────┴──────── Done/Exit ◀─────┘
 //! ```
 //!
 //! * [`PimService::submit`] / [`PimService::submit_sort`] are non-blocking:
 //!   they hand the job to the dispatcher and return a [`JobHandle`]. Any
 //!   number of jobs can be in flight; completions are routed by job id, so
-//!   chunks of different jobs interleave freely across the bank.
-//! * Workers *pull* chunks (the dispatcher assigns work only to idle, live
+//!   segments of different jobs interleave freely across the bank — and,
+//!   after coalescing, even within one batch.
+//! * The crossbar is row-parallel, so a batch costs the same whether 1 or
+//!   all rows hold operands. The coalescer therefore packs small jobs
+//!   together (greedy first-fit up to full occupancy, with a short linger
+//!   window for underfull batches — see `coalesce.rs`), and per-job metrics
+//!   become attribution over the shared batch: occupancy-proportional
+//!   `sim_cycles`/`control_bits`, exact row-range `switch_events`.
+//! * Workers *pull* batches (the dispatcher assigns work only to idle, live
 //!   workers), so a dead worker never strands queued work.
-//! * A chunk failure (malformed operand, readback error) fails only its own
-//!   job: the worker reports `Err` and keeps serving, the job's handle
-//!   resolves to `Err` immediately, and the job's remaining chunks are
-//!   drained without poisoning any other job.
-//! * A crashed worker (panic mid-chunk, or [`PimService::kill_worker`])
-//!   retires from the bank; a chunk it had accepted but not executed is
-//!   requeued to the surviving workers. Only when *every* worker is gone do
-//!   pending jobs fail.
+//! * A segment failure (malformed operand, readback error) fails only its
+//!   own job: co-batched segments still complete, the worker keeps serving,
+//!   the failed job's handle resolves to `Err` immediately, and its
+//!   remaining segments are drained without poisoning any other job.
+//! * A crashed worker (panic mid-batch, or [`PimService::kill_worker`])
+//!   retires from the bank; a batch it had accepted but not executed is
+//!   requeued to the surviving workers. A batch that was *executing* when
+//!   the crossbar died fails every job aboard (they shared the hardware).
+//!   Only when *every* worker is gone do pending jobs fail.
 
-use crate::coordinator::worker::{workload_geometry, ChunkValues, Payload, Worker, WorkloadKind};
+use crate::coordinator::coalesce::Coalescer;
+use crate::coordinator::worker::{workload_geometry, ChunkValues, Payload, Segment, SegmentReport, Worker, WorkloadKind};
 use crate::crossbar::crossbar::Metrics;
 use crate::isa::models::ModelKind;
 use anyhow::{anyhow, ensure, Context, Result};
-use std::collections::{HashMap, VecDeque};
+use std::collections::HashMap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Service configuration.
 #[derive(Debug, Clone, Copy)]
@@ -45,11 +57,25 @@ pub struct ServiceConfig {
     pub n_crossbars: usize,
     /// Rows per crossbar (elements per batch chunk).
     pub rows: usize,
+    /// Cross-job chunk coalescing: pack partial chunks from different jobs
+    /// into one shared row-batch up to full occupancy. Disable only for the
+    /// serialized ablation (`benches/coalescing_bench.rs`).
+    pub coalescing: bool,
+    /// How long an underfull batch may wait for co-tenants before it is
+    /// dispatched anyway (bounds the latency a lone small job can pay).
+    pub linger: Duration,
 }
 
 impl Default for ServiceConfig {
     fn default() -> Self {
-        Self { kind: WorkloadKind::Mul32, model: ModelKind::Minimal, n_crossbars: 4, rows: 64 }
+        Self {
+            kind: WorkloadKind::Mul32,
+            model: ModelKind::Minimal,
+            n_crossbars: 4,
+            rows: 64,
+            coalescing: true,
+            linger: Duration::from_micros(200),
+        }
     }
 }
 
@@ -91,14 +117,22 @@ impl JobValues {
 }
 
 /// Completed-job report (shared by element-wise and sort jobs).
+///
+/// When the job's segments rode coalesced batches, `sim_cycles` and
+/// `control_bits` are its occupancy-proportional share of each shared
+/// batch, while `switch_events` counts exactly the memristor flips inside
+/// the job's own row ranges (see `coordinator::worker::SegmentReport`).
 #[derive(Debug, Clone)]
 pub struct JobResult {
     pub id: u64,
     pub values: JobValues,
-    /// Simulated crossbar cycles spent on this job's chunks (summed).
+    /// Simulated crossbar cycles attributed to this job (summed).
     pub sim_cycles: u64,
-    /// Control traffic the job generated, in bits.
+    /// Control traffic attributed to this job, in bits.
     pub control_bits: u64,
+    /// Memristor switching events inside this job's row ranges (exact —
+    /// the per-job energy signal the ghost-row bug used to pollute).
+    pub switch_events: u64,
     /// Wall-clock service latency, submit to completion.
     pub wall: std::time::Duration,
 }
@@ -122,31 +156,53 @@ pub struct ServiceStats {
     pub jobs: u64,
     /// Jobs that failed (bad operands, crashed worker, dead bank).
     pub failed_jobs: u64,
-    /// Elements processed by successfully executed chunks.
+    /// Elements processed by successfully executed segments.
     pub elements: u64,
-    /// Chunks executed successfully.
+    /// Segments (per-job chunks) executed successfully.
     pub chunks: u64,
+    /// Shared row-batches executed (a batch carries >= 1 segment).
+    pub batches: u64,
+    /// Rows carrying operands across executed batches.
+    pub occupied_rows: u64,
+    /// Row capacity across executed batches (`batches * rows`).
+    pub capacity_rows: u64,
     pub metrics: Metrics,
 }
 
-/// Job id reserved for fault-injection poison chunks (never a real job).
-const POISON_JOB: u64 = u64::MAX;
-
-struct Chunk {
-    job: u64,
-    offset: usize,
-    payload: Payload,
+impl ServiceStats {
+    /// Mean batch occupancy in [0, 1]: the fraction of the bank's row
+    /// parallelism that carried operands — the utilization the coalescer
+    /// exists to maximize.
+    pub fn mean_occupancy(&self) -> f64 {
+        if self.capacity_rows == 0 {
+            0.0
+        } else {
+            self.occupied_rows as f64 / self.capacity_rows as f64
+        }
+    }
 }
 
-/// Everything the dispatcher hears: job registration and chunk supply from
-/// clients, pull requests and completions from workers, fault injection and
-/// shutdown from the service front-end.
+/// Job id reserved for fault-injection poison segments (never a real job).
+const POISON_JOB: u64 = u64::MAX;
+
+/// One coalesced unit of work: segments from any number of jobs, packed
+/// back-to-back into a single shared row-batch.
+struct Batch {
+    segments: Vec<Segment>,
+}
+
+/// Everything the dispatcher hears: job registration and segment supply
+/// from clients, pull requests and completions from workers, fault
+/// injection and shutdown from the service front-end.
 enum Event {
     Register { id: u64, accum: JobValues, n_chunks: usize, start: Instant, result_tx: Sender<Result<JobResult>> },
-    Enqueue(Chunk),
+    Enqueue(Segment),
     Ready(usize),
-    Done { job: u64, offset: usize, result: std::result::Result<(ChunkValues, Metrics), String> },
-    WorkerExit { worker: usize, unfinished: Option<Chunk>, crashed: bool },
+    /// Per-segment outcomes of one batch. `executed` is false when the
+    /// batch failed wholesale before the shared program ran (its reports
+    /// then carry the batch error and zero metrics).
+    Done { reports: Vec<SegmentReport>, metrics: Metrics, executed: bool },
+    WorkerExit { worker: usize, unfinished: Option<Batch>, crashed: bool },
     KillWorker(usize),
     Shutdown,
 }
@@ -154,10 +210,11 @@ enum Event {
 struct JobState {
     /// Result accumulator, filled in by offset as completions arrive.
     accum: JobValues,
-    /// Chunks not yet resolved (completed, failed, or drained).
+    /// Segments not yet resolved (completed, failed, or drained).
     outstanding: usize,
     sim_cycles: u64,
     control_bits: u64,
+    switch_events: u64,
     start: Instant,
     /// Taken when the final result (or the first error) is delivered.
     result_tx: Option<Sender<Result<JobResult>>>,
@@ -166,26 +223,28 @@ struct JobState {
 
 struct WorkerPort {
     /// Dropped to wake and retire the worker.
-    tx: Option<Sender<Chunk>>,
-    /// Abrupt-kill flag: the worker checks it before executing a chunk and
-    /// hands the chunk back unexecuted if set.
+    tx: Option<Sender<Batch>>,
+    /// Abrupt-kill flag: the worker checks it before executing a batch and
+    /// hands the batch back unexecuted if set.
     kill: Arc<AtomicBool>,
     alive: bool,
     idle: bool,
 }
 
-/// What happened to one chunk of a job.
+/// What happened to one segment of a job.
 enum ChunkOutcome {
-    Success { offset: usize, values: ChunkValues, metrics: Metrics },
+    Success { offset: usize, values: ChunkValues, sim_cycles: u64, control_bits: u64, switch_events: u64 },
     Failure(String),
-    /// Queued chunk of an already-failed job, drained without executing.
+    /// Queued segment of an already-failed job, drained without executing.
     Drained,
 }
 
 struct Dispatcher {
     rx: Receiver<Event>,
     ports: Vec<WorkerPort>,
-    queue: VecDeque<Chunk>,
+    coalescer: Coalescer,
+    /// Row capacity of one batch (occupancy accounting).
+    rows: usize,
     jobs: HashMap<u64, JobState>,
     stats: Arc<Mutex<ServiceStats>>,
     shutting_down: bool,
@@ -193,97 +252,28 @@ struct Dispatcher {
 
 impl Dispatcher {
     fn run(mut self) {
-        while let Ok(ev) = self.rx.recv() {
-            match ev {
-                Event::Register { id, accum, n_chunks, start, result_tx } => {
-                    if self.shutting_down {
-                        self.stats.lock().unwrap().failed_jobs += 1;
-                        let _ = result_tx.send(Err(anyhow!("service is shutting down")));
-                    } else if !self.ports.iter().any(|p| p.alive) {
-                        self.stats.lock().unwrap().failed_jobs += 1;
-                        let _ = result_tx.send(Err(anyhow!("no live crossbar workers left in the bank")));
-                    } else {
-                        self.jobs.insert(
-                            id,
-                            JobState {
-                                accum,
-                                outstanding: n_chunks,
-                                sim_cycles: 0,
-                                control_bits: 0,
-                                start,
-                                result_tx: Some(result_tx),
-                                failed: false,
-                            },
-                        );
-                    }
+        loop {
+            // While an underfull batch lingers for co-tenants *and* a worker
+            // is idle to take it, sleep only until its window expires;
+            // otherwise block until the next event.
+            let ev = if self.awaiting_linger() {
+                let deadline = self.coalescer.deadline().expect("lingering implies a pending segment");
+                match self.rx.recv_timeout(deadline.saturating_duration_since(Instant::now())) {
+                    Ok(ev) => Some(ev),
+                    Err(RecvTimeoutError::Timeout) => None,
+                    Err(RecvTimeoutError::Disconnected) => break,
                 }
-                Event::Enqueue(chunk) => {
-                    // Chunks of a rejected registration are dropped here, as
-                    // are poison chunks aimed at an already-dead bank (they
-                    // could never drain and would wedge shutdown).
-                    let accept = if chunk.job == POISON_JOB {
-                        self.ports.iter().any(|p| p.alive)
-                    } else {
-                        self.jobs.contains_key(&chunk.job)
-                    };
-                    if accept {
-                        self.queue.push_back(chunk);
-                    }
+            } else {
+                match self.rx.recv() {
+                    Ok(ev) => Some(ev),
+                    Err(_) => break,
                 }
-                Event::Ready(w) => self.ports[w].idle = true,
-                Event::Done { job, offset, result } => match result {
-                    Ok((values, metrics)) => {
-                        {
-                            let n = match &values {
-                                ChunkValues::Scalars(v) => v.len(),
-                                ChunkValues::Rows(r) => r.len(),
-                            };
-                            let mut s = self.stats.lock().unwrap();
-                            s.chunks += 1;
-                            s.elements += n as u64;
-                            s.metrics.add(&metrics);
-                        }
-                        self.resolve_chunk(job, ChunkOutcome::Success { offset, values, metrics });
-                    }
-                    Err(msg) => {
-                        self.resolve_chunk(job, ChunkOutcome::Failure(format!("chunk at offset {offset}: {msg}")));
-                    }
-                },
-                Event::WorkerExit { worker, unfinished, crashed } => {
-                    let port = &mut self.ports[worker];
-                    port.alive = false;
-                    port.idle = false;
-                    port.tx = None;
-                    match unfinished {
-                        // A panic mid-chunk fails that chunk's job: the chunk
-                        // is the prime suspect, so it is not retried against
-                        // another worker.
-                        Some(chunk) if crashed => self.resolve_chunk(
-                            chunk.job,
-                            ChunkOutcome::Failure(format!("worker {worker} crashed executing chunk at offset {}", chunk.offset)),
-                        ),
-                        // Killed before executing: the chunk is innocent,
-                        // requeue it to the surviving workers.
-                        Some(chunk) => self.queue.push_front(chunk),
-                        None => {}
-                    }
-                    self.fail_all_if_bank_dead();
-                }
-                Event::KillWorker(w) => {
-                    let port = &mut self.ports[w];
-                    if port.alive {
-                        port.kill.store(true, Ordering::SeqCst);
-                        port.alive = false;
-                        // Dropping the channel wakes an idle worker so it can
-                        // observe the kill flag and retire.
-                        port.tx = None;
-                    }
-                    self.fail_all_if_bank_dead();
-                }
-                Event::Shutdown => self.shutting_down = true,
+            };
+            if let Some(ev) = ev {
+                self.handle(ev);
             }
             self.assign();
-            if self.shutting_down && self.jobs.is_empty() && self.queue.is_empty() {
+            if self.shutting_down && self.jobs.is_empty() && self.coalescer.is_empty() {
                 break;
             }
         }
@@ -296,14 +286,129 @@ impl Dispatcher {
         }
     }
 
-    /// Fold one chunk resolution into its job; deliver the final result (or
-    /// the first error) and retire the job once every chunk is accounted for.
+    /// True while the only obstacle to dispatching is an open linger window:
+    /// segments are pending, a live worker is idle, and the coalescer has a
+    /// deadline to wake up for.
+    fn awaiting_linger(&self) -> bool {
+        self.coalescer.deadline().is_some() && self.ports.iter().any(|p| p.alive && p.idle)
+    }
+
+    fn handle(&mut self, ev: Event) {
+        match ev {
+            Event::Register { id, accum, n_chunks, start, result_tx } => {
+                if self.shutting_down {
+                    self.stats.lock().unwrap().failed_jobs += 1;
+                    let _ = result_tx.send(Err(anyhow!("service is shutting down")));
+                } else if !self.ports.iter().any(|p| p.alive) {
+                    self.stats.lock().unwrap().failed_jobs += 1;
+                    let _ = result_tx.send(Err(anyhow!("no live crossbar workers left in the bank")));
+                } else {
+                    self.jobs.insert(
+                        id,
+                        JobState {
+                            accum,
+                            outstanding: n_chunks,
+                            sim_cycles: 0,
+                            control_bits: 0,
+                            switch_events: 0,
+                            start,
+                            result_tx: Some(result_tx),
+                            failed: false,
+                        },
+                    );
+                }
+            }
+            Event::Enqueue(seg) => {
+                // Segments of a rejected registration are dropped here, as
+                // are poison segments aimed at an already-dead bank (they
+                // could never drain and would wedge shutdown).
+                let accept = if seg.job == POISON_JOB {
+                    self.ports.iter().any(|p| p.alive)
+                } else {
+                    self.jobs.contains_key(&seg.job)
+                };
+                if accept {
+                    self.coalescer.push_back(seg, Instant::now());
+                }
+            }
+            Event::Ready(w) => self.ports[w].idle = true,
+            Event::Done { reports, metrics, executed } => {
+                {
+                    let mut s = self.stats.lock().unwrap();
+                    if executed {
+                        s.batches += 1;
+                        s.capacity_rows += self.rows as u64;
+                        s.occupied_rows += reports.iter().map(|r| r.span as u64).sum::<u64>();
+                        s.metrics.add(&metrics);
+                    }
+                    for r in &reports {
+                        if r.values.is_ok() {
+                            s.chunks += 1;
+                            s.elements += r.span as u64;
+                        }
+                    }
+                }
+                for r in reports {
+                    let SegmentReport { job, offset, span: _, values, sim_cycles, control_bits, switch_events } = r;
+                    let outcome = match values {
+                        Ok(values) => ChunkOutcome::Success { offset, values, sim_cycles, control_bits, switch_events },
+                        Err(msg) => ChunkOutcome::Failure(format!("chunk at offset {offset}: {msg}")),
+                    };
+                    self.resolve_chunk(job, outcome);
+                }
+            }
+            Event::WorkerExit { worker, unfinished, crashed } => {
+                let port = &mut self.ports[worker];
+                port.alive = false;
+                port.idle = false;
+                port.tx = None;
+                match unfinished {
+                    // A panic mid-batch takes down every job aboard: the
+                    // co-batched segments physically shared the dying
+                    // crossbar, and the batch is the prime suspect, so it
+                    // is not retried against another worker.
+                    Some(batch) if crashed => {
+                        for seg in batch.segments {
+                            self.resolve_chunk(
+                                seg.job,
+                                ChunkOutcome::Failure(format!(
+                                    "worker {worker} crashed executing the shared batch (chunk at offset {})",
+                                    seg.offset
+                                )),
+                            );
+                        }
+                    }
+                    // Killed before executing: the batch is innocent,
+                    // requeue its segments to the surviving workers.
+                    Some(batch) => self.coalescer.push_front(batch.segments, Instant::now()),
+                    None => {}
+                }
+                self.fail_all_if_bank_dead();
+            }
+            Event::KillWorker(w) => {
+                let port = &mut self.ports[w];
+                if port.alive {
+                    port.kill.store(true, Ordering::SeqCst);
+                    port.alive = false;
+                    // Dropping the channel wakes an idle worker so it can
+                    // observe the kill flag and retire.
+                    port.tx = None;
+                }
+                self.fail_all_if_bank_dead();
+            }
+            Event::Shutdown => self.shutting_down = true,
+        }
+    }
+
+    /// Fold one segment resolution into its job; deliver the final result
+    /// (or the first error) and retire the job once every segment is
+    /// accounted for.
     fn resolve_chunk(&mut self, job_id: u64, outcome: ChunkOutcome) {
         let Some(job) = self.jobs.get_mut(&job_id) else {
-            return; // poison chunk, or a job already finalized
+            return; // poison segment, or a job already finalized
         };
         match outcome {
-            ChunkOutcome::Success { offset, values, metrics } => {
+            ChunkOutcome::Success { offset, values, sim_cycles, control_bits, switch_events } => {
                 if !job.failed {
                     match (&mut job.accum, values) {
                         (JobValues::Scalars(acc), ChunkValues::Scalars(vs)) => {
@@ -319,8 +424,9 @@ impl Dispatcher {
                         // Unreachable: a job's payload kind is fixed at submit.
                         _ => {}
                     }
-                    job.sim_cycles += metrics.cycles;
-                    job.control_bits += metrics.control_bits;
+                    job.sim_cycles += sim_cycles;
+                    job.control_bits += control_bits;
+                    job.switch_events += switch_events;
                 }
             }
             ChunkOutcome::Failure(msg) => {
@@ -346,6 +452,7 @@ impl Dispatcher {
                         values: job.accum,
                         sim_cycles: job.sim_cycles,
                         control_bits: job.control_bits,
+                        switch_events: job.switch_events,
                         wall: job.start.elapsed(),
                     }));
                 }
@@ -353,46 +460,45 @@ impl Dispatcher {
         }
     }
 
-    /// Pop the next chunk that still needs executing, draining queued chunks
-    /// of jobs that have already failed.
-    fn pop_runnable(&mut self) -> Option<Chunk> {
-        while let Some(chunk) = self.queue.pop_front() {
-            if chunk.job == POISON_JOB {
-                return Some(chunk);
-            }
-            match self.jobs.get(&chunk.job).map(|j| j.failed) {
-                Some(false) => return Some(chunk),
-                Some(true) => self.resolve_chunk(chunk.job, ChunkOutcome::Drained),
-                None => {}
-            }
-        }
-        None
-    }
-
-    /// Hand queued chunks to idle, live workers until one of the two runs out.
+    /// Hand dispatchable batches to idle, live workers until one of the two
+    /// runs out. Dead jobs' queued segments are drained first so they never
+    /// occupy batch rows.
     fn assign(&mut self) {
         loop {
-            let Some(mut chunk) = self.pop_runnable() else { return };
+            if !self.ports.iter().any(|p| p.alive && p.idle) {
+                return;
+            }
+            let jobs = &self.jobs;
+            let dead = self
+                .coalescer
+                .drain_dead(|seg| seg.job != POISON_JOB && !matches!(jobs.get(&seg.job).map(|j| j.failed), Some(false)));
+            for seg in dead {
+                self.resolve_chunk(seg.job, ChunkOutcome::Drained);
+            }
+            let Some(segments) = self.coalescer.pop_batch(Instant::now(), self.shutting_down) else {
+                return;
+            };
+            let mut batch = Batch { segments };
             loop {
                 let Some(w) = self.ports.iter().position(|p| p.alive && p.idle) else {
-                    self.queue.push_front(chunk);
+                    self.coalescer.push_front(batch.segments, Instant::now());
                     return;
                 };
                 let Some(tx) = self.ports[w].tx.clone() else {
                     self.ports[w].alive = false;
                     continue;
                 };
-                match tx.send(chunk) {
+                match tx.send(batch) {
                     Ok(()) => {
                         self.ports[w].idle = false;
                         break;
                     }
-                    Err(std::sync::mpsc::SendError(c)) => {
+                    Err(std::sync::mpsc::SendError(b)) => {
                         // The worker died without telling us yet; its exit
                         // event will follow. Try the next live worker.
                         self.ports[w].alive = false;
                         self.ports[w].tx = None;
-                        chunk = c;
+                        batch = b;
                     }
                 }
             }
@@ -405,7 +511,7 @@ impl Dispatcher {
         if self.ports.iter().any(|p| p.alive) {
             return;
         }
-        self.queue.clear();
+        self.coalescer.clear();
         let mut newly_failed = 0u64;
         for (_, mut job) in self.jobs.drain() {
             if !job.failed {
@@ -421,35 +527,62 @@ impl Dispatcher {
     }
 }
 
-/// Worker thread body: pull a chunk, execute it, report the outcome. Chunk
-/// errors are reported and the loop continues; a panic (simulated hardware
-/// fault) retires the worker after notifying the dispatcher.
-fn worker_loop(i: usize, mut worker: Worker, rx: Receiver<Chunk>, event_tx: Sender<Event>, kill: Arc<AtomicBool>) {
+/// Worker thread body: pull a coalesced batch, execute it once, report the
+/// per-segment outcomes. Segment errors ride inside the reports and the
+/// loop continues; a whole-batch error fails every segment aboard (the
+/// worker still keeps serving); only a panic (simulated hardware fault)
+/// retires the worker after notifying the dispatcher.
+fn worker_loop(i: usize, mut worker: Worker, rx: Receiver<Batch>, event_tx: Sender<Event>, kill: Arc<AtomicBool>) {
     loop {
         if event_tx.send(Event::Ready(i)).is_err() {
             return;
         }
-        let chunk = match rx.recv() {
-            Ok(c) => c,
+        let batch = match rx.recv() {
+            Ok(b) => b,
             Err(_) => {
                 let _ = event_tx.send(Event::WorkerExit { worker: i, unfinished: None, crashed: false });
                 return;
             }
         };
         if kill.load(Ordering::SeqCst) {
-            // Abrupt retirement: hand the accepted-but-unexecuted chunk back.
-            let _ = event_tx.send(Event::WorkerExit { worker: i, unfinished: Some(chunk), crashed: false });
+            // Abrupt retirement: hand the accepted-but-unexecuted batch back.
+            let _ = event_tx.send(Event::WorkerExit { worker: i, unfinished: Some(batch), crashed: false });
             return;
         }
-        match catch_unwind(AssertUnwindSafe(|| worker.run_payload(&chunk.payload))) {
-            Ok(result) => {
-                let result = result.map_err(|e| format!("{e:#}"));
-                if event_tx.send(Event::Done { job: chunk.job, offset: chunk.offset, result }).is_err() {
+        match catch_unwind(AssertUnwindSafe(|| worker.run_segments(&batch.segments))) {
+            Ok(Ok((reports, metrics))) => {
+                // A batch whose every segment failed to load skips the
+                // shared replay entirely (zero cycles): it occupied no bank
+                // time, so it does not count into occupancy statistics.
+                let executed = metrics.cycles > 0;
+                if event_tx.send(Event::Done { reports, metrics, executed }).is_err() {
+                    return;
+                }
+            }
+            Ok(Err(e)) => {
+                // Whole-batch failure (occupancy overflow, pipeline fault):
+                // the shared program never completed, so every segment
+                // aboard fails with the batch error.
+                let msg = format!("{e:#}");
+                let reports = batch
+                    .segments
+                    .iter()
+                    .map(|s| SegmentReport {
+                        job: s.job,
+                        offset: s.offset,
+                        span: s.payload.len(),
+                        values: Err(msg.clone()),
+                        sim_cycles: 0,
+                        control_bits: 0,
+                        switch_events: 0,
+                    })
+                    .collect();
+                if event_tx.send(Event::Done { reports, metrics: Metrics::default(), executed: false }).is_err() {
                     return;
                 }
             }
             Err(_) => {
-                let _ = event_tx.send(Event::WorkerExit { worker: i, unfinished: Some(chunk), crashed: true });
+                let _ = event_tx.send(Event::WorkerExit { worker: i, unfinished: Some(batch), crashed: true });
                 return;
             }
         }
@@ -534,7 +667,7 @@ impl PimClient {
             .context("scheduler dispatcher exited")?;
         for (ci, payload) in payloads.into_iter().enumerate() {
             self.event_tx
-                .send(Event::Enqueue(Chunk { job: id, offset: ci * self.cfg.rows, payload }))
+                .send(Event::Enqueue(Segment { job: id, offset: ci * self.cfg.rows, payload }))
                 .ok()
                 .context("scheduler dispatcher exited")?;
         }
@@ -561,7 +694,7 @@ impl PimService {
     /// dispatcher thread that schedules chunks and routes completions.
     pub fn start(cfg: ServiceConfig) -> Result<Self> {
         ensure!(cfg.n_crossbars >= 1, "need at least one crossbar");
-        let geom = workload_geometry(cfg.kind, cfg.model, cfg.rows);
+        let geom = workload_geometry(cfg.kind, cfg.model, cfg.rows)?;
         let (event_tx, event_rx) = channel::<Event>();
         let stats = Arc::new(Mutex::new(ServiceStats::default()));
         let mut first = Some(Worker::new(cfg.kind, cfg.model, geom)?);
@@ -573,7 +706,7 @@ impl PimService {
                 Some(w) => w,
                 None => Worker::new(cfg.kind, cfg.model, geom)?,
             };
-            let (tx, rx) = channel::<Chunk>();
+            let (tx, rx) = channel::<Batch>();
             let kill = Arc::new(AtomicBool::new(false));
             ports.push(WorkerPort { tx: Some(tx), kill: Arc::clone(&kill), alive: true, idle: false });
             let event_tx = event_tx.clone();
@@ -591,7 +724,8 @@ impl PimService {
                 Dispatcher {
                     rx: event_rx,
                     ports,
-                    queue: VecDeque::new(),
+                    coalescer: Coalescer::new(cfg.rows, cfg.linger, cfg.coalescing),
+                    rows: cfg.rows,
                     jobs: HashMap::new(),
                     stats: dispatcher_stats,
                     shutting_down: false,
@@ -637,13 +771,15 @@ impl PimService {
         self.client.event_tx.send(Event::KillWorker(w)).ok().context("scheduler dispatcher exited")
     }
 
-    /// Fault injection: enqueue a poison chunk that panics whichever worker
-    /// picks it up — a crossbar dying mid-operation. The crash is contained:
-    /// that worker retires, every job keeps its correct results.
+    /// Fault injection: enqueue a poison segment that panics whichever
+    /// worker picks it up — a crossbar dying mid-operation. Poison never
+    /// co-batches with real traffic (the coalescer ships it alone), so the
+    /// crash is contained: that worker retires, every job keeps its correct
+    /// results.
     pub fn inject_worker_panic(&self) -> Result<()> {
         self.client
             .event_tx
-            .send(Event::Enqueue(Chunk { job: POISON_JOB, offset: 0, payload: Payload::Poison }))
+            .send(Event::Enqueue(Segment { job: POISON_JOB, offset: 0, payload: Payload::Poison }))
             .ok()
             .context("scheduler dispatcher exited")
     }
@@ -689,6 +825,7 @@ mod tests {
             model: ModelKind::Minimal,
             n_crossbars: 2,
             rows: 8,
+            ..Default::default()
         })
         .unwrap();
         let a: Vec<u64> = (0..50).map(|i| 0x9e3779b9u64.wrapping_mul(i + 1) & 0xffff_ffff).collect();
@@ -703,6 +840,11 @@ mod tests {
         assert_eq!(stats.failed_jobs, 0);
         assert_eq!(stats.elements, 50);
         assert_eq!(stats.chunks, 7); // ceil(50 / 8)
+        // One job alone cannot co-batch: six full batches plus the tail.
+        assert_eq!(stats.batches, 7);
+        assert_eq!(stats.occupied_rows, 50);
+        assert_eq!(stats.capacity_rows, 56);
+        assert!((stats.mean_occupancy() - 50.0 / 56.0).abs() < 1e-12);
     }
 
     #[test]
@@ -712,6 +854,7 @@ mod tests {
             model: ModelKind::Standard,
             n_crossbars: 3,
             rows: 4,
+            ..Default::default()
         })
         .unwrap();
         for j in 0..5u64 {
@@ -738,6 +881,7 @@ mod tests {
             model: ModelKind::Minimal,
             n_crossbars: 2,
             rows: 4,
+            ..Default::default()
         })
         .unwrap();
         let bad = svc.submit(&[1u64 << 33, 7], &[3, 5]).unwrap().wait();
@@ -766,6 +910,7 @@ mod tests {
             model: ModelKind::Minimal,
             n_crossbars: 2,
             rows: 4,
+            ..Default::default()
         })
         .unwrap();
         let big_a: Vec<u64> = (0..64).map(|i| i + 1).collect();

@@ -13,7 +13,7 @@ use crate::crossbar::geometry::Geometry;
 use crate::crossbar::state::BitMatrix;
 use crate::isa::models::ModelKind;
 use crate::isa::schedule::pack_program;
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
 /// Which vectored operation this service instance executes.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -44,6 +44,45 @@ pub enum Payload {
     /// scheduler's resilience tests and `PimService::inject_worker_panic`).
     #[doc(hidden)]
     Poison,
+}
+
+/// One job's slice of a shared row-batch. The coalescer packs segments from
+/// several compatible jobs (a service fixes workload kind, model and
+/// geometry, so every job on one bank is compatible) into a single batch up
+/// to full row occupancy; the worker executes the batch once and reads each
+/// segment back from its own row range.
+#[derive(Debug, Clone)]
+pub struct Segment {
+    /// Owning job id (completion routing key).
+    pub job: u64,
+    /// Element offset within the owning job's result accumulator.
+    pub offset: usize,
+    pub payload: Payload,
+}
+
+/// Per-segment execution report of a coalesced row-batch.
+///
+/// Metric attribution: the batch's program replay is shared, so
+/// `sim_cycles` and `control_bits` are the segment's occupancy-proportional
+/// share of the batch totals. `switch_events` is *exact* — the per-row
+/// switch counters attribute every memristor flip inside the segment's row
+/// range to it (flips in unoccupied background rows belong to no job and
+/// appear only in the aggregate bank metrics).
+#[derive(Debug, Clone)]
+pub struct SegmentReport {
+    pub job: u64,
+    /// Element offset within the owning job's result accumulator.
+    pub offset: usize,
+    /// Elements (rows) this segment occupied in the shared batch.
+    pub span: usize,
+    /// Per-segment values, or why this segment — alone — failed.
+    pub values: std::result::Result<ChunkValues, String>,
+    /// Occupancy-proportional share of the batch's simulated cycles.
+    pub sim_cycles: u64,
+    /// Occupancy-proportional share of the batch's control traffic.
+    pub control_bits: u64,
+    /// Exact switching energy inside this segment's row range.
+    pub switch_events: u64,
 }
 
 impl Payload {
@@ -179,6 +218,10 @@ impl Worker {
     pub fn new(kind: WorkloadKind, model: ModelKind, geom: Geometry) -> Result<Self> {
         let (program, compiled) = compile_workload(kind, model, geom)?;
         let mut crossbar = Crossbar::new(geom, GateSet::NotNor);
+        // Coalesced batches charge each segment its exact row-range
+        // switching energy, so the worker's crossbar always attributes
+        // switches per row.
+        crossbar.enable_row_switch_tracking();
         let prepared = program.prepare(&mut ExecPipeline::wire(model, &mut crossbar))?;
         Ok(Self { crossbar, model, program, prepared, compiled })
     }
@@ -207,73 +250,152 @@ impl Worker {
 
     /// Execute one row-batch of element pairs end-to-end through the
     /// message path; returns the per-element results and the metrics delta.
+    ///
+    /// Convenience wrapper over [`Worker::run_segments`] with a single
+    /// anonymous segment, so the batch hygiene (row clearing — the
+    /// ghost-row fix) lives in exactly one place.
     pub fn run_batch(&mut self, pairs: &[(u64, u64)]) -> Result<(Vec<u64>, Metrics)> {
-        let rows = self.crossbar.geom.rows;
-        if pairs.len() > rows {
-            bail!("batch of {} exceeds {} rows", pairs.len(), rows);
+        let seg = Segment { job: 0, offset: 0, payload: Payload::Pairs(pairs.to_vec()) };
+        let (reports, delta) = self.run_segments(std::slice::from_ref(&seg))?;
+        let report = reports.into_iter().next().expect("one segment yields one report");
+        match report.values.map_err(|e| anyhow!(e))? {
+            ChunkValues::Scalars(v) => Ok((v, delta)),
+            ChunkValues::Rows(_) => unreachable!("pair payloads read back as scalars"),
         }
-        let before = self.crossbar.metrics;
-        for (r, &(a, b)) in pairs.iter().enumerate() {
-            self.compiled.load_pair(&mut self.crossbar.state, r, a, b)?;
-        }
-        let delta = self.run_prepared_batch(before)?;
-        let mut out = Vec::with_capacity(pairs.len());
-        for r in 0..pairs.len() {
-            out.push(self.compiled.read_result(&self.crossbar.state, r)?);
-        }
-        Ok((out, delta))
     }
 
-    /// Execute one chunk payload end-to-end: the single entry point the
-    /// scheduler's worker threads use. Loader or readback errors come back
-    /// as `Err` (they fail the chunk's job, not the worker); only a genuine
-    /// panic — a simulated hardware fault — takes the worker down.
-    pub fn run_payload(&mut self, payload: &Payload) -> Result<(ChunkValues, Metrics)> {
-        match payload {
+    /// Execute one coalesced row-batch — segments from any number of jobs
+    /// packed back-to-back into the shared row dimension — end-to-end: the
+    /// single entry point the scheduler's worker threads use.
+    ///
+    /// Failure domains: a loader or readback error fails only its own
+    /// segment (`values: Err` in that segment's report; co-batched segments
+    /// still complete). An `Err` return fails the whole batch (occupancy
+    /// overflow, pipeline fault). Only a genuine panic — a simulated
+    /// hardware fault — takes the worker down.
+    pub fn run_segments(&mut self, segments: &[Segment]) -> Result<(Vec<SegmentReport>, Metrics)> {
+        let rows = self.crossbar.geom.rows;
+        let occupied: usize = segments.iter().map(|s| s.payload.len()).sum();
+        if occupied > rows {
+            bail!("coalesced batch of {occupied} elements exceeds {rows} rows");
+        }
+        // Batch hygiene (the structural ghost-row fix): every batch starts
+        // from fully cleared rows, so no job's values or metrics can depend
+        // on what the bank ran before it.
+        self.crossbar.state.clear_rows(0, rows)?;
+        self.crossbar.reset_row_switches();
+        let before = self.crossbar.metrics;
+        let mut bases = Vec::with_capacity(segments.len());
+        let mut load_errs: Vec<Option<String>> = Vec::with_capacity(segments.len());
+        let mut base = 0usize;
+        for seg in segments {
+            bases.push(base);
+            load_errs.push(self.load_segment(seg, base).err().map(|e| format!("{e:#}")));
+            base += seg.payload.len();
+        }
+        // If no segment loaded, the shared replay would compute garbage for
+        // nobody: skip it and charge nothing (a batch with zero cycles is
+        // reported as not executed).
+        let delta = if load_errs.iter().all(Option::is_some) {
+            Metrics::default()
+        } else {
+            self.run_prepared_batch(before)?
+        };
+        let mut reports = Vec::with_capacity(segments.len());
+        for (i, seg) in segments.iter().enumerate() {
+            let span = seg.payload.len();
+            let values = match &load_errs[i] {
+                Some(e) => Err(e.clone()),
+                None => self.read_segment(seg, bases[i]).map_err(|e| format!("{e:#}")),
+            };
+            reports.push(SegmentReport {
+                job: seg.job,
+                offset: seg.offset,
+                span,
+                values,
+                sim_cycles: delta.cycles * span as u64 / occupied.max(1) as u64,
+                control_bits: delta.control_bits * span as u64 / occupied.max(1) as u64,
+                switch_events: self.crossbar.row_switches(bases[i], bases[i] + span),
+            });
+        }
+        Ok((reports, delta))
+    }
+
+    /// Load one segment's operands at row `base`. A malformed operand fails
+    /// only this segment; rows already written stay loaded (they execute as
+    /// garbage in this segment's own row range and are never read back).
+    fn load_segment(&mut self, seg: &Segment, base: usize) -> Result<()> {
+        match &seg.payload {
             Payload::Pairs(pairs) => {
-                let (v, m) = self.run_batch(pairs)?;
-                Ok((ChunkValues::Scalars(v), m))
+                for (r, &(a, b)) in pairs.iter().enumerate() {
+                    self.compiled.load_pair(&mut self.crossbar.state, base + r, a, b)?;
+                }
+                Ok(())
             }
             Payload::Rows(rows_data) => {
-                let (v, m) = self.run_sort_batch(rows_data)?;
-                Ok((ChunkValues::Rows(v), m))
+                let Compiled::Sorter(sorter) = &self.compiled else {
+                    bail!("per-row sort payload on a non-sort workload");
+                };
+                for (r, vals) in rows_data.iter().enumerate() {
+                    sorter.load(&mut self.crossbar.state, base + r, vals)?;
+                }
+                Ok(())
             }
             Payload::Poison => panic!("injected crossbar fault"),
         }
     }
 
+    /// Read one segment's results back from its row range.
+    fn read_segment(&self, seg: &Segment, base: usize) -> Result<ChunkValues> {
+        match &seg.payload {
+            Payload::Pairs(pairs) => {
+                let mut out = Vec::with_capacity(pairs.len());
+                for r in 0..pairs.len() {
+                    out.push(self.compiled.read_result(&self.crossbar.state, base + r)?);
+                }
+                Ok(ChunkValues::Scalars(out))
+            }
+            Payload::Rows(rows_data) => {
+                let Compiled::Sorter(sorter) = &self.compiled else {
+                    bail!("per-row sort payload on a non-sort workload");
+                };
+                let mut out = Vec::with_capacity(rows_data.len());
+                for r in 0..rows_data.len() {
+                    out.push(sorter.read(&self.crossbar.state, base + r)?);
+                }
+                Ok(ChunkValues::Rows(out))
+            }
+            Payload::Poison => bail!("poison payload has no results"),
+        }
+    }
+
     /// Execute one row-batch of sort jobs (one 16-element vector per row).
+    /// Like [`Worker::run_batch`], a single-segment wrapper over
+    /// [`Worker::run_segments`].
     pub fn run_sort_batch(&mut self, rows_data: &[Vec<u64>]) -> Result<(Vec<Vec<u64>>, Metrics)> {
-        let Compiled::Sorter(sorter) = &self.compiled else {
-            bail!("run_sort_batch on a non-sort workload");
-        };
-        if rows_data.len() > self.crossbar.geom.rows {
-            bail!("batch of {} exceeds {} rows", rows_data.len(), self.crossbar.geom.rows);
+        let seg = Segment { job: 0, offset: 0, payload: Payload::Rows(rows_data.to_vec()) };
+        let (reports, delta) = self.run_segments(std::slice::from_ref(&seg))?;
+        let report = reports.into_iter().next().expect("one segment yields one report");
+        match report.values.map_err(|e| anyhow!(e))? {
+            ChunkValues::Rows(v) => Ok((v, delta)),
+            ChunkValues::Scalars(_) => unreachable!("row payloads read back as rows"),
         }
-        let before = self.crossbar.metrics;
-        for (r, vals) in rows_data.iter().enumerate() {
-            sorter.load(&mut self.crossbar.state, r, vals)?;
-        }
-        let delta = self.run_prepared_batch(before)?;
-        let Compiled::Sorter(sorter) = &self.compiled else { unreachable!() };
-        let mut out = Vec::with_capacity(rows_data.len());
-        for r in 0..rows_data.len() {
-            out.push(sorter.read(&self.crossbar.state, r)?);
-        }
-        Ok((out, delta))
     }
 }
 
-/// Choose the geometry a workload/model combination needs.
-pub fn workload_geometry(kind: WorkloadKind, model: ModelKind, rows: usize) -> Geometry {
+/// Choose the geometry a workload/model combination needs. Fallible: the
+/// row count comes from user configuration, and hiding the validation
+/// behind an `expect` turned a bad `rows` into a panic instead of a clean
+/// service-start error.
+pub fn workload_geometry(kind: WorkloadKind, model: ModelKind, rows: usize) -> Result<Geometry> {
     match (kind, model) {
         // Serial baselines run on a partition-free crossbar.
-        (_, ModelKind::Baseline) => Geometry::new(1024, 1, rows).expect("static geometry"),
+        (_, ModelKind::Baseline) => Geometry::new(1024, 1, rows),
         // MultPIM at paper scale: n=1024, k=32 (one partition per bit).
         (WorkloadKind::Mul32, _) => Geometry::paper(rows),
-        (WorkloadKind::Add32, _) => Geometry::new(1024, 32, rows).expect("static geometry"),
+        (WorkloadKind::Add32, _) => Geometry::new(1024, 32, rows),
         // One element per partition: 16 partitions.
-        (WorkloadKind::Sort16, _) => Geometry::new(512, SORT_ELEMS, rows).expect("static geometry"),
+        (WorkloadKind::Sort16, _) => Geometry::new(512, SORT_ELEMS, rows),
     }
 }
 
@@ -284,7 +406,7 @@ mod tests {
     #[test]
     fn worker_multiplies_batches() {
         for model in [ModelKind::Baseline, ModelKind::Minimal, ModelKind::Standard, ModelKind::Unlimited] {
-            let geom = workload_geometry(WorkloadKind::Mul32, model, 16);
+            let geom = workload_geometry(WorkloadKind::Mul32, model, 16).unwrap();
             let mut w = Worker::new(WorkloadKind::Mul32, model, geom).unwrap();
             let pairs: Vec<(u64, u64)> = (0..16).map(|i| (0xabcd1234 ^ (i * 77), 0x1357 + i * 991)).collect();
             let (out, metrics) = w.run_batch(&pairs).unwrap();
@@ -297,7 +419,7 @@ mod tests {
 
     #[test]
     fn worker_adds_batches() {
-        let geom = workload_geometry(WorkloadKind::Add32, ModelKind::Minimal, 8);
+        let geom = workload_geometry(WorkloadKind::Add32, ModelKind::Minimal, 8).unwrap();
         let mut w = Worker::new(WorkloadKind::Add32, ModelKind::Minimal, geom).unwrap();
         let pairs: Vec<(u64, u64)> = (0..8).map(|i| (0xffff_ffff - i, i * 3)).collect();
         let (out, _) = w.run_batch(&pairs).unwrap();
@@ -311,7 +433,7 @@ mod tests {
     #[test]
     fn model_latency_ordering() {
         let cycles = |model: ModelKind| {
-            let geom = workload_geometry(WorkloadKind::Mul32, model, 1);
+            let geom = workload_geometry(WorkloadKind::Mul32, model, 1).unwrap();
             Worker::new(WorkloadKind::Mul32, model, geom).unwrap().batch_cycles()
         };
         let (base, unl, std_, min) = (
@@ -324,12 +446,84 @@ mod tests {
         assert!(base > 5 * min, "serial baseline {base} must dwarf partitioned {min}");
     }
 
+    /// Regression (the ghost-row bug): re-running a smaller batch on a bank
+    /// that previously served a larger one used to leave stale operands in
+    /// the tail rows, so `switch_events` depended on bank history. After
+    /// the fix the same batch reports identical values *and* metrics no
+    /// matter what ran before it.
+    #[test]
+    fn rerun_on_dirty_bank_is_deterministic() {
+        let model = ModelKind::Minimal;
+        let geom = workload_geometry(WorkloadKind::Mul32, model, 8).unwrap();
+        let mut w = Worker::new(WorkloadKind::Mul32, model, geom).unwrap();
+        // Pollute all 8 rows, then serve a 2-row batch twice.
+        let big: Vec<(u64, u64)> = (0..8).map(|i| (0xdead_0000 + i, 0xbeef_0000 + i)).collect();
+        w.run_batch(&big).unwrap();
+        let small = [(12345u64, 67890u64), (777u64, 999u64)];
+        let (v1, m1) = w.run_batch(&small).unwrap();
+        let (v2, m2) = w.run_batch(&small).unwrap();
+        assert_eq!(v1, v2);
+        assert_eq!(m1, m2, "per-batch metrics must not depend on bank history");
+        assert!(m1.switch_events > 0);
+
+        // And against a pristine worker: bit-identical metrics too.
+        let mut fresh = Worker::new(WorkloadKind::Mul32, model, geom).unwrap();
+        let (v3, m3) = fresh.run_batch(&small).unwrap();
+        assert_eq!(v1, v3);
+        assert_eq!(m1, m3, "used bank must match a pristine bank exactly");
+    }
+
+    /// A coalesced batch shares one program replay: proportional cycle
+    /// shares, exact row-range switch attribution, per-segment values.
+    #[test]
+    fn run_segments_packs_jobs_and_attributes_metrics() {
+        let model = ModelKind::Minimal;
+        let geom = workload_geometry(WorkloadKind::Mul32, model, 8).unwrap();
+        let mut w = Worker::new(WorkloadKind::Mul32, model, geom).unwrap();
+        let seg = |job: u64, offset: usize, pairs: Vec<(u64, u64)>| Segment { job, offset, payload: Payload::Pairs(pairs) };
+        let segments = vec![
+            seg(7, 0, vec![(3, 5), (11, 13)]),
+            seg(9, 4, vec![(100, 200)]),
+            seg(12, 0, vec![(1 << 20, 1 << 11), (6, 7), (8, 9)]),
+        ];
+        let (reports, delta) = w.run_segments(&segments).unwrap();
+        assert_eq!(reports.len(), 3);
+        let expect: [&[u64]; 3] = [&[15, 143], &[20000], &[1 << 31, 42, 72]];
+        for (i, r) in reports.iter().enumerate() {
+            let ChunkValues::Scalars(vals) = r.values.as_ref().unwrap() else { panic!("scalar workload") };
+            assert_eq!(vals.as_slice(), expect[i], "segment {i}");
+        }
+        // Proportional shares: 2/6, 1/6, 3/6 of the batch cycles.
+        assert_eq!(reports[0].sim_cycles, delta.cycles * 2 / 6);
+        assert_eq!(reports[1].sim_cycles, delta.cycles / 6);
+        assert_eq!(reports[2].sim_cycles, delta.cycles * 3 / 6);
+        // Exact switch attribution: segment counts can never exceed the
+        // batch total (background rows absorb the remainder).
+        let attributed: u64 = reports.iter().map(|r| r.switch_events).sum();
+        assert!(attributed <= delta.switch_events);
+        assert!(reports.iter().all(|r| r.switch_events > 0));
+    }
+
+    /// A batch whose occupancy exceeds the row count is a scheduler bug and
+    /// fails as a unit.
+    #[test]
+    fn run_segments_rejects_overfull_batch() {
+        let model = ModelKind::Minimal;
+        let geom = workload_geometry(WorkloadKind::Mul32, model, 2).unwrap();
+        let mut w = Worker::new(WorkloadKind::Mul32, model, geom).unwrap();
+        let segments = vec![
+            Segment { job: 1, offset: 0, payload: Payload::Pairs(vec![(1, 2), (3, 4)]) },
+            Segment { job: 2, offset: 0, payload: Payload::Pairs(vec![(5, 6)]) },
+        ];
+        assert!(w.run_segments(&segments).is_err());
+    }
+
     /// The per-batch metrics delta must charge exactly the wire format's
     /// control bits per gate cycle plus one write command per init cycle.
     #[test]
     fn batch_delta_meters_control_exactly() {
         let model = ModelKind::Minimal;
-        let geom = workload_geometry(WorkloadKind::Mul32, model, 4);
+        let geom = workload_geometry(WorkloadKind::Mul32, model, 4).unwrap();
         let mut w = Worker::new(WorkloadKind::Mul32, model, geom).unwrap();
         let pairs: Vec<(u64, u64)> = (0..4).map(|i| (i + 1, 3 * i + 2)).collect();
         let (_, m) = w.run_batch(&pairs).unwrap();

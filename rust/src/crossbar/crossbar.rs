@@ -72,17 +72,47 @@ pub struct Crossbar {
     pub gate_set: GateSet,
     pub state: BitMatrix,
     pub metrics: Metrics,
+    /// Per-row switch-event counters, enabled by
+    /// [`Crossbar::enable_row_switch_tracking`]. The coordinator uses them
+    /// to charge each segment of a coalesced row-batch its exact row-range
+    /// switching energy; `None` (the default) keeps the simulator hot path
+    /// free of per-bit attribution work.
+    row_switches: Option<Vec<u64>>,
 }
 
 impl Crossbar {
     pub fn new(geom: Geometry, gate_set: GateSet) -> Self {
         let state = BitMatrix::new(geom.rows, geom.n);
-        Self { geom, gate_set, state, metrics: Metrics::default() }
+        Self { geom, gate_set, state, metrics: Metrics::default(), row_switches: None }
     }
 
-    /// The paper's headline configuration (n=1024, k=32).
-    pub fn paper(rows: usize) -> Self {
-        Self::new(Geometry::paper(rows), GateSet::NotNor)
+    /// The paper's headline configuration (n=1024, k=32), routed through the
+    /// validating [`Geometry::new`] like every other construction.
+    pub fn paper(rows: usize) -> Result<Self> {
+        Ok(Self::new(Geometry::paper(rows)?, GateSet::NotNor))
+    }
+
+    /// Start attributing every switching event to its row (counters reset to
+    /// zero). Costs one bit-scan per flipped word on the gate path.
+    pub fn enable_row_switch_tracking(&mut self) {
+        self.row_switches = Some(vec![0; self.geom.rows]);
+    }
+
+    /// Zero the per-row switch counters (start of a batch). No-op while
+    /// tracking is disabled.
+    pub fn reset_row_switches(&mut self) {
+        if let Some(acc) = &mut self.row_switches {
+            acc.iter_mut().for_each(|x| *x = 0);
+        }
+    }
+
+    /// Switch events attributed to rows `start..end` since the last reset.
+    /// Returns 0 while tracking is disabled.
+    pub fn row_switches(&self, start: usize, end: usize) -> u64 {
+        match &self.row_switches {
+            Some(acc) => acc[start.min(acc.len())..end.min(acc.len())].iter().sum(),
+            None => 0,
+        }
     }
 
     /// Apply one already-validated cycle and account for it. Shared by the
@@ -90,14 +120,20 @@ impl Crossbar {
     fn step_trusted(&mut self, op: &Operation) -> Result<()> {
         match op {
             Operation::Init { cols, value } => {
-                let sw = self.state.init_columns(cols, *value)?;
+                let sw = match self.row_switches.as_deref_mut() {
+                    Some(acc) => self.state.init_columns_tracked(cols, *value, acc)?,
+                    None => self.state.init_columns(cols, *value)?,
+                };
                 self.metrics.cycles += 1;
                 self.metrics.init_cycles += 1;
                 self.metrics.switch_events += sw;
             }
             Operation::Gates(gates) => {
                 for g in gates {
-                    let sw = self.state.apply_gate(g.gate, &g.ins, g.out)?;
+                    let sw = match self.row_switches.as_deref_mut() {
+                        Some(acc) => self.state.apply_gate_tracked(g.gate, &g.ins, g.out, acc)?,
+                        None => self.state.apply_gate(g.gate, &g.ins, g.out)?,
+                    };
                     self.metrics.switch_events += sw;
                 }
                 self.metrics.cycles += 1;
@@ -170,6 +206,36 @@ mod tests {
         assert_eq!(xb.metrics.init_cycles, 1);
         assert_eq!(xb.metrics.gate_cycles, 1);
         assert_eq!(xb.metrics.gate_events, 2);
+    }
+
+    /// Row tracking is a pure observer: same state, same totals, and the
+    /// per-row counters partition the total switch count exactly.
+    #[test]
+    fn row_switch_tracking_partitions_the_total() {
+        let geom = Geometry::new(256, 8, 64).unwrap();
+        let ops = vec![
+            Operation::init1(vec![2, 40]),
+            Operation::Gates(vec![GateOp::nor(0, 1, 2), GateOp::nor(32, 33, 34)]),
+            Operation::Gates(vec![GateOp::nor(2, 34, 70)]),
+        ];
+        let mut plain = Crossbar::new(geom, GateSet::NotNor);
+        plain.state.fill_random(17);
+        let mut tracked = plain.clone();
+        tracked.enable_row_switch_tracking();
+        for op in &ops {
+            plain.execute(op).unwrap();
+            tracked.execute(op).unwrap();
+        }
+        assert_eq!(plain.state, tracked.state);
+        assert_eq!(plain.metrics, tracked.metrics);
+        assert_eq!(tracked.row_switches(0, 64), tracked.metrics.switch_events);
+        assert_eq!(
+            tracked.row_switches(0, 10) + tracked.row_switches(10, 64),
+            tracked.metrics.switch_events,
+            "row ranges partition the total"
+        );
+        tracked.reset_row_switches();
+        assert_eq!(tracked.row_switches(0, 64), 0);
     }
 
     #[test]

@@ -29,9 +29,11 @@ impl Geometry {
         Ok(Self { n, k, rows })
     }
 
-    /// The paper's headline configuration: n=1024, k=32.
-    pub fn paper(rows: usize) -> Self {
-        Self { n: 1024, k: 32, rows }
+    /// The paper's headline configuration: n=1024, k=32 — routed through
+    /// [`Geometry::new`] so even the canned configuration cannot bypass the
+    /// structural invariants (`rows = 0` is rejected here too).
+    pub fn paper(rows: usize) -> Result<Self> {
+        Self::new(1024, 32, rows)
     }
 
     /// Width of each partition in bitlines (`m = n/k`).
@@ -85,7 +87,7 @@ mod tests {
 
     #[test]
     fn paper_geometry() {
-        let g = Geometry::paper(64);
+        let g = Geometry::paper(64).unwrap();
         assert_eq!(g.n, 1024);
         assert_eq!(g.k, 32);
         assert_eq!(g.m(), 32);
@@ -111,5 +113,13 @@ mod tests {
         assert!(Geometry::new(1024, 2048, 64).is_err()); // k > n
         assert!(Geometry::new(64, 32, 64).is_err()); // m < 4
         assert!(Geometry::new(1024, 32, 0).is_err()); // no rows
+    }
+
+    /// Regression: the canned paper configuration used to construct the
+    /// struct literally, accepting `rows = 0` that [`Geometry::new`] rejects.
+    #[test]
+    fn paper_geometry_is_validated() {
+        assert!(Geometry::paper(0).is_err());
+        assert!(Geometry::paper(1).is_ok());
     }
 }

@@ -84,6 +84,19 @@ impl BitMatrix {
         }
     }
 
+    /// Shared argument validation of [`BitMatrix::apply_gate`] and
+    /// [`BitMatrix::apply_gate_tracked`] — one source of truth, so the
+    /// tracked path can never drift from the hot path's checks.
+    fn check_gate_args(&self, gate: GateType, ins: &[usize], out: usize) -> Result<()> {
+        ensure!(ins.len() == gate.arity(), "gate {gate:?} expects {} inputs, got {}", gate.arity(), ins.len());
+        ensure!(out < self.cols, "output column {out} out of range ({})", self.cols);
+        for &i in ins {
+            ensure!(i < self.cols, "input column {i} out of range ({})", self.cols);
+            ensure!(i != out, "stateful gate output column {out} must differ from its inputs");
+        }
+        Ok(())
+    }
+
     /// Apply a row-parallel stateful gate: `out[r] = gate(ins[0][r], ...)` for
     /// every row `r`, in one simulated cycle.
     ///
@@ -91,12 +104,7 @@ impl BitMatrix {
     /// output column), the physical quantity that dominates stateful-logic
     /// energy [19].
     pub fn apply_gate(&mut self, gate: GateType, ins: &[usize], out: usize) -> Result<u64> {
-        ensure!(ins.len() == gate.arity(), "gate {gate:?} expects {} inputs, got {}", gate.arity(), ins.len());
-        ensure!(out < self.cols, "output column {out} out of range ({})", self.cols);
-        for &i in ins {
-            ensure!(i < self.cols, "input column {i} out of range ({})", self.cols);
-            ensure!(i != out, "stateful gate output column {out} must differ from its inputs");
-        }
+        self.check_gate_args(gate, ins, out)?;
         let wpc = self.wpc;
         let out_off = out * wpc;
         let mut switches = 0u64;
@@ -109,6 +117,36 @@ impl BitMatrix {
             let old = self.data[out_off + w];
             switches += (new ^ old).count_ones() as u64;
             self.data[out_off + w] = new;
+        }
+        Ok(switches)
+    }
+
+    /// Like [`BitMatrix::apply_gate`], but additionally attributes every
+    /// output-bit flip to its row: `row_acc[r]` is incremented once per
+    /// switching event in row `r`. This is the exact-attribution path the
+    /// coordinator uses to charge each segment of a coalesced row-batch its
+    /// own switching energy; the untracked [`BitMatrix::apply_gate`] remains
+    /// the count-free simulator hot path.
+    pub fn apply_gate_tracked(&mut self, gate: GateType, ins: &[usize], out: usize, row_acc: &mut [u64]) -> Result<u64> {
+        ensure!(row_acc.len() >= self.rows, "row accumulator holds {} rows, matrix has {}", row_acc.len(), self.rows);
+        self.check_gate_args(gate, ins, out)?;
+        let wpc = self.wpc;
+        let out_off = out * wpc;
+        let mut switches = 0u64;
+        let mut in_words = [0u64; 3];
+        for w in 0..wpc {
+            for (slot, &i) in ins.iter().enumerate() {
+                in_words[slot] = self.data[i * wpc + w];
+            }
+            let new = self.masked(w, gate.eval_word(&in_words[..ins.len().max(1)]));
+            let old = self.data[out_off + w];
+            let mut diff = new ^ old;
+            switches += diff.count_ones() as u64;
+            self.data[out_off + w] = new;
+            while diff != 0 {
+                row_acc[w * 64 + diff.trailing_zeros() as usize] += 1;
+                diff &= diff - 1;
+            }
         }
         Ok(switches)
     }
@@ -128,6 +166,53 @@ impl BitMatrix {
             }
         }
         Ok(switches)
+    }
+
+    /// Per-row-attributed variant of [`BitMatrix::init_columns`] (see
+    /// [`BitMatrix::apply_gate_tracked`]).
+    pub fn init_columns_tracked(&mut self, cols: &[usize], value: bool, row_acc: &mut [u64]) -> Result<u64> {
+        ensure!(row_acc.len() >= self.rows, "row accumulator holds {} rows, matrix has {}", row_acc.len(), self.rows);
+        let mut switches = 0u64;
+        for &c in cols {
+            ensure!(c < self.cols, "init column {c} out of range ({})", self.cols);
+            let wpc = self.wpc;
+            for w in 0..wpc {
+                let new = self.masked(w, if value { !0u64 } else { 0u64 });
+                let old = self.data[c * wpc + w];
+                let mut diff = new ^ old;
+                switches += diff.count_ones() as u64;
+                self.data[c * wpc + w] = new;
+                while diff != 0 {
+                    row_acc[w * 64 + diff.trailing_zeros() as usize] += 1;
+                    diff &= diff - 1;
+                }
+            }
+        }
+        Ok(switches)
+    }
+
+    /// Zero every cell of rows `start..end` across all columns, in
+    /// word-granular operations — the coordinator's batch-hygiene primitive.
+    /// A cleared row range makes per-batch metrics independent of whatever
+    /// the bank ran before (the ghost-row fix). No metrics are charged: row
+    /// clearing rides the operand write path, which is likewise uncounted.
+    pub fn clear_rows(&mut self, start: usize, end: usize) -> Result<()> {
+        ensure!(start <= end && end <= self.rows, "row range [{start}, {end}) out of range ({} rows)", self.rows);
+        if start == end {
+            return Ok(());
+        }
+        let first_word = start / 64;
+        let last_word = (end - 1) / 64;
+        for c in 0..self.cols {
+            let base = c * self.wpc;
+            for w in first_word..=last_word {
+                let lo = if w == first_word { start % 64 } else { 0 };
+                let hi = if w == last_word { (end - 1) % 64 + 1 } else { 64 };
+                let mask = if hi - lo == 64 { !0u64 } else { ((1u64 << (hi - lo)) - 1) << lo };
+                self.data[base + w] &= !mask;
+            }
+        }
+        Ok(())
     }
 
     /// Write an unsigned little-endian bit field into row `r`:
@@ -276,6 +361,65 @@ mod tests {
     fn rejects_in_place_gate() {
         let mut m = BitMatrix::new(64, 2);
         assert!(m.apply_gate(GateType::Not, &[0], 0).is_err());
+    }
+
+    #[test]
+    fn tracked_gate_matches_untracked_and_attributes_rows() {
+        let mut a = BitMatrix::new(130, 4);
+        a.fill_random(11);
+        let mut b = a.clone();
+        let sw_plain = a.apply_gate(GateType::Nor, &[0, 1], 2).unwrap();
+        let mut rows = vec![0u64; 130];
+        let sw_tracked = b.apply_gate_tracked(GateType::Nor, &[0, 1], 2, &mut rows).unwrap();
+        assert_eq!(a, b, "tracked variant must compute the same state");
+        assert_eq!(sw_plain, sw_tracked);
+        assert_eq!(rows.iter().sum::<u64>(), sw_tracked, "per-row counts must sum to the total");
+        // Every attributed flip is at most one per row per gate.
+        assert!(rows.iter().all(|&r| r <= 1));
+    }
+
+    #[test]
+    fn tracked_init_matches_untracked() {
+        let mut a = BitMatrix::new(70, 3);
+        a.fill_random(5);
+        let mut b = a.clone();
+        let sw_plain = a.init_columns(&[0, 2], true).unwrap();
+        let mut rows = vec![0u64; 70];
+        let sw_tracked = b.init_columns_tracked(&[0, 2], true, &mut rows).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(sw_plain, sw_tracked);
+        assert_eq!(rows.iter().sum::<u64>(), sw_tracked);
+    }
+
+    #[test]
+    fn tracked_rejects_short_accumulator() {
+        let mut m = BitMatrix::new(70, 3);
+        let mut short = vec![0u64; 69];
+        assert!(m.apply_gate_tracked(GateType::Not, &[0], 1, &mut short).is_err());
+        assert!(m.init_columns_tracked(&[0], true, &mut short).is_err());
+    }
+
+    #[test]
+    fn clear_rows_zeroes_exactly_the_range() {
+        let mut m = BitMatrix::new(130, 5); // spans word boundaries
+        m.fill_random(21);
+        let before = m.clone();
+        m.clear_rows(3, 70).unwrap();
+        for c in 0..5 {
+            for r in 0..130 {
+                if (3..70).contains(&r) {
+                    assert!(!m.get(r, c), "row {r} col {c} must be cleared");
+                } else {
+                    assert_eq!(m.get(r, c), before.get(r, c), "row {r} col {c} must be untouched");
+                }
+            }
+        }
+        // Full clear and empty clear are valid; out-of-range is rejected.
+        m.clear_rows(0, 130).unwrap();
+        assert_eq!(m, BitMatrix::new(130, 5));
+        m.clear_rows(7, 7).unwrap();
+        assert!(m.clear_rows(0, 131).is_err());
+        assert!(m.clear_rows(9, 8).is_err());
     }
 
     #[test]

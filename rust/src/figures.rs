@@ -35,16 +35,16 @@ pub struct Fig6Row {
 /// Regenerate Figure 6 at paper scale (n=1024, k=32, 32-bit multiplication).
 pub fn figure6() -> Result<Vec<Fig6Row>> {
     let mut rows = Vec::new();
-    let base_geom = workload_geometry(WorkloadKind::Mul32, ModelKind::Baseline, 1);
+    let base_geom = workload_geometry(WorkloadKind::Mul32, ModelKind::Baseline, 1)?;
     let (base_prog, _) = compile_workload(WorkloadKind::Mul32, ModelKind::Baseline, base_geom)?;
     let base = base_prog.stats();
     for model in [ModelKind::Baseline, ModelKind::Unlimited, ModelKind::Standard, ModelKind::Minimal] {
-        let geom = workload_geometry(WorkloadKind::Mul32, model, 1);
+        let geom = workload_geometry(WorkloadKind::Mul32, model, 1)?;
         let (prog, _) = compile_workload(WorkloadKind::Mul32, model, geom)?;
         let stats = prog.stats();
         // Control overhead compares gate-message lengths on the paper's
         // n=1024, k=32 crossbar (the baseline row uses the 30-bit format).
-        let paper_geom = Geometry::paper(1);
+        let paper_geom = Geometry::paper(1)?;
         let bits = message_bits(model, &paper_geom);
         rows.push(Fig6Row {
             model,

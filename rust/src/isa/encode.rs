@@ -220,6 +220,9 @@ pub fn to_message(model: ModelKind, op: &Operation, geom: &Geometry) -> Result<M
     let Operation::Gates(gates) = op else {
         bail!("initialization writes are not gate-operation messages");
     };
+    // The controller encodes whatever the scheduler hands it, so malformed
+    // operations must come back as `Err`, never panic the encoding thread.
+    ensure!(!gates.is_empty(), "empty gate cycle cannot be encoded");
     match model {
         ModelKind::Baseline => {
             ensure!(gates.len() == 1, "baseline encodes a single gate");
@@ -263,7 +266,10 @@ pub fn to_message(model: ModelKind, op: &Operation, geom: &Geometry) -> Result<M
                 .map(|g| g.input_partition(geom).ok_or_else(|| anyhow::anyhow!("split-input gate is not minimal-legal")))
                 .collect::<Result<_>>()?;
             inputs.sort_unstable();
-            let distance = gates[0].distance(geom).expect("input partition exists").unsigned_abs();
+            let distance = gates[0]
+                .distance(geom)
+                .ok_or_else(|| anyhow::anyhow!("split-input gate is not minimal-legal"))?
+                .unsigned_abs();
             let dir = op.uniform_direction(geom)?.unwrap_or(Direction::InputsLeft);
             let (p_start, p_end) = (inputs[0], *inputs.last().unwrap());
             let t = if inputs.len() >= 2 { inputs[1] - inputs[0] } else { distance + 1 };
@@ -388,7 +394,7 @@ mod tests {
     use crate::crossbar::gate::GateSet;
 
     fn paper_geom() -> Geometry {
-        Geometry::paper(64)
+        Geometry::paper(64).unwrap()
     }
 
     /// Section 5.2 / Figure 6(b): the exact message lengths.
@@ -445,6 +451,25 @@ mod tests {
         assert_eq!(parts[5].io, 2);
         // conducting exactly inside [0, 5]
         assert_eq!(selects.iter().filter(|&&s| !s).count(), 5);
+    }
+
+    /// Regression: a split-input gate under the minimal codec used to hit an
+    /// `.expect("input partition exists")` deep in `to_message` — a
+    /// malformed-but-unchecked operation could panic the encoding thread.
+    /// Every malformed shape must come back as a clean `Err`.
+    #[test]
+    fn minimal_split_input_fails_cleanly() {
+        let g = paper_geom();
+        // Inputs straddle partitions 0 and 3: no input partition exists.
+        let split = Operation::serial(GateOp::nor(g.col(0, 4), g.col(3, 9), g.col(5, 2)));
+        let err = to_message(ModelKind::Minimal, &split, &g).expect_err("split input must not encode under minimal");
+        assert!(format!("{err:#}").contains("split-input"), "unexpected error: {err:#}");
+        assert!(to_message(ModelKind::Standard, &split, &g).is_err());
+        // Empty gate cycles are rejected for every model instead of
+        // indexing out of bounds.
+        for m in [ModelKind::Baseline, ModelKind::Unlimited, ModelKind::Standard, ModelKind::Minimal] {
+            assert!(to_message(m, &Operation::Gates(vec![]), &g).is_err(), "{}", m.name());
+        }
     }
 
     #[test]

@@ -38,13 +38,16 @@
 //! * [`analysis`] — the combinatorial lower bounds on message length
 //!   (443 / 46 / 25 bits) via a small big-integer implementation.
 //! * [`coordinator`] — the L3 runtime: a concurrent, fault-isolated job
-//!   scheduler. `submit` returns a `JobHandle` (any number of jobs in
-//!   flight; completions routed by job id); workers batch job elements
-//!   onto crossbar rows and stream pre-encoded control messages through
-//!   the periphery decode stage of an `ExecPipeline`. A malformed operand
-//!   fails only its own job, and a crashed worker's unexecuted chunks
-//!   requeue to the surviving workers (DESIGN.md §Coordinator). Latency,
-//!   energy, and control traffic are metered per job and per bank.
+//!   scheduler with cross-job chunk coalescing. `submit` returns a
+//!   `JobHandle` (any number of jobs in flight; completions routed by job
+//!   id); a coalescer packs partial chunks from different jobs into shared
+//!   full-occupancy row-batches, and workers stream pre-encoded control
+//!   messages through the periphery decode stage of an `ExecPipeline`. A
+//!   malformed operand fails only its own job (co-batched segments still
+//!   complete), and a crashed worker's unexecuted batch requeues to the
+//!   surviving workers (DESIGN.md §Coordinator). Latency, energy, and
+//!   control traffic are metered per job — switching energy exactly, per
+//!   row range — and per bank, with batch-occupancy counters.
 //! * [`runtime`] — PJRT/XLA execution of the AOT-compiled JAX/Pallas
 //!   crossbar-step artifact (`artifacts/*.hlo.txt`) as an independent
 //!   `PimBackend`, used to cross-check the rust simulator (python never

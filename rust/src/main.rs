@@ -8,9 +8,10 @@
 //! repro figure6                     regenerate Figure 6 (latency/control/area)
 //! repro sort                        sorting speedup table (intro claim)
 //! repro serve [--model M] [--crossbars N] [--rows R] [--jobs J] [--len L]
-//!             [--inject-bad] [--kill W]
+//!             [--inject-bad] [--kill W] [--no-coalesce]
 //!                                   end-to-end vector-multiply service demo
-//!                                   (pipelined jobs; optional fault injection)
+//!                                   (pipelined jobs, cross-job coalescing;
+//!                                   optional fault injection)
 //! repro xla-parity [--artifacts D] [--n N] [--k K] [--rows R]
 //!                                   cross-check rust sim vs the XLA artifact
 //! ```
@@ -63,7 +64,7 @@ fn parse_model(s: &str) -> Result<ModelKind> {
 }
 
 fn cmd_report() -> Result<()> {
-    let geom = Geometry::paper(64);
+    let geom = Geometry::paper(64)?;
     println!("PartitionPIM control & periphery report (n={}, k={}, NOT/NOR)\n", geom.n, geom.k);
 
     println!("Control-message formats vs combinatorial lower bounds (E2-E5):");
@@ -159,13 +160,27 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     let jobs: usize = flags.get("jobs").map(String::as_str).unwrap_or("8").parse()?;
     let len: usize = flags.get("len").map(String::as_str).unwrap_or("256").parse()?;
     let inject_bad = flags.contains_key("inject-bad");
+    let coalescing = !flags.contains_key("no-coalesce");
     let kill: Option<usize> = match flags.get("kill") {
         Some(w) => Some(w.parse()?),
         None => None,
     };
 
-    println!("Starting PIM service: model={}, {} crossbars x {} rows", model.name(), n_crossbars, rows);
-    let svc = PimService::start(ServiceConfig { kind: WorkloadKind::Mul32, model, n_crossbars, rows })?;
+    println!(
+        "Starting PIM service: model={}, {} crossbars x {} rows, coalescing {}",
+        model.name(),
+        n_crossbars,
+        rows,
+        if coalescing { "on" } else { "off" }
+    );
+    let svc = PimService::start(ServiceConfig {
+        kind: WorkloadKind::Mul32,
+        model,
+        n_crossbars,
+        rows,
+        coalescing,
+        ..Default::default()
+    })?;
     println!("batch latency: {} crossbar cycles\n", svc.batch_cycles);
 
     let t0 = Instant::now();
@@ -219,6 +234,13 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     );
     println!("control traffic: {} bits total ({:.1} bits/element)", stats.metrics.control_bits, stats.metrics.control_bits as f64 / elems);
     println!("energy proxy: {} gate events, {} switch events", stats.metrics.gate_events, stats.metrics.switch_events);
+    println!(
+        "bank utilization: {} batches, {:.1}% mean row occupancy ({} of {} rows carried operands)",
+        stats.batches,
+        100.0 * stats.mean_occupancy(),
+        stats.occupied_rows,
+        stats.capacity_rows
+    );
     Ok(())
 }
 
@@ -285,6 +307,7 @@ fn main() -> Result<()> {
             println!("              [--model minimal] [--crossbars 4] [--rows 64] [--jobs 8] [--len 256]");
             println!("              [--inject-bad]  submit one malformed job, show fault isolation");
             println!("              [--kill W]      kill worker W mid-service, show chunk requeue");
+            println!("              [--no-coalesce] disable cross-job chunk coalescing (ablation)");
             println!("  xla-parity  rust simulator vs AOT XLA artifact cross-check");
             println!("              [--artifacts artifacts] [--n 256] [--k 8] [--rows 16]");
             Ok(())

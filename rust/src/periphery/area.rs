@@ -95,7 +95,7 @@ mod tests {
     use super::*;
 
     fn paper() -> Geometry {
-        Geometry::paper(64)
+        Geometry::paper(64).unwrap()
     }
 
     /// Section 2.2 / 5.3.1: the proposed periphery needs slightly *fewer*

@@ -1,0 +1,115 @@
+//! Differential properties of cross-job chunk coalescing: a coalesced
+//! mixed-job batch must be observationally identical — bitwise — to the
+//! same jobs executed one-per-chunk on a pristine bank, including when a
+//! co-batched segment fails.
+
+use partition_pim::coordinator::worker::{workload_geometry, ChunkValues, Payload, Segment, Worker, WorkloadKind};
+use partition_pim::isa::models::ModelKind;
+
+struct Rng(u64);
+
+impl Rng {
+    fn new(seed: u64) -> Self {
+        Self(seed.wrapping_mul(0x9e3779b97f4a7c15).max(1))
+    }
+
+    fn next(&mut self) -> u64 {
+        self.0 ^= self.0 << 13;
+        self.0 ^= self.0 >> 7;
+        self.0 ^= self.0 << 17;
+        self.0
+    }
+
+    fn below(&mut self, n: u64) -> u64 {
+        self.next() % n
+    }
+}
+
+const ROWS: usize = 16;
+
+fn worker() -> Worker {
+    let geom = workload_geometry(WorkloadKind::Mul32, ModelKind::Minimal, ROWS).unwrap();
+    Worker::new(WorkloadKind::Mul32, ModelKind::Minimal, geom).unwrap()
+}
+
+/// P12: for random mixes of small jobs, the coalesced batch on a *used*
+/// bank produces bitwise-identical values to each job run alone as its own
+/// chunk on a pristine bank.
+#[test]
+fn p12_coalesced_values_match_per_chunk_execution() {
+    // The coalesced worker is deliberately pre-dirtied: correctness must
+    // not depend on bank history.
+    let mut coalesced = worker();
+    let dirty: Vec<(u64, u64)> = (0..ROWS as u64).map(|i| (0xffff_0000 + i, 0xeeee_0000 + i)).collect();
+    coalesced.run_batch(&dirty).unwrap();
+    // One reference worker reused across segments: run_batch clears rows,
+    // so reuse is itself part of the property under test.
+    let mut reference = worker();
+
+    for trial in 0..12u64 {
+        let mut rng = Rng::new(trial + 1);
+        // Random segment sizes filling at most the batch.
+        let mut segments = Vec::new();
+        let mut fill = 0usize;
+        let mut job = 0u64;
+        while fill < ROWS {
+            let span = (1 + rng.below((ROWS - fill).min(5) as u64)) as usize;
+            let pairs: Vec<(u64, u64)> = (0..span).map(|_| (rng.next() & 0xffff_ffff, rng.next() & 0xffff_ffff)).collect();
+            segments.push(Segment { job, offset: 0, payload: Payload::Pairs(pairs) });
+            job += 1;
+            fill += span;
+            if rng.below(4) == 0 {
+                break; // sometimes leave the batch underfull
+            }
+        }
+
+        let (reports, delta) = coalesced.run_segments(&segments).unwrap();
+        assert_eq!(reports.len(), segments.len());
+        let mut attributed_switches = 0u64;
+        let mut attributed_cycles = 0u64;
+        for (seg, rep) in segments.iter().zip(&reports) {
+            let Payload::Pairs(pairs) = &seg.payload else { unreachable!() };
+            let (expect, _) = reference.run_batch(pairs).unwrap();
+            let got = rep.values.as_ref().unwrap_or_else(|e| panic!("trial {trial} job {} failed: {e}", seg.job));
+            let ChunkValues::Scalars(got) = got else { panic!("scalar workload") };
+            assert_eq!(got, &expect, "trial {trial} job {}", seg.job);
+            attributed_switches += rep.switch_events;
+            attributed_cycles += rep.sim_cycles;
+        }
+        // Attribution sanity: segment shares never exceed the batch totals.
+        assert!(attributed_switches <= delta.switch_events, "trial {trial}");
+        assert!(attributed_cycles <= delta.cycles, "trial {trial}");
+    }
+}
+
+/// P13: a malformed operand in one co-batched segment fails only that
+/// segment; its neighbors' values are still bitwise identical to pristine
+/// per-chunk execution.
+#[test]
+fn p13_segment_failure_is_isolated_and_neighbors_exact() {
+    let mut coalesced = worker();
+    let mut reference = worker();
+    for trial in 0..8u64 {
+        let mut rng = Rng::new(0x5eed + trial);
+        let good_a: Vec<(u64, u64)> = (0..3).map(|_| (rng.next() & 0xffff_ffff, rng.next() & 0xffff_ffff)).collect();
+        let good_b: Vec<(u64, u64)> = (0..4).map(|_| (rng.next() & 0xffff_ffff, rng.next() & 0xffff_ffff)).collect();
+        // Job 1's second element exceeds the 32-bit operand range.
+        let mut bad = good_a.clone();
+        bad[1].0 = 1 << 33;
+        let segments = vec![
+            Segment { job: 0, offset: 0, payload: Payload::Pairs(good_a.clone()) },
+            Segment { job: 1, offset: 0, payload: Payload::Pairs(bad) },
+            Segment { job: 2, offset: 0, payload: Payload::Pairs(good_b.clone()) },
+        ];
+        let (reports, _) = coalesced.run_segments(&segments).unwrap();
+        let err = reports[1].values.as_ref().expect_err("oversized operand must fail its segment");
+        assert!(err.contains("exceeds"), "trial {trial}: unexpected error {err}");
+
+        for (seg_pairs, rep) in [(&good_a, &reports[0]), (&good_b, &reports[2])] {
+            let (expect, _) = reference.run_batch(seg_pairs).unwrap();
+            let got = rep.values.as_ref().expect("healthy co-batched segment must complete");
+            let ChunkValues::Scalars(got) = got else { panic!("scalar workload") };
+            assert_eq!(got, &expect, "trial {trial}: bad neighbor corrupted a healthy segment");
+        }
+    }
+}

@@ -21,8 +21,14 @@ fn vectors(len: usize, seed: u64) -> (Vec<u64>, Vec<u64>) {
 #[test]
 fn multiply_service_all_models() {
     for model in ModelKind::ALL {
-        let svc = PimService::start(ServiceConfig { kind: WorkloadKind::Mul32, model, n_crossbars: 3, rows: 16 })
-            .unwrap_or_else(|e| panic!("{}: {e}", model.name()));
+        let svc = PimService::start(ServiceConfig {
+            kind: WorkloadKind::Mul32,
+            model,
+            n_crossbars: 3,
+            rows: 16,
+            ..Default::default()
+        })
+        .unwrap_or_else(|e| panic!("{}: {e}", model.name()));
         let (a, b) = vectors(100, 42);
         let res = svc.submit(&a, &b).expect("submit").wait().expect("wait");
         for i in 0..100 {
@@ -38,8 +44,14 @@ fn multiply_service_all_models() {
 #[test]
 fn add_service_all_models() {
     for model in ModelKind::ALL {
-        let svc = PimService::start(ServiceConfig { kind: WorkloadKind::Add32, model, n_crossbars: 2, rows: 8 })
-            .unwrap_or_else(|e| panic!("{}: {e}", model.name()));
+        let svc = PimService::start(ServiceConfig {
+            kind: WorkloadKind::Add32,
+            model,
+            n_crossbars: 2,
+            rows: 8,
+            ..Default::default()
+        })
+        .unwrap_or_else(|e| panic!("{}: {e}", model.name()));
         let (a, b) = vectors(40, 7);
         let res = svc.submit(&a, &b).expect("submit").wait().expect("wait");
         for i in 0..40 {
@@ -57,8 +69,14 @@ fn end_to_end_figure6_orderings() {
     let mut cycles = std::collections::HashMap::new();
     let mut per_cycle_bits = std::collections::HashMap::new();
     for model in ModelKind::ALL {
-        let svc = PimService::start(ServiceConfig { kind: WorkloadKind::Mul32, model, n_crossbars: 1, rows: 4 })
-            .expect("service");
+        let svc = PimService::start(ServiceConfig {
+            kind: WorkloadKind::Mul32,
+            model,
+            n_crossbars: 1,
+            rows: 4,
+            ..Default::default()
+        })
+        .expect("service");
         let (a, b) = vectors(4, 1234);
         let res = svc.submit(&a, &b).expect("submit").wait().expect("wait");
         cycles.insert(model, res.sim_cycles);
@@ -72,7 +90,7 @@ fn end_to_end_figure6_orderings() {
     assert!(cycles[&ModelKind::Standard] <= cycles[&ModelKind::Minimal]);
     assert!(cycles[&ModelKind::Baseline] > 5 * cycles[&ModelKind::Minimal]);
 
-    let geom = Geometry::paper(4);
+    let geom = Geometry::paper(4).unwrap();
     for model in [ModelKind::Unlimited, ModelKind::Standard, ModelKind::Minimal] {
         let expect = message_bits(model, &geom) as f64;
         let got = per_cycle_bits[&model];
@@ -82,8 +100,14 @@ fn end_to_end_figure6_orderings() {
 
 #[test]
 fn many_small_jobs_round_robin() {
-    let svc = PimService::start(ServiceConfig { kind: WorkloadKind::Mul32, model: ModelKind::Minimal, n_crossbars: 4, rows: 8 })
-        .expect("service");
+    let svc = PimService::start(ServiceConfig {
+        kind: WorkloadKind::Mul32,
+        model: ModelKind::Minimal,
+        n_crossbars: 4,
+        rows: 8,
+        ..Default::default()
+    })
+    .expect("service");
     for j in 0..20u64 {
         let (a, b) = vectors(3, j + 1);
         let res = svc.submit(&a, &b).expect("submit").wait().expect("wait");
@@ -108,6 +132,7 @@ fn sort_service_all_models() {
             model,
             n_crossbars: 2,
             rows: 4,
+            ..Default::default()
         })
         .unwrap_or_else(|e| panic!("{}: {e}", model.name()));
         let mut seed = 31u64;
@@ -139,13 +164,25 @@ fn sort_service_all_models() {
 /// Mixing job types is rejected cleanly, in both directions.
 #[test]
 fn wrong_job_type_rejected() {
-    let svc = PimService::start(ServiceConfig { kind: WorkloadKind::Mul32, model: ModelKind::Minimal, n_crossbars: 1, rows: 4 })
-        .expect("service");
+    let svc = PimService::start(ServiceConfig {
+        kind: WorkloadKind::Mul32,
+        model: ModelKind::Minimal,
+        n_crossbars: 1,
+        rows: 4,
+        ..Default::default()
+    })
+    .expect("service");
     assert!(svc.submit_sort(&[vec![1; 16]]).is_err());
     svc.shutdown();
 
-    let svc = PimService::start(ServiceConfig { kind: WorkloadKind::Sort16, model: ModelKind::Minimal, n_crossbars: 1, rows: 4 })
-        .expect("service");
+    let svc = PimService::start(ServiceConfig {
+        kind: WorkloadKind::Sort16,
+        model: ModelKind::Minimal,
+        n_crossbars: 1,
+        rows: 4,
+        ..Default::default()
+    })
+    .expect("service");
     assert!(svc.submit(&[1, 2], &[3, 4]).is_err());
     svc.shutdown();
 }

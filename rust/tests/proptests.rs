@@ -297,8 +297,14 @@ fn p7_batching_invariance() {
     };
     let mut reference: Option<Vec<u64>> = None;
     for (crossbars, rows) in [(1usize, 33usize), (2, 8), (4, 5), (3, 1)] {
-        let svc = PimService::start(ServiceConfig { kind: WorkloadKind::Mul32, model: ModelKind::Minimal, n_crossbars: crossbars, rows })
-            .expect("service");
+        let svc = PimService::start(ServiceConfig {
+            kind: WorkloadKind::Mul32,
+            model: ModelKind::Minimal,
+            n_crossbars: crossbars,
+            rows,
+            ..Default::default()
+        })
+        .expect("service");
         let res = svc.submit(&a, &b).expect("submit").wait().expect("wait");
         svc.shutdown();
         let values = res.scalars().to_vec();

@@ -1,9 +1,11 @@
 //! Scheduler stress and fault-isolation tests: many jobs genuinely in
-//! flight across a small bank, malformed jobs failing in isolation, and
-//! crashed/killed workers whose work requeues to the survivors.
+//! flight across a small bank, malformed jobs failing in isolation,
+//! crashed/killed workers whose work requeues to the survivors, and the
+//! coalescer packing small jobs into shared row-batches.
 
 use partition_pim::coordinator::{PimService, ServiceConfig, WorkloadKind};
 use partition_pim::isa::models::ModelKind;
+use std::time::Duration;
 
 fn vectors(len: usize, seed: u64) -> (Vec<u64>, Vec<u64>) {
     let mut s = seed.wrapping_mul(0x9e3779b97f4a7c15).wrapping_add(1);
@@ -17,8 +19,14 @@ fn vectors(len: usize, seed: u64) -> (Vec<u64>, Vec<u64>) {
 }
 
 fn mul_service(n_crossbars: usize, rows: usize) -> PimService {
-    PimService::start(ServiceConfig { kind: WorkloadKind::Mul32, model: ModelKind::Minimal, n_crossbars, rows })
-        .expect("service")
+    PimService::start(ServiceConfig {
+        kind: WorkloadKind::Mul32,
+        model: ModelKind::Minimal,
+        n_crossbars,
+        rows,
+        ..Default::default()
+    })
+    .expect("service")
 }
 
 /// Many mixed-size jobs in flight at once; results are checked element-wise
@@ -174,6 +182,140 @@ fn fault_injection_on_dead_bank_does_not_wedge_shutdown() {
     svc.inject_worker_panic().expect("inject");
     let stats = svc.shutdown(); // must return, not deadlock
     assert_eq!(stats.jobs, 0);
+}
+
+/// Regression (the ghost-row bug): a job on a previously-used bank must
+/// report exactly the metrics it reports on a pristine bank. Before the
+/// fix, operands left over from a larger earlier batch kept switching
+/// memristors, so per-job `switch_events` depended on bank history.
+#[test]
+fn reused_bank_reports_identical_per_job_metrics() {
+    // One crossbar, so every job lands on the same (increasingly dirty) bank.
+    let svc = mul_service(1, 8);
+    // Pollute all 8 rows.
+    let (big_a, big_b) = vectors(8, 1);
+    svc.submit(&big_a, &big_b).expect("submit").wait().expect("wait");
+
+    // The same 3-element job twice on the now-used bank.
+    let (a, b) = vectors(3, 2);
+    let r1 = svc.submit(&a, &b).expect("submit").wait().expect("wait");
+    let r2 = svc.submit(&a, &b).expect("submit").wait().expect("wait");
+    assert_eq!(r1.scalars(), r2.scalars());
+    assert_eq!(r1.switch_events, r2.switch_events, "ghost rows leaked switching energy into the second run");
+    assert_eq!(r1.sim_cycles, r2.sim_cycles);
+    assert_eq!(r1.control_bits, r2.control_bits);
+    assert!(r1.switch_events > 0);
+    svc.shutdown();
+
+    // And against a pristine bank: bit-identical per-job metrics.
+    let svc = mul_service(1, 8);
+    let r3 = svc.submit(&a, &b).expect("submit").wait().expect("wait");
+    assert_eq!(r1.scalars(), r3.scalars());
+    assert_eq!(r1.switch_events, r3.switch_events, "used bank must match a pristine bank exactly");
+    assert_eq!(r1.sim_cycles, r3.sim_cycles);
+    svc.shutdown();
+}
+
+/// Tentpole: single-element jobs submitted together share row-batches
+/// instead of each paying a full program replay, and the occupancy
+/// counters show it. The linger window is made long so the 8 jobs
+/// deterministically pack into one full batch (dispatch on fullness, not
+/// on the timer) regardless of scheduling noise.
+#[test]
+fn small_jobs_coalesce_into_shared_batches() {
+    let svc = PimService::start(ServiceConfig {
+        kind: WorkloadKind::Mul32,
+        model: ModelKind::Minimal,
+        n_crossbars: 1,
+        rows: 8,
+        linger: Duration::from_secs(5),
+        ..Default::default()
+    })
+    .expect("service");
+    let mut pending = Vec::new();
+    for j in 0..8u64 {
+        let (a, b) = vectors(1, j + 10);
+        let handle = svc.submit(&a, &b).expect("submit");
+        pending.push((a, b, handle));
+    }
+    for (a, b, handle) in pending {
+        let res = handle.wait().expect("wait");
+        assert_eq!(res.scalars(), &[a[0] * b[0]]);
+        assert!(res.switch_events > 0, "each job gets its own row-range energy");
+    }
+    let stats = svc.shutdown();
+    assert_eq!(stats.jobs, 8);
+    assert_eq!(stats.elements, 8);
+    assert_eq!(stats.chunks, 8, "each job is still its own segment");
+    assert_eq!(stats.batches, 1, "eight 1-element jobs pack into one full batch");
+    assert_eq!(stats.occupied_rows, 8);
+    assert_eq!(stats.capacity_rows, 8);
+    assert!((stats.mean_occupancy() - 1.0).abs() < 1e-12);
+}
+
+/// Ablation guardrail: with coalescing disabled every segment ships alone,
+/// which is exactly what the coalescing bench measures against.
+#[test]
+fn coalescing_disabled_ships_each_chunk_alone() {
+    let svc = PimService::start(ServiceConfig {
+        kind: WorkloadKind::Mul32,
+        model: ModelKind::Minimal,
+        n_crossbars: 1,
+        rows: 8,
+        coalescing: false,
+        ..Default::default()
+    })
+    .expect("service");
+    let mut pending = Vec::new();
+    for j in 0..6u64 {
+        let (a, b) = vectors(1, j + 30);
+        let handle = svc.submit(&a, &b).expect("submit");
+        pending.push((a, b, handle));
+    }
+    for (a, b, handle) in pending {
+        let res = handle.wait().expect("wait");
+        assert_eq!(res.scalars(), &[a[0] * b[0]]);
+    }
+    let stats = svc.shutdown();
+    assert_eq!(stats.batches, 6, "disabled coalescing must not pack");
+    assert_eq!(stats.occupied_rows, 6);
+    assert_eq!(stats.capacity_rows, 48);
+}
+
+/// A malformed single-element job co-batched with healthy single-element
+/// jobs fails alone: the co-tenants of its *shared batch* still complete
+/// with correct values. Seven healthy jobs plus the bad one fill the batch
+/// exactly, and the long linger window guarantees they genuinely share it.
+#[test]
+fn segment_failure_in_shared_batch_spares_co_tenants() {
+    let svc = PimService::start(ServiceConfig {
+        kind: WorkloadKind::Mul32,
+        model: ModelKind::Minimal,
+        n_crossbars: 1,
+        rows: 8,
+        linger: Duration::from_secs(5),
+        ..Default::default()
+    })
+    .expect("service");
+    let mut healthy = Vec::new();
+    for j in 0..7u64 {
+        let (a, b) = vectors(1, j + 70);
+        let handle = svc.submit(&a, &b).expect("submit");
+        healthy.push((a, b, handle));
+    }
+    // Oversized operand as the eighth segment: the batch fills and ships.
+    let bad = svc.submit(&[1u64 << 33], &[3]).expect("submit");
+    let err = bad.wait().expect_err("oversized operand must fail its job");
+    assert!(format!("{err:#}").contains("exceeds"), "unexpected error: {err:#}");
+    for (a, b, handle) in healthy {
+        let res = handle.wait().expect("co-batched jobs must survive a bad neighbor");
+        assert_eq!(res.scalars(), &[a[0] * b[0]]);
+    }
+    let stats = svc.shutdown();
+    assert_eq!(stats.jobs, 7);
+    assert_eq!(stats.failed_jobs, 1);
+    assert_eq!(stats.batches, 1, "all eight segments shared one batch");
+    assert_eq!(stats.elements, 7, "only healthy elements count");
 }
 
 /// When every worker is gone, pending jobs fail cleanly (no handle hangs)
