@@ -5,17 +5,20 @@
 //! [`PimBackend`]:
 //!
 //! ```text
-//!   Program ──ops──▶ Legalize(cfg) ──ops──▶ Encode(model) ──wire bits──▶
+//!   Program ──ops──▶ Legalize(cfg) ──ops──▶ Verify(model) ──ops──▶
+//!            Encode(model) ──wire bits──▶
 //!            PeripheryDecode(model) ──reconstructed ops──▶ backend
 //! ```
 //!
-//! Every stage is optional; the valid compositions are `Legalize*` followed
-//! by an optional matched `Encode → PeripheryDecode` pair (enforced at
-//! construction, so a mis-ordered pipeline fails fast instead of at the
-//! first operation). The three common shapes have shorthand constructors:
+//! Every stage is optional; the valid compositions are any sequence of
+//! `Legalize` / `Verify` stages followed by an optional matched
+//! `Encode → PeripheryDecode` pair (enforced at construction, so a
+//! mis-ordered pipeline fails fast instead of at the first operation). The
+//! three common shapes have shorthand constructors:
 //!
 //! * [`ExecPipeline::direct`] — abstract operations straight to the backend.
-//! * [`ExecPipeline::wire`] — encode each gate cycle to its bit-exact wire
+//! * [`ExecPipeline::wire`] — statically verify each cycle against the
+//!   model's rule catalog (`verify::`), encode it to its bit-exact wire
 //!   message, decode through the periphery model, execute; control traffic
 //!   is metered at the decode boundary (the production path).
 //! * [`ExecPipeline::full`] — additionally legalize every operation for the
@@ -36,6 +39,7 @@ use crate::isa::lower::{legalize_op, LegalizeConfig, LegalizeStats};
 use crate::isa::models::ModelKind;
 use crate::isa::operation::Operation;
 use crate::periphery;
+use crate::verify::{self, VerifyOptions};
 use anyhow::{bail, ensure, Result};
 
 /// One control stage of an execution pipeline.
@@ -44,6 +48,12 @@ pub enum Stage {
     /// Rewrite operations the model cannot express into supported
     /// alternatives (Section 5).
     Legalize { model: ModelKind, cfg: LegalizeConfig },
+    /// Statically check each cycle against the verifier's per-cycle rule
+    /// catalog for `model` (structural, hazard, conformance and wire
+    /// representability rules — see [`crate::verify`]); any error-severity
+    /// diagnostic rejects the operation before it reaches the wire or the
+    /// backend. Warnings pass.
+    Verify(ModelKind),
     /// Controller side: encode each gate cycle as the model's bit-exact wire
     /// message; initialization writes travel on the write path.
     Encode(ModelKind),
@@ -114,11 +124,12 @@ pub struct ExecPipeline<'a> {
 }
 
 impl<'a> ExecPipeline<'a> {
-    /// Build a pipeline, validating the stage composition: `Legalize*`
-    /// optionally followed by a matched `Encode → PeripheryDecode` pair.
+    /// Build a pipeline, validating the stage composition: any sequence of
+    /// `Legalize` / `Verify` stages optionally followed by a matched
+    /// `Encode → PeripheryDecode` pair.
     pub fn new(stages: Vec<Stage>, backend: &'a mut dyn PimBackend) -> Result<Self> {
         let mut i = 0;
-        while i < stages.len() && matches!(stages[i], Stage::Legalize { .. }) {
+        while i < stages.len() && matches!(stages[i], Stage::Legalize { .. } | Stage::Verify(_)) {
             i += 1;
         }
         match &stages[i..] {
@@ -127,7 +138,7 @@ impl<'a> ExecPipeline<'a> {
                 ensure!(e == d, "encode model {} and decode model {} differ", e.name(), d.name());
             }
             rest => bail!(
-                "invalid stage composition {rest:?}: expected Legalize* followed by an optional Encode -> PeripheryDecode pair"
+                "invalid stage composition {rest:?}: expected (Legalize | Verify)* followed by an optional Encode -> PeripheryDecode pair"
             ),
         }
         let decoded = matches!(stages.last(), Some(Stage::PeripheryDecode(_)));
@@ -139,16 +150,20 @@ impl<'a> ExecPipeline<'a> {
         Self::new(Vec::new(), backend).expect("an empty stage list is always valid")
     }
 
-    /// The production control path: encode → periphery decode → execute,
-    /// with control-traffic metering.
+    /// The production control path: verify → encode → periphery decode →
+    /// execute, with control-traffic metering. The verify stage rejects
+    /// hazardous or non-conforming cycles — including ones the encoder would
+    /// accept but the periphery would silently decode to different gates —
+    /// before they reach the wire.
     pub fn wire(model: ModelKind, backend: &'a mut dyn PimBackend) -> Self {
-        Self::new(vec![Stage::Encode(model), Stage::PeripheryDecode(model)], backend).expect("the wire stage pair is always valid")
+        Self::new(vec![Stage::Verify(model), Stage::Encode(model), Stage::PeripheryDecode(model)], backend)
+            .expect("the wire stage list is always valid")
     }
 
-    /// Legalize for `model`, then run the wire path.
+    /// Legalize for `model`, then run the verified wire path.
     pub fn full(model: ModelKind, cfg: LegalizeConfig, backend: &'a mut dyn PimBackend) -> Self {
         Self::new(
-            vec![Stage::Legalize { model, cfg }, Stage::Encode(model), Stage::PeripheryDecode(model)],
+            vec![Stage::Legalize { model, cfg }, Stage::Verify(model), Stage::Encode(model), Stage::PeripheryDecode(model)],
             backend,
         )
         .expect("the full stage list is always valid")
@@ -224,11 +239,15 @@ impl<'a> ExecPipeline<'a> {
                         out.push(Item::Op(legal));
                     }
                 }
+                (Stage::Verify(model), Item::Op(op)) => {
+                    verify::check_cycle(&op, geom, &VerifyOptions::new(model, gate_set))?;
+                    out.push(Item::Op(op));
+                }
                 (Stage::Encode(model), Item::Op(op)) => out.push(Self::encode_item(model, &op, geom)?),
                 (Stage::PeripheryDecode(_), _) => {
                     bail!("periphery decode is a crossbar-side stage; it is consumed at the decode boundary, not applied in the controller-side stage walk")
                 }
-                (Stage::Legalize { .. } | Stage::Encode(_), other) => {
+                (Stage::Legalize { .. } | Stage::Verify(_) | Stage::Encode(_), other) => {
                     bail!("stage {stage:?} expects abstract operations, got already-encoded {other:?}")
                 }
             }
@@ -294,13 +313,21 @@ impl<'a> ExecPipeline<'a> {
             return self.backend.execute(op);
         }
         let geom = self.backend.geom();
-        // A pure wire pipeline encodes straight from the borrowed op — the
-        // production path allocates only the message itself.
+        // A pure wire pipeline (optionally fronted by its verify stage)
+        // encodes straight from the borrowed op — the production path
+        // allocates only the message itself.
         let wire_model = match (self.front_len(), self.stages[0]) {
-            (1, Stage::Encode(model)) => Some(model),
+            (1, Stage::Encode(model)) => Some((None, model)),
+            (2, Stage::Verify(v)) => match self.stages[1] {
+                Stage::Encode(model) => Some((Some(v), model)),
+                _ => None,
+            },
             _ => None,
         };
-        if let Some(model) = wire_model {
+        if let Some((verify_model, model)) = wire_model {
+            if let Some(v) = verify_model {
+                verify::check_cycle(op, &geom, &VerifyOptions::new(v, self.backend.gate_set()))?;
+            }
             let item = Self::encode_item(model, op, &geom)?;
             return self.consume_item(&item, &geom);
         }
@@ -391,6 +418,16 @@ mod tests {
             &mut xb,
         )
         .is_err());
+        // Verify between encode and decode is rejected (it checks abstract
+        // operations, not wire traffic).
+        assert!(ExecPipeline::new(
+            vec![Stage::Encode(ModelKind::Minimal), Stage::Verify(ModelKind::Minimal), Stage::PeripheryDecode(ModelKind::Minimal)],
+            &mut xb,
+        )
+        .is_err());
+        // A verify-only pipeline is valid: direct execution plus static
+        // checking.
+        assert!(ExecPipeline::new(vec![Stage::Verify(ModelKind::Standard)], &mut xb).is_ok());
         // The three canonical shapes are valid.
         ExecPipeline::direct(&mut xb);
         ExecPipeline::wire(ModelKind::Minimal, &mut xb);
@@ -500,6 +537,54 @@ mod tests {
         // Running wire traffic into a direct pipeline fails at the backend
         // boundary (undecoded items are rejected, not executed).
         assert!(ExecPipeline::direct(&mut xb).run_prepared(&prepared).is_err());
+    }
+
+    /// The acceptance case for the verify stage: an aperiodic minimal-model
+    /// cycle that the encoder happily accepts (the range-generator fields
+    /// only capture the first gap), but that the periphery would expand to
+    /// *different* gates — silent mis-execution. The wire path must reject
+    /// it before any backend state changes.
+    #[test]
+    fn verify_stage_rejects_silent_misexecution_before_the_wire() {
+        let g = geom();
+        let op = Operation::Gates(vec![
+            GateOp::nor(g.col(0, 0), g.col(0, 1), g.col(0, 3)),
+            GateOp::nor(g.col(1, 0), g.col(1, 1), g.col(1, 3)),
+            GateOp::nor(g.col(4, 0), g.col(4, 1), g.col(4, 3)),
+        ]);
+        // The op is physically valid and the encoder accepts it...
+        op.validate(&g, GateSet::NotNor).unwrap();
+        assert!(encode::encode(ModelKind::Minimal, &op, &g).is_ok());
+        // ...but the decoded message executes five gates, not three.
+        let msg = encode::to_message(ModelKind::Minimal, &op, &g).unwrap();
+        let rec = periphery::reconstruct(&msg, &g).unwrap();
+        assert_ne!(rec.normalized(), op.normalized());
+
+        let mut xb = Crossbar::new(g, GateSet::NotNor);
+        xb.state.fill_random(9);
+        let before = xb.state.clone();
+        let mut pipe = ExecPipeline::wire(ModelKind::Minimal, &mut xb);
+        assert!(pipe.run_op(&op).is_err(), "verify stage must reject the aperiodic cycle");
+        assert!(pipe.prepare(std::slice::from_ref(&op)).is_err(), "prepare runs the same verify stage");
+        assert_eq!(pipe.metrics().cycles, 0, "nothing may reach the backend");
+        assert_eq!(pipe.stats().messages, 0, "nothing may reach the wire");
+        drop(pipe);
+        assert_eq!(xb.state, before, "rejected cycle must not touch any cell");
+    }
+
+    #[test]
+    fn verify_only_pipeline_checks_before_direct_execution() {
+        let g = geom();
+        let mut xb = Crossbar::new(g, GateSet::NotNor);
+        let mut pipe = ExecPipeline::new(vec![Stage::Verify(ModelKind::Standard)], &mut xb).unwrap();
+        pipe.run_op(&parallel_op(&g)).unwrap();
+        // Mixed directions: a V012 error under the standard model.
+        let mixed = Operation::Gates(vec![
+            GateOp::nor(g.col(0, 0), g.col(0, 1), g.col(1, 3)),
+            GateOp::nor(g.col(5, 0), g.col(5, 1), g.col(4, 3)),
+        ]);
+        assert!(pipe.run_op(&mixed).is_err());
+        assert_eq!(pipe.metrics().cycles, 1);
     }
 
     #[test]

@@ -44,4 +44,4 @@ pub mod service;
 pub mod worker;
 
 pub use service::{JobHandle, JobResult, JobValues, PimClient, PimService, ServiceConfig, ServiceStats};
-pub use worker::{Segment, SegmentReport, WorkloadKind};
+pub use worker::{compile_workload, compile_workload_cached, workload_geometry, Segment, SegmentReport, WorkloadKind};

@@ -13,10 +13,13 @@ use crate::crossbar::geometry::Geometry;
 use crate::crossbar::state::BitMatrix;
 use crate::isa::models::ModelKind;
 use crate::isa::schedule::pack_program;
+use crate::verify;
 use anyhow::{anyhow, bail, Result};
+use std::collections::HashMap;
+use std::sync::{Mutex, OnceLock};
 
 /// Which vectored operation this service instance executes.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum WorkloadKind {
     /// Element-wise 32-bit multiply via the partitioned MultPIM program
     /// (or the serial baseline when the model is `Baseline`).
@@ -109,6 +112,7 @@ pub enum ChunkValues {
 
 /// The operand loader / result reader for a compiled workload.
 /// Opaque compiled-workload handle (loader/reader dispatch).
+#[derive(Clone)]
 pub enum Compiled {
     MultPim(MultPim),
     MultSerial(SerialMultiplier),
@@ -214,9 +218,33 @@ pub fn compile_workload(kind: WorkloadKind, model: ModelKind, geom: Geometry) ->
     }
 }
 
+/// Process-wide compile cache. Workload compilation — including the sort
+/// network's legalization, previously re-run by every worker on the hot
+/// path — is deterministic in `(kind, model, geom)`, so every worker (and
+/// every re-spawned replacement after a panic) reuses one compiled program.
+/// Each entry is statically verified on first use
+/// ([`verify::verify_program`]); a workload whose program carries an
+/// error-severity diagnostic never reaches any worker.
+pub fn compile_workload_cached(kind: WorkloadKind, model: ModelKind, geom: Geometry) -> Result<(Program, Compiled)> {
+    type Cache = Mutex<HashMap<(WorkloadKind, ModelKind, Geometry), (Program, Compiled)>>;
+    static CACHE: OnceLock<Cache> = OnceLock::new();
+    let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+    // Workers run on panic-prone threads (fault injection kills them
+    // mid-operation); recover the map instead of poisoning every future
+    // compile.
+    let mut map = cache.lock().unwrap_or_else(|e| e.into_inner());
+    if let Some((program, compiled)) = map.get(&(kind, model, geom)) {
+        return Ok((program.clone(), compiled.clone()));
+    }
+    let (program, compiled) = compile_workload(kind, model, geom)?;
+    verify::verify_program(&program, model).ensure_clean()?;
+    map.insert((kind, model, geom), (program.clone(), compiled.clone()));
+    Ok((program, compiled))
+}
+
 impl Worker {
     pub fn new(kind: WorkloadKind, model: ModelKind, geom: Geometry) -> Result<Self> {
-        let (program, compiled) = compile_workload(kind, model, geom)?;
+        let (program, compiled) = compile_workload_cached(kind, model, geom)?;
         let mut crossbar = Crossbar::new(geom, GateSet::NotNor);
         // Coalesced batches charge each segment its exact row-range
         // switching energy, so the worker's crossbar always attributes

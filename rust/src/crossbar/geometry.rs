@@ -7,7 +7,7 @@ use anyhow::{ensure, Result};
 /// `n` bitlines (columns) are divided into `k` evenly-spaced partitions of
 /// `m = n/k` bitlines each by `k-1` isolation transistors per row. The paper's
 /// headline configuration is `n = 1024`, `k = 32` (m = 32).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct Geometry {
     /// Number of bitlines (columns). Must be a power of two.
     pub n: usize,

@@ -310,8 +310,14 @@ mod tests {
             GateOp::nor(g.col(0, 0), g.col(0, 1), g.col(1, 3)), // rightward
             GateOp::nor(g.col(5, 0), g.col(5, 1), g.col(4, 3)), // leftward
         ]);
-        op.validate(&g, GateSet::NotNor).unwrap(); // physically fine
-        assert!(op.uniform_direction(&g).is_err()); // but not standard-legal
+        // Physically executable — the sections are disjoint — but opposing
+        // directions have no representation in the shared-direction
+        // standard/minimal wire formats. The verifier classifies this
+        // explicitly as rule V012 (`verify::Rule::MixedDirection`): a
+        // warning under the unlimited model, an error under
+        // standard/minimal (see DESIGN.md §Verifier).
+        op.validate(&g, GateSet::NotNor).unwrap();
+        assert!(op.uniform_direction(&g).is_err());
     }
 
     #[test]

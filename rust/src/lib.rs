@@ -14,9 +14,9 @@
 //! * [`backend`] — the execution seam: the [`backend::PimBackend`] trait
 //!   every physical realization implements (bit-packed, scalar reference,
 //!   XLA/PJRT), and the composable [`backend::ExecPipeline`]
-//!   (legalize → encode → periphery-decode → backend) that every program
-//!   executes through, with uniform metering of cycles, gates and control
-//!   traffic at the stage boundaries.
+//!   (legalize → verify → encode → periphery-decode → backend) that every
+//!   program executes through, with uniform metering of cycles, gates and
+//!   control traffic at the stage boundaries.
 //! * [`crossbar`] — the bit-packed, cycle-accurate crossbar simulator with
 //!   stateful-logic gate semantics, partition transistors and section
 //!   isolation, plus latency / energy (gate-count & switching) metrics.
@@ -35,6 +35,15 @@
 //!   MultPIM-style partitioned multiplier, and partitioned bitonic sorting.
 //!   Programs execute via `Program::execute(&mut ExecPipeline)` — one API
 //!   for every backend and control path.
+//! * [`verify`] — the whole-program static analyzer: per-cycle
+//!   classification (serial / parallel / semi-parallel / init), a stable
+//!   rule catalog (structural V00x, hazard V01x, model-conformance V02x,
+//!   wire-representability V03x, dataflow V04x) and typed diagnostic
+//!   reports. Wired in three layers: the pipeline's default
+//!   `Stage::Verify` (rejects hazardous cycles before the wire), the
+//!   `repro lint` CLI subcommand (checks every built-in program against
+//!   every model), and the coordinator's compile cache (verifies each
+//!   compiled workload once). See DESIGN.md §Verifier for the catalog.
 //! * [`analysis`] — the combinatorial lower bounds on message length
 //!   (443 / 46 / 25 bits) via a small big-integer implementation.
 //! * [`coordinator`] — the L3 runtime: a concurrent, fault-isolated job
@@ -66,6 +75,7 @@ pub mod figures;
 pub mod isa;
 pub mod periphery;
 pub mod runtime;
+pub mod verify;
 
 pub use backend::{ExecPipeline, PimBackend, PipelineStats, PreparedProgram, ScalarCrossbar, Stage};
 pub use crossbar::{

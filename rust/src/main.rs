@@ -12,6 +12,10 @@
 //!                                   end-to-end vector-multiply service demo
 //!                                   (pipelined jobs, cross-job coalescing;
 //!                                   optional fault injection)
+//! repro lint [--all] [--model M] [--deny-warnings]
+//!                                   statically verify every built-in workload
+//!                                   program against every control model
+//!                                   (exits nonzero on error diagnostics)
 //! repro xla-parity [--artifacts D] [--n N] [--k K] [--rows R]
 //!                                   cross-check rust sim vs the XLA artifact
 //! ```
@@ -19,13 +23,14 @@
 use anyhow::{bail, Context, Result};
 use partition_pim::algorithms::multpim::{build_multpim, MultPimVariant};
 use partition_pim::backend::{ExecPipeline, PimBackend};
-use partition_pim::coordinator::{PimService, ServiceConfig, WorkloadKind};
+use partition_pim::coordinator::{compile_workload, workload_geometry, PimService, ServiceConfig, WorkloadKind};
 use partition_pim::crossbar::crossbar::Crossbar;
 use partition_pim::crossbar::gate::GateSet;
 use partition_pim::crossbar::geometry::Geometry;
 use partition_pim::figures;
 use partition_pim::isa::models::ModelKind;
 use partition_pim::runtime::XlaCrossbar;
+use partition_pim::verify::{self, Severity};
 use std::collections::HashMap;
 use std::path::PathBuf;
 use std::time::Instant;
@@ -244,6 +249,60 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
+/// `repro lint`: run the static verifier over every built-in workload
+/// program × control model pair (the same programs the coordinator serves).
+/// Exits nonzero on any error-severity diagnostic — the CI gate that keeps
+/// the built-in algorithm library conforming to the paper's reduced
+/// operation sets. `--all` is accepted for explicitness (the full sweep is
+/// the default); `--model M` restricts to one model; `--deny-warnings`
+/// upgrades warnings to failures.
+fn cmd_lint(flags: &HashMap<String, String>) -> Result<()> {
+    let deny_warnings = flags.contains_key("deny-warnings");
+    let model_filter = match flags.get("model") {
+        Some(m) => Some(parse_model(m)?),
+        None => None,
+    };
+    let kinds = [(WorkloadKind::Mul32, "mul32"), (WorkloadKind::Add32, "add32"), (WorkloadKind::Sort16, "sort16")];
+    println!("verifier lint: built-in workload programs x control models\n");
+    println!("{:<20} {:>7} {:>26} {:>7} {:>6} {:>6}", "program", "cycles", "serial/par/semi/init", "errors", "warns", "notes");
+    let (mut errors, mut warnings, mut pairs) = (0usize, 0usize, 0usize);
+    for (kind, kname) in kinds {
+        for model in ModelKind::ALL {
+            if let Some(m) = model_filter {
+                if m != model {
+                    continue;
+                }
+            }
+            let geom = workload_geometry(kind, model, 4)?;
+            let (program, _) =
+                compile_workload(kind, model, geom).with_context(|| format!("compiling {kname} for the {} model", model.name()))?;
+            let report = verify::verify_program(&program, model);
+            let p = report.profile;
+            println!(
+                "{:<20} {:>7} {:>26} {:>7} {:>6} {:>6}",
+                format!("{kname}@{}", model.name()),
+                report.cycles,
+                format!("{}/{}/{}/{}", p.serial, p.parallel, p.semi_parallel, p.init),
+                report.error_count(),
+                report.warning_count(),
+                report.info_count(),
+            );
+            for d in report.diagnostics.iter().filter(|d| d.severity >= Severity::Warning).take(20) {
+                println!("    {d}");
+            }
+            errors += report.error_count();
+            warnings += report.warning_count();
+            pairs += 1;
+        }
+    }
+    println!();
+    if errors > 0 || (deny_warnings && warnings > 0) {
+        bail!("lint failed: {errors} error(s), {warnings} warning(s) across {pairs} workload x model pairs");
+    }
+    println!("lint clean: 0 errors, {warnings} warning(s) across {pairs} workload x model pairs");
+    Ok(())
+}
+
 fn cmd_xla_parity(flags: &HashMap<String, String>) -> Result<()> {
     let dir = PathBuf::from(flags.get("artifacts").map(String::as_str).unwrap_or("artifacts"));
     let n: usize = flags.get("n").map(String::as_str).unwrap_or("256").parse()?;
@@ -295,10 +354,11 @@ fn main() -> Result<()> {
         "sweep" => cmd_sweep(),
         "sort" => cmd_sort(),
         "serve" => cmd_serve(&flags),
+        "lint" => cmd_lint(&flags),
         "xla-parity" => cmd_xla_parity(&flags),
         _ => {
             println!("PartitionPIM reproduction driver\n");
-            println!("usage: repro <report|figure6|sort|serve|xla-parity> [--flag value]...");
+            println!("usage: repro <report|figure6|sweep|sort|serve|lint|xla-parity> [--flag value]...");
             println!("  report      control formats, lower bounds, periphery areas");
             println!("  figure6     regenerate Figure 6 (latency / control / area / energy)");
             println!("  sweep       speedup vs control-overhead across partition counts");
@@ -308,6 +368,9 @@ fn main() -> Result<()> {
             println!("              [--inject-bad]  submit one malformed job, show fault isolation");
             println!("              [--kill W]      kill worker W mid-service, show chunk requeue");
             println!("              [--no-coalesce] disable cross-job chunk coalescing (ablation)");
+            println!("  lint        statically verify every built-in workload program against");
+            println!("              every control model; exits nonzero on error diagnostics");
+            println!("              [--all] [--model M] [--deny-warnings]");
             println!("  xla-parity  rust simulator vs AOT XLA artifact cross-check");
             println!("              [--artifacts artifacts] [--n 256] [--k 8] [--rows 16]");
             Ok(())

@@ -1,0 +1,146 @@
+//! Whole-program dataflow rules (V04x): a per-column abstract state machine
+//! walked over the cycle stream.
+//!
+//! Within a gate cycle all reads happen before all writes (the crossbar
+//! latches input voltages before the output memristors switch), so each
+//! cycle processes its reads first and its writes second.
+
+use super::{Diagnostic, Rule, Severity, VerifyOptions};
+use crate::crossbar::geometry::Geometry;
+use crate::isa::operation::Operation;
+use std::collections::HashSet;
+
+/// Abstract per-column state.
+#[derive(Clone, Copy, PartialEq)]
+enum Cell {
+    /// Never written by the program.
+    Untouched,
+    /// Initialized by an `Init` cycle (the MAGIC write precondition holds).
+    Ready,
+    /// Written by a gate at `cycle`; `read` tracks whether any later cycle
+    /// consumed the value.
+    Computed { cycle: usize, read: bool },
+}
+
+pub(crate) fn check_dataflow(ops: &[Operation], geom: &Geometry, opts: &VerifyOptions, out: &mut Vec<Diagnostic>) {
+    scratch_leaks(ops, geom, opts, out);
+    let declared: Option<HashSet<usize>> = opts.inputs.as_ref().map(|v| v.iter().copied().collect());
+    // Without a declared input set any never-written column could be a
+    // legitimate operand loaded at runtime, so V040 is only a note.
+    let uninit_severity = if declared.is_some() { Severity::Error } else { Severity::Info };
+    let mut cells = vec![Cell::Untouched; geom.n];
+    let mut reported_uninit: HashSet<usize> = HashSet::new();
+    for (i, op) in ops.iter().enumerate() {
+        match op {
+            Operation::Init { cols, .. } => {
+                for &c in cols {
+                    if c >= geom.n {
+                        continue; // V002 already reported
+                    }
+                    if let Cell::Computed { cycle, read: false } = cells[c] {
+                        out.push(Diagnostic::new(
+                            Rule::DeadWrite,
+                            Severity::Warning,
+                            Some(i),
+                            format!("column {c} computed at cycle {cycle} is re-initialized before any read"),
+                        ));
+                    }
+                    cells[c] = Cell::Ready;
+                }
+            }
+            Operation::Gates(gates) => {
+                for g in gates {
+                    for &c in &g.ins {
+                        if c >= geom.n {
+                            continue;
+                        }
+                        match cells[c] {
+                            Cell::Untouched => {
+                                let undeclared = match &declared {
+                                    Some(d) => !d.contains(&c),
+                                    None => true,
+                                };
+                                if undeclared && reported_uninit.insert(c) {
+                                    out.push(Diagnostic::new(
+                                        Rule::UninitRead,
+                                        uninit_severity,
+                                        Some(i),
+                                        format!("column {c} is read but never written and not declared as a program input"),
+                                    ));
+                                }
+                            }
+                            Cell::Computed { cycle, .. } => cells[c] = Cell::Computed { cycle, read: true },
+                            Cell::Ready => {}
+                        }
+                    }
+                }
+                for g in gates {
+                    let c = g.out;
+                    if c >= geom.n {
+                        continue;
+                    }
+                    match cells[c] {
+                        Cell::Ready => {}
+                        Cell::Untouched => out.push(Diagnostic::new(
+                            Rule::MissingInit,
+                            Severity::Warning,
+                            Some(i),
+                            format!("gate output column {c} was never initialized (MAGIC requires an init-to-1 cycle before a gate writes)"),
+                        )),
+                        Cell::Computed { cycle, read } => {
+                            if !read {
+                                out.push(Diagnostic::new(
+                                    Rule::DeadWrite,
+                                    Severity::Warning,
+                                    Some(i),
+                                    format!("column {c} computed at cycle {cycle} is overwritten before any read"),
+                                ));
+                            }
+                            out.push(Diagnostic::new(
+                                Rule::MissingInit,
+                                Severity::Warning,
+                                Some(i),
+                                format!("gate output column {c} reused without re-initialization (last written at cycle {cycle})"),
+                            ));
+                        }
+                    }
+                    cells[c] = Cell::Computed { cycle: i, read: false };
+                }
+            }
+        }
+    }
+}
+
+/// V043: the program references a column whose intra-partition index the
+/// legalizer configuration reserves as scratch — legalizing such a program
+/// would clobber live data.
+fn scratch_leaks(ops: &[Operation], geom: &Geometry, opts: &VerifyOptions, out: &mut Vec<Diagnostic>) {
+    let Some((s1, s2)) = opts.scratch_intra else { return };
+    let mut reported: HashSet<usize> = HashSet::new();
+    for (i, op) in ops.iter().enumerate() {
+        let mut cols: Vec<usize> = Vec::new();
+        match op {
+            Operation::Init { cols: c, .. } => cols.extend_from_slice(c),
+            Operation::Gates(gates) => {
+                for g in gates {
+                    cols.push(g.out);
+                    cols.extend_from_slice(&g.ins);
+                }
+            }
+        }
+        for c in cols {
+            if c < geom.n && (geom.intra(c) == s1 || geom.intra(c) == s2) && reported.insert(c) {
+                out.push(Diagnostic::new(
+                    Rule::ScratchLeak,
+                    Severity::Error,
+                    Some(i),
+                    format!(
+                        "column {c} (partition {}, intra index {}) is reserved as legalizer scratch (scratch_intra = ({s1}, {s2})); legalization would clobber it",
+                        geom.partition_of(c),
+                        geom.intra(c),
+                    ),
+                ));
+            }
+        }
+    }
+}

@@ -1,0 +1,301 @@
+//! Diagnostic types for the static verifier: severities, the rule catalog,
+//! per-cycle classification profiles, and the [`Report`] a verification run
+//! produces.
+//!
+//! Rule identifiers are stable (`V0xx`) and grouped by family:
+//!
+//! * `V00x` — structural rules (mirroring [`crate::isa::operation::Operation::validate`],
+//!   but reported as diagnostics with cycle spans instead of a bare `Err`).
+//! * `V01x` — intra-cycle hazards: column-level write-write / read-write
+//!   overlap across partitions, and the mixed-direction policy.
+//! * `V02x` — operation-set conformance per reduced control model
+//!   (Section 3.1 / Section 4.1 criteria, reported *before* encode).
+//! * `V03x` — wire representability: encodability under the model's message
+//!   format and half-gate decoder roundtrip fidelity.
+//! * `V04x` — whole-program dataflow: uninitialized reads, MAGIC init
+//!   preconditions, dead writes, and legalizer scratch-column leaks.
+
+use crate::isa::models::ModelKind;
+use anyhow::{bail, Result};
+use std::fmt;
+
+/// Severity of a diagnostic. Ordered: `Info < Warning < Error`.
+///
+/// Only `Error`-severity diagnostics make a report unclean ([`Report::is_clean`])
+/// and reject an operation at the pipeline's verify stage; warnings flag
+/// hardware-fidelity or hygiene concerns the simulator tolerates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Severity {
+    /// Informational note (e.g. a read of an undeclared input column).
+    Info,
+    /// Suspicious but executable (e.g. a missing MAGIC re-initialization).
+    Warning,
+    /// The program is malformed, hazardous, or silently mis-executes on the
+    /// wire path.
+    Error,
+}
+
+impl fmt::Display for Severity {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            Severity::Info => "note",
+            Severity::Warning => "warning",
+            Severity::Error => "error",
+        })
+    }
+}
+
+/// The verifier's rule catalog. See `DESIGN.md` §Verifier for the full table
+/// with example diagnostics.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Rule {
+    /// V001: a cycle with no gates / no columns.
+    EmptyCycle,
+    /// V002: a column index outside the crossbar (`>= n`).
+    ColumnRange,
+    /// V003: a gate's output column aliases one of its inputs.
+    OutputAliasesInput,
+    /// V004: a gate outside the configured gate set, an init pseudo-gate in a
+    /// gate cycle, or an arity mismatch.
+    GateSetViolation,
+    /// V005: two concurrent gates occupy overlapping partition intervals.
+    SectionOverlap,
+    /// V010: two gates write the same column in one cycle.
+    WriteWriteHazard,
+    /// V011: one gate writes a column another gate reads in the same cycle.
+    ReadWriteHazard,
+    /// V012: gates with opposing directions in one cycle — physically
+    /// executable in disjoint sections, but inexpressible in the standard /
+    /// minimal wire formats. Warning under unlimited, error under
+    /// standard / minimal.
+    MixedDirection,
+    /// V020: more than one gate per cycle under the baseline (partition-free)
+    /// model.
+    BaselineMultiGate,
+    /// V021: a gate whose inputs span two partitions (No Split-Input
+    /// criterion, standard and minimal models).
+    SplitInput,
+    /// V022: gates with differing intra-partition index tuples (Identical
+    /// Indices criterion, standard and minimal models).
+    IdenticalIndices,
+    /// V023: gates with differing partition distances (Uniform
+    /// Partition-Distance criterion, minimal model).
+    UniformDistance,
+    /// V024: input partitions not periodic with period `T > d` (Periodic
+    /// criterion, minimal model).
+    Periodic,
+    /// V030: the operation has no encoding in the model's wire format (and no
+    /// more specific conformance rule explains why).
+    NotEncodable,
+    /// V031: the operation encodes, but the periphery decodes the message to
+    /// *different* gates — the wire path would silently mis-execute.
+    DecodeDivergence,
+    /// V040: a column is read before any write and is not a declared program
+    /// input.
+    UninitRead,
+    /// V041: a gate writes a column that was not initialized to one first —
+    /// the MAGIC output precondition (the simulator computes the result
+    /// regardless; real hardware would not).
+    MissingInit,
+    /// V042: a computed value is overwritten before any read.
+    DeadWrite,
+    /// V043: the program uses a column the legalizer configuration reserves
+    /// as scratch (`LegalizeConfig::scratch_intra`).
+    ScratchLeak,
+}
+
+impl Rule {
+    /// Every rule, in catalog order.
+    pub const ALL: [Rule; 19] = [
+        Rule::EmptyCycle,
+        Rule::ColumnRange,
+        Rule::OutputAliasesInput,
+        Rule::GateSetViolation,
+        Rule::SectionOverlap,
+        Rule::WriteWriteHazard,
+        Rule::ReadWriteHazard,
+        Rule::MixedDirection,
+        Rule::BaselineMultiGate,
+        Rule::SplitInput,
+        Rule::IdenticalIndices,
+        Rule::UniformDistance,
+        Rule::Periodic,
+        Rule::NotEncodable,
+        Rule::DecodeDivergence,
+        Rule::UninitRead,
+        Rule::MissingInit,
+        Rule::DeadWrite,
+        Rule::ScratchLeak,
+    ];
+
+    /// Stable identifier, e.g. `"V012"`.
+    pub fn code(&self) -> &'static str {
+        match self {
+            Rule::EmptyCycle => "V001",
+            Rule::ColumnRange => "V002",
+            Rule::OutputAliasesInput => "V003",
+            Rule::GateSetViolation => "V004",
+            Rule::SectionOverlap => "V005",
+            Rule::WriteWriteHazard => "V010",
+            Rule::ReadWriteHazard => "V011",
+            Rule::MixedDirection => "V012",
+            Rule::BaselineMultiGate => "V020",
+            Rule::SplitInput => "V021",
+            Rule::IdenticalIndices => "V022",
+            Rule::UniformDistance => "V023",
+            Rule::Periodic => "V024",
+            Rule::NotEncodable => "V030",
+            Rule::DecodeDivergence => "V031",
+            Rule::UninitRead => "V040",
+            Rule::MissingInit => "V041",
+            Rule::DeadWrite => "V042",
+            Rule::ScratchLeak => "V043",
+        }
+    }
+
+    /// Human-readable slug, e.g. `"mixed-direction"`.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Rule::EmptyCycle => "empty-cycle",
+            Rule::ColumnRange => "column-range",
+            Rule::OutputAliasesInput => "output-aliases-input",
+            Rule::GateSetViolation => "gate-set-violation",
+            Rule::SectionOverlap => "section-overlap",
+            Rule::WriteWriteHazard => "write-write-hazard",
+            Rule::ReadWriteHazard => "read-write-hazard",
+            Rule::MixedDirection => "mixed-direction",
+            Rule::BaselineMultiGate => "baseline-multi-gate",
+            Rule::SplitInput => "split-input",
+            Rule::IdenticalIndices => "identical-indices",
+            Rule::UniformDistance => "uniform-distance",
+            Rule::Periodic => "non-periodic",
+            Rule::NotEncodable => "not-encodable",
+            Rule::DecodeDivergence => "decode-divergence",
+            Rule::UninitRead => "uninit-read",
+            Rule::MissingInit => "missing-init",
+            Rule::DeadWrite => "dead-write",
+            Rule::ScratchLeak => "scratch-leak",
+        }
+    }
+}
+
+/// One finding: a rule, a severity, an optional cycle span, and a message.
+#[derive(Debug, Clone)]
+pub struct Diagnostic {
+    pub rule: Rule,
+    pub severity: Severity,
+    /// Index of the offending cycle in the program's op stream (`None` for
+    /// whole-program findings).
+    pub cycle: Option<usize>,
+    pub message: String,
+}
+
+impl Diagnostic {
+    pub fn new(rule: Rule, severity: Severity, cycle: Option<usize>, message: String) -> Self {
+        Self { rule, severity, cycle, message }
+    }
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.cycle {
+            Some(c) => write!(f, "{}[{}] cycle {}: {}", self.severity, self.rule.code(), c, self.message),
+            None => write!(f, "{}[{}] {}", self.severity, self.rule.code(), self.message),
+        }
+    }
+}
+
+/// Per-cycle classification counts (Section 2.1 / Figure 2).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CycleProfile {
+    pub serial: usize,
+    pub parallel: usize,
+    pub semi_parallel: usize,
+    pub init: usize,
+}
+
+/// The result of verifying a program: classification profile plus the full
+/// diagnostic list, sorted by cycle.
+#[derive(Debug, Clone)]
+pub struct Report {
+    /// Name of the verified program (for rendering).
+    pub program: String,
+    /// Control model the program was checked against.
+    pub model: ModelKind,
+    /// Number of cycles (operations) in the program.
+    pub cycles: usize,
+    /// Per-cycle classification counts.
+    pub profile: CycleProfile,
+    /// All findings, sorted by cycle (whole-program findings last).
+    pub diagnostics: Vec<Diagnostic>,
+}
+
+impl Report {
+    pub fn error_count(&self) -> usize {
+        self.diagnostics.iter().filter(|d| d.severity == Severity::Error).count()
+    }
+
+    pub fn warning_count(&self) -> usize {
+        self.diagnostics.iter().filter(|d| d.severity == Severity::Warning).count()
+    }
+
+    pub fn info_count(&self) -> usize {
+        self.diagnostics.iter().filter(|d| d.severity == Severity::Info).count()
+    }
+
+    /// `true` when the report contains no `Error`-severity diagnostics
+    /// (warnings and notes do not make a program unclean).
+    pub fn is_clean(&self) -> bool {
+        self.error_count() == 0
+    }
+
+    /// `true` when any diagnostic with the given rule was emitted.
+    pub fn has(&self, rule: Rule) -> bool {
+        self.diagnostics.iter().any(|d| d.rule == rule)
+    }
+
+    /// Fail with a rendered summary of the error-severity diagnostics if the
+    /// report is not clean.
+    pub fn ensure_clean(&self) -> Result<()> {
+        if self.is_clean() {
+            return Ok(());
+        }
+        let mut msg = format!("verification of `{}` under the {} model failed: {} error(s)", self.program, self.model.name(), self.error_count());
+        for d in self.diagnostics.iter().filter(|d| d.severity == Severity::Error).take(10) {
+            msg.push_str("\n  ");
+            msg.push_str(&d.to_string());
+        }
+        let omitted = self.error_count().saturating_sub(10);
+        if omitted > 0 {
+            msg.push_str(&format!("\n  ... and {omitted} more"));
+        }
+        bail!(msg)
+    }
+
+    /// Multi-line human-readable rendering (header + capped diagnostic list).
+    pub fn render(&self) -> String {
+        let p = &self.profile;
+        let mut s = format!(
+            "`{}` under {}: {} cycles ({} serial / {} parallel / {} semi-parallel / {} init), {} error(s), {} warning(s), {} note(s)",
+            self.program,
+            self.model.name(),
+            self.cycles,
+            p.serial,
+            p.parallel,
+            p.semi_parallel,
+            p.init,
+            self.error_count(),
+            self.warning_count(),
+            self.info_count(),
+        );
+        const CAP: usize = 50;
+        for d in self.diagnostics.iter().take(CAP) {
+            s.push_str("\n  ");
+            s.push_str(&d.to_string());
+        }
+        if self.diagnostics.len() > CAP {
+            s.push_str(&format!("\n  ... and {} more", self.diagnostics.len() - CAP));
+        }
+        s
+    }
+}

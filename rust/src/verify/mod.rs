@@ -1,0 +1,123 @@
+//! Whole-program static analysis for partitioned PIM programs.
+//!
+//! The verifier takes a (raw or legalized) operation stream plus a
+//! [`Geometry`] and a control [`ModelKind`] and produces a typed [`Report`]:
+//! a per-cycle classification profile (serial / parallel / semi-parallel /
+//! init, Section 2.1 of the paper) and a diagnostic list drawn from a stable
+//! rule catalog (see [`Rule`] and `DESIGN.md` §Verifier):
+//!
+//! * **V00x structural** — empty cycles, column ranges, output/input
+//!   aliasing, gate-set membership, overlapping sections.
+//! * **V01x hazards** — intra-cycle write-write / read-write column overlap
+//!   and the mixed-direction policy (warning under unlimited, error under
+//!   standard / minimal).
+//! * **V02x conformance** — the reduced operation-set criteria of each
+//!   control model (No Split-Input, Identical Indices, Uniform Direction,
+//!   Uniform Partition-Distance, Periodic), reported with per-gate spans
+//!   *before* any encoder runs.
+//! * **V03x representability** — an encode → periphery-decode dry run per
+//!   cycle; V031 catches messages that encode fine but decode to *different*
+//!   gates (silent mis-execution on the wire path).
+//! * **V04x dataflow** — uninitialized reads, MAGIC init preconditions,
+//!   dead writes, legalizer scratch-column leaks.
+//!
+//! Three entry points, one per integration layer:
+//!
+//! * [`verify_program`] / [`verify_ops`] — whole-program analysis, used by
+//!   the `repro lint` CLI subcommand and the coordinator's compile cache.
+//! * [`check_cycle`] — the single-cycle subset (V00x–V03x) behind the
+//!   pipeline's [`crate::backend::Stage::Verify`] stage: error-severity
+//!   diagnostics reject the operation before it reaches the wire or a
+//!   backend.
+
+mod dataflow;
+mod rules;
+
+pub mod diag;
+
+pub use diag::{CycleProfile, Diagnostic, Report, Rule, Severity};
+
+use crate::algorithms::program::Program;
+use crate::crossbar::gate::GateSet;
+use crate::crossbar::geometry::Geometry;
+use crate::isa::models::ModelKind;
+use crate::isa::operation::{OpKind, Operation};
+use anyhow::{bail, Result};
+
+/// What to verify against: the control model, the gate set, and optional
+/// whole-program context (declared inputs, reserved scratch columns).
+#[derive(Debug, Clone)]
+pub struct VerifyOptions {
+    /// Control model whose operation-set and wire format the program must
+    /// conform to.
+    pub model: ModelKind,
+    /// Gate set the target crossbar supports.
+    pub gate_set: GateSet,
+    /// Columns the program legitimately reads before writing (its operands).
+    /// `Some` upgrades V040 (uninit read) from a note to an error for any
+    /// read outside this set.
+    pub inputs: Option<Vec<usize>>,
+    /// Intra-partition indices reserved as legalizer scratch
+    /// ([`crate::isa::lower::LegalizeConfig::scratch_intra`]); any program
+    /// reference to them is a V043 error.
+    pub scratch_intra: Option<(usize, usize)>,
+}
+
+impl VerifyOptions {
+    pub fn new(model: ModelKind, gate_set: GateSet) -> Self {
+        Self { model, gate_set, inputs: None, scratch_intra: None }
+    }
+
+    /// Declare the program's input columns (upgrades V040 to an error).
+    pub fn with_inputs(mut self, inputs: Vec<usize>) -> Self {
+        self.inputs = Some(inputs);
+        self
+    }
+
+    /// Declare reserved legalizer scratch intra-partition indices (enables
+    /// V043).
+    pub fn with_scratch(mut self, scratch_intra: (usize, usize)) -> Self {
+        self.scratch_intra = Some(scratch_intra);
+        self
+    }
+}
+
+/// Verify an operation stream: per-cycle rules (V00x–V03x) on every cycle,
+/// then whole-program dataflow (V04x). Diagnostics are sorted by cycle.
+pub fn verify_ops(name: &str, ops: &[Operation], geom: &Geometry, opts: &VerifyOptions) -> Report {
+    let mut profile = CycleProfile::default();
+    let mut diagnostics = Vec::new();
+    for (i, op) in ops.iter().enumerate() {
+        match op.kind(geom) {
+            OpKind::Serial => profile.serial += 1,
+            OpKind::Parallel => profile.parallel += 1,
+            OpKind::SemiParallel => profile.semi_parallel += 1,
+            OpKind::Init => profile.init += 1,
+        }
+        rules::check_op(i, op, geom, opts, &mut diagnostics);
+    }
+    dataflow::check_dataflow(ops, geom, opts, &mut diagnostics);
+    diagnostics.sort_by_key(|d| (d.cycle.is_none(), d.cycle));
+    Report { program: name.to_string(), model: opts.model, cycles: ops.len(), profile, diagnostics }
+}
+
+/// Verify a built [`Program`] against `model`, using the program's own
+/// geometry and gate set.
+pub fn verify_program(program: &Program, model: ModelKind) -> Report {
+    let opts = VerifyOptions::new(model, program.gate_set);
+    verify_ops(&program.name, &program.ops, &program.geom, &opts)
+}
+
+/// The single-cycle check behind the pipeline's verify stage: run the
+/// per-cycle rules (V00x–V03x) on one operation and fail on any
+/// error-severity diagnostic. Warnings and notes pass.
+pub fn check_cycle(op: &Operation, geom: &Geometry, opts: &VerifyOptions) -> Result<()> {
+    let mut diagnostics = Vec::new();
+    rules::check_op(0, op, geom, opts, &mut diagnostics);
+    let errors: Vec<String> =
+        diagnostics.iter().filter(|d| d.severity == Severity::Error).map(|d| format!("{}[{}] {}", d.severity, d.rule.code(), d.message)).collect();
+    if !errors.is_empty() {
+        bail!("verify stage rejected the operation: {}", errors.join("; "));
+    }
+    Ok(())
+}

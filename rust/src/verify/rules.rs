@@ -1,0 +1,298 @@
+//! Per-cycle rules: structural checks (V00x), intra-cycle hazards (V01x),
+//! model conformance (V02x), and wire representability (V03x).
+//!
+//! The checks are layered: hazard and conformance rules only run on
+//! structurally sound cycles (otherwise column/partition arithmetic is
+//! meaningless), and the encode/decode dry run (V030/V031) only runs on
+//! cycles with no structural errors (the codecs `debug_assert` on garbage).
+//! V030 is a pure backstop — it is suppressed when a more specific rule
+//! already explains why the cycle cannot reach the wire; V031 is always
+//! reported because it is the *silent mis-execution* case: the message
+//! encodes fine and the periphery executes different gates than intended.
+
+use super::{Diagnostic, Rule, Severity, VerifyOptions};
+use crate::crossbar::geometry::Geometry;
+use crate::isa::encode;
+use crate::isa::models::ModelKind;
+use crate::isa::operation::{Direction, GateOp, Operation};
+use crate::periphery;
+use std::collections::BTreeMap;
+
+/// Run every per-cycle rule on `op` (cycle index `cycle`), appending
+/// diagnostics to `out`.
+pub(crate) fn check_op(cycle: usize, op: &Operation, geom: &Geometry, opts: &VerifyOptions, out: &mut Vec<Diagnostic>) {
+    let start = out.len();
+    match op {
+        Operation::Init { cols, .. } => {
+            if cols.is_empty() {
+                push(out, Rule::EmptyCycle, Severity::Error, cycle, "initialization writes no columns".into());
+            }
+            for &c in cols {
+                if c >= geom.n {
+                    push(out, Rule::ColumnRange, Severity::Error, cycle, format!("init column {c} out of range (n={})", geom.n));
+                }
+            }
+            return;
+        }
+        Operation::Gates(gates) => {
+            if structural(cycle, gates, geom, opts, out) {
+                return;
+            }
+            hazards(cycle, gates, out);
+            direction_policy(cycle, op, geom, opts, out);
+            conformance(cycle, gates, geom, opts, out);
+        }
+    }
+    wire_roundtrip(cycle, op, geom, opts, start, out);
+}
+
+fn push(out: &mut Vec<Diagnostic>, rule: Rule, severity: Severity, cycle: usize, message: String) {
+    out.push(Diagnostic::new(rule, severity, Some(cycle), message));
+}
+
+/// V001–V004 (per gate) and V005 (section overlap). Returns `true` when a
+/// structural error makes the remaining rules meaningless.
+fn structural(cycle: usize, gates: &[GateOp], geom: &Geometry, opts: &VerifyOptions, out: &mut Vec<Diagnostic>) -> bool {
+    if gates.is_empty() {
+        push(out, Rule::EmptyCycle, Severity::Error, cycle, "gate cycle contains no gates".into());
+        return true;
+    }
+    let mut bad = false;
+    for (gi, g) in gates.iter().enumerate() {
+        if g.gate.is_init() {
+            push(out, Rule::GateSetViolation, Severity::Error, cycle, format!("gate {gi} is an init pseudo-gate {:?}; use an Init cycle", g.gate));
+            bad = true;
+        } else if let Err(e) = opts.gate_set.check(g.gate) {
+            push(out, Rule::GateSetViolation, Severity::Error, cycle, format!("gate {gi}: {e}"));
+            bad = true;
+        }
+        if g.ins.len() != g.gate.arity() {
+            push(out, Rule::GateSetViolation, Severity::Error, cycle, format!("gate {gi} ({:?}) expects {} inputs, got {}", g.gate, g.gate.arity(), g.ins.len()));
+            bad = true;
+        }
+        if g.out >= geom.n {
+            push(out, Rule::ColumnRange, Severity::Error, cycle, format!("gate {gi} output column {} out of range (n={})", g.out, geom.n));
+            bad = true;
+        }
+        for &c in &g.ins {
+            if c >= geom.n {
+                push(out, Rule::ColumnRange, Severity::Error, cycle, format!("gate {gi} input column {c} out of range (n={})", geom.n));
+                bad = true;
+            } else if c == g.out {
+                push(out, Rule::OutputAliasesInput, Severity::Error, cycle, format!("gate {gi} output column {} aliases one of its inputs", g.out));
+                bad = true;
+            }
+        }
+    }
+    if bad {
+        return true;
+    }
+    let mut spans: Vec<(usize, usize)> = gates.iter().map(|g| g.span(geom)).collect();
+    spans.sort_unstable();
+    for w in spans.windows(2) {
+        if w[0].1 >= w[1].0 {
+            push(
+                out,
+                Rule::SectionOverlap,
+                Severity::Error,
+                cycle,
+                format!("sections {:?} and {:?} overlap: concurrent gates must occupy disjoint partition intervals", w[0], w[1]),
+            );
+        }
+    }
+    false
+}
+
+/// V010/V011: column-level write-write and write-read overlap between
+/// distinct gates of one cycle. Disjoint sections already imply disjoint
+/// columns for valid cycles, so these fire together with V005 — but they
+/// name the *data* hazard (which column, which gates) rather than the
+/// physical one.
+fn hazards(cycle: usize, gates: &[GateOp], out: &mut Vec<Diagnostic>) {
+    let mut writers: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+    let mut readers: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+    for (gi, g) in gates.iter().enumerate() {
+        writers.entry(g.out).or_default().push(gi);
+        for &c in &g.ins {
+            readers.entry(c).or_default().push(gi);
+        }
+    }
+    for (col, ws) in &writers {
+        if ws.len() > 1 {
+            push(out, Rule::WriteWriteHazard, Severity::Error, cycle, format!("gates {ws:?} all write column {col} in the same cycle"));
+        }
+        if let Some(rs) = readers.get(col) {
+            let others: Vec<usize> = rs.iter().copied().filter(|r| !ws.contains(r)).collect();
+            if !others.is_empty() {
+                push(
+                    out,
+                    Rule::ReadWriteHazard,
+                    Severity::Error,
+                    cycle,
+                    format!("column {col} is written by gate {} and concurrently read by gate(s) {others:?}", ws[0]),
+                );
+            }
+        }
+    }
+}
+
+/// V012: the mixed-direction policy. Opposing directions in one cycle are
+/// physically executable (the sections are disjoint) but have no wire
+/// representation under the standard / minimal shared-direction formats —
+/// so: warning under unlimited (representable, flagged for portability),
+/// error under standard / minimal, not applicable under baseline
+/// (single-gate cycles are enforced by V020 instead).
+fn direction_policy(cycle: usize, op: &Operation, geom: &Geometry, opts: &VerifyOptions, out: &mut Vec<Diagnostic>) {
+    if opts.model == ModelKind::Baseline || op.uniform_direction(geom).is_ok() {
+        return;
+    }
+    let Operation::Gates(gates) = op else { return };
+    let dirs: Vec<Option<Direction>> = gates.iter().map(|g| g.direction(geom)).collect();
+    let severity = match opts.model {
+        ModelKind::Unlimited => Severity::Warning,
+        _ => Severity::Error,
+    };
+    let detail = if severity == Severity::Warning {
+        "representable in the unlimited format but not portable to standard/minimal"
+    } else {
+        "the shared-direction wire format cannot express this cycle"
+    };
+    push(out, Rule::MixedDirection, severity, cycle, format!("gates with opposing partition directions in one cycle ({dirs:?}): {detail}"));
+}
+
+/// V020–V024: the reduced operation-set criteria of Sections 3.1 and 4.1,
+/// mirroring [`ModelKind::check`] but with per-gate spans and rule ids.
+fn conformance(cycle: usize, gates: &[GateOp], geom: &Geometry, opts: &VerifyOptions, out: &mut Vec<Diagnostic>) {
+    match opts.model {
+        ModelKind::Baseline => {
+            if gates.len() > 1 {
+                push(
+                    out,
+                    Rule::BaselineMultiGate,
+                    Severity::Error,
+                    cycle,
+                    format!("{} concurrent gates, but the baseline (partition-free) model executes one gate per cycle", gates.len()),
+                );
+            }
+        }
+        ModelKind::Unlimited => {}
+        ModelKind::Standard | ModelKind::Minimal => {
+            let mut split = false;
+            for (gi, g) in gates.iter().enumerate() {
+                if g.input_partition(geom).is_none() {
+                    let ps: Vec<usize> = g.ins.iter().map(|&c| geom.partition_of(c)).collect();
+                    push(
+                        out,
+                        Rule::SplitInput,
+                        Severity::Error,
+                        cycle,
+                        format!("gate {gi} inputs span partitions {ps:?} (No Split-Input criterion)"),
+                    );
+                    split = true;
+                }
+            }
+            let tuple = |g: &GateOp| -> (usize, usize, usize) {
+                (geom.intra(g.ins[0]), geom.intra(*g.ins.get(1).unwrap_or(&g.ins[0])), geom.intra(g.out))
+            };
+            let first = tuple(&gates[0]);
+            if let Some((gi, g)) = gates.iter().enumerate().find(|(_, g)| tuple(g) != first) {
+                push(
+                    out,
+                    Rule::IdenticalIndices,
+                    Severity::Error,
+                    cycle,
+                    format!("gate {gi} uses intra-partition indices {:?} but gate 0 uses {first:?} (Identical Indices criterion)", tuple(g)),
+                );
+            }
+            if opts.model == ModelKind::Minimal && !split {
+                minimal_pattern(cycle, gates, geom, out);
+            }
+        }
+    }
+}
+
+/// V023/V024: the minimal model's Uniform Partition-Distance and Periodic
+/// (`T > d`) criteria — the preconditions of the range generator.
+fn minimal_pattern(cycle: usize, gates: &[GateOp], geom: &Geometry, out: &mut Vec<Diagnostic>) {
+    // Callers guarantee no split-input gates, so distance() is always Some.
+    let dists: Vec<usize> = gates.iter().filter_map(|g| g.distance(geom)).map(|d| d.unsigned_abs()).collect();
+    let d0 = dists[0];
+    if let Some((gi, d)) = dists.iter().enumerate().find(|(_, d)| **d != d0) {
+        push(
+            out,
+            Rule::UniformDistance,
+            Severity::Error,
+            cycle,
+            format!("gate {gi} has partition distance {d} but gate 0 has {d0} (Uniform Partition-Distance criterion)"),
+        );
+    }
+    let mut inputs: Vec<usize> = gates.iter().filter_map(|g| g.input_partition(geom)).collect();
+    inputs.sort_unstable();
+    for w in inputs.windows(2) {
+        if w[0] == w[1] {
+            push(out, Rule::Periodic, Severity::Error, cycle, format!("two gates share input partition {} (Periodic criterion)", w[0]));
+            return;
+        }
+    }
+    if inputs.len() >= 2 {
+        let t = inputs[1] - inputs[0];
+        if t <= d0 {
+            push(
+                out,
+                Rule::Periodic,
+                Severity::Error,
+                cycle,
+                format!("period T={t} does not exceed distance d={d0} (Periodic criterion: consecutive gates would collide)"),
+            );
+        }
+        for w in inputs.windows(2) {
+            if w[1] - w[0] != t {
+                push(
+                    out,
+                    Rule::Periodic,
+                    Severity::Error,
+                    cycle,
+                    format!("aperiodic input partitions {inputs:?}: gap {} differs from period T={t} — the range generator would expand this message to different gates", w[1] - w[0]),
+                );
+                break;
+            }
+        }
+    }
+}
+
+/// V030/V031: dry-run the model's encoder and the half-gates periphery on
+/// the cycle and compare the reconstructed operation against the intent.
+fn wire_roundtrip(cycle: usize, op: &Operation, geom: &Geometry, opts: &VerifyOptions, start: usize, out: &mut Vec<Diagnostic>) {
+    if matches!(op, Operation::Init { .. }) {
+        return; // init writes bypass the gate wire formats
+    }
+    let had_error = out[start..].iter().any(|d| d.severity == Severity::Error);
+    match encode::to_message(opts.model, op, geom) {
+        Err(e) => {
+            if !had_error {
+                push(out, Rule::NotEncodable, Severity::Error, cycle, format!("no encoding in the {} wire format: {e}", opts.model.name()));
+            }
+        }
+        Ok(msg) => match periphery::reconstruct(&msg, geom) {
+            Err(e) => {
+                push(out, Rule::DecodeDivergence, Severity::Error, cycle, format!("the encoded message fails to decode: {e}"));
+            }
+            Ok(rec) => {
+                if rec.normalized() != op.normalized() {
+                    push(
+                        out,
+                        Rule::DecodeDivergence,
+                        Severity::Error,
+                        cycle,
+                        format!(
+                            "wire roundtrip diverges under the {} format: the periphery would execute {} gate(s) instead of the intended {} — silent mis-execution",
+                            opts.model.name(),
+                            rec.gate_count(),
+                            op.gate_count(),
+                        ),
+                    );
+                }
+            }
+        },
+    }
+}

@@ -16,6 +16,9 @@
 //!      driven through the same `&mut dyn PimBackend` trait object
 //!  P11 differential: the wire pipeline (encode → periphery decode) on one
 //!      backend matches the direct pipeline on the other
+//!  P12 verifier differential: random legal programs are verifier-clean
+//!      under the unlimited model, and verifier-clean programs execute
+//!      bitwise-identically on the bit-packed and scalar backends
 
 use partition_pim::algorithms::program::Builder;
 use partition_pim::backend::{ExecPipeline, PimBackend, ScalarCrossbar};
@@ -442,6 +445,37 @@ fn p11_wire_pipeline_matches_scalar_oracle() {
             scalar.state_bits().expect("state"),
             "seed {seed}: wire pipeline diverged from the scalar oracle"
         );
+    }
+}
+
+/// P12 (verifier differential): every random legal program is
+/// verifier-clean under the unlimited model (hazard-free by construction;
+/// mixed directions are at most V012 warnings), and every verifier-clean
+/// program executes to the identical final `BitMatrix` on the bit-packed
+/// backend and the scalar oracle — static cleanliness is evidence of
+/// dynamic agreement, never a substitute for it.
+#[test]
+fn p12_verifier_clean_programs_agree_across_backends() {
+    use partition_pim::verify::{verify_ops, VerifyOptions};
+    let geom = Geometry::new(256, 8, 21).unwrap();
+    for seed in 1..25u64 {
+        let mut rng = Rng::new(seed * 9337);
+        let prog = random_program(&mut rng, geom, 20);
+        let report = verify_ops(&prog.name, &prog.ops, &geom, &VerifyOptions::new(ModelKind::Unlimited, GateSet::NotNor));
+        assert!(report.is_clean(), "seed {seed}: random legal program must verify clean\n{}", report.render());
+
+        let mut init = partition_pim::crossbar::state::BitMatrix::new(geom.rows, geom.n);
+        init.fill_random(seed * 5 + 2);
+        let mut bitpacked = Crossbar::new(geom, GateSet::NotNor);
+        let mut scalar = ScalarCrossbar::new(geom, GateSet::NotNor);
+        let mut finals = Vec::new();
+        let backends: [&mut dyn PimBackend; 2] = [&mut bitpacked, &mut scalar];
+        for backend in backends {
+            backend.load_state(&init).expect("load");
+            prog.execute(&mut ExecPipeline::direct(&mut *backend)).expect("execute");
+            finals.push(backend.state_bits().expect("state"));
+        }
+        assert_eq!(finals[0], finals[1], "seed {seed}: verifier-clean program diverged across backends");
     }
 }
 

@@ -1,0 +1,360 @@
+//! One fire + one quiet case per verifier rule (V001–V043), plus the
+//! acceptance case: a deliberately hazardous program — one the encoder
+//! accepts but the periphery silently mis-executes — is rejected by the
+//! pipeline's verify stage before it reaches any backend.
+
+use partition_pim::backend::ExecPipeline;
+use partition_pim::crossbar::crossbar::Crossbar;
+use partition_pim::crossbar::gate::{GateSet, GateType};
+use partition_pim::crossbar::geometry::Geometry;
+use partition_pim::isa::encode;
+use partition_pim::isa::models::ModelKind;
+use partition_pim::isa::operation::{GateOp, Operation};
+use partition_pim::periphery;
+use partition_pim::verify::{verify_ops, Report, Rule, Severity, VerifyOptions};
+
+fn geom() -> Geometry {
+    Geometry::new(256, 8, 8).unwrap() // k = 8, m = 32
+}
+
+fn opts(model: ModelKind) -> VerifyOptions {
+    VerifyOptions::new(model, GateSet::NotNor)
+}
+
+fn check(ops: &[Operation], model: ModelKind) -> Report {
+    verify_ops("test", ops, &geom(), &opts(model))
+}
+
+fn check_with(ops: &[Operation], o: &VerifyOptions) -> Report {
+    verify_ops("test", ops, &geom(), o)
+}
+
+/// A parallel-style cycle that is legal under every partitioned model.
+fn clean_op(g: &Geometry) -> Operation {
+    Operation::Gates((0..g.k).map(|p| GateOp::nor(g.col(p, 0), g.col(p, 1), g.col(p, 3))).collect())
+}
+
+/// Aperiodic input partitions {0, 1, 4} at distance 0: physically valid,
+/// *accepted by the minimal encoder* (the range-generator fields only
+/// capture the first gap), but expanded by the decoder to partitions 0..=4
+/// — five gates instead of three.
+fn aperiodic_op(g: &Geometry) -> Operation {
+    Operation::Gates(vec![
+        GateOp::nor(g.col(0, 0), g.col(0, 1), g.col(0, 3)),
+        GateOp::nor(g.col(1, 0), g.col(1, 1), g.col(1, 3)),
+        GateOp::nor(g.col(4, 0), g.col(4, 1), g.col(4, 3)),
+    ])
+}
+
+#[test]
+fn rule_codes_are_unique() {
+    let mut codes = std::collections::HashSet::new();
+    let mut names = std::collections::HashSet::new();
+    for r in Rule::ALL {
+        assert!(codes.insert(r.code()), "duplicate code {}", r.code());
+        assert!(names.insert(r.name()), "duplicate name {}", r.name());
+    }
+}
+
+#[test]
+fn v001_empty_cycle() {
+    let g = geom();
+    let fire = check(&[Operation::Gates(vec![]), Operation::Init { cols: vec![], value: true }], ModelKind::Unlimited);
+    assert_eq!(fire.diagnostics.iter().filter(|d| d.rule == Rule::EmptyCycle).count(), 2);
+    assert!(!fire.is_clean());
+    let quiet = check(&[Operation::init1(vec![0]), clean_op(&g)], ModelKind::Unlimited);
+    assert!(!quiet.has(Rule::EmptyCycle));
+}
+
+#[test]
+fn v002_column_range() {
+    let g = geom();
+    let fire = check(
+        &[Operation::init1(vec![g.n + 1]), Operation::serial(GateOp::nor(0, 1, g.n)), Operation::serial(GateOp::nor(g.n + 5, 1, 9))],
+        ModelKind::Unlimited,
+    );
+    assert_eq!(fire.diagnostics.iter().filter(|d| d.rule == Rule::ColumnRange).count(), 3);
+    let quiet = check(&[clean_op(&g)], ModelKind::Unlimited);
+    assert!(!quiet.has(Rule::ColumnRange));
+}
+
+#[test]
+fn v003_output_aliases_input() {
+    let fire = check(&[Operation::serial(GateOp::nor(5, 6, 5))], ModelKind::Unlimited);
+    assert!(fire.has(Rule::OutputAliasesInput) && !fire.is_clean());
+    let quiet = check(&[Operation::serial(GateOp::nor(5, 6, 7))], ModelKind::Unlimited);
+    assert!(!quiet.has(Rule::OutputAliasesInput));
+}
+
+#[test]
+fn v004_gate_set_violation() {
+    let g = geom();
+    // A FELIX Min3 under a NOT/NOR-only crossbar, an init pseudo-gate in a
+    // gate cycle, and an arity mismatch.
+    let fire = check(
+        &[
+            Operation::serial(GateOp { gate: GateType::Min3, ins: vec![0, 1, 2], out: 3 }),
+            Operation::Gates(vec![GateOp { gate: GateType::Init1, ins: vec![], out: 3 }]),
+            Operation::serial(GateOp { gate: GateType::Nor, ins: vec![0], out: 3 }),
+        ],
+        ModelKind::Unlimited,
+    );
+    assert_eq!(fire.diagnostics.iter().filter(|d| d.rule == Rule::GateSetViolation).count(), 3);
+    let quiet = check(&[clean_op(&g)], ModelKind::Unlimited);
+    assert!(!quiet.has(Rule::GateSetViolation));
+}
+
+#[test]
+fn v005_section_overlap() {
+    let g = geom();
+    let fire = check(
+        &[Operation::Gates(vec![
+            GateOp::nor(g.col(0, 0), g.col(0, 1), g.col(2, 3)), // span [0,2]
+            GateOp::nor(g.col(1, 0), g.col(1, 1), g.col(1, 3)), // span [1,1]
+        ])],
+        ModelKind::Unlimited,
+    );
+    assert!(fire.has(Rule::SectionOverlap) && !fire.is_clean());
+    let quiet = check(&[clean_op(&g)], ModelKind::Unlimited);
+    assert!(!quiet.has(Rule::SectionOverlap));
+}
+
+#[test]
+fn v010_write_write_hazard() {
+    let g = geom();
+    let shared = g.col(4, 3);
+    let fire = check(
+        &[Operation::Gates(vec![GateOp::nor(g.col(0, 0), g.col(0, 1), shared), GateOp::nor(g.col(6, 0), g.col(6, 1), shared)])],
+        ModelKind::Unlimited,
+    );
+    assert!(fire.has(Rule::WriteWriteHazard) && !fire.is_clean());
+    let quiet = check(&[clean_op(&g)], ModelKind::Unlimited);
+    assert!(!quiet.has(Rule::WriteWriteHazard));
+}
+
+#[test]
+fn v011_read_write_hazard() {
+    let g = geom();
+    let mid = g.col(2, 3);
+    let fire = check(
+        &[Operation::Gates(vec![GateOp::nor(g.col(0, 0), g.col(0, 1), mid), GateOp::nor(mid, g.col(4, 1), g.col(4, 5))])],
+        ModelKind::Unlimited,
+    );
+    assert!(fire.has(Rule::ReadWriteHazard) && !fire.is_clean());
+    let quiet = check(&[clean_op(&g)], ModelKind::Unlimited);
+    assert!(!quiet.has(Rule::ReadWriteHazard));
+}
+
+/// The resolved `operation.rs` "physically fine" policy: mixed directions
+/// are a V012 *warning* under the unlimited model (representable on its
+/// wire, flagged for portability) and a V012 *error* under standard /
+/// minimal (their shared-direction formats cannot express the cycle).
+#[test]
+fn v012_mixed_direction_policy() {
+    let g = geom();
+    let mixed = Operation::Gates(vec![
+        GateOp::nor(g.col(0, 0), g.col(0, 1), g.col(1, 3)), // rightward
+        GateOp::nor(g.col(5, 0), g.col(5, 1), g.col(4, 3)), // leftward
+    ]);
+    let under_unlimited = check(std::slice::from_ref(&mixed), ModelKind::Unlimited);
+    let diag = under_unlimited.diagnostics.iter().find(|d| d.rule == Rule::MixedDirection).expect("V012 must fire");
+    assert_eq!(diag.severity, Severity::Warning);
+    assert!(under_unlimited.is_clean(), "a warning must not make the report unclean");
+    let under_standard = check(std::slice::from_ref(&mixed), ModelKind::Standard);
+    let diag = under_standard.diagnostics.iter().find(|d| d.rule == Rule::MixedDirection).expect("V012 must fire");
+    assert_eq!(diag.severity, Severity::Error);
+    assert!(!under_standard.is_clean());
+    // Uniform-direction cycles stay quiet everywhere.
+    let uniform = Operation::Gates(vec![
+        GateOp::nor(g.col(0, 0), g.col(0, 1), g.col(1, 3)),
+        GateOp::nor(g.col(4, 0), g.col(4, 1), g.col(5, 3)),
+    ]);
+    assert!(!check(std::slice::from_ref(&uniform), ModelKind::Standard).has(Rule::MixedDirection));
+}
+
+#[test]
+fn v020_baseline_multi_gate() {
+    let g = geom();
+    let two = Operation::Gates(vec![GateOp::nor(g.col(0, 0), g.col(0, 1), g.col(0, 3)), GateOp::nor(g.col(2, 0), g.col(2, 1), g.col(2, 3))]);
+    let fire = check(std::slice::from_ref(&two), ModelKind::Baseline);
+    assert!(fire.has(Rule::BaselineMultiGate) && !fire.is_clean());
+    assert!(!check(&[Operation::serial(GateOp::nor(0, 1, 9))], ModelKind::Baseline).has(Rule::BaselineMultiGate));
+    assert!(!check(std::slice::from_ref(&two), ModelKind::Unlimited).has(Rule::BaselineMultiGate));
+}
+
+#[test]
+fn v021_split_input() {
+    let g = geom();
+    let split = Operation::serial(GateOp::nor(g.col(0, 0), g.col(1, 1), g.col(2, 3)));
+    let fire = check(std::slice::from_ref(&split), ModelKind::Standard);
+    assert!(fire.has(Rule::SplitInput) && !fire.is_clean());
+    assert!(!check(std::slice::from_ref(&split), ModelKind::Unlimited).has(Rule::SplitInput));
+}
+
+#[test]
+fn v022_identical_indices() {
+    let g = geom();
+    let differing = Operation::Gates(vec![
+        GateOp::nor(g.col(0, 0), g.col(0, 1), g.col(0, 3)), // indices (0, 1, 3)
+        GateOp::nor(g.col(2, 0), g.col(2, 2), g.col(2, 3)), // indices (0, 2, 3)
+    ]);
+    let fire = check(std::slice::from_ref(&differing), ModelKind::Standard);
+    assert!(fire.has(Rule::IdenticalIndices) && !fire.is_clean());
+    assert!(!check(std::slice::from_ref(&differing), ModelKind::Unlimited).has(Rule::IdenticalIndices));
+    assert!(!check(&[clean_op(&g)], ModelKind::Standard).has(Rule::IdenticalIndices));
+}
+
+#[test]
+fn v023_uniform_distance() {
+    let g = geom();
+    // Figure 2(d): distances (0, 1, 0) — standard-legal, minimal-illegal.
+    let fig2d = Operation::Gates(vec![
+        GateOp::nor(g.col(0, 0), g.col(0, 1), g.col(0, 3)),
+        GateOp::nor(g.col(2, 0), g.col(2, 1), g.col(3, 3)),
+        GateOp::nor(g.col(5, 0), g.col(5, 1), g.col(5, 3)),
+    ]);
+    let fire = check(std::slice::from_ref(&fig2d), ModelKind::Minimal);
+    assert!(fire.has(Rule::UniformDistance) && !fire.is_clean());
+    assert!(!check(std::slice::from_ref(&fig2d), ModelKind::Standard).has(Rule::UniformDistance));
+    assert!(!check(&[clean_op(&g)], ModelKind::Minimal).has(Rule::UniformDistance));
+}
+
+#[test]
+fn v024_periodic() {
+    let g = geom();
+    let fire = check(&[aperiodic_op(&g)], ModelKind::Minimal);
+    assert!(fire.has(Rule::Periodic) && !fire.is_clean());
+    // Periodic T=2 > d=0: quiet and fully clean under minimal.
+    let periodic = Operation::Gates(
+        [0usize, 2, 4].iter().map(|&p| GateOp::nor(g.col(p, 0), g.col(p, 1), g.col(p, 3))).collect(),
+    );
+    let quiet = check(std::slice::from_ref(&periodic), ModelKind::Minimal);
+    assert!(!quiet.has(Rule::Periodic));
+    assert!(quiet.is_clean());
+}
+
+#[test]
+fn v030_not_encodable() {
+    let g = geom();
+    // FELIX Min3 is a valid gate on a FELIX crossbar, but none of the
+    // paper's two-input message formats can carry it.
+    let o = VerifyOptions::new(ModelKind::Unlimited, GateSet::Felix);
+    let min3 = Operation::serial(GateOp { gate: GateType::Min3, ins: vec![0, 1, 2], out: 3 });
+    let fire = check_with(std::slice::from_ref(&min3), &o);
+    assert!(fire.has(Rule::NotEncodable) && !fire.is_clean());
+    let quiet = check_with(&[clean_op(&g)], &o);
+    assert!(!quiet.has(Rule::NotEncodable));
+}
+
+#[test]
+fn v031_decode_divergence() {
+    let g = geom();
+    let op = aperiodic_op(&g);
+    // The encoder accepts the cycle; the decoder expands it differently.
+    let msg = encode::to_message(ModelKind::Minimal, &op, &g).unwrap();
+    let rec = periphery::reconstruct(&msg, &g).unwrap();
+    assert_ne!(rec.normalized(), op.normalized());
+    let fire = check(std::slice::from_ref(&op), ModelKind::Minimal);
+    assert!(fire.has(Rule::DecodeDivergence) && !fire.is_clean());
+    // The same placement is exactly representable under unlimited.
+    assert!(!check(std::slice::from_ref(&op), ModelKind::Unlimited).has(Rule::DecodeDivergence));
+}
+
+#[test]
+fn v040_uninit_read() {
+    let ops = vec![Operation::init1(vec![2]), Operation::serial(GateOp::nor(0, 1, 2))];
+    // With a declared input set, reading outside it is an error.
+    let fire = check_with(&ops, &opts(ModelKind::Unlimited).with_inputs(vec![0]));
+    let diag = fire.diagnostics.iter().find(|d| d.rule == Rule::UninitRead).expect("V040 must fire for column 1");
+    assert_eq!(diag.severity, Severity::Error);
+    assert!(!fire.is_clean());
+    // Declaring both operands silences it.
+    let quiet = check_with(&ops, &opts(ModelKind::Unlimited).with_inputs(vec![0, 1]));
+    assert!(!quiet.has(Rule::UninitRead));
+    // Without a declared input set it is only a note.
+    let note = check(&ops, ModelKind::Unlimited);
+    assert!(note.has(Rule::UninitRead));
+    assert!(note.is_clean());
+}
+
+#[test]
+fn v041_missing_init() {
+    let fire = check(&[Operation::serial(GateOp::nor(0, 1, 2))], ModelKind::Unlimited);
+    let diag = fire.diagnostics.iter().find(|d| d.rule == Rule::MissingInit).expect("V041 must fire");
+    assert_eq!(diag.severity, Severity::Warning);
+    assert!(fire.is_clean(), "a MAGIC-precondition warning does not reject the program");
+    let quiet = check(&[Operation::init1(vec![2]), Operation::serial(GateOp::nor(0, 1, 2))], ModelKind::Unlimited);
+    assert!(!quiet.has(Rule::MissingInit));
+}
+
+#[test]
+fn v042_dead_write() {
+    let fire = check(
+        &[Operation::init1(vec![2]), Operation::serial(GateOp::nor(0, 1, 2)), Operation::init1(vec![2])],
+        ModelKind::Unlimited,
+    );
+    assert!(fire.has(Rule::DeadWrite));
+    assert!(fire.is_clean());
+    // Reading the value before the re-initialization silences it.
+    let quiet = check(
+        &[
+            Operation::init1(vec![2, 5]),
+            Operation::serial(GateOp::nor(0, 1, 2)),
+            Operation::serial(GateOp::nor(2, 4, 5)),
+            Operation::init1(vec![2]),
+        ],
+        ModelKind::Unlimited,
+    );
+    assert!(!quiet.has(Rule::DeadWrite));
+}
+
+#[test]
+fn v043_scratch_leak() {
+    let g = geom();
+    let scratch = opts(ModelKind::Unlimited).with_scratch((30, 31));
+    let touching = vec![Operation::init1(vec![g.col(0, 30)]), Operation::serial(GateOp::nor(g.col(0, 0), g.col(0, 1), g.col(0, 30)))];
+    let fire = check_with(&touching, &scratch);
+    assert!(fire.has(Rule::ScratchLeak) && !fire.is_clean());
+    let quiet_ops = check_with(&[clean_op(&g)], &scratch);
+    assert!(!quiet_ops.has(Rule::ScratchLeak));
+    // Without a reserved scratch configuration the rule never fires.
+    let unconfigured = check(&touching, ModelKind::Unlimited);
+    assert!(!unconfigured.has(Rule::ScratchLeak));
+}
+
+/// Acceptance criterion: the deliberately hazardous program is rejected by
+/// the pipeline's verify stage before reaching any backend — the encoder
+/// alone would have accepted it and silently executed different gates.
+#[test]
+fn hazardous_program_rejected_before_any_backend() {
+    let g = geom();
+    let op = aperiodic_op(&g);
+    op.validate(&g, GateSet::NotNor).unwrap();
+    assert!(encode::encode(ModelKind::Minimal, &op, &g).is_ok(), "the encoder alone does not catch this");
+
+    let mut xb = Crossbar::new(g, GateSet::NotNor);
+    xb.state.fill_random(42);
+    let before = xb.state.clone();
+    let mut pipe = ExecPipeline::wire(ModelKind::Minimal, &mut xb);
+    let err = pipe.run_op(&op).unwrap_err();
+    assert!(err.to_string().contains("V024") || err.to_string().contains("V031"), "rejection must cite the rule: {err}");
+    assert_eq!(pipe.metrics().cycles, 0);
+    assert_eq!(pipe.stats().messages, 0);
+    drop(pipe);
+    assert_eq!(xb.state, before);
+}
+
+/// Every built-in workload program the coordinator serves verifies clean
+/// under its model — the in-test twin of the `repro lint` CI gate.
+#[test]
+fn builtin_workload_programs_verify_clean() {
+    use partition_pim::coordinator::{compile_workload, workload_geometry, WorkloadKind};
+    for kind in [WorkloadKind::Mul32, WorkloadKind::Add32, WorkloadKind::Sort16] {
+        for model in ModelKind::ALL {
+            let geom = workload_geometry(kind, model, 4).unwrap();
+            let (program, _) = compile_workload(kind, model, geom).unwrap();
+            let report = partition_pim::verify::verify_program(&program, model);
+            assert!(report.is_clean(), "{kind:?} under {}:\n{}", model.name(), report.render());
+        }
+    }
+}
