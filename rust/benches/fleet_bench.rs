@@ -1,0 +1,155 @@
+//! Experiment E16: fleet serving under mixed traffic — p50/p99 job latency
+//! and elements/s for a mul + add + sort trace routed across N banks, at
+//! two or more bank counts, plus a failover run that kills a bank mid-trace
+//! and reports the reroute/promotion cost.
+//!
+//! Emits `BENCH_fleet.json` so CI can accumulate the serving-tier perf
+//! trajectory across PRs (the fleet-level counterpart of
+//! `BENCH_coordinator.json`).
+
+use partition_pim::bench_support::section;
+use partition_pim::coordinator::worker::{SORT_BITS, SORT_ELEMS};
+use partition_pim::coordinator::{FleetConfig, PimFleet, ServiceConfig, WorkloadKind};
+use partition_pim::isa::models::ModelKind;
+use std::time::Instant;
+
+const CROSSBARS: usize = 2;
+const ROWS: usize = 32;
+const JOB_LEN: usize = 128;
+const SORT_ROWS: usize = 32;
+const TRACE_JOBS: usize = 30;
+const BANK_COUNTS: [usize; 2] = [3, 6];
+const MIX: [WorkloadKind; 3] = [WorkloadKind::Mul32, WorkloadKind::Add32, WorkloadKind::Sort16];
+
+struct TraceRow {
+    banks: usize,
+    jobs: usize,
+    p50_ms: f64,
+    p99_ms: f64,
+    elements_per_sec: f64,
+    mean_occupancy: f64,
+}
+
+fn base_config() -> ServiceConfig {
+    ServiceConfig { model: ModelKind::Minimal, n_crossbars: CROSSBARS, rows: ROWS, ..Default::default() }
+}
+
+fn xorshift(seed: &mut u64) -> u64 {
+    *seed ^= *seed << 13;
+    *seed ^= *seed >> 7;
+    *seed ^= *seed << 17;
+    *seed
+}
+
+/// Drive one mixed trace through a fleet; returns (per-job wall latencies
+/// in ms, elements served, trace wall seconds, reroutes, spares promoted).
+fn run_trace(fleet: &PimFleet, kill_bank: Option<usize>) -> (Vec<f64>, u64, f64, u64, u64) {
+    let client = fleet.client();
+    let mut seed = 0x9e3779b97f4a7c15u64;
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for j in 0..TRACE_JOBS {
+        let kind = MIX[j % MIX.len()];
+        let handle = match kind {
+            WorkloadKind::Sort16 => {
+                let data: Vec<Vec<u64>> = (0..SORT_ROWS)
+                    .map(|_| (0..SORT_ELEMS).map(|_| xorshift(&mut seed) & ((1 << SORT_BITS) - 1)).collect())
+                    .collect();
+                client.submit_sort(&data).expect("submit_sort")
+            }
+            _ => {
+                let a: Vec<u64> = (0..JOB_LEN).map(|_| xorshift(&mut seed) & 0xffff_ffff).collect();
+                let b: Vec<u64> = (0..JOB_LEN).map(|_| xorshift(&mut seed) & 0xffff_ffff).collect();
+                client.submit(kind, &a, &b).expect("submit")
+            }
+        };
+        handles.push(handle);
+        if kill_bank == Some(j) {
+            fleet.kill_bank(0).expect("kill bank 0");
+        }
+    }
+    let mut lat_ms = Vec::with_capacity(handles.len());
+    for h in handles {
+        let res = h.wait().expect("fleet job");
+        lat_ms.push(res.wall.as_secs_f64() * 1e3);
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    let stats = fleet.stats();
+    (lat_ms, stats.aggregate.elements, wall_s, stats.counters.reroutes, stats.counters.spares_promoted)
+}
+
+fn percentile(sorted_ms: &[f64], q: f64) -> f64 {
+    let idx = ((sorted_ms.len() - 1) as f64 * q).round() as usize;
+    sorted_ms[idx]
+}
+
+fn write_json(rows: &[TraceRow], failover: &str) {
+    let mut s = String::from("{\n");
+    s.push_str("  \"bench\": \"fleet\",\n");
+    s.push_str(&format!(
+        "  \"config\": {{\"crossbars_per_bank\": {CROSSBARS}, \"rows\": {ROWS}, \"job_len\": {JOB_LEN}, \"sort_rows\": {SORT_ROWS}, \"trace_jobs\": {TRACE_JOBS}, \"mix\": \"mul32:add32:sort16\"}},\n"
+    ));
+    s.push_str("  \"bank_counts\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"banks\": {}, \"jobs\": {}, \"p50_ms\": {:.3}, \"p99_ms\": {:.3}, \"elements_per_sec\": {:.1}, \"mean_occupancy\": {:.3}}}{}\n",
+            r.banks,
+            r.jobs,
+            r.p50_ms,
+            r.p99_ms,
+            r.elements_per_sec,
+            r.mean_occupancy,
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    s.push_str(&format!("  ],\n  \"failover\": {failover}\n}}\n"));
+    match std::fs::write("BENCH_fleet.json", s) {
+        Ok(()) => println!("\nwrote BENCH_fleet.json"),
+        Err(e) => println!("\nWARNING: could not write BENCH_fleet.json: {e}"),
+    }
+}
+
+fn main() {
+    let mut rows = Vec::new();
+    for banks in BANK_COUNTS {
+        section(&format!(
+            "fleet mixed trace: {TRACE_JOBS} jobs (mul/add/sort) across {banks} banks, {CROSSBARS} crossbars x {ROWS} rows each"
+        ));
+        let cfg = FleetConfig::mixed(&MIX, banks, base_config()).expect("fleet config");
+        let fleet = PimFleet::start(cfg).expect("fleet");
+        let (mut lat_ms, elements, wall_s, _, _) = run_trace(&fleet, None);
+        let stats = fleet.shutdown();
+        lat_ms.sort_by(|a, b| a.partial_cmp(b).expect("finite latency"));
+        let (p50, p99) = (percentile(&lat_ms, 0.50), percentile(&lat_ms, 0.99));
+        let eps = elements as f64 / wall_s;
+        println!("      p50 {p50:.3} ms   p99 {p99:.3} ms   {eps:.0} elements/s   occupancy {:.1}%", 100.0 * stats.aggregate.mean_occupancy());
+        rows.push(TraceRow {
+            banks,
+            jobs: TRACE_JOBS,
+            p50_ms: p50,
+            p99_ms: p99,
+            elements_per_sec: eps,
+            mean_occupancy: stats.aggregate.mean_occupancy(),
+        });
+    }
+
+    section("fleet failover: bank 0 killed mid-trace (1 hot spare), every job must still complete");
+    let mut cfg = FleetConfig::mixed(&MIX, BANK_COUNTS[0], base_config()).expect("fleet config");
+    cfg.spare_slots = 1;
+    let fleet = PimFleet::start(cfg).expect("fleet");
+    let (mut lat_ms, _, _, reroutes, promoted) = run_trace(&fleet, Some(TRACE_JOBS / 2));
+    let stats = fleet.shutdown();
+    lat_ms.sort_by(|a, b| a.partial_cmp(b).expect("finite latency"));
+    let p99 = percentile(&lat_ms, 0.99);
+    assert_eq!(stats.aggregate.jobs, TRACE_JOBS as u64, "every accepted job must complete despite the bank death");
+    println!(
+        "      completed {}/{TRACE_JOBS} jobs   reroutes {reroutes}   spares promoted {promoted}   p99 {p99:.3} ms",
+        stats.aggregate.jobs
+    );
+    let failover = format!(
+        "{{\"banks\": {}, \"killed_bank\": 0, \"completed_jobs\": {}, \"reroutes\": {reroutes}, \"spares_promoted\": {promoted}, \"p99_ms\": {p99:.3}}}",
+        BANK_COUNTS[0], stats.aggregate.jobs
+    );
+
+    write_json(&rows, &failover);
+}

@@ -1,0 +1,667 @@
+//! The fleet tier: many crossbar banks with *different* workloads behind
+//! one front door — workload routing, admission control, and bank
+//! lifecycle above the [`crate::coordinator::service::PimService`] layer.
+//!
+//! A single `PimService` fixes one `WorkloadKind`/model/geometry at start,
+//! so mixed traffic (multiply + add + sort) could not share a deployment.
+//! The [`PimFleet`] owns N banks, each its own fault-isolated scheduler,
+//! and a cloneable [`FleetClient`] places every job:
+//!
+//! ```text
+//!   clients ──submit(kind, ...)──▶ Router ──▶ bank 0  PimService (mul32)
+//!      ▲           │ admission      │  ▶────▶ bank 1  PimService (add32)
+//!      │           │ (Overloaded)   │  ▶────▶ bank 2  PimService (sort16)
+//!      └── FleetJobHandle::wait ◀───┴─reroute on BankDead──▶ hot spare
+//! ```
+//!
+//! * **Routing** is by workload compatibility first ([`WorkloadKind`] must
+//!   match; shapes are checked with the same typed
+//!   [`WorkloadMismatch`] the service layer uses), then by queue depth:
+//!   among compatible live banks the one with the fewest unresolved jobs
+//!   ([`PimService::pending_jobs`]) wins, so a slow bank sheds load to its
+//!   peers instead of growing an unbounded queue.
+//! * **Admission control**: when every compatible bank already holds
+//!   `max_pending_per_bank` unresolved jobs, `submit` fails fast with a
+//!   typed [`Overloaded`] error instead of queueing unboundedly — the
+//!   backpressure contract callers retry against.
+//! * **Bank lifecycle**: a bank whose last worker died is discovered
+//!   lazily (by the router, or by a job failing with the typed
+//!   [`BankDead`] error) and retired; its unresolved jobs are requeued
+//!   onto a compatible bank — or onto a hot spare promoted on the spot.
+//!   Promotion is warm: workload programs live in the process-wide
+//!   [`compile_workload_cached`], so a spare starts serving without
+//!   recompiling anything. An elastic policy additionally spawns/retires
+//!   banks per workload from arrival rates (see [`ElasticPolicy`]).
+//! * **Statistics**: [`FleetStats`] merges the per-bank [`ServiceStats`]
+//!   of every live, dead and retired bank, plus fleet-level counters
+//!   (routed / rejected / rerouted / promoted / spawned / retired).
+
+use crate::coordinator::service::{BankDead, JobHandle, JobResult, PimService, ServiceConfig, ServiceStats, WorkloadMismatch};
+use crate::coordinator::worker::{compile_workload_cached, workload_geometry, JobShape, WorkloadKind};
+use anyhow::{anyhow, ensure, Context, Result};
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Typed admission-control error: every bank compatible with the job's
+/// workload is already at the configured pending-job bound. The job was
+/// *not* queued — callers own the retry policy (back off, shed, or retry
+/// against a later, less loaded fleet).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Overloaded {
+    /// The workload that could not be admitted.
+    pub kind: WorkloadKind,
+    /// Queue depth of the least-loaded compatible bank at rejection time.
+    pub pending: usize,
+    /// The configured bound ([`FleetConfig::max_pending_per_bank`]).
+    pub limit: usize,
+}
+
+impl std::fmt::Display for Overloaded {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "fleet overloaded: every {} bank is at the admission bound ({} pending >= limit {})",
+            self.kind.name(),
+            self.pending,
+            self.limit
+        )
+    }
+}
+
+impl std::error::Error for Overloaded {}
+
+/// Typed routing error: no active bank in the fleet serves this workload
+/// (and no spare could be promoted for it).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NoCompatibleBank {
+    pub kind: WorkloadKind,
+}
+
+impl std::fmt::Display for NoCompatibleBank {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "no active bank serves the {} workload", self.kind.name())
+    }
+}
+
+impl std::error::Error for NoCompatibleBank {}
+
+/// Elastic spawn/retire policy, driven by per-workload arrival rates over
+/// a sliding window. Disabled by default: the fleet then keeps exactly the
+/// banks it was started with (plus hot-spare promotions).
+#[derive(Debug, Clone, Copy)]
+pub struct ElasticPolicy {
+    pub enabled: bool,
+    /// Arrival-rate measurement window.
+    pub window: Duration,
+    /// Arrivals one bank is expected to absorb per window; the target bank
+    /// count for a workload is `ceil(arrivals / jobs_per_bank_window)`,
+    /// never below one (a served workload stays servable).
+    pub jobs_per_bank_window: usize,
+    /// Hard cap on concurrently active banks across the whole fleet.
+    pub max_banks: usize,
+}
+
+impl Default for ElasticPolicy {
+    fn default() -> Self {
+        Self {
+            enabled: false,
+            window: Duration::from_secs(1),
+            jobs_per_bank_window: 64,
+            max_banks: 8,
+        }
+    }
+}
+
+/// Fleet configuration: the initial bank set plus the routing, admission
+/// and lifecycle policies.
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    /// One entry per initial bank; each bank may have its own workload,
+    /// model and geometry.
+    pub banks: Vec<ServiceConfig>,
+    /// Hot-spare capacity: how many replacement banks may be promoted when
+    /// banks die. A spare is a capacity token, not a running service — on
+    /// promotion it starts with the dead bank's exact config, warm from
+    /// the process-wide compile cache.
+    pub spare_slots: usize,
+    /// Admission bound per bank (see [`Overloaded`]).
+    pub max_pending_per_bank: usize,
+    /// How many times one job may be rerouted after bank deaths before its
+    /// failure is surfaced to the caller.
+    pub max_reroutes: usize,
+    pub elastic: ElasticPolicy,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        Self {
+            banks: Vec::new(),
+            spare_slots: 0,
+            max_pending_per_bank: 256,
+            max_reroutes: 2,
+            elastic: ElasticPolicy::default(),
+        }
+    }
+}
+
+impl FleetConfig {
+    /// A mixed-workload fleet: `n_banks` banks cycling through `mix`, all
+    /// sharing one model and geometry. The shape the serve CLI and the
+    /// fleet bench build (`--banks N --mix mul:add:sort`).
+    pub fn mixed(mix: &[WorkloadKind], n_banks: usize, base: ServiceConfig) -> Result<FleetConfig> {
+        ensure!(!mix.is_empty(), "empty workload mix");
+        ensure!(n_banks >= 1, "need at least one bank");
+        let banks = (0..n_banks).map(|i| ServiceConfig { kind: mix[i % mix.len()], ..base }).collect();
+        Ok(FleetConfig { banks, ..Default::default() })
+    }
+}
+
+/// Where a bank slot is in its lifecycle. Slots are never removed from the
+/// fleet's table (indices stay stable for in-flight handles); they change
+/// state instead.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BankState {
+    /// Serving traffic.
+    Active,
+    /// Every worker died; unresolved jobs were failed by the service layer
+    /// (with the typed [`BankDead`]) and rerouted by their fleet handles.
+    Dead,
+    /// Drained and stopped deliberately (elastic scale-down).
+    Retired,
+}
+
+struct BankSlot {
+    cfg: ServiceConfig,
+    /// `None` once the bank is dead or retired.
+    service: Option<PimService>,
+    state: BankState,
+    /// Final statistics of a dead/retired bank (folded into `FleetStats`).
+    final_stats: Option<ServiceStats>,
+}
+
+/// Fleet-level event counters (routing, backpressure, lifecycle).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FleetCounters {
+    /// Jobs accepted and placed on a bank (including reroutes).
+    pub routed: u64,
+    /// Submissions rejected by admission control ([`Overloaded`]).
+    pub rejected_overloaded: u64,
+    /// Submissions rejected because no bank serves the workload.
+    pub rejected_no_bank: u64,
+    /// Jobs requeued onto another bank after their bank died.
+    pub reroutes: u64,
+    /// Hot spares promoted to replace dead banks.
+    pub spares_promoted: u64,
+    /// Banks spawned by the elastic policy.
+    pub banks_spawned: u64,
+    /// Banks retired by the elastic policy.
+    pub banks_retired: u64,
+    /// Banks that died (all workers lost).
+    pub banks_dead: u64,
+}
+
+/// Point-in-time view of one bank.
+#[derive(Debug, Clone)]
+pub struct BankSnapshot {
+    pub kind: WorkloadKind,
+    pub state: BankState,
+    pub pending_jobs: usize,
+    pub live_workers: usize,
+    pub stats: ServiceStats,
+}
+
+/// Fleet-wide statistics: the merged per-bank [`ServiceStats`] plus the
+/// per-bank snapshots and the fleet-level counters.
+#[derive(Debug, Clone)]
+pub struct FleetStats {
+    /// Every bank's `ServiceStats` merged (live, dead and retired).
+    pub aggregate: ServiceStats,
+    pub banks: Vec<BankSnapshot>,
+    pub counters: FleetCounters,
+}
+
+struct FleetInner {
+    banks: Vec<BankSlot>,
+    spare_slots: usize,
+    counters: FleetCounters,
+    /// Per-workload arrival timestamps inside the elastic window (only
+    /// tracked while the elastic policy is enabled).
+    arrivals: HashMap<WorkloadKind, VecDeque<Instant>>,
+}
+
+struct FleetShared {
+    cfg: FleetConfig,
+    inner: Mutex<FleetInner>,
+}
+
+/// The operands of one fleet job, retained so the job can be requeued onto
+/// another bank if its bank dies before completing it (re-execution is
+/// idempotent: jobs are pure computations over their operands).
+#[derive(Clone)]
+enum FleetPayload {
+    Pairs(Vec<u64>, Vec<u64>),
+    Rows(Vec<Vec<u64>>),
+}
+
+impl FleetShared {
+    /// Fold a bank that lost its last worker: mark it dead, collect its
+    /// final statistics, and — if a spare slot is available — promote a
+    /// replacement with the same config (warm from the compile cache).
+    /// Idempotent: only the first caller transitions the slot.
+    fn note_bank_death(&self, inner: &mut FleetInner, bank: usize) {
+        let slot = &mut inner.banks[bank];
+        if slot.state != BankState::Active {
+            return;
+        }
+        slot.state = BankState::Dead;
+        inner.counters.banks_dead += 1;
+        if let Some(mut svc) = slot.service.take() {
+            // Dead-bank drain is fast: every pending job has already been
+            // failed by the service layer, so only thread joins remain.
+            slot.final_stats = Some(svc.drain());
+        }
+        let cfg = slot.cfg;
+        if inner.spare_slots > 0 {
+            inner.spare_slots -= 1;
+            match PimService::start(cfg) {
+                Ok(svc) => {
+                    inner.banks.push(BankSlot {
+                        cfg,
+                        service: Some(svc),
+                        state: BankState::Active,
+                        final_stats: None,
+                    });
+                    inner.counters.spares_promoted += 1;
+                }
+                // Promotion failed (should not happen for a config that
+                // already ran): give the slot back rather than leaking it.
+                Err(_) => inner.spare_slots += 1,
+            }
+        }
+    }
+
+    /// Notice banks whose last worker died since the previous pass, so the
+    /// router never places new work on a dead bank and spares are promoted
+    /// even before any in-flight handle observes the death.
+    fn reap_dead(&self, inner: &mut FleetInner) {
+        for i in 0..inner.banks.len() {
+            let dead = match &inner.banks[i].service {
+                Some(svc) => inner.banks[i].state == BankState::Active && svc.live_workers() == 0,
+                None => false,
+            };
+            if dead {
+                self.note_bank_death(inner, i);
+            }
+        }
+    }
+
+    /// Pick the compatible active bank with the fewest unresolved jobs.
+    /// With `enforce_admission`, reject with [`Overloaded`] when even that
+    /// bank is at the bound (reroutes skip admission: the job was already
+    /// accepted once — backpressure applies at the front door only).
+    fn route(&self, inner: &mut FleetInner, kind: WorkloadKind, enforce_admission: bool) -> Result<usize> {
+        self.reap_dead(inner);
+        let mut best: Option<(usize, usize)> = None;
+        for (i, slot) in inner.banks.iter().enumerate() {
+            if slot.state != BankState::Active || slot.cfg.kind != kind {
+                continue;
+            }
+            let Some(svc) = &slot.service else { continue };
+            let pending = svc.pending_jobs();
+            let better = match best {
+                Some((p, _)) => pending < p,
+                None => true,
+            };
+            if better {
+                best = Some((pending, i));
+            }
+        }
+        let Some((pending, idx)) = best else {
+            inner.counters.rejected_no_bank += 1;
+            return Err(anyhow::Error::new(NoCompatibleBank { kind }));
+        };
+        if enforce_admission && pending >= self.cfg.max_pending_per_bank {
+            inner.counters.rejected_overloaded += 1;
+            return Err(anyhow::Error::new(Overloaded { kind, pending, limit: self.cfg.max_pending_per_bank }));
+        }
+        Ok(idx)
+    }
+
+    fn submit_to(&self, inner: &FleetInner, bank: usize, payload: &FleetPayload) -> Result<JobHandle> {
+        let svc = inner.banks[bank].service.as_ref().context("routed to a bank without a service")?;
+        match payload {
+            FleetPayload::Pairs(a, b) => svc.submit(a, b),
+            FleetPayload::Rows(rows) => svc.submit_sort(rows),
+        }
+    }
+
+    /// Front-door submission: note the arrival, autoscale opportunistically,
+    /// route under admission control, and place the job.
+    fn submit_payload(self: &Arc<Self>, kind: WorkloadKind, payload: FleetPayload) -> Result<FleetJobHandle> {
+        let mut inner = self.inner.lock().unwrap();
+        if self.cfg.elastic.enabled {
+            let now = Instant::now();
+            let q = inner.arrivals.entry(kind).or_default();
+            q.push_back(now);
+            while q.front().is_some_and(|&t| now.duration_since(t) > self.cfg.elastic.window) {
+                q.pop_front();
+            }
+            self.autoscale_locked(&mut inner);
+        }
+        let bank = self.route(&mut inner, kind, true)?;
+        let handle = self.submit_to(&inner, bank, &payload)?;
+        inner.counters.routed += 1;
+        Ok(FleetJobHandle {
+            shared: Arc::clone(self),
+            kind,
+            payload,
+            current: Some((bank, handle)),
+            reroutes_left: self.cfg.max_reroutes,
+        })
+    }
+
+    /// Requeue a job whose bank died: retire the bank (promoting a spare if
+    /// one is available) and place the job on a compatible bank.
+    fn note_death_and_resubmit(&self, bank: usize, kind: WorkloadKind, payload: &FleetPayload) -> Result<(usize, JobHandle)> {
+        let mut inner = self.inner.lock().unwrap();
+        self.note_bank_death(&mut inner, bank);
+        let idx = self.route(&mut inner, kind, false)?;
+        let handle = self.submit_to(&inner, idx, payload)?;
+        inner.counters.routed += 1;
+        inner.counters.reroutes += 1;
+        Ok((idx, handle))
+    }
+
+    /// Elastic pass (lock held): per workload, spawn banks while the
+    /// arrival rate outruns capacity and retire *idle* banks when it has
+    /// fallen back, never dropping a served workload to zero banks and
+    /// never exceeding `max_banks` active banks fleet-wide.
+    fn autoscale_locked(&self, inner: &mut FleetInner) {
+        let policy = self.cfg.elastic;
+        if !policy.enabled {
+            return;
+        }
+        let now = Instant::now();
+        for q in inner.arrivals.values_mut() {
+            while q.front().is_some_and(|&t| now.duration_since(t) > policy.window) {
+                q.pop_front();
+            }
+        }
+        let kinds: Vec<WorkloadKind> = WorkloadKind::ALL
+            .into_iter()
+            .filter(|k| {
+                inner.banks.iter().any(|b| b.cfg.kind == *k) || inner.arrivals.get(k).is_some_and(|q| !q.is_empty())
+            })
+            .collect();
+        for kind in kinds {
+            let arrivals = inner.arrivals.get(&kind).map_or(0, |q| q.len());
+            let desired = arrivals.div_ceil(policy.jobs_per_bank_window).max(1);
+            loop {
+                let active: Vec<usize> = inner
+                    .banks
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, b)| b.state == BankState::Active && b.cfg.kind == kind)
+                    .map(|(i, _)| i)
+                    .collect();
+                let total_active = inner.banks.iter().filter(|b| b.state == BankState::Active).count();
+                if active.len() < desired && total_active < policy.max_banks {
+                    // Spawn: reuse the config of any slot that served this
+                    // workload (warm from the compile cache). A workload
+                    // that never had a bank has no config to clone — the
+                    // router rejects it as NoCompatibleBank regardless.
+                    let Some(cfg) = inner.banks.iter().find(|b| b.cfg.kind == kind).map(|b| b.cfg) else { break };
+                    let Ok(svc) = PimService::start(cfg) else { break };
+                    inner.banks.push(BankSlot {
+                        cfg,
+                        service: Some(svc),
+                        state: BankState::Active,
+                        final_stats: None,
+                    });
+                    inner.counters.banks_spawned += 1;
+                } else if active.len() > desired {
+                    // Retire: only a bank with nothing unresolved, so the
+                    // drain is instant and no handle is interrupted.
+                    let Some(&idx) = active.iter().find(|&&i| {
+                        inner.banks[i].service.as_ref().is_some_and(|s| s.pending_jobs() == 0)
+                    }) else {
+                        break; // all busy; retire on a later pass
+                    };
+                    let slot = &mut inner.banks[idx];
+                    slot.state = BankState::Retired;
+                    if let Some(mut svc) = slot.service.take() {
+                        slot.final_stats = Some(svc.drain());
+                    }
+                    inner.counters.banks_retired += 1;
+                } else {
+                    break;
+                }
+            }
+        }
+    }
+
+    fn stats_locked(&self, inner: &mut FleetInner) -> FleetStats {
+        self.reap_dead(inner);
+        let mut aggregate = ServiceStats::default();
+        let mut banks = Vec::with_capacity(inner.banks.len());
+        for slot in &inner.banks {
+            let (stats, pending, live) = match &slot.service {
+                Some(svc) => (svc.stats(), svc.pending_jobs(), svc.live_workers()),
+                None => (slot.final_stats.unwrap_or_default(), 0, 0),
+            };
+            aggregate.merge(&stats);
+            banks.push(BankSnapshot {
+                kind: slot.cfg.kind,
+                state: slot.state,
+                pending_jobs: pending,
+                live_workers: live,
+                stats,
+            });
+        }
+        FleetStats { aggregate, banks, counters: inner.counters }
+    }
+}
+
+/// A multi-bank PIM fleet: start with [`PimFleet::start`], submit through
+/// [`PimFleet::client`] (cloneable, `Send`), inspect with
+/// [`PimFleet::stats`], stop with [`PimFleet::shutdown`].
+pub struct PimFleet {
+    shared: Arc<FleetShared>,
+}
+
+impl PimFleet {
+    /// Start every configured bank and pre-warm the process-wide compile
+    /// cache for each distinct workload, so later hot-spare promotions and
+    /// elastic spawns pay no compilation.
+    pub fn start(cfg: FleetConfig) -> Result<Self> {
+        ensure!(!cfg.banks.is_empty(), "a fleet needs at least one bank");
+        for bank in &cfg.banks {
+            let geom = workload_geometry(bank.kind, bank.model, bank.rows)?;
+            compile_workload_cached(bank.kind, bank.model, geom)
+                .with_context(|| format!("pre-warming the {} workload", bank.kind.name()))?;
+        }
+        let mut banks = Vec::with_capacity(cfg.banks.len());
+        for bank in &cfg.banks {
+            banks.push(BankSlot {
+                cfg: *bank,
+                service: Some(PimService::start(*bank)?),
+                state: BankState::Active,
+                final_stats: None,
+            });
+        }
+        let inner = FleetInner {
+            banks,
+            spare_slots: cfg.spare_slots,
+            counters: FleetCounters::default(),
+            arrivals: HashMap::new(),
+        };
+        Ok(Self { shared: Arc::new(FleetShared { cfg, inner: Mutex::new(inner) }) })
+    }
+
+    /// A cloneable submission front-end.
+    pub fn client(&self) -> FleetClient {
+        FleetClient { shared: Arc::clone(&self.shared) }
+    }
+
+    /// Submit an element-wise job (see [`FleetClient::submit`]).
+    pub fn submit(&self, kind: WorkloadKind, a: &[u64], b: &[u64]) -> Result<FleetJobHandle> {
+        self.client().submit(kind, a, b)
+    }
+
+    /// Submit a per-row sort job (see [`FleetClient::submit_sort`]).
+    pub fn submit_sort(&self, rows_data: &[Vec<u64>]) -> Result<FleetJobHandle> {
+        self.client().submit_sort(rows_data)
+    }
+
+    /// Point-in-time fleet statistics.
+    pub fn stats(&self) -> FleetStats {
+        let mut inner = self.shared.inner.lock().unwrap();
+        self.shared.stats_locked(&mut inner)
+    }
+
+    /// Active banks right now (after noticing any deaths).
+    pub fn active_banks(&self) -> usize {
+        let mut inner = self.shared.inner.lock().unwrap();
+        self.shared.reap_dead(&mut inner);
+        inner.banks.iter().filter(|b| b.state == BankState::Active).count()
+    }
+
+    /// Run one elastic pass now (the pass also runs opportunistically on
+    /// every submission; this is for draining capacity while idle).
+    pub fn autoscale(&self) {
+        let mut inner = self.shared.inner.lock().unwrap();
+        self.shared.reap_dead(&mut inner);
+        self.shared.autoscale_locked(&mut inner);
+    }
+
+    /// Fault injection: abruptly kill every worker of bank `bank`, as if
+    /// the whole crossbar bank lost power. The death is *discovered* the
+    /// way a real one would be: by the router on the next submission, or
+    /// by an in-flight handle failing with [`BankDead`] and rerouting.
+    pub fn kill_bank(&self, bank: usize) -> Result<()> {
+        let inner = self.shared.inner.lock().unwrap();
+        let slot = inner.banks.get(bank).with_context(|| format!("no bank {bank} in a fleet of {}", inner.banks.len()))?;
+        ensure!(slot.state == BankState::Active, "bank {bank} is not active");
+        let svc = slot.service.as_ref().context("active bank without a service")?;
+        for w in 0..slot.cfg.n_crossbars {
+            let _ = svc.kill_worker(w);
+        }
+        Ok(())
+    }
+
+    /// Drain every bank (in-flight jobs finish first) and return the final
+    /// fleet statistics.
+    pub fn shutdown(self) -> FleetStats {
+        let mut inner = self.shared.inner.lock().unwrap();
+        for slot in &mut inner.banks {
+            if let Some(mut svc) = slot.service.take() {
+                slot.final_stats = Some(svc.drain());
+                if slot.state == BankState::Active {
+                    slot.state = BankState::Retired;
+                }
+            }
+        }
+        self.shared.stats_locked(&mut inner)
+    }
+}
+
+/// A cloneable, `Send` fleet submission front-end — the fleet-level
+/// counterpart of [`crate::coordinator::service::PimClient`].
+#[derive(Clone)]
+pub struct FleetClient {
+    shared: Arc<FleetShared>,
+}
+
+impl FleetClient {
+    /// Submit an element-wise job for `kind` (`Mul32` or `Add32`); the
+    /// router picks the least-loaded compatible bank. Fails fast with the
+    /// typed [`Overloaded`] under backpressure, [`NoCompatibleBank`] if no
+    /// bank serves `kind`, and [`WorkloadMismatch`] if `kind` is not an
+    /// element-wise workload.
+    pub fn submit(&self, kind: WorkloadKind, a: &[u64], b: &[u64]) -> Result<FleetJobHandle> {
+        if kind.shape() != JobShape::ElementWise {
+            return Err(anyhow::Error::new(WorkloadMismatch { service: kind, submitted: JobShape::ElementWise }));
+        }
+        self.shared.submit_payload(kind, FleetPayload::Pairs(a.to_vec(), b.to_vec()))
+    }
+
+    /// Submit a per-row sort job (routes to a `Sort16` bank).
+    pub fn submit_sort(&self, rows_data: &[Vec<u64>]) -> Result<FleetJobHandle> {
+        self.shared.submit_payload(WorkloadKind::Sort16, FleetPayload::Rows(rows_data.to_vec()))
+    }
+}
+
+/// A pending fleet job. Unlike the service-level
+/// [`JobHandle`], this handle owns the job's operands and
+/// requeues the job onto a compatible bank (or a freshly promoted hot
+/// spare) when its bank dies mid-flight — the caller only ever sees the
+/// failure once the reroute budget is exhausted or no compatible bank is
+/// left.
+pub struct FleetJobHandle {
+    shared: Arc<FleetShared>,
+    kind: WorkloadKind,
+    payload: FleetPayload,
+    current: Option<(usize, JobHandle)>,
+    reroutes_left: usize,
+}
+
+impl FleetJobHandle {
+    /// The bank currently executing the job.
+    pub fn bank(&self) -> Option<usize> {
+        self.current.as_ref().map(|(b, _)| *b)
+    }
+
+    /// Block until the job completes, transparently rerouting it if its
+    /// bank dies (the typed [`BankDead`] error is consumed here; any other
+    /// failure is the job's own and is surfaced as-is).
+    pub fn wait(mut self) -> Result<JobResult> {
+        loop {
+            let (bank, handle) = self.current.take().context("fleet job handle already consumed")?;
+            match handle.wait() {
+                Ok(r) => return Ok(r),
+                Err(e) => self.current = Some(self.reroute(bank, e)?),
+            }
+        }
+    }
+
+    /// Bounded wait: `None` if the job is still in flight when `timeout`
+    /// expires, leaving the handle usable. A bank death during the wait
+    /// still triggers a reroute (and the wait continues on the new bank
+    /// within the same deadline).
+    pub fn wait_timeout(&mut self, timeout: Duration) -> Option<Result<JobResult>> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            let Some((bank, handle)) = &self.current else {
+                return Some(Err(anyhow!("fleet job handle already consumed")));
+            };
+            let bank = *bank;
+            match handle.wait_timeout(deadline.saturating_duration_since(Instant::now())) {
+                None => return None,
+                Some(Ok(r)) => {
+                    self.current = None;
+                    return Some(Ok(r));
+                }
+                Some(Err(e)) => {
+                    self.current = None;
+                    match self.reroute(bank, e) {
+                        Ok(cur) => self.current = Some(cur),
+                        Err(e) => return Some(Err(e)),
+                    }
+                }
+            }
+        }
+    }
+
+    /// Requeue after a bank death; any other error (or an exhausted
+    /// reroute budget) is final.
+    fn reroute(&mut self, bank: usize, e: anyhow::Error) -> Result<(usize, JobHandle)> {
+        if e.downcast_ref::<BankDead>().is_none() || self.reroutes_left == 0 {
+            return Err(e);
+        }
+        self.reroutes_left -= 1;
+        self.shared
+            .note_death_and_resubmit(bank, self.kind, &self.payload)
+            .with_context(|| format!("requeueing the job after bank {bank} died"))
+    }
+}

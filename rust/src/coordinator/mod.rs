@@ -35,13 +35,26 @@
 //!   through the periphery decode path (the production path), so control
 //!   traffic, cycles and energy are metered exactly as the paper counts them.
 //!
+//! * Above single banks sits the [`fleet`] tier: a [`fleet::PimFleet`]
+//!   owns many `PimService` banks with *different* workloads behind one
+//!   cloneable [`fleet::FleetClient`], routing each job by workload
+//!   compatibility and queue depth, bounding queues with a typed
+//!   [`fleet::Overloaded`] backpressure error, and absorbing bank death
+//!   by rerouting onto peers or warm-promoted hot spares (see DESIGN.md
+//!   §Fleet).
+//!
 //! The environment has no tokio vendored, so the runtime is `std::thread` +
 //! `mpsc` channels (see DESIGN.md §Substitutions); the architecture is
 //! unchanged.
 
 pub mod coalesce;
+pub mod fleet;
 pub mod service;
 pub mod worker;
 
-pub use service::{JobHandle, JobResult, JobValues, PimClient, PimService, ServiceConfig, ServiceStats};
-pub use worker::{compile_workload, compile_workload_cached, workload_geometry, Segment, SegmentReport, WorkloadKind};
+pub use fleet::{
+    BankSnapshot, BankState, ElasticPolicy, FleetClient, FleetConfig, FleetCounters, FleetJobHandle, FleetStats, NoCompatibleBank, Overloaded,
+    PimFleet,
+};
+pub use service::{BankDead, JobHandle, JobResult, JobValues, PimClient, PimService, ServiceConfig, ServiceStats, WorkloadMismatch};
+pub use worker::{compile_workload, compile_workload_cached, workload_geometry, JobShape, Segment, SegmentReport, WorkloadKind};

@@ -36,17 +36,68 @@
 //!   Only when *every* worker is gone do pending jobs fail.
 
 use crate::coordinator::coalesce::Coalescer;
-use crate::coordinator::worker::{workload_geometry, ChunkValues, Payload, Segment, SegmentReport, Worker, WorkloadKind};
+use crate::coordinator::worker::{workload_geometry, ChunkValues, JobShape, Payload, Segment, SegmentReport, Worker, WorkloadKind};
 use crate::crossbar::crossbar::Metrics;
 use crate::isa::models::ModelKind;
 use anyhow::{anyhow, ensure, Context, Result};
 use std::collections::HashMap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
+
+/// Typed error: a submission whose operand shape this bank's workload
+/// cannot execute — an element-wise job on a sort bank, or a per-row sort
+/// job on an arithmetic bank. Both mismatch directions resolve to this one
+/// type; the fleet router matches on it (`downcast_ref::<WorkloadMismatch>`)
+/// to tell a routing bug apart from a genuine job failure.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WorkloadMismatch {
+    /// The workload the service was started with.
+    pub service: WorkloadKind,
+    /// The shape the submission required.
+    pub submitted: JobShape,
+}
+
+impl std::fmt::Display for WorkloadMismatch {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "workload mismatch: service runs {} ({}), but the job carries {}",
+            self.service.name(),
+            self.service.shape(),
+            self.submitted
+        )
+    }
+}
+
+impl std::error::Error for WorkloadMismatch {}
+
+/// Typed error: the job was lost to its bank dying — every crossbar worker
+/// is gone. The fleet layer matches on this (`downcast_ref::<BankDead>`) to
+/// requeue the job onto a compatible bank or a promoted hot spare instead
+/// of surfacing the failure; a standalone service surfaces it directly.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BankDead {
+    /// True when the job had been accepted before the bank died (its
+    /// segments were pending); false when the registration itself was
+    /// rejected because no live worker was left.
+    pub accepted: bool,
+}
+
+impl std::fmt::Display for BankDead {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.accepted {
+            f.write_str("every crossbar worker in the bank has failed")
+        } else {
+            f.write_str("no live crossbar workers left in the bank")
+        }
+    }
+}
+
+impl std::error::Error for BankDead {}
 
 /// Service configuration.
 #[derive(Debug, Clone, Copy)]
@@ -180,6 +231,20 @@ impl ServiceStats {
             self.occupied_rows as f64 / self.capacity_rows as f64
         }
     }
+
+    /// Fold another bank's statistics into this one (fleet aggregation:
+    /// `FleetStats` merges the per-bank `ServiceStats` of every live,
+    /// dead and retired bank).
+    pub fn merge(&mut self, other: &ServiceStats) {
+        self.jobs += other.jobs;
+        self.failed_jobs += other.failed_jobs;
+        self.elements += other.elements;
+        self.chunks += other.chunks;
+        self.batches += other.batches;
+        self.occupied_rows += other.occupied_rows;
+        self.capacity_rows += other.capacity_rows;
+        self.metrics.add(&other.metrics);
+    }
 }
 
 /// Job id reserved for fault-injection poison segments (never a real job).
@@ -247,6 +312,14 @@ struct Dispatcher {
     rows: usize,
     jobs: HashMap<u64, JobState>,
     stats: Arc<Mutex<ServiceStats>>,
+    /// Jobs submitted but not yet resolved (shared with the clients, which
+    /// increment it at submit) — the queue-depth signal the fleet router
+    /// and admission control read. Decremented exactly when a job's result
+    /// (or first error) is delivered, or its registration is rejected.
+    pending: Arc<AtomicU64>,
+    /// Live workers in the bank (the fleet's liveness signal). Decremented
+    /// once per worker, on whichever event retires it first.
+    live: Arc<AtomicUsize>,
     shutting_down: bool,
 }
 
@@ -281,6 +354,7 @@ impl Dispatcher {
         // error rather than a hang.
         for (_, job) in self.jobs.drain() {
             if let Some(tx) = job.result_tx {
+                self.pending.fetch_sub(1, Ordering::SeqCst);
                 let _ = tx.send(Err(anyhow!("service shut down before the job completed")));
             }
         }
@@ -298,10 +372,12 @@ impl Dispatcher {
             Event::Register { id, accum, n_chunks, start, result_tx } => {
                 if self.shutting_down {
                     self.stats.lock().unwrap().failed_jobs += 1;
+                    self.pending.fetch_sub(1, Ordering::SeqCst);
                     let _ = result_tx.send(Err(anyhow!("service is shutting down")));
                 } else if !self.ports.iter().any(|p| p.alive) {
                     self.stats.lock().unwrap().failed_jobs += 1;
-                    let _ = result_tx.send(Err(anyhow!("no live crossbar workers left in the bank")));
+                    self.pending.fetch_sub(1, Ordering::SeqCst);
+                    let _ = result_tx.send(Err(anyhow::Error::new(BankDead { accepted: false })));
                 } else {
                     self.jobs.insert(
                         id,
@@ -359,6 +435,9 @@ impl Dispatcher {
             }
             Event::WorkerExit { worker, unfinished, crashed } => {
                 let port = &mut self.ports[worker];
+                if port.alive {
+                    self.live.fetch_sub(1, Ordering::SeqCst);
+                }
                 port.alive = false;
                 port.idle = false;
                 port.tx = None;
@@ -388,6 +467,7 @@ impl Dispatcher {
             Event::KillWorker(w) => {
                 let port = &mut self.ports[w];
                 if port.alive {
+                    self.live.fetch_sub(1, Ordering::SeqCst);
                     port.kill.store(true, Ordering::SeqCst);
                     port.alive = false;
                     // Dropping the channel wakes an idle worker so it can
@@ -433,6 +513,7 @@ impl Dispatcher {
                 if !job.failed {
                     job.failed = true;
                     if let Some(tx) = job.result_tx.take() {
+                        self.pending.fetch_sub(1, Ordering::SeqCst);
                         let _ = tx.send(Err(anyhow!(msg)));
                     }
                     self.stats.lock().unwrap().failed_jobs += 1;
@@ -447,6 +528,7 @@ impl Dispatcher {
             if !job.failed {
                 self.stats.lock().unwrap().jobs += 1;
                 if let Some(tx) = job.result_tx {
+                    self.pending.fetch_sub(1, Ordering::SeqCst);
                     let _ = tx.send(Ok(JobResult {
                         id: job_id,
                         values: job.accum,
@@ -485,6 +567,7 @@ impl Dispatcher {
                     return;
                 };
                 let Some(tx) = self.ports[w].tx.clone() else {
+                    self.live.fetch_sub(1, Ordering::SeqCst);
                     self.ports[w].alive = false;
                     continue;
                 };
@@ -496,6 +579,7 @@ impl Dispatcher {
                     Err(std::sync::mpsc::SendError(b)) => {
                         // The worker died without telling us yet; its exit
                         // event will follow. Try the next live worker.
+                        self.live.fetch_sub(1, Ordering::SeqCst);
                         self.ports[w].alive = false;
                         self.ports[w].tx = None;
                         batch = b;
@@ -517,7 +601,8 @@ impl Dispatcher {
             if !job.failed {
                 newly_failed += 1;
                 if let Some(tx) = job.result_tx.take() {
-                    let _ = tx.send(Err(anyhow!("every crossbar worker in the bank has failed")));
+                    self.pending.fetch_sub(1, Ordering::SeqCst);
+                    let _ = tx.send(Err(anyhow::Error::new(BankDead { accepted: true })));
                 }
             }
         }
@@ -619,6 +704,19 @@ impl JobHandle {
             }
         }
     }
+
+    /// Bounded wait: `None` if the job is still in flight when `timeout`
+    /// expires — the handle stays usable, so a later `wait`/`wait_timeout`
+    /// still delivers the result. This is what keeps admission-control and
+    /// dead-bank tests (and impatient fleet callers) from hanging forever
+    /// on a job that was genuinely lost.
+    pub fn wait_timeout(&self, timeout: Duration) -> Option<Result<JobResult>> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(r) => Some(r),
+            Err(RecvTimeoutError::Timeout) => None,
+            Err(RecvTimeoutError::Disconnected) => Some(Err(anyhow!("scheduler exited without completing the job"))),
+        }
+    }
 }
 
 /// A cloneable, `Send` submission front-end: hand one to each client thread
@@ -628,12 +726,35 @@ pub struct PimClient {
     cfg: ServiceConfig,
     event_tx: Sender<Event>,
     next_job: Arc<AtomicU64>,
+    pending: Arc<AtomicU64>,
+    live: Arc<AtomicUsize>,
 }
 
 impl PimClient {
+    /// Jobs submitted to this bank but not yet resolved (completed or
+    /// failed) — the queue-depth signal the fleet router places work by and
+    /// admission control bounds.
+    pub fn pending_jobs(&self) -> usize {
+        self.pending.load(Ordering::SeqCst) as usize
+    }
+
+    /// Workers still alive in this bank. Zero means the bank is dead: every
+    /// pending job has failed (or is about to) and new registrations are
+    /// rejected — the fleet's cue to retire the bank and promote a spare.
+    pub fn live_workers(&self) -> usize {
+        self.live.load(Ordering::SeqCst)
+    }
+
+    /// The workload this bank serves (the fleet's routing key).
+    pub fn kind(&self) -> WorkloadKind {
+        self.cfg.kind
+    }
+
     /// Submit an element-wise job; returns immediately with a handle.
     pub fn submit(&self, a: &[u64], b: &[u64]) -> Result<JobHandle> {
-        ensure!(self.cfg.kind != WorkloadKind::Sort16, "sort services take per-row vectors; use submit_sort");
+        if self.cfg.kind.shape() != JobShape::ElementWise {
+            return Err(anyhow::Error::new(WorkloadMismatch { service: self.cfg.kind, submitted: JobShape::ElementWise }));
+        }
         ensure!(a.len() == b.len(), "operand vectors differ in length");
         ensure!(!a.is_empty(), "empty job");
         let payloads: Vec<Payload> = a
@@ -649,7 +770,9 @@ impl PimClient {
 
     /// Submit a sort job (one vector per crossbar row); returns immediately.
     pub fn submit_sort(&self, rows_data: &[Vec<u64>]) -> Result<JobHandle> {
-        ensure!(self.cfg.kind == WorkloadKind::Sort16, "service is not a sort workload");
+        if self.cfg.kind.shape() != JobShape::RowVectors {
+            return Err(anyhow::Error::new(WorkloadMismatch { service: self.cfg.kind, submitted: JobShape::RowVectors }));
+        }
         ensure!(!rows_data.is_empty(), "empty job");
         let payloads: Vec<Payload> = rows_data.chunks(self.cfg.rows).map(|c| Payload::Rows(c.to_vec())).collect();
         self.dispatch(JobValues::Rows(vec![Vec::new(); rows_data.len()]), payloads)
@@ -659,12 +782,15 @@ impl PimClient {
         let id = self.next_job.fetch_add(1, Ordering::Relaxed);
         let (result_tx, result_rx) = channel();
         let start = Instant::now();
+        // Counted pending from the submit side (before the dispatcher even
+        // registers it), so admission control never under-reads a burst.
+        self.pending.fetch_add(1, Ordering::SeqCst);
         // The registration is enqueued before any chunk, so the dispatcher
         // always knows the job before its first completion can arrive.
-        self.event_tx
-            .send(Event::Register { id, accum, n_chunks: payloads.len(), start, result_tx })
-            .ok()
-            .context("scheduler dispatcher exited")?;
+        if self.event_tx.send(Event::Register { id, accum, n_chunks: payloads.len(), start, result_tx }).is_err() {
+            self.pending.fetch_sub(1, Ordering::SeqCst);
+            return Err(anyhow!("scheduler dispatcher exited"));
+        }
         for (ci, payload) in payloads.into_iter().enumerate() {
             self.event_tx
                 .send(Event::Enqueue(Segment { job: id, offset: ci * self.cfg.rows, payload }))
@@ -697,6 +823,8 @@ impl PimService {
         let geom = workload_geometry(cfg.kind, cfg.model, cfg.rows)?;
         let (event_tx, event_rx) = channel::<Event>();
         let stats = Arc::new(Mutex::new(ServiceStats::default()));
+        let pending = Arc::new(AtomicU64::new(0));
+        let live = Arc::new(AtomicUsize::new(cfg.n_crossbars));
         let mut first = Some(Worker::new(cfg.kind, cfg.model, geom)?);
         let batch_cycles = first.as_ref().expect("just built").batch_cycles();
         let mut ports = Vec::new();
@@ -718,6 +846,7 @@ impl PimService {
             );
         }
         let dispatcher_stats = Arc::clone(&stats);
+        let (dispatcher_pending, dispatcher_live) = (Arc::clone(&pending), Arc::clone(&live));
         let dispatcher = std::thread::Builder::new()
             .name("pim-dispatcher".to_string())
             .spawn(move || {
@@ -728,12 +857,14 @@ impl PimService {
                     rows: cfg.rows,
                     jobs: HashMap::new(),
                     stats: dispatcher_stats,
+                    pending: dispatcher_pending,
+                    live: dispatcher_live,
                     shutting_down: false,
                 }
                 .run()
             })
             .context("spawning dispatcher thread")?;
-        let client = PimClient { cfg, event_tx, next_job: Arc::new(AtomicU64::new(0)) };
+        let client = PimClient { cfg, event_tx, next_job: Arc::new(AtomicU64::new(0)), pending, live };
         Ok(Self { client, dispatcher: Some(dispatcher), workers, stats, batch_cycles })
     }
 
@@ -789,9 +920,29 @@ impl PimService {
         *self.stats.lock().unwrap()
     }
 
+    /// Jobs submitted but not yet resolved (see [`PimClient::pending_jobs`]).
+    pub fn pending_jobs(&self) -> usize {
+        self.client.pending_jobs()
+    }
+
+    /// Workers still alive in the bank (see [`PimClient::live_workers`]).
+    pub fn live_workers(&self) -> usize {
+        self.client.live_workers()
+    }
+
     /// Stop the service and return the final statistics. Jobs still in
     /// flight are allowed to finish first.
     pub fn shutdown(mut self) -> ServiceStats {
+        self.drain()
+    }
+
+    /// Non-consuming retire path: drain in-flight jobs, stop every thread,
+    /// and return the final statistics, leaving the handle usable for
+    /// stats-only reads. The fleet uses this to retire a bank held in a
+    /// slot table (where ownership cannot be given up) — calling it twice
+    /// is a no-op returning the same final statistics. Submissions after a
+    /// drain fail cleanly ("service is shutting down").
+    pub fn drain(&mut self) -> ServiceStats {
         self.finish();
         *self.stats.lock().unwrap()
     }

@@ -31,6 +31,60 @@ pub enum WorkloadKind {
     Sort16,
 }
 
+/// The shape of a job's operands, mirroring [`Payload`]: element-wise
+/// scalar pairs, or one element vector per crossbar row. The fleet router
+/// and the typed `WorkloadMismatch` error speak in shapes — a submission is
+/// routable onto a bank exactly when the shapes agree.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum JobShape {
+    /// `(a, b)` scalar pairs, one result scalar per element.
+    ElementWise,
+    /// One element vector per row, one result vector per row.
+    RowVectors,
+}
+
+impl std::fmt::Display for JobShape {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            JobShape::ElementWise => "element-wise pairs",
+            JobShape::RowVectors => "per-row vectors",
+        })
+    }
+}
+
+impl WorkloadKind {
+    /// Every workload the bank layer can serve — the fleet's routing table
+    /// iterates this, and `repro lint` sweeps it.
+    pub const ALL: [WorkloadKind; 3] = [WorkloadKind::Mul32, WorkloadKind::Add32, WorkloadKind::Sort16];
+
+    /// Stable name (CLI flags, bench JSON, fleet reports).
+    pub fn name(self) -> &'static str {
+        match self {
+            WorkloadKind::Mul32 => "mul32",
+            WorkloadKind::Add32 => "add32",
+            WorkloadKind::Sort16 => "sort16",
+        }
+    }
+
+    /// Parse a CLI spelling (`mul`/`mul32`, `add`/`add32`, `sort`/`sort16`).
+    pub fn parse(s: &str) -> Option<WorkloadKind> {
+        match s {
+            "mul" | "mul32" => Some(WorkloadKind::Mul32),
+            "add" | "add32" => Some(WorkloadKind::Add32),
+            "sort" | "sort16" => Some(WorkloadKind::Sort16),
+            _ => None,
+        }
+    }
+
+    /// Operand shape this workload executes (the routing compatibility key).
+    pub fn shape(self) -> JobShape {
+        match self {
+            WorkloadKind::Mul32 | WorkloadKind::Add32 => JobShape::ElementWise,
+            WorkloadKind::Sort16 => JobShape::RowVectors,
+        }
+    }
+}
+
 /// Elements a sort job handles per row.
 pub const SORT_ELEMS: usize = 16;
 /// Element width of the sort workload.

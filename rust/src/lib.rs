@@ -56,7 +56,13 @@
 //!   complete), and a crashed worker's unexecuted batch requeues to the
 //!   surviving workers (DESIGN.md §Coordinator). Latency, energy, and
 //!   control traffic are metered per job — switching energy exactly, per
-//!   row range — and per bank, with batch-occupancy counters.
+//!   row range — and per bank, with batch-occupancy counters. Above the
+//!   banks, `coordinator::fleet::PimFleet` serves *mixed* traffic: it owns
+//!   N banks with different workloads behind one cloneable `FleetClient`,
+//!   routes each job to the least-loaded compatible bank, bounds queues
+//!   with a typed `Overloaded` backpressure error, and absorbs bank death
+//!   by rerouting jobs onto peers or warm-promoted hot spares, folding
+//!   every bank's statistics into one `FleetStats` (DESIGN.md §Fleet).
 //! * [`runtime`] — PJRT/XLA execution of the AOT-compiled JAX/Pallas
 //!   crossbar-step artifact (`artifacts/*.hlo.txt`) as an independent
 //!   `PimBackend`, used to cross-check the rust simulator (python never

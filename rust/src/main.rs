@@ -12,6 +12,12 @@
 //!                                   end-to-end vector-multiply service demo
 //!                                   (pipelined jobs, cross-job coalescing;
 //!                                   optional fault injection)
+//! repro serve --banks N [--mix mul:add:sort] [--spares S] [--max-pending P]
+//!             [--kill-bank B] [...single-bank flags]
+//!                                   multi-bank fleet demo: mixed traffic
+//!                                   routed across N banks, admission
+//!                                   control, hot-spare promotion on bank
+//!                                   death
 //! repro lint [--all] [--model M] [--deny-warnings]
 //!                                   statically verify every built-in workload
 //!                                   program against every control model
@@ -23,7 +29,8 @@
 use anyhow::{bail, Context, Result};
 use partition_pim::algorithms::multpim::{build_multpim, MultPimVariant};
 use partition_pim::backend::{ExecPipeline, PimBackend};
-use partition_pim::coordinator::{compile_workload, workload_geometry, PimService, ServiceConfig, WorkloadKind};
+use partition_pim::coordinator::worker::{SORT_BITS, SORT_ELEMS};
+use partition_pim::coordinator::{compile_workload, workload_geometry, FleetConfig, JobShape, PimFleet, PimService, ServiceConfig, WorkloadKind};
 use partition_pim::crossbar::crossbar::Crossbar;
 use partition_pim::crossbar::gate::GateSet;
 use partition_pim::crossbar::geometry::Geometry;
@@ -158,7 +165,130 @@ fn cmd_sort() -> Result<()> {
     Ok(())
 }
 
+/// `repro serve --banks N`: the fleet demo. N banks cycle through the
+/// workload mix; a mixed trace is routed across them by the fleet, with
+/// optional mid-trace bank kill to demonstrate rerouting / hot-spare
+/// promotion. Every result is verified in-process.
+fn cmd_serve_fleet(flags: &HashMap<String, String>) -> Result<()> {
+    let model = parse_model(flags.get("model").map(String::as_str).unwrap_or("minimal"))?;
+    let n_banks: usize = flags.get("banks").map(String::as_str).unwrap_or("3").parse()?;
+    let n_crossbars: usize = flags.get("crossbars").map(String::as_str).unwrap_or("2").parse()?;
+    let rows: usize = flags.get("rows").map(String::as_str).unwrap_or("64").parse()?;
+    let jobs: usize = flags.get("jobs").map(String::as_str).unwrap_or("12").parse()?;
+    let len: usize = flags.get("len").map(String::as_str).unwrap_or("256").parse()?;
+    let spares: usize = flags.get("spares").map(String::as_str).unwrap_or("1").parse()?;
+    let max_pending: usize = flags.get("max-pending").map(String::as_str).unwrap_or("256").parse()?;
+    let kill_bank: Option<usize> = match flags.get("kill-bank") {
+        Some(b) => Some(b.parse()?),
+        None => None,
+    };
+    let mix_spec = flags.get("mix").map(String::as_str).unwrap_or("mul:add:sort");
+    let mut mix = Vec::new();
+    for part in mix_spec.split(':') {
+        mix.push(WorkloadKind::parse(part).with_context(|| format!("unknown workload '{part}' in --mix (mul|add|sort)"))?);
+    }
+
+    let base = ServiceConfig { model, n_crossbars, rows, ..Default::default() };
+    let mut cfg = FleetConfig::mixed(&mix, n_banks, base)?;
+    cfg.spare_slots = spares;
+    cfg.max_pending_per_bank = max_pending;
+    println!(
+        "Starting PIM fleet: {} banks (mix {}), {} crossbars x {} rows each, {} spare(s), admission bound {}",
+        n_banks, mix_spec, n_crossbars, rows, spares, max_pending
+    );
+    let fleet = PimFleet::start(cfg)?;
+    let client = fleet.client();
+
+    let mut seed = 0x243f6a8885a308d3u64;
+    let mut rnd = move || {
+        seed ^= seed << 13;
+        seed ^= seed >> 7;
+        seed ^= seed << 17;
+        seed
+    };
+    enum Expect {
+        Scalars(Vec<u64>),
+        Rows(Vec<Vec<u64>>),
+    }
+    let t0 = Instant::now();
+    let mut pending = Vec::new();
+    for j in 0..jobs {
+        let kind = mix[j % mix.len()];
+        let (expect, handle) = match kind.shape() {
+            JobShape::ElementWise => {
+                let a: Vec<u64> = (0..len).map(|_| rnd() & 0xffff_ffff).collect();
+                let b: Vec<u64> = (0..len).map(|_| rnd() & 0xffff_ffff).collect();
+                let expect = match kind {
+                    WorkloadKind::Mul32 => a.iter().zip(&b).map(|(&x, &y)| x * y).collect(),
+                    _ => a.iter().zip(&b).map(|(&x, &y)| x + y).collect(),
+                };
+                (Expect::Scalars(expect), client.submit(kind, &a, &b)?)
+            }
+            JobShape::RowVectors => {
+                let data: Vec<Vec<u64>> =
+                    (0..rows).map(|_| (0..SORT_ELEMS).map(|_| rnd() & ((1 << SORT_BITS) - 1)).collect()).collect();
+                let expect = data
+                    .iter()
+                    .map(|r| {
+                        let mut s = r.clone();
+                        s.sort_unstable();
+                        s
+                    })
+                    .collect();
+                (Expect::Rows(expect), client.submit_sort(&data)?)
+            }
+        };
+        pending.push((j, kind, expect, handle));
+        if kill_bank == Some(j) {
+            fleet.kill_bank(j % n_banks)?;
+            println!("fault    : bank {} killed mid-trace; its jobs reroute (spare promotes)", j % n_banks);
+        }
+    }
+    for (j, kind, expect, handle) in pending {
+        let res = handle.wait().with_context(|| format!("job {j} ({})", kind.name()))?;
+        match expect {
+            Expect::Scalars(want) => anyhow::ensure!(res.scalars() == want.as_slice(), "wrong values in job {j}"),
+            Expect::Rows(want) => anyhow::ensure!(res.rows() == want.as_slice(), "wrong rows in job {j}"),
+        }
+        println!(
+            "job {j:>3} ({:<6}): {:>5} values  sim_cycles={:<8} wall={:?}",
+            kind.name(),
+            res.values.len(),
+            res.sim_cycles,
+            res.wall
+        );
+    }
+    let wall = t0.elapsed();
+    let stats = fleet.shutdown();
+    println!("\nfleet: {} jobs ({} failed) in {:?}", stats.aggregate.jobs, stats.aggregate.failed_jobs, wall);
+    println!(
+        "routing: {} routed, {} rerouted, {} overloaded, {} no-bank; lifecycle: {} dead, {} promoted, {} spawned, {} retired",
+        stats.counters.routed,
+        stats.counters.reroutes,
+        stats.counters.rejected_overloaded,
+        stats.counters.rejected_no_bank,
+        stats.counters.banks_dead,
+        stats.counters.spares_promoted,
+        stats.counters.banks_spawned,
+        stats.counters.banks_retired
+    );
+    for (i, b) in stats.banks.iter().enumerate() {
+        println!(
+            "bank {i} ({:<6} {:?}): {} jobs, {} elements, {:.1}% mean occupancy",
+            b.kind.name(),
+            b.state,
+            b.stats.jobs,
+            b.stats.elements,
+            100.0 * b.stats.mean_occupancy()
+        );
+    }
+    Ok(())
+}
+
 fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
+    if flags.contains_key("banks") {
+        return cmd_serve_fleet(flags);
+    }
     let model = parse_model(flags.get("model").map(String::as_str).unwrap_or("minimal"))?;
     let n_crossbars: usize = flags.get("crossbars").map(String::as_str).unwrap_or("4").parse()?;
     let rows: usize = flags.get("rows").map(String::as_str).unwrap_or("64").parse()?;
@@ -368,6 +498,11 @@ fn main() -> Result<()> {
             println!("              [--inject-bad]  submit one malformed job, show fault isolation");
             println!("              [--kill W]      kill worker W mid-service, show chunk requeue");
             println!("              [--no-coalesce] disable cross-job chunk coalescing (ablation)");
+            println!("              --banks N       fleet mode: N banks cycling through --mix");
+            println!("              [--mix mul:add:sort] workload mix across the banks");
+            println!("              [--spares 1]    hot-spare slots promoted on bank death");
+            println!("              [--max-pending 256] per-bank admission bound (backpressure)");
+            println!("              [--kill-bank B] kill bank B mid-trace, show rerouting");
             println!("  lint        statically verify every built-in workload program against");
             println!("              every control model; exits nonzero on error diagnostics");
             println!("              [--all] [--model M] [--deny-warnings]");

@@ -1,0 +1,314 @@
+//! Fleet failure-domain and policy tests: mixed traffic routed with zero
+//! workload-mismatch rejections, a bank killed mid-trace with every
+//! accepted job still completing (or failing cleanly — no wedge), hot-spare
+//! promotion, typed admission-control backpressure, the unified
+//! `WorkloadMismatch` error in both directions, `wait_timeout` leaving
+//! handles reusable, pristine-vs-reused-fleet metric equality, and elastic
+//! spawn/retire.
+
+use partition_pim::coordinator::worker::{SORT_BITS, SORT_ELEMS};
+use partition_pim::coordinator::{
+    BankState, ElasticPolicy, FleetConfig, JobShape, Overloaded, PimFleet, PimService, ServiceConfig, WorkloadKind, WorkloadMismatch,
+};
+use partition_pim::isa::models::ModelKind;
+use std::time::Duration;
+
+const MIX: [WorkloadKind; 3] = [WorkloadKind::Mul32, WorkloadKind::Add32, WorkloadKind::Sort16];
+
+fn vectors(len: usize, seed: u64) -> (Vec<u64>, Vec<u64>) {
+    let mut s = seed.wrapping_mul(0x9e3779b97f4a7c15).wrapping_add(1);
+    let mut next = move || {
+        s ^= s << 13;
+        s ^= s >> 7;
+        s ^= s << 17;
+        s & 0xffff_ffff
+    };
+    ((0..len).map(|_| next()).collect(), (0..len).map(|_| next()).collect())
+}
+
+fn sort_rows(n_rows: usize, seed: u64) -> Vec<Vec<u64>> {
+    let mut s = seed.wrapping_mul(0x9e3779b97f4a7c15).wrapping_add(7);
+    let mut next = move || {
+        s ^= s << 13;
+        s ^= s >> 7;
+        s ^= s << 17;
+        s & ((1 << SORT_BITS) - 1)
+    };
+    (0..n_rows).map(|_| (0..SORT_ELEMS).map(|_| next()).collect()).collect()
+}
+
+fn base_config(rows: usize) -> ServiceConfig {
+    ServiceConfig { model: ModelKind::Minimal, n_crossbars: 2, rows, ..Default::default() }
+}
+
+fn mixed_fleet(n_banks: usize, rows: usize) -> PimFleet {
+    PimFleet::start(FleetConfig::mixed(&MIX, n_banks, base_config(rows)).expect("config")).expect("fleet")
+}
+
+/// The headline acceptance property: a mixed mul + add + sort trace served
+/// by one fleet completes with *zero* jobs rejected for workload mismatch
+/// (or anything else) — routing by shape compatibility works end-to-end,
+/// and every value is exact.
+#[test]
+fn mixed_trace_completes_with_zero_mismatch_rejections() {
+    let fleet = mixed_fleet(3, 8);
+    let client = fleet.client();
+    let n_jobs = 18usize;
+    let mut pending = Vec::new();
+    for j in 0..n_jobs {
+        let kind = MIX[j % MIX.len()];
+        match kind.shape() {
+            JobShape::ElementWise => {
+                let (a, b) = vectors(10 + j, j as u64);
+                let handle = client.submit(kind, &a, &b).expect("mixed submit must never be rejected");
+                pending.push((kind, Some((a, b)), None, handle));
+            }
+            JobShape::RowVectors => {
+                let data = sort_rows(6, j as u64);
+                let handle = client.submit_sort(&data).expect("sort submit must never be rejected");
+                pending.push((kind, None, Some(data), handle));
+            }
+        }
+    }
+    for (kind, pairs, rows_data, handle) in pending {
+        let res = handle.wait().expect("mixed job");
+        match kind.shape() {
+            JobShape::ElementWise => {
+                let (a, b) = pairs.expect("element-wise job keeps its operands");
+                for i in 0..a.len() {
+                    let want = if kind == WorkloadKind::Mul32 { a[i] * b[i] } else { a[i] + b[i] };
+                    assert_eq!(res.scalars()[i], want, "{} element {i}", kind.name());
+                }
+            }
+            JobShape::RowVectors => {
+                for (i, row) in rows_data.expect("sort job keeps its operands").iter().enumerate() {
+                    let mut want = row.clone();
+                    want.sort_unstable();
+                    assert_eq!(res.rows()[i], want, "sort row {i}");
+                }
+            }
+        }
+    }
+    let stats = fleet.shutdown();
+    assert_eq!(stats.aggregate.jobs, n_jobs as u64);
+    assert_eq!(stats.aggregate.failed_jobs, 0);
+    assert_eq!(stats.counters.routed, n_jobs as u64);
+    assert_eq!(stats.counters.rejected_no_bank, 0, "no job may be rejected for workload mismatch");
+    assert_eq!(stats.counters.rejected_overloaded, 0);
+    assert_eq!(stats.counters.reroutes, 0);
+}
+
+/// Satellite regression: both wrong-workload directions resolve to the one
+/// typed `WorkloadMismatch` error, with the service's kind and the
+/// submission's shape populated.
+#[test]
+fn workload_mismatch_is_typed_in_both_directions() {
+    let mul = PimService::start(base_config(8)).expect("mul service");
+    let err = mul.submit_sort(&sort_rows(2, 1)).expect_err("sort job on a mul bank must be rejected");
+    let m = err.downcast_ref::<WorkloadMismatch>().expect("typed WorkloadMismatch (sort-on-mul)");
+    assert_eq!(m.service, WorkloadKind::Mul32);
+    assert_eq!(m.submitted, JobShape::RowVectors);
+    mul.shutdown();
+
+    let sort = PimService::start(ServiceConfig { kind: WorkloadKind::Sort16, ..base_config(8) }).expect("sort service");
+    let err = sort.submit(&[1, 2], &[3, 4]).expect_err("element-wise job on a sort bank must be rejected");
+    let m = err.downcast_ref::<WorkloadMismatch>().expect("typed WorkloadMismatch (pairs-on-sort)");
+    assert_eq!(m.service, WorkloadKind::Sort16);
+    assert_eq!(m.submitted, JobShape::ElementWise);
+    sort.shutdown();
+}
+
+/// Satellite: a timed-out `wait_timeout` leaves the handle reusable — the
+/// same handle still delivers the exact result afterwards. The job is held
+/// in flight deterministically by a long coalescer linger window.
+#[test]
+fn wait_timeout_leaves_handle_reusable() {
+    let svc = PimService::start(ServiceConfig { linger: Duration::from_millis(400), ..base_config(8) }).expect("service");
+    let (a, b) = vectors(2, 42);
+    let handle = svc.submit(&a, &b).expect("submit");
+    // The 2-element job lingers in the underfull batch for ~400ms, so a
+    // 10ms wait must time out...
+    assert!(handle.wait_timeout(Duration::from_millis(10)).is_none(), "job should still be lingering");
+    // ...and the handle must still deliver the result once the window ends.
+    let res = handle.wait_timeout(Duration::from_secs(20)).expect("job must complete after the linger window").expect("job result");
+    assert_eq!(res.scalars(), &[a[0] * b[0], a[1] * b[1]]);
+    let stats = svc.shutdown();
+    assert_eq!(stats.jobs, 1);
+    assert_eq!(stats.failed_jobs, 0);
+}
+
+/// Tentpole failure domain: a bank killed mid-trace. Every accepted job
+/// must complete (rerouted to the promoted hot spare) or fail cleanly —
+/// no handle may hang. With a spare present and reroutes enabled, all of
+/// them in fact complete, and the lifecycle counters record the death and
+/// the promotion.
+#[test]
+fn killed_bank_mid_trace_jobs_finish_via_hot_spare() {
+    // One mul bank + one hot spare; a long linger holds submitted jobs in
+    // the coalescer, so the kill deterministically catches them in flight.
+    let mut cfg = FleetConfig { banks: vec![base_config(8)], spare_slots: 1, ..Default::default() };
+    cfg.banks[0].linger = Duration::from_millis(300);
+    let fleet = PimFleet::start(cfg).expect("fleet");
+    let client = fleet.client();
+    let mut pending = Vec::new();
+    for j in 0..3 {
+        let (a, b) = vectors(2, 100 + j);
+        let handle = client.submit(WorkloadKind::Mul32, &a, &b).expect("submit");
+        pending.push((a, b, handle));
+    }
+    fleet.kill_bank(0).expect("kill bank 0");
+    for (a, b, mut handle) in pending {
+        // Bounded wait: a wedge fails the test instead of hanging it.
+        let res = handle
+            .wait_timeout(Duration::from_secs(60))
+            .expect("no fleet job may wedge after a bank death")
+            .expect("job must complete via the promoted spare");
+        for i in 0..a.len() {
+            assert_eq!(res.scalars()[i], a[i] * b[i]);
+        }
+    }
+    // New submissions after the death land on the promoted spare.
+    let (a, b) = vectors(3, 999);
+    let res = client.submit(WorkloadKind::Mul32, &a, &b).expect("submit after death").wait().expect("spare serves new jobs");
+    assert_eq!(res.scalars()[0], a[0] * b[0]);
+    let stats = fleet.shutdown();
+    assert_eq!(stats.counters.banks_dead, 1);
+    assert_eq!(stats.counters.spares_promoted, 1);
+    assert!(stats.counters.reroutes >= 1, "at least one in-flight job must have rerouted");
+    assert_eq!(stats.aggregate.jobs, 4, "every accepted job completed exactly once");
+    let dead = stats.banks.iter().filter(|b| b.state == BankState::Dead).count();
+    assert_eq!(dead, 1);
+}
+
+/// A larger mixed trace with a mid-trace bank kill on a fleet that has a
+/// second bank per workload: jobs reroute onto the surviving peer (no spare
+/// needed), nothing wedges, and the fleet's aggregate accounts for every
+/// accepted job as either completed or cleanly failed.
+#[test]
+fn kill_bank_mid_mixed_trace_no_wedge() {
+    // 6 banks over a 3-workload mix = two banks per workload.
+    let fleet = mixed_fleet(6, 8);
+    let client = fleet.client();
+    let n_jobs = 24usize;
+    let mut accepted = Vec::new();
+    for j in 0..n_jobs {
+        let kind = MIX[j % MIX.len()];
+        let handle = match kind.shape() {
+            JobShape::ElementWise => {
+                let (a, b) = vectors(16, j as u64);
+                client.submit(kind, &a, &b).expect("submit")
+            }
+            JobShape::RowVectors => client.submit_sort(&sort_rows(4, j as u64)).expect("submit_sort"),
+        };
+        accepted.push(handle);
+        if j == n_jobs / 2 {
+            fleet.kill_bank(0).expect("kill bank 0 (a mul bank)");
+        }
+    }
+    let (mut completed, mut failed) = (0u64, 0u64);
+    for mut handle in accepted {
+        match handle.wait_timeout(Duration::from_secs(60)).expect("no fleet job may wedge after a bank death") {
+            Ok(_) => completed += 1,
+            Err(_) => failed += 1,
+        }
+    }
+    assert_eq!(completed + failed, n_jobs as u64, "every accepted job resolves");
+    // With a surviving mul bank to reroute onto, nothing should fail.
+    assert_eq!(failed, 0, "in-flight jobs reroute onto the surviving peer bank");
+    let stats = fleet.shutdown();
+    assert_eq!(stats.counters.banks_dead, 1);
+    assert_eq!(stats.aggregate.jobs, completed);
+}
+
+/// Admission control: with the per-bank bound reached, `submit` fails fast
+/// with the typed `Overloaded` error — and clears once the queue drains.
+#[test]
+fn admission_control_rejects_with_typed_overloaded() {
+    let mut cfg = FleetConfig { banks: vec![base_config(8)], ..Default::default() };
+    cfg.banks[0].linger = Duration::from_millis(300);
+    cfg.max_pending_per_bank = 2;
+    let fleet = PimFleet::start(cfg).expect("fleet");
+    let client = fleet.client();
+    // Two 1-element jobs linger in the coalescer: the bank is at its bound.
+    let h1 = client.submit(WorkloadKind::Mul32, &[3], &[5]).expect("first submit");
+    let h2 = client.submit(WorkloadKind::Mul32, &[4], &[6]).expect("second submit");
+    let err = client.submit(WorkloadKind::Mul32, &[7], &[8]).expect_err("third submit must hit the admission bound");
+    let o = err.downcast_ref::<Overloaded>().expect("typed Overloaded");
+    assert_eq!(o.kind, WorkloadKind::Mul32);
+    assert_eq!(o.limit, 2);
+    assert!(o.pending >= 2, "rejection reports the observed queue depth");
+    // Backpressure is not a wedge: the queued jobs complete...
+    assert_eq!(h1.wait().expect("first job").scalars(), &[15]);
+    assert_eq!(h2.wait().expect("second job").scalars(), &[24]);
+    // ...and the bound clears with the queue.
+    let h3 = client.submit(WorkloadKind::Mul32, &[7], &[8]).expect("admission clears once the queue drains");
+    assert_eq!(h3.wait().expect("third job").scalars(), &[56]);
+    let stats = fleet.shutdown();
+    assert_eq!(stats.counters.rejected_overloaded, 1);
+    assert_eq!(stats.aggregate.jobs, 3);
+}
+
+/// Metric-equality property lifted to the fleet tier: the same sequential
+/// trace on a pristine fleet and on a fleet that has already served (and
+/// lost a bank of) an earlier trace reports identical per-job values and
+/// metrics — serving history, coalescing state and bank identity must not
+/// leak into per-job attribution.
+#[test]
+fn pristine_vs_reused_fleet_metric_equality() {
+    let trace = |fleet: &PimFleet, salt: u64| -> Vec<(Vec<u64>, u64, u64, u64)> {
+        let client = fleet.client();
+        let mut out = Vec::new();
+        for j in 0..6u64 {
+            let (a, b) = vectors(12, 1000 + salt + j);
+            // Sequential submit + wait: no co-batching, deterministic
+            // least-loaded routing (all banks idle each time).
+            let res = client.submit(WorkloadKind::Mul32, &a, &b).expect("submit").wait().expect("job");
+            out.push((res.scalars().to_vec(), res.sim_cycles, res.control_bits, res.switch_events));
+        }
+        out
+    };
+
+    let pristine = mixed_fleet(3, 8);
+    let want = trace(&pristine, 0);
+    pristine.shutdown();
+
+    let reused = mixed_fleet(3, 8);
+    // Dirty the fleet: serve an unrelated warmup trace first.
+    let _ = trace(&reused, 777);
+    let got = trace(&reused, 0);
+    reused.shutdown();
+    assert_eq!(want, got, "per-job values and metrics must not depend on fleet history");
+}
+
+/// Elastic lifecycle: a burst of arrivals spawns extra banks for the hot
+/// workload (warm from the compile cache), and once the window drains the
+/// surplus banks retire — never below one bank per served workload.
+#[test]
+fn elastic_spawns_on_burst_and_retires_when_idle() {
+    let cfg = FleetConfig {
+        banks: vec![base_config(8)],
+        elastic: ElasticPolicy { enabled: true, window: Duration::from_secs(2), jobs_per_bank_window: 4, max_banks: 4 },
+        ..Default::default()
+    };
+    let fleet = PimFleet::start(cfg).expect("fleet");
+    let client = fleet.client();
+    for j in 0..12u64 {
+        let (a, b) = vectors(4, j);
+        let res = client.submit(WorkloadKind::Mul32, &a, &b).expect("submit").wait().expect("job");
+        assert_eq!(res.scalars()[0], a[0] * b[0]);
+    }
+    // 12 arrivals inside the window at 4 jobs-per-bank-window wants 3 banks
+    // (fewer only if the trace outran the window on a slow machine — spawn
+    // at least once either way).
+    let burst_banks = fleet.active_banks();
+    assert!(burst_banks >= 2, "the burst must spawn at least one extra bank (got {burst_banks})");
+    // Let the arrival window drain, then autoscale back down.
+    std::thread::sleep(Duration::from_millis(2200));
+    fleet.autoscale();
+    assert_eq!(fleet.active_banks(), 1, "idle surplus banks retire, the workload keeps one bank");
+    let stats = fleet.shutdown();
+    assert!(stats.counters.banks_spawned as usize >= burst_banks - 1);
+    assert_eq!(stats.counters.banks_spawned, stats.counters.banks_retired, "every elastic spawn is eventually retired");
+    assert_eq!(stats.aggregate.jobs, 12);
+    assert_eq!(stats.aggregate.failed_jobs, 0);
+}
