@@ -2,7 +2,7 @@
 //! energy (gate count) per model, plus wall-clock simulator timing of each
 //! program (experiments E6, E9).
 
-use partition_pim::backend::ExecPipeline;
+use partition_pim::backend::{ExecPipeline, ReplayMode};
 use partition_pim::bench_support::{bench, section, throughput};
 use partition_pim::coordinator::worker::{compile_workload, workload_geometry, WorkloadKind};
 use partition_pim::crossbar::crossbar::Crossbar;
@@ -51,15 +51,47 @@ fn main() {
         throughput(&res, prog.stats().cycles as f64, "cycles");
     }
 
-    section("wall-clock: pre-encoded message stream (controller encodes once)");
+    section("wall-clock: pre-encoded message stream (controller encodes once, periphery re-decodes)");
     for model in [ModelKind::Unlimited, ModelKind::Standard, ModelKind::Minimal] {
         let geom = workload_geometry(WorkloadKind::Mul32, model, 64).expect("geometry");
         let (prog, _) = compile_workload(WorkloadKind::Mul32, model, geom).expect("compile");
         let mut xb = Crossbar::new(geom, GateSet::NotNor);
         xb.state.fill_random(1);
         let mut pipe = ExecPipeline::wire(model, &mut xb);
+        pipe.set_replay_mode(ReplayMode::Wire);
         let prepared = prog.prepare(&mut pipe).expect("prepare");
         let res = bench(&format!("mult32/{}/pre-encoded", model.name()), || {
+            pipe.run_prepared(&prepared).expect("run");
+        });
+        throughput(&res, prog.stats().cycles as f64, "cycles");
+    }
+
+    section("wall-clock: decoded replay (decode-once trusted op cache, experiment E17)");
+    for model in [ModelKind::Unlimited, ModelKind::Standard, ModelKind::Minimal] {
+        let geom = workload_geometry(WorkloadKind::Mul32, model, 64).expect("geometry");
+        let (prog, _) = compile_workload(WorkloadKind::Mul32, model, geom).expect("compile");
+        let prepared = {
+            let mut scratch = Crossbar::new(geom, GateSet::NotNor);
+            prog.prepare(&mut ExecPipeline::wire(model, &mut scratch)).expect("prepare")
+        };
+        // Parity check before timing: one wire and one decoded replay from the
+        // same start state must agree bitwise and in every counter.
+        let parity = |mode: ReplayMode| {
+            let mut xb = Crossbar::new(geom, GateSet::NotNor);
+            xb.state.fill_random(1);
+            let mut pipe = ExecPipeline::wire(model, &mut xb);
+            pipe.set_replay_mode(mode);
+            pipe.run_prepared(&prepared).expect("run");
+            let (stats, m) = (pipe.stats(), pipe.metrics());
+            let counters = (m.cycles, m.gate_events, m.switch_events, stats.control_bits, stats.messages);
+            drop(pipe);
+            (xb.state, counters)
+        };
+        assert_eq!(parity(ReplayMode::Decoded), parity(ReplayMode::Wire), "{}: decoded replay diverged", model.name());
+        let mut xb = Crossbar::new(geom, GateSet::NotNor);
+        xb.state.fill_random(1);
+        let mut pipe = ExecPipeline::wire(model, &mut xb);
+        let res = bench(&format!("mult32/{}/decoded-replay", model.name()), || {
             pipe.run_prepared(&prepared).expect("run");
         });
         throughput(&res, prog.stats().cycles as f64, "cycles");

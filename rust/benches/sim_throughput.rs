@@ -1,19 +1,90 @@
 //! L3 hot-path throughput: row-gates/second of the bit-packed simulator
-//! (the §Perf target: ≥ 1e8 row-gates/s), across geometries and paths.
+//! (the §Perf target: ≥ 1e8 row-gates/s), across geometries and paths,
+//! plus the replay fast path (experiment E17): decode-once cached replay
+//! vs wire re-decode, and word-range parallel scaling at 1/2/4 threads.
+//!
+//! Emits `BENCH_sim_throughput.json` so CI can accumulate the perf
+//! trajectory across PRs.
 
-use partition_pim::backend::{ExecPipeline, PimBackend};
+use partition_pim::backend::{ExecPipeline, PimBackend, ReplayMode};
 use partition_pim::bench_support::{bench, section, throughput};
+use partition_pim::coordinator::worker::{compile_workload, workload_geometry, WorkloadKind};
 use partition_pim::crossbar::crossbar::Crossbar;
 use partition_pim::crossbar::gate::GateSet;
 use partition_pim::crossbar::geometry::Geometry;
 use partition_pim::isa::models::ModelKind;
 use partition_pim::isa::operation::{GateOp, Operation};
 
+const TARGET_ROW_GATES_PER_SEC: f64 = 1.0e8;
+
 fn parallel_op(geom: &Geometry) -> Operation {
     Operation::Gates((0..geom.k).map(|p| GateOp::nor(geom.col(p, 0), geom.col(p, 1), geom.col(p, 3))).collect())
 }
 
+struct ExecuteRow {
+    n: usize,
+    k: usize,
+    rows: usize,
+    row_gates_per_sec: f64,
+}
+
+struct ReplayRow {
+    wire_row_gates_per_sec: f64,
+    decoded_row_gates_per_sec: f64,
+    decoded_speedup: f64,
+}
+
+struct ScalingRow {
+    threads: usize,
+    row_gates_per_sec: f64,
+    speedup: f64,
+}
+
+fn write_json(execute: &[ExecuteRow], replay: &ReplayRow, scaling: &[ScalingRow]) {
+    let peak = execute
+        .iter()
+        .map(|r| r.row_gates_per_sec)
+        .chain(scaling.iter().map(|r| r.row_gates_per_sec))
+        .fold(0.0f64, f64::max);
+    let mut s = String::from("{\n");
+    s.push_str("  \"bench\": \"sim_throughput\",\n");
+    s.push_str(&format!("  \"target_row_gates_per_sec\": {TARGET_ROW_GATES_PER_SEC:.1},\n"));
+    s.push_str(&format!("  \"peak_row_gates_per_sec\": {peak:.1},\n"));
+    s.push_str("  \"execute\": [\n");
+    for (i, r) in execute.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"n\": {}, \"k\": {}, \"rows\": {}, \"row_gates_per_sec\": {:.1}}}{}\n",
+            r.n,
+            r.k,
+            r.rows,
+            r.row_gates_per_sec,
+            if i + 1 < execute.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ],\n");
+    s.push_str(&format!(
+        "  \"replay\": {{\"workload\": \"mul32\", \"model\": \"minimal\", \"rows\": 64, \"wire_row_gates_per_sec\": {:.1}, \"decoded_row_gates_per_sec\": {:.1}, \"decoded_speedup\": {:.3}}},\n",
+        replay.wire_row_gates_per_sec, replay.decoded_row_gates_per_sec, replay.decoded_speedup
+    ));
+    s.push_str("  \"word_range_scaling\": [\n");
+    for (i, r) in scaling.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"threads\": {}, \"row_gates_per_sec\": {:.1}, \"speedup\": {:.3}}}{}\n",
+            r.threads,
+            r.row_gates_per_sec,
+            r.speedup,
+            if i + 1 < scaling.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    match std::fs::write("BENCH_sim_throughput.json", s) {
+        Ok(()) => println!("\nwrote BENCH_sim_throughput.json"),
+        Err(e) => println!("\nWARNING: could not write BENCH_sim_throughput.json: {e}"),
+    }
+}
+
 fn main() {
+    let mut execute_rows: Vec<ExecuteRow> = Vec::new();
     section("bit-packed simulator: parallel operation (k gates x rows)");
     for (n, k, rows) in [(1024usize, 32usize, 64usize), (1024, 32, 1024), (1024, 32, 16384), (256, 8, 1024)] {
         let geom = Geometry::new(n, k, rows).expect("geometry");
@@ -24,6 +95,12 @@ fn main() {
             xb.execute(&op).expect("execute");
         });
         throughput(&res, (geom.k * rows) as f64, "row-gates");
+        execute_rows.push(ExecuteRow {
+            n,
+            k,
+            rows,
+            row_gates_per_sec: (geom.k * rows) as f64 / res.mean.as_secs_f64(),
+        });
     }
 
     section("message path: decode + periphery + execute (minimal model)");
@@ -32,14 +109,75 @@ fn main() {
         let mut xb = Crossbar::new(geom, GateSet::NotNor);
         xb.state.fill_random(7);
         let op = parallel_op(&geom);
-        // Pre-encode once; each iteration replays the decode + execute side.
+        // Pre-encode once; each iteration replays the decode + execute side
+        // (forced to the wire path so the periphery decoder stays in the loop).
         let mut pipe = ExecPipeline::wire(ModelKind::Minimal, &mut xb);
+        pipe.set_replay_mode(ReplayMode::Wire);
         let prepared = pipe.prepare(std::slice::from_ref(&op)).expect("prepare");
         let res = bench(&format!("message/n1024k32r{rows}"), || {
             pipe.run_prepared(&prepared).expect("execute");
         });
         throughput(&res, (geom.k * rows) as f64, "row-gates");
     }
+
+    section("replay fast path: mul32 workload, wire vs decode-once cache (minimal, 64 rows)");
+    let replay_row = {
+        let geom = workload_geometry(WorkloadKind::Mul32, ModelKind::Minimal, 64).expect("geometry");
+        let (prog, _) = compile_workload(WorkloadKind::Mul32, ModelKind::Minimal, geom).expect("compile");
+        let row_gates = (prog.stats().gates * geom.rows) as f64;
+        let mut xb = Crossbar::new(geom, GateSet::NotNor);
+        xb.state.fill_random(7);
+        let mut pipe = ExecPipeline::wire(ModelKind::Minimal, &mut xb);
+        let prepared = prog.prepare(&mut pipe).expect("prepare");
+        pipe.set_replay_mode(ReplayMode::Wire);
+        let wire = bench("replay/mul32/minimal/wire", || {
+            pipe.run_prepared(&prepared).expect("run");
+        });
+        throughput(&wire, row_gates, "row-gates");
+        pipe.set_replay_mode(ReplayMode::Decoded);
+        let decoded = bench("replay/mul32/minimal/decoded", || {
+            pipe.run_prepared(&prepared).expect("run");
+        });
+        throughput(&decoded, row_gates, "row-gates");
+        let decoded_speedup = wire.mean_ns() / decoded.mean_ns();
+        println!("      -> decoded replay speedup: {decoded_speedup:.2}x");
+        ReplayRow {
+            wire_row_gates_per_sec: row_gates / wire.mean.as_secs_f64(),
+            decoded_row_gates_per_sec: row_gates / decoded.mean.as_secs_f64(),
+            decoded_speedup,
+        }
+    };
+
+    section("word-range scaling: decoded replay across parallel word ranges (minimal, 16384 rows)");
+    let scaling_rows = {
+        let geom = workload_geometry(WorkloadKind::Mul32, ModelKind::Minimal, 16384).expect("geometry");
+        let (prog, _) = compile_workload(WorkloadKind::Mul32, ModelKind::Minimal, geom).expect("compile");
+        let row_gates = (prog.stats().gates * geom.rows) as f64;
+        let mut xb = Crossbar::new(geom, GateSet::NotNor);
+        xb.state.fill_random(7);
+        let mut pipe = ExecPipeline::wire(ModelKind::Minimal, &mut xb);
+        let prepared = prog.prepare(&mut pipe).expect("prepare");
+        let mut rows: Vec<ScalingRow> = Vec::new();
+        let mut base_ns = 0.0f64;
+        for threads in [1usize, 2, 4] {
+            pipe.set_replay_threads(threads);
+            let res = bench(&format!("replay/mul32/minimal/16384rows/t{threads}"), || {
+                pipe.run_prepared(&prepared).expect("run");
+            });
+            throughput(&res, row_gates, "row-gates");
+            if threads == 1 {
+                base_ns = res.mean_ns();
+            }
+            let speedup = base_ns / res.mean_ns();
+            println!("      -> scaling vs 1 thread: {speedup:.2}x");
+            rows.push(ScalingRow {
+                threads,
+                row_gates_per_sec: row_gates / res.mean.as_secs_f64(),
+                speedup,
+            });
+        }
+        rows
+    };
 
     section("initialization writes");
     let geom = Geometry::new(1024, 32, 1024).expect("geometry");
@@ -50,4 +188,6 @@ fn main() {
         xb.execute(&op).expect("init");
     });
     throughput(&res, (cols.len() * geom.rows) as f64, "cell-writes");
+
+    write_json(&execute_rows, &replay_row, &scaling_rows);
 }

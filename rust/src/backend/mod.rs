@@ -15,7 +15,7 @@
 pub mod pipeline;
 pub mod scalar;
 
-pub use pipeline::{ExecPipeline, PipelineStats, PreparedProgram, Stage};
+pub use pipeline::{ExecPipeline, PipelineStats, PreparedProgram, ReplayMode, Stage};
 pub use scalar::ScalarCrossbar;
 
 use crate::crossbar::crossbar::Metrics;
@@ -82,6 +82,28 @@ pub trait PimBackend {
     fn execute_ops(&mut self, ops: &[Operation]) -> Result<()> {
         for op in ops {
             self.execute(op)?;
+        }
+        Ok(())
+    }
+
+    /// Execute a whole trusted operation stream (a decoded replay batch),
+    /// with permission to spread row-parallel work over up to `threads`
+    /// word-range executors. Gate cycles are trusted (periphery-reconstructed
+    /// — see [`PimBackend::execute_trusted`]); write commands still take the
+    /// validating path, exactly as they do on the wire.
+    ///
+    /// The default implementation is the serial wire-equivalent loop; the
+    /// bit-packed crossbar overrides it with word-range-parallel execution
+    /// (DESIGN.md §Replay fast path). Implementations must preserve exact
+    /// metric semantics — `switch_events` and the per-row tracked variants
+    /// must match the serial path bit for bit.
+    fn execute_trusted_batch(&mut self, ops: &[Operation], threads: usize) -> Result<()> {
+        let _ = threads;
+        for op in ops {
+            match op {
+                Operation::Init { .. } => self.execute(op)?,
+                Operation::Gates(_) => self.execute_trusted(op)?,
+            }
         }
         Ok(())
     }

@@ -28,7 +28,12 @@
 //! [`ExecPipeline::prepare`], yielding a [`PreparedProgram`] that streams to
 //! the crossbar-side stages repeatedly — the coordinator encodes a compiled
 //! program a single time and replays it for every batch (see DESIGN.md
-//! §Perf).
+//! §Perf). A wire-pipeline `prepare` additionally decodes the stream once
+//! into a trusted op cache, so [`ExecPipeline::run_prepared`] under the
+//! default [`ReplayMode::Decoded`] skips the per-replay periphery decode and
+//! hands the whole batch to [`PimBackend::execute_trusted_batch`] — the
+//! "pay for control once, then go wide" replay fast path (DESIGN.md
+//! §Replay fast path). [`ReplayMode::Wire`] forces the full decode path.
 
 use crate::backend::PimBackend;
 use crate::crossbar::crossbar::{init_message_bits, Metrics};
@@ -74,9 +79,53 @@ enum Item {
     InitWrite { cols: Vec<usize>, value: bool },
 }
 
+/// A borrowed view of an [`Item`] at the decode boundary, so the consumers
+/// ([`ExecPipeline::run_prepared`], [`ExecPipeline::run_wire`]) never clone
+/// staged payloads per replay.
+enum ItemRef<'a> {
+    Op(&'a Operation),
+    Message(&'a BitVec),
+    InitWrite { cols: &'a [usize], value: bool },
+}
+
+impl Item {
+    fn borrowed(&self) -> ItemRef<'_> {
+        match self {
+            Item::Op(op) => ItemRef::Op(op),
+            Item::Message(bits) => ItemRef::Message(bits),
+            Item::InitWrite { cols, value } => ItemRef::InitWrite { cols, value: *value },
+        }
+    }
+}
+
+/// How [`ExecPipeline::run_prepared`] replays a prepared program.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ReplayMode {
+    /// The fast path: replay the trusted operations decoded once at
+    /// [`ExecPipeline::prepare`] time, charging the cached control-traffic
+    /// cost per run (bit-identical states and metrics to [`ReplayMode::Wire`]
+    /// — proptest P14). Falls back to the wire path when the pipeline or
+    /// backend does not match the cache (see DESIGN.md §Replay fast path).
+    #[default]
+    Decoded,
+    /// Re-decode the full wire stream on every replay — the escape hatch the
+    /// fuzz and differential tests use to force the periphery decode path.
+    Wire,
+}
+
 /// Counters accumulated at the pipeline's stage boundaries. Backend-side
 /// counters (cycles, gates, switching) live in the backend's [`Metrics`];
 /// [`ExecPipeline::metrics`] merges the two views.
+///
+/// ## Replay metering contract
+///
+/// [`ExecPipeline::prepare`] charges `ops_in` exactly once — controller-side
+/// work happens once per program, never on replay. Each
+/// [`ExecPipeline::run_prepared`] call then grows `ops_to_backend`,
+/// `control_bits` and `messages` by the same per-replay amounts in both
+/// [`ReplayMode`]s: the decoded fast path charges the control cost cached at
+/// prepare time, so N replays meter exactly N × the wire-path deltas
+/// (regression-tested in `n_replays_meter_exactly_n_times_the_wire_deltas`).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct PipelineStats {
     /// Operations submitted by programs (pre-legalization cycles).
@@ -99,6 +148,26 @@ pub struct PipelineStats {
 #[derive(Debug, Clone)]
 pub struct PreparedProgram {
     items: Vec<Item>,
+    /// The decode-once trusted op cache, built at [`ExecPipeline::prepare`]
+    /// time when the pipeline ends in a periphery-decode stage.
+    cache: Option<DecodedCache>,
+}
+
+/// The decode-once replay cache: every wire item of a prepared program run
+/// through `encode::decode` + `periphery::reconstruct` a single time, plus
+/// the control-traffic cost one full replay of the stream meters at the
+/// decode boundary. The cache is only trusted for the exact (model,
+/// geometry) it was decoded under; [`ExecPipeline::run_prepared`] falls back
+/// to the wire path on any mismatch.
+#[derive(Debug, Clone)]
+struct DecodedCache {
+    model: ModelKind,
+    geom: Geometry,
+    ops: Vec<Operation>,
+    /// Control bits one replay of the stream carries.
+    control_bits: u64,
+    /// Control messages (gate messages + write commands) per replay.
+    messages: u64,
 }
 
 impl PreparedProgram {
@@ -110,6 +179,13 @@ impl PreparedProgram {
     pub fn is_empty(&self) -> bool {
         self.items.is_empty()
     }
+
+    /// True when the decode-once trusted op cache is present (the program
+    /// was prepared on a wire pipeline), so [`ReplayMode::Decoded`] replays
+    /// skip the per-replay periphery decode.
+    pub fn is_decoded(&self) -> bool {
+        self.cache.is_some()
+    }
 }
 
 /// An execution pipeline borrowing a backend.
@@ -120,6 +196,11 @@ pub struct ExecPipeline<'a> {
     /// decode stage — validated by construction, so they execute on the
     /// trusted path.
     decoded: bool,
+    /// How [`ExecPipeline::run_prepared`] replays (decoded cache vs full
+    /// wire re-decode).
+    replay_mode: ReplayMode,
+    /// Word-range executor threads the backend may use per decoded replay.
+    replay_threads: usize,
     stats: PipelineStats,
 }
 
@@ -142,7 +223,14 @@ impl<'a> ExecPipeline<'a> {
             ),
         }
         let decoded = matches!(stages.last(), Some(Stage::PeripheryDecode(_)));
-        Ok(Self { stages, backend, decoded, stats: PipelineStats::default() })
+        Ok(Self {
+            stages,
+            backend,
+            decoded,
+            replay_mode: ReplayMode::Decoded,
+            replay_threads: 1,
+            stats: PipelineStats::default(),
+        })
     }
 
     /// Abstract operations straight to the backend.
@@ -181,6 +269,29 @@ impl<'a> ExecPipeline<'a> {
     /// The stage composition.
     pub fn stages(&self) -> &[Stage] {
         &self.stages
+    }
+
+    /// Choose how [`ExecPipeline::run_prepared`] replays prepared programs
+    /// (default [`ReplayMode::Decoded`]). Fuzz and differential tests force
+    /// [`ReplayMode::Wire`] to exercise the full periphery decode path.
+    pub fn set_replay_mode(&mut self, mode: ReplayMode) {
+        self.replay_mode = mode;
+    }
+
+    /// The configured replay mode.
+    pub fn replay_mode(&self) -> ReplayMode {
+        self.replay_mode
+    }
+
+    /// Word-range executor threads the backend may use per decoded replay
+    /// (clamped to at least 1; the backend clamps to its word count).
+    pub fn set_replay_threads(&mut self, threads: usize) {
+        self.replay_threads = threads.max(1);
+    }
+
+    /// The configured word-range thread count.
+    pub fn replay_threads(&self) -> usize {
+        self.replay_threads
     }
 
     /// Pipeline-boundary counters accumulated so far.
@@ -261,9 +372,9 @@ impl<'a> ExecPipeline<'a> {
     /// single decode-and-execute path shared by [`ExecPipeline::run_op`],
     /// [`ExecPipeline::run_prepared`] and [`ExecPipeline::run_wire`] — no
     /// per-replay cloning of the prepared stream.
-    fn consume_item(&mut self, item: &Item, geom: &Geometry) -> Result<()> {
+    fn consume_item(&mut self, item: ItemRef<'_>, geom: &Geometry) -> Result<()> {
         match (self.decode_model(), item) {
-            (Some(model), Item::Message(bits)) => {
+            (Some(model), ItemRef::Message(bits)) => {
                 self.stats.control_bits += bits.len() as u64;
                 self.stats.messages += 1;
                 let msg = encode::decode(model, bits, geom)?;
@@ -271,7 +382,7 @@ impl<'a> ExecPipeline<'a> {
                 self.stats.ops_to_backend += 1;
                 self.backend.execute_trusted(&op)
             }
-            (Some(_), Item::InitWrite { cols, value }) => {
+            (Some(_), ItemRef::InitWrite { cols, value }) => {
                 self.stats.control_bits += init_message_bits(geom) as u64;
                 self.stats.messages += 1;
                 self.stats.ops_to_backend += 1;
@@ -279,12 +390,12 @@ impl<'a> ExecPipeline<'a> {
                 // reconstruction guarantee, so they take the validating
                 // path: a malformed write must be rejected before any cell
                 // is touched, identically on every backend.
-                self.backend.execute(&Operation::Init { cols: cols.clone(), value: *value })
+                self.backend.execute(&Operation::Init { cols: cols.to_vec(), value })
             }
-            (Some(_), Item::Op(_)) => {
+            (Some(_), ItemRef::Op(_)) => {
                 bail!("periphery decode received an abstract operation; it must follow an encode stage")
             }
-            (None, Item::Op(op)) => {
+            (None, ItemRef::Op(op)) => {
                 self.stats.ops_to_backend += 1;
                 self.backend.execute(op)
             }
@@ -329,12 +440,12 @@ impl<'a> ExecPipeline<'a> {
                 verify::check_cycle(op, &geom, &VerifyOptions::new(v, self.backend.gate_set()))?;
             }
             let item = Self::encode_item(model, op, &geom)?;
-            return self.consume_item(&item, &geom);
+            return self.consume_item(item.borrowed(), &geom);
         }
         let gate_set = self.backend.gate_set();
         let staged = self.apply_stages(0..self.front_len(), vec![Item::Op(op.clone())], &geom, gate_set)?;
         for item in &staged {
-            self.consume_item(item, &geom)?;
+            self.consume_item(item.borrowed(), &geom)?;
         }
         Ok(())
     }
@@ -348,24 +459,73 @@ impl<'a> ExecPipeline<'a> {
         Ok(())
     }
 
-    /// Apply the controller-side stages (legalize + encode) once.
+    /// Apply the controller-side stages (legalize + encode) once. On a wire
+    /// pipeline this additionally runs every encoded item through the
+    /// periphery decode a single time, attaching the decode-once trusted op
+    /// cache that [`ReplayMode::Decoded`] replays execute directly.
     pub fn prepare(&mut self, ops: &[Operation]) -> Result<PreparedProgram> {
         self.stats.ops_in += ops.len();
         let geom = self.backend.geom();
         let gate_set = self.backend.gate_set();
         let items: Vec<Item> = ops.iter().cloned().map(Item::Op).collect();
         let items = self.apply_stages(0..self.front_len(), items, &geom, gate_set)?;
-        Ok(PreparedProgram { items })
+        let cache = match self.decode_model() {
+            Some(model) => Some(Self::build_cache(model, &items, &geom)?),
+            None => None,
+        };
+        Ok(PreparedProgram { items, cache })
     }
 
-    /// Stream a prepared program through the crossbar-side stages (decode +
-    /// execute), by reference — no per-replay cloning. May be called any
-    /// number of times; control traffic is metered on every run, exactly as
-    /// a controller re-streaming the same encoded program would generate it.
+    /// Decode + reconstruct every wire item once (the one periphery pass a
+    /// [`ReplayMode::Decoded`] replay amortizes), recording the exact
+    /// control-traffic cost a single wire replay of the stream would meter.
+    fn build_cache(model: ModelKind, items: &[Item], geom: &Geometry) -> Result<DecodedCache> {
+        let mut ops = Vec::with_capacity(items.len());
+        let mut control_bits = 0u64;
+        for item in items {
+            match item {
+                Item::Message(bits) => {
+                    control_bits += bits.len() as u64;
+                    let msg = encode::decode(model, bits, geom)?;
+                    ops.push(periphery::reconstruct(&msg, geom)?);
+                }
+                Item::InitWrite { cols, value } => {
+                    control_bits += init_message_bits(geom) as u64;
+                    ops.push(Operation::Init { cols: cols.clone(), value: *value });
+                }
+                Item::Op(_) => bail!("wire pipeline staged an abstract operation past its encode stage"),
+            }
+        }
+        Ok(DecodedCache { model, geom: *geom, ops, control_bits, messages: items.len() as u64 })
+    }
+
+    /// Stream a prepared program through the crossbar-side stages, by
+    /// reference — no per-replay cloning. May be called any number of times;
+    /// control traffic is metered on every run, exactly as a controller
+    /// re-streaming the same encoded program would generate it.
+    ///
+    /// Under [`ReplayMode::Decoded`] (the default) a program prepared on a
+    /// matching wire pipeline replays through its decode-once trusted op
+    /// cache: the cached control cost is charged to [`PipelineStats`] and
+    /// the trusted operations go to [`PimBackend::execute_trusted_batch`],
+    /// skipping the per-replay periphery decode (and unlocking word-range
+    /// parallelism). Any mismatch — wrong decode model, wrong geometry, no
+    /// decode stage, no cache — falls back to the wire path, which fails
+    /// exactly where an undecodable stream always failed.
     pub fn run_prepared(&mut self, prog: &PreparedProgram) -> Result<()> {
         let geom = self.backend.geom();
+        if self.replay_mode == ReplayMode::Decoded {
+            if let Some(cache) = &prog.cache {
+                if self.decode_model() == Some(cache.model) && geom == cache.geom {
+                    self.stats.control_bits += cache.control_bits;
+                    self.stats.messages += cache.messages;
+                    self.stats.ops_to_backend += cache.ops.len();
+                    return self.backend.execute_trusted_batch(&cache.ops, self.replay_threads);
+                }
+            }
+        }
         for item in &prog.items {
-            self.consume_item(item, &geom)?;
+            self.consume_item(item.borrowed(), &geom)?;
         }
         Ok(())
     }
@@ -378,7 +538,7 @@ impl<'a> ExecPipeline<'a> {
     pub fn run_wire(&mut self, bits: &BitVec) -> Result<()> {
         ensure!(self.decoded, "pipeline has no periphery decode stage to receive wire traffic");
         let geom = self.backend.geom();
-        self.consume_item(&Item::Message(bits.clone()), &geom)
+        self.consume_item(ItemRef::Message(bits), &geom)
     }
 }
 
@@ -523,6 +683,80 @@ mod tests {
         let stats = pipe.stats();
         assert_eq!(stats.messages, 4, "each replay streams every message again");
         assert_eq!(pipe.metrics().cycles, 4);
+    }
+
+    /// The replay fast path is invisible: a Decoded replay of a prepared
+    /// program is bitwise- and metric-identical to a Wire replay, for both
+    /// single- and multi-word-range execution.
+    #[test]
+    fn decoded_replay_matches_wire_replay() {
+        let g = Geometry::new(256, 8, 130).unwrap(); // 3 words/col: real word ranges
+        let ops = vec![
+            Operation::init1(vec![g.col(0, 3), g.col(2, 3)]),
+            parallel_op(&g),
+            Operation::init1(vec![g.col(1, 2)]),
+            parallel_op(&g),
+        ];
+        let mut scratch = Crossbar::new(g, GateSet::NotNor);
+        let prepared = ExecPipeline::wire(ModelKind::Minimal, &mut scratch).prepare(&ops).unwrap();
+        assert!(prepared.is_decoded());
+
+        let mut start = Crossbar::new(g, GateSet::NotNor);
+        start.state.fill_random(41);
+        let mut outcomes = Vec::new();
+        for (mode, threads) in [(ReplayMode::Wire, 1), (ReplayMode::Decoded, 1), (ReplayMode::Decoded, 3)] {
+            let mut xb = start.clone();
+            let mut pipe = ExecPipeline::wire(ModelKind::Minimal, &mut xb);
+            pipe.set_replay_mode(mode);
+            pipe.set_replay_threads(threads);
+            pipe.run_prepared(&prepared).unwrap();
+            pipe.run_prepared(&prepared).unwrap();
+            let stats = pipe.stats();
+            let metrics = pipe.metrics();
+            drop(pipe);
+            outcomes.push((xb.state, stats.ops_to_backend, stats.control_bits, stats.messages, metrics));
+        }
+        for o in &outcomes[1..] {
+            assert_eq!(o.0, outcomes[0].0, "replay modes diverged in state");
+            assert_eq!(
+                (o.1, o.2, o.3, o.4),
+                (outcomes[0].1, outcomes[0].2, outcomes[0].3, outcomes[0].4),
+                "replay modes diverged in metering"
+            );
+        }
+    }
+
+    /// The replay metering contract (see [`PipelineStats`]): `ops_in` is
+    /// charged once at prepare, and N replays grow `ops_to_backend`,
+    /// `control_bits`, `messages` and the backend counters by exactly N ×
+    /// the single-replay deltas — identically in both replay modes.
+    #[test]
+    fn n_replays_meter_exactly_n_times_the_wire_deltas() {
+        let g = geom();
+        let ops = vec![Operation::init1(vec![g.col(0, 3)]), parallel_op(&g), parallel_op(&g)];
+        for mode in [ReplayMode::Decoded, ReplayMode::Wire] {
+            let mut xb = Crossbar::new(g, GateSet::NotNor);
+            let mut pipe = ExecPipeline::wire(ModelKind::Minimal, &mut xb);
+            pipe.set_replay_mode(mode);
+            let prepared = pipe.prepare(&ops).unwrap();
+            let after_prepare = pipe.stats();
+            assert_eq!(after_prepare.ops_in, 3);
+            assert_eq!(after_prepare.messages, 0, "prepare must not meter the wire");
+            assert_eq!(pipe.metrics().cycles, 0, "prepare must not execute");
+            pipe.run_prepared(&prepared).unwrap();
+            let one = pipe.stats();
+            let one_metrics = pipe.metrics();
+            assert!(one.control_bits > 0 && one.messages == 3);
+            for _ in 0..4 {
+                pipe.run_prepared(&prepared).unwrap();
+            }
+            let five = pipe.stats();
+            assert_eq!(five.ops_in, 3, "replays never re-charge ops_in");
+            assert_eq!(five.ops_to_backend, 5 * one.ops_to_backend);
+            assert_eq!(five.control_bits, 5 * one.control_bits);
+            assert_eq!(five.messages, 5 * one.messages);
+            assert_eq!(pipe.metrics().cycles, 5 * one_metrics.cycles);
+        }
     }
 
     #[test]

@@ -31,9 +31,16 @@
 //!   worker keeps serving), a crashed worker retires from the bank and the
 //!   batch it had not executed is requeued to the survivors (see DESIGN.md
 //!   §Coordinator).
-//! * Workers stream the compiled program **as encoded control messages**
-//!   through the periphery decode path (the production path), so control
-//!   traffic, cycles and energy are metered exactly as the paper counts them.
+//! * Workers replay the compiled program through the **decode-once trusted
+//!   op cache** ([`prepared_workload_cached`], shared per (kind, model,
+//!   geometry)): the wire stream is encoded and periphery-decoded a single
+//!   time, every batch replays the trusted operations, and the cached
+//!   control-traffic cost is charged per replay — so control traffic,
+//!   cycles and energy are metered exactly as the paper counts them while
+//!   the hot loop skips the per-batch decoder (DESIGN.md §Replay fast
+//!   path). `ServiceConfig::replay_mode` forces the full wire re-decode
+//!   for differential testing, and `replay_threads` spreads each replay
+//!   over parallel word ranges.
 //!
 //! * Above single banks sits the [`fleet`] tier: a [`fleet::PimFleet`]
 //!   owns many `PimService` banks with *different* workloads behind one
@@ -57,4 +64,7 @@ pub use fleet::{
     PimFleet,
 };
 pub use service::{BankDead, JobHandle, JobResult, JobValues, PimClient, PimService, ServiceConfig, ServiceStats, WorkloadMismatch};
-pub use worker::{compile_workload, compile_workload_cached, workload_geometry, JobShape, Segment, SegmentReport, WorkloadKind};
+pub use worker::{
+    compile_workload, compile_workload_cached, prepared_workload_cached, workload_geometry, JobShape, Segment,
+    SegmentReport, WorkloadKind,
+};

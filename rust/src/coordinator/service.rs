@@ -35,6 +35,7 @@
 //!   the crossbar died fails every job aboard (they shared the hardware).
 //!   Only when *every* worker is gone do pending jobs fail.
 
+use crate::backend::ReplayMode;
 use crate::coordinator::coalesce::Coalescer;
 use crate::coordinator::worker::{workload_geometry, ChunkValues, JobShape, Payload, Segment, SegmentReport, Worker, WorkloadKind};
 use crate::crossbar::crossbar::Metrics;
@@ -115,6 +116,14 @@ pub struct ServiceConfig {
     /// How long an underfull batch may wait for co-tenants before it is
     /// dispatched anyway (bounds the latency a lone small job can pay).
     pub linger: Duration,
+    /// How workers replay the prepared workload program per batch: the
+    /// decode-once trusted op cache (default) or the full wire re-decode
+    /// (the differential-testing escape hatch — see DESIGN.md §Replay fast
+    /// path).
+    pub replay_mode: ReplayMode,
+    /// Word-range executor threads each worker may use per decoded replay
+    /// (1 = serial; capped by the crossbar's `rows/64` word count).
+    pub replay_threads: usize,
 }
 
 impl Default for ServiceConfig {
@@ -126,6 +135,8 @@ impl Default for ServiceConfig {
             rows: 64,
             coalescing: true,
             linger: Duration::from_micros(200),
+            replay_mode: ReplayMode::Decoded,
+            replay_threads: 1,
         }
     }
 }
@@ -830,10 +841,11 @@ impl PimService {
         let mut ports = Vec::new();
         let mut workers = Vec::new();
         for i in 0..cfg.n_crossbars {
-            let worker = match first.take() {
+            let mut worker = match first.take() {
                 Some(w) => w,
                 None => Worker::new(cfg.kind, cfg.model, geom)?,
             };
+            worker.set_replay(cfg.replay_mode, cfg.replay_threads);
             let (tx, rx) = channel::<Batch>();
             let kill = Arc::new(AtomicBool::new(false));
             ports.push(WorkerPort { tx: Some(tx), kill: Arc::clone(&kill), alive: true, idle: false });

@@ -6,7 +6,7 @@ use crate::algorithms::addition::{build_adder, build_adder_aligned, Adder, Align
 use crate::algorithms::mult_serial::{build_serial_multiplier, SerialMultiplier};
 use crate::algorithms::multpim::{build_multpim, MultPim, MultPimVariant};
 use crate::algorithms::program::Program;
-use crate::backend::{ExecPipeline, PreparedProgram};
+use crate::backend::{ExecPipeline, PreparedProgram, ReplayMode};
 use crate::crossbar::crossbar::{Crossbar, Metrics};
 use crate::crossbar::gate::GateSet;
 use crate::crossbar::geometry::Geometry;
@@ -198,14 +198,21 @@ impl Compiled {
 }
 
 /// One crossbar plus its compiled program, prepared once for the wire
-/// pipeline (the controller encodes a compiled program a single time and
-/// streams it to every batch — see DESIGN.md §Perf).
+/// pipeline (the controller encodes *and periphery-decodes* a compiled
+/// program a single time — shared process-wide via
+/// [`prepared_workload_cached`] — and replays the trusted stream to every
+/// batch; see DESIGN.md §Replay fast path).
 pub struct Worker {
     pub crossbar: Crossbar,
     pub model: ModelKind,
     program: Program,
     prepared: PreparedProgram,
     compiled: Compiled,
+    /// How batches replay the prepared program (the `ServiceConfig`
+    /// `replay_mode` knob; default [`ReplayMode::Decoded`]).
+    replay_mode: ReplayMode,
+    /// Word-range executor threads per decoded replay.
+    replay_threads: usize,
 }
 
 /// Build the workload program for `model` on `geom`, applying the paper's
@@ -280,32 +287,61 @@ pub fn compile_workload(kind: WorkloadKind, model: ModelKind, geom: Geometry) ->
 /// ([`verify::verify_program`]); a workload whose program carries an
 /// error-severity diagnostic never reaches any worker.
 pub fn compile_workload_cached(kind: WorkloadKind, model: ModelKind, geom: Geometry) -> Result<(Program, Compiled)> {
-    type Cache = Mutex<HashMap<(WorkloadKind, ModelKind, Geometry), (Program, Compiled)>>;
+    let (program, compiled, _) = prepared_workload_cached(kind, model, geom)?;
+    Ok((program, compiled))
+}
+
+/// The full process-wide workload cache: the compiled program, its
+/// loader/reader handle, *and* the wire-prepared [`PreparedProgram`]
+/// carrying the decode-once trusted op cache. Sharing the prepared program
+/// per `(kind, model, geometry)` means the whole bank — and every respawned
+/// worker after a fault — encodes and periphery-decodes each workload
+/// exactly once, then replays the trusted stream for every batch
+/// (DESIGN.md §Replay fast path).
+pub fn prepared_workload_cached(
+    kind: WorkloadKind,
+    model: ModelKind,
+    geom: Geometry,
+) -> Result<(Program, Compiled, PreparedProgram)> {
+    type Entry = (Program, Compiled, PreparedProgram);
+    type Cache = Mutex<HashMap<(WorkloadKind, ModelKind, Geometry), Entry>>;
     static CACHE: OnceLock<Cache> = OnceLock::new();
     let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
     // Workers run on panic-prone threads (fault injection kills them
     // mid-operation); recover the map instead of poisoning every future
     // compile.
     let mut map = cache.lock().unwrap_or_else(|e| e.into_inner());
-    if let Some((program, compiled)) = map.get(&(kind, model, geom)) {
-        return Ok((program.clone(), compiled.clone()));
+    if let Some(entry) = map.get(&(kind, model, geom)) {
+        return Ok(entry.clone());
     }
     let (program, compiled) = compile_workload(kind, model, geom)?;
     verify::verify_program(&program, model).ensure_clean()?;
-    map.insert((kind, model, geom), (program.clone(), compiled.clone()));
-    Ok((program, compiled))
+    // Prepare (encode + decode once) on a scratch crossbar: preparation is
+    // controller-side and touches no cells, so the scratch state is
+    // irrelevant and the cached stream is valid on any same-geometry bank.
+    let mut scratch = Crossbar::new(geom, GateSet::NotNor);
+    let prepared = program.prepare(&mut ExecPipeline::wire(model, &mut scratch))?;
+    let entry = (program, compiled, prepared);
+    map.insert((kind, model, geom), entry.clone());
+    Ok(entry)
 }
 
 impl Worker {
     pub fn new(kind: WorkloadKind, model: ModelKind, geom: Geometry) -> Result<Self> {
-        let (program, compiled) = compile_workload_cached(kind, model, geom)?;
+        let (program, compiled, prepared) = prepared_workload_cached(kind, model, geom)?;
         let mut crossbar = Crossbar::new(geom, GateSet::NotNor);
         // Coalesced batches charge each segment its exact row-range
         // switching energy, so the worker's crossbar always attributes
         // switches per row.
         crossbar.enable_row_switch_tracking();
-        let prepared = program.prepare(&mut ExecPipeline::wire(model, &mut crossbar))?;
-        Ok(Self { crossbar, model, program, prepared, compiled })
+        Ok(Self { crossbar, model, program, prepared, compiled, replay_mode: ReplayMode::Decoded, replay_threads: 1 })
+    }
+
+    /// Configure how this worker replays the prepared program per batch
+    /// (plumbed from `ServiceConfig::replay_mode` / `replay_threads`).
+    pub fn set_replay(&mut self, mode: ReplayMode, threads: usize) {
+        self.replay_mode = mode;
+        self.replay_threads = threads.max(1);
     }
 
     /// Geometry this worker serves.
@@ -318,10 +354,12 @@ impl Worker {
         self.program.stats().cycles
     }
 
-    /// Stream the prepared program through the wire pipeline once and fold
-    /// the pipeline-metered control traffic into the batch delta.
+    /// Replay the prepared program once (decoded fast path by default) and
+    /// fold the pipeline-metered control traffic into the batch delta.
     fn run_prepared_batch(&mut self, before: Metrics) -> Result<Metrics> {
         let mut pipe = ExecPipeline::wire(self.model, &mut self.crossbar);
+        pipe.set_replay_mode(self.replay_mode);
+        pipe.set_replay_threads(self.replay_threads);
         pipe.run_prepared(&self.prepared)?;
         let wire = pipe.stats();
         let mut delta = self.crossbar.metrics.delta_since(&before);

@@ -65,6 +65,38 @@ pub fn init_message_bits(geom: &Geometry) -> usize {
     3 * geom.log2_n()
 }
 
+/// Run a trusted operation stream over one word-range chunk of the state.
+/// Stateful logic never crosses rows, so every chunk executes the full
+/// stream independently; the caller merges the chunks back and sums the
+/// switching events. Returns the chunk's switch total plus (when `track` is
+/// set) its local per-row switch accumulator, indexed from the chunk's own
+/// row 0.
+fn run_trusted_ops(m: &mut BitMatrix, ops: &[Operation], track: bool) -> Result<(u64, Vec<u64>)> {
+    let mut acc = if track { vec![0u64; m.rows()] } else { Vec::new() };
+    let mut switches = 0u64;
+    for op in ops {
+        match op {
+            Operation::Init { cols, value } => {
+                switches += if track {
+                    m.init_columns_tracked(cols, *value, &mut acc)?
+                } else {
+                    m.init_columns(cols, *value)?
+                };
+            }
+            Operation::Gates(gates) => {
+                for g in gates {
+                    switches += if track {
+                        m.apply_gate_tracked(g.gate, &g.ins, g.out, &mut acc)?
+                    } else {
+                        m.apply_gate(g.gate, &g.ins, g.out)?
+                    };
+                }
+            }
+        }
+    }
+    Ok((switches, acc))
+}
+
 /// A partitioned memristive crossbar (the bit-packed production backend).
 #[derive(Debug, Clone)]
 pub struct Crossbar {
@@ -180,6 +212,81 @@ impl PimBackend for Crossbar {
         self.step_trusted(op)
     }
 
+    /// Word-range-parallel batch execution (DESIGN.md §Replay fast path):
+    /// rows never interact in stateful logic, so the column-major 64-bit
+    /// words split into up to `threads` contiguous ranges that each execute
+    /// the whole trusted stream independently under scoped threads. Switch
+    /// events sum across ranges and the per-row tracked counters land in
+    /// disjoint row windows, so the merged metrics are bit-identical to the
+    /// serial path. A batch carrying a malformed write command is rejected
+    /// before any cell or counter changes, in every thread configuration.
+    fn execute_trusted_batch(&mut self, ops: &[Operation], threads: usize) -> Result<()> {
+        // Write commands sit outside the periphery reconstruction guarantee:
+        // validate them all up front, identically in the serial and the
+        // parallel path.
+        for op in ops {
+            if matches!(op, Operation::Init { .. }) {
+                op.validate(&self.geom, self.gate_set)?;
+            }
+        }
+        let wpc = self.state.words_per_col();
+        let t = threads.clamp(1, wpc);
+        if t == 1 || ops.is_empty() {
+            for op in ops {
+                self.step_trusted(op)?;
+            }
+            return Ok(());
+        }
+        let track = self.row_switches.is_some();
+        let mut ranges = Vec::with_capacity(t);
+        let (base, extra) = (wpc / t, wpc % t);
+        let mut w0 = 0;
+        for i in 0..t {
+            let w1 = w0 + base + usize::from(i < extra);
+            ranges.push((w0, w1));
+            w0 = w1;
+        }
+        let mut chunks =
+            ranges.iter().map(|&(a, b)| self.state.extract_word_range(a, b)).collect::<Result<Vec<_>>>()?;
+        let results: Vec<Result<(u64, Vec<u64>)>> = std::thread::scope(|s| {
+            let handles: Vec<_> =
+                chunks.iter_mut().map(|chunk| s.spawn(move || run_trusted_ops(chunk, ops, track))).collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().unwrap_or_else(|_| Err(anyhow::anyhow!("word-range executor thread panicked"))))
+                .collect()
+        });
+        // All-or-nothing merge: splice and charge only once every range
+        // executed cleanly, so a failed batch leaves the crossbar untouched.
+        let mut outcomes = Vec::with_capacity(t);
+        for r in results {
+            outcomes.push(r?);
+        }
+        for ((&(a, _), chunk), (switches, acc)) in ranges.iter().zip(&chunks).zip(&outcomes) {
+            self.state.splice_word_range(a, chunk)?;
+            self.metrics.switch_events += switches;
+            if let Some(dst) = &mut self.row_switches {
+                for (i, v) in acc.iter().enumerate() {
+                    dst[a * 64 + i] += v;
+                }
+            }
+        }
+        for op in ops {
+            match op {
+                Operation::Init { .. } => {
+                    self.metrics.cycles += 1;
+                    self.metrics.init_cycles += 1;
+                }
+                Operation::Gates(gates) => {
+                    self.metrics.cycles += 1;
+                    self.metrics.gate_cycles += 1;
+                    self.metrics.gate_events += gates.len() as u64;
+                }
+            }
+        }
+        Ok(())
+    }
+
     fn metrics(&self) -> Metrics {
         self.metrics
     }
@@ -272,6 +379,55 @@ mod tests {
         let mut pipe = ExecPipeline::wire(ModelKind::Standard, &mut xb);
         assert!(pipe.run_op(&op).is_err());
         assert_eq!(pipe.metrics().cycles, 0);
+    }
+
+    /// Word-range-parallel batch execution is bitwise- and metric-identical
+    /// to the serial trusted path, including per-row switch attribution
+    /// across word boundaries and a ragged tail word.
+    #[test]
+    fn trusted_batch_parallel_matches_serial() {
+        let geom = Geometry::new(256, 8, 200).unwrap(); // 4 words per column, 8-bit tail
+        let ops = vec![
+            Operation::init1(vec![2, 40, 70]),
+            Operation::Gates(vec![GateOp::nor(0, 1, 2), GateOp::nor(32, 33, 34)]),
+            Operation::Gates(vec![GateOp::nor(2, 34, 70)]),
+            Operation::Init { cols: vec![100], value: false },
+            Operation::Gates(vec![GateOp::not(70, 100)]),
+        ];
+        let mut serial = Crossbar::new(geom, GateSet::NotNor);
+        serial.state.fill_random(31);
+        serial.enable_row_switch_tracking();
+        let mut par = serial.clone();
+        let mut wide = serial.clone();
+        for op in &ops {
+            serial.execute_trusted(op).unwrap();
+        }
+        par.execute_trusted_batch(&ops, 3).unwrap();
+        assert_eq!(par.state, serial.state);
+        assert_eq!(par.metrics, serial.metrics);
+        for r in 0..200 {
+            assert_eq!(par.row_switches(r, r + 1), serial.row_switches(r, r + 1), "row {r} attribution");
+        }
+        // More threads than words per column clamps instead of failing.
+        wide.execute_trusted_batch(&ops, 64).unwrap();
+        assert_eq!(wide.state, serial.state);
+        assert_eq!(wide.metrics, serial.metrics);
+    }
+
+    /// A batch carrying a malformed write command is rejected before any
+    /// cell or counter changes, in every thread configuration.
+    #[test]
+    fn trusted_batch_rejects_malformed_write_untouched() {
+        let geom = Geometry::new(256, 8, 200).unwrap();
+        let mut xb = Crossbar::new(geom, GateSet::NotNor);
+        xb.state.fill_random(3);
+        let before = xb.state.clone();
+        let ops =
+            vec![Operation::Gates(vec![GateOp::nor(0, 1, 2)]), Operation::Init { cols: vec![geom.n + 1], value: true }];
+        assert!(xb.execute_trusted_batch(&ops, 2).is_err());
+        assert!(xb.execute_trusted_batch(&ops, 1).is_err());
+        assert_eq!(xb.state, before, "a rejected batch must not touch any cell");
+        assert_eq!(xb.metrics, Metrics::default());
     }
 
     #[test]

@@ -191,6 +191,50 @@ impl BitMatrix {
         Ok(switches)
     }
 
+    /// Number of 64-bit words backing each column (`ceil(rows / 64)`) — the
+    /// granularity of word-range-parallel batch execution.
+    #[inline]
+    pub fn words_per_col(&self) -> usize {
+        self.wpc
+    }
+
+    /// Copy out the sub-matrix holding word rows `w0..w1` of every column
+    /// (rows `w0*64 .. min(w1*64, rows)`). Together with
+    /// [`BitMatrix::splice_word_range`] this is the split/merge primitive of
+    /// word-range-parallel batch execution: stateful logic never crosses
+    /// rows, so disjoint word ranges can execute the same operation stream
+    /// independently and be merged back bit-exactly.
+    pub fn extract_word_range(&self, w0: usize, w1: usize) -> Result<BitMatrix> {
+        ensure!(w0 < w1 && w1 <= self.wpc, "word range [{w0}, {w1}) out of range ({} words per column)", self.wpc);
+        let rows = (w1 * 64).min(self.rows) - w0 * 64;
+        let mut out = BitMatrix::new(rows, self.cols);
+        let wpc = self.wpc;
+        for c in 0..self.cols {
+            let src = &self.data[c * wpc + w0..c * wpc + w1];
+            out.data[c * out.wpc..(c + 1) * out.wpc].copy_from_slice(src);
+        }
+        Ok(out)
+    }
+
+    /// Write a chunk extracted with [`BitMatrix::extract_word_range`] back at
+    /// word row `w0`, replacing exactly the words the extraction covered.
+    pub fn splice_word_range(&mut self, w0: usize, chunk: &BitMatrix) -> Result<()> {
+        ensure!(chunk.cols == self.cols, "chunk has {} columns, matrix has {}", chunk.cols, self.cols);
+        let w1 = w0 + chunk.wpc;
+        ensure!(w1 <= self.wpc, "chunk of {} words at word row {w0} exceeds {} words per column", chunk.wpc, self.wpc);
+        ensure!(
+            chunk.rows == (w1 * 64).min(self.rows) - w0 * 64,
+            "chunk of {} rows does not fill word range [{w0}, {w1}) of a {}-row matrix",
+            chunk.rows,
+            self.rows
+        );
+        let wpc = self.wpc;
+        for c in 0..self.cols {
+            self.data[c * wpc + w0..c * wpc + w1].copy_from_slice(&chunk.data[c * chunk.wpc..(c + 1) * chunk.wpc]);
+        }
+        Ok(())
+    }
+
     /// Zero every cell of rows `start..end` across all columns, in
     /// word-granular operations — the coordinator's batch-hygiene primitive.
     /// A cleared row range makes per-batch metrics independent of whatever
@@ -420,6 +464,37 @@ mod tests {
         m.clear_rows(7, 7).unwrap();
         assert!(m.clear_rows(0, 131).is_err());
         assert!(m.clear_rows(9, 8).is_err());
+    }
+
+    /// The word-range split/merge primitive is lossless, including across a
+    /// ragged tail word, and rejects malformed ranges.
+    #[test]
+    fn word_range_extract_splice_roundtrip() {
+        let mut m = BitMatrix::new(130, 5); // 3 words per column, 2-bit tail
+        m.fill_random(9);
+        assert_eq!(m.words_per_col(), 3);
+        let a = m.extract_word_range(0, 1).unwrap();
+        let b = m.extract_word_range(1, 3).unwrap();
+        assert_eq!(a.rows(), 64);
+        assert_eq!(b.rows(), 66);
+        for c in 0..5 {
+            for r in 0..130 {
+                let v = m.get(r, c);
+                if r < 64 {
+                    assert_eq!(a.get(r, c), v, "row {r} col {c}");
+                } else {
+                    assert_eq!(b.get(r - 64, c), v, "row {r} col {c}");
+                }
+            }
+        }
+        let mut back = BitMatrix::new(130, 5);
+        back.splice_word_range(0, &a).unwrap();
+        back.splice_word_range(1, &b).unwrap();
+        assert_eq!(back, m);
+        assert!(m.extract_word_range(1, 1).is_err());
+        assert!(m.extract_word_range(2, 4).is_err());
+        assert!(back.splice_word_range(2, &b).is_err(), "chunk overruns the column");
+        assert!(back.splice_word_range(2, &a).is_err(), "tail word must come from the tail");
     }
 
     #[test]

@@ -16,7 +16,12 @@
 //!   XLA/PJRT), and the composable [`backend::ExecPipeline`]
 //!   (legalize → verify → encode → periphery-decode → backend) that every
 //!   program executes through, with uniform metering of cycles, gates and
-//!   control traffic at the stage boundaries.
+//!   control traffic at the stage boundaries. `prepare` applies the
+//!   controller-side stages once and decodes the wire stream into a
+//!   trusted op cache; replays then skip the per-run periphery decode
+//!   (while still charging its control cost) and may execute in parallel
+//!   word-range chunks — the replay fast path (DESIGN.md §Replay fast
+//!   path), with [`backend::ReplayMode`] as the wire-path escape hatch.
 //! * [`crossbar`] — the bit-packed, cycle-accurate crossbar simulator with
 //!   stateful-logic gate semantics, partition transistors and section
 //!   isolation, plus latency / energy (gate-count & switching) metrics.
@@ -83,7 +88,7 @@ pub mod periphery;
 pub mod runtime;
 pub mod verify;
 
-pub use backend::{ExecPipeline, PimBackend, PipelineStats, PreparedProgram, ScalarCrossbar, Stage};
+pub use backend::{ExecPipeline, PimBackend, PipelineStats, PreparedProgram, ReplayMode, ScalarCrossbar, Stage};
 pub use crossbar::{
     crossbar::{Crossbar, Metrics},
     gate::{GateSet, GateType},

@@ -9,9 +9,14 @@
 //! repro sort                        sorting speedup table (intro claim)
 //! repro serve [--model M] [--crossbars N] [--rows R] [--jobs J] [--len L]
 //!             [--inject-bad] [--kill W] [--no-coalesce]
+//!             [--wire-replay] [--replay-threads T]
 //!                                   end-to-end vector-multiply service demo
-//!                                   (pipelined jobs, cross-job coalescing;
-//!                                   optional fault injection)
+//!                                   (pipelined jobs, cross-job coalescing,
+//!                                   decode-once replay — --wire-replay
+//!                                   forces the full per-batch decode,
+//!                                   --replay-threads spreads each replay
+//!                                   over T word ranges; optional fault
+//!                                   injection)
 //! repro serve --banks N [--mix mul:add:sort] [--spares S] [--max-pending P]
 //!             [--kill-bank B] [...single-bank flags]
 //!                                   multi-bank fleet demo: mixed traffic
@@ -28,7 +33,7 @@
 
 use anyhow::{bail, Context, Result};
 use partition_pim::algorithms::multpim::{build_multpim, MultPimVariant};
-use partition_pim::backend::{ExecPipeline, PimBackend};
+use partition_pim::backend::{ExecPipeline, PimBackend, ReplayMode};
 use partition_pim::coordinator::worker::{SORT_BITS, SORT_ELEMS};
 use partition_pim::coordinator::{compile_workload, workload_geometry, FleetConfig, JobShape, PimFleet, PimService, ServiceConfig, WorkloadKind};
 use partition_pim::crossbar::crossbar::Crossbar;
@@ -296,17 +301,23 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     let len: usize = flags.get("len").map(String::as_str).unwrap_or("256").parse()?;
     let inject_bad = flags.contains_key("inject-bad");
     let coalescing = !flags.contains_key("no-coalesce");
+    let replay_mode = if flags.contains_key("wire-replay") { ReplayMode::Wire } else { ReplayMode::Decoded };
+    let replay_threads: usize = flags.get("replay-threads").map(String::as_str).unwrap_or("1").parse()?;
     let kill: Option<usize> = match flags.get("kill") {
         Some(w) => Some(w.parse()?),
         None => None,
     };
 
     println!(
-        "Starting PIM service: model={}, {} crossbars x {} rows, coalescing {}",
+        "Starting PIM service: model={}, {} crossbars x {} rows, coalescing {}, replay {}",
         model.name(),
         n_crossbars,
         rows,
-        if coalescing { "on" } else { "off" }
+        if coalescing { "on" } else { "off" },
+        match replay_mode {
+            ReplayMode::Decoded => format!("decoded x{replay_threads}"),
+            ReplayMode::Wire => "wire".to_string(),
+        }
     );
     let svc = PimService::start(ServiceConfig {
         kind: WorkloadKind::Mul32,
@@ -314,6 +325,8 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         n_crossbars,
         rows,
         coalescing,
+        replay_mode,
+        replay_threads,
         ..Default::default()
     })?;
     println!("batch latency: {} crossbar cycles\n", svc.batch_cycles);

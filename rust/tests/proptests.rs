@@ -19,6 +19,9 @@
 //!  P12 verifier differential: random legal programs are verifier-clean
 //!      under the unlimited model, and verifier-clean programs execute
 //!      bitwise-identically on the bit-packed and scalar backends
+//!  P14 replay differential: for random verifier-clean programs, the
+//!      decode-once cached replay is bitwise- and metric-identical to the
+//!      full wire-path replay on both backends, serial and word-parallel
 
 use partition_pim::algorithms::program::Builder;
 use partition_pim::backend::{ExecPipeline, PimBackend, ScalarCrossbar};
@@ -476,6 +479,61 @@ fn p12_verifier_clean_programs_agree_across_backends() {
             finals.push(backend.state_bits().expect("state"));
         }
         assert_eq!(finals[0], finals[1], "seed {seed}: verifier-clean program diverged across backends");
+    }
+}
+
+/// P14 (replay differential): for random verifier-clean programs, replaying
+/// through the decode-once trusted op cache is bitwise- and metric-identical
+/// (final states, `switch_events`, `control_bits`, `messages`) to the full
+/// wire-path replay — on the bit-packed backend both serially and across
+/// parallel word ranges, and on the scalar oracle.
+#[test]
+fn p14_decoded_replay_matches_wire_replay() {
+    use partition_pim::backend::ReplayMode;
+    use partition_pim::verify::{verify_ops, VerifyOptions};
+    let geom = Geometry::new(256, 8, 130).unwrap(); // 3 words/col: real word ranges
+    for seed in 1..15u64 {
+        let mut rng = Rng::new(seed * 7877);
+        let prog = random_program(&mut rng, geom, 20);
+        let report = verify_ops(&prog.name, &prog.ops, &geom, &VerifyOptions::new(ModelKind::Unlimited, GateSet::NotNor));
+        assert!(report.is_clean(), "seed {seed}: random legal program must verify clean");
+        let mut init = partition_pim::crossbar::state::BitMatrix::new(geom.rows, geom.n);
+        init.fill_random(seed * 11 + 3);
+
+        let prepared = {
+            let mut scratch = Crossbar::new(geom, GateSet::NotNor);
+            prog.prepare(&mut ExecPipeline::wire(ModelKind::Unlimited, &mut scratch)).expect("prepare")
+        };
+        assert!(prepared.is_decoded(), "seed {seed}: wire prepare must attach the decoded cache");
+
+        let mut outcomes = Vec::new();
+        for (mode, threads, bitpacked) in [
+            (ReplayMode::Wire, 1, true),
+            (ReplayMode::Decoded, 1, true),
+            (ReplayMode::Decoded, 3, true),
+            (ReplayMode::Wire, 1, false),
+            (ReplayMode::Decoded, 1, false),
+        ] {
+            let mut bp = Crossbar::new(geom, GateSet::NotNor);
+            let mut sc = ScalarCrossbar::new(geom, GateSet::NotNor);
+            let backend: &mut dyn PimBackend = if bitpacked { &mut bp } else { &mut sc };
+            backend.load_state(&init).expect("load");
+            let mut pipe = ExecPipeline::wire(ModelKind::Unlimited, backend);
+            pipe.set_replay_mode(mode);
+            pipe.set_replay_threads(threads);
+            pipe.run_prepared(&prepared).expect("replay");
+            let stats = pipe.stats();
+            let metrics = pipe.metrics();
+            outcomes.push((
+                pipe.backend().state_bits().expect("state"),
+                metrics.switch_events,
+                stats.control_bits,
+                stats.messages,
+            ));
+        }
+        for (i, o) in outcomes.iter().enumerate().skip(1) {
+            assert_eq!(o, &outcomes[0], "seed {seed}: replay configuration {i} diverged");
+        }
     }
 }
 

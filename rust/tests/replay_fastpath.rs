@@ -1,0 +1,104 @@
+//! The replay fast path must be invisible: replaying through the
+//! decode-once trusted op cache (with or without word-range parallelism)
+//! has to be bitwise- and metric-identical to re-streaming the full wire —
+//! at the program level (the fig6 multiply workloads), the worker batch
+//! loop, and the serving stack (DESIGN.md §Replay fast path, experiment
+//! E17).
+
+use partition_pim::backend::{ExecPipeline, ReplayMode};
+use partition_pim::coordinator::worker::{compile_workload, workload_geometry, Worker, WorkloadKind};
+use partition_pim::coordinator::{PimService, ServiceConfig};
+use partition_pim::crossbar::crossbar::Crossbar;
+use partition_pim::crossbar::gate::GateSet;
+use partition_pim::isa::models::ModelKind;
+
+/// E17 / fig6 parity: the full 32-bit multiply program of every partitioned
+/// model replays identically under Wire and Decoded modes — final state,
+/// cycles, gate events, switching energy, control bits and messages —
+/// including across 2 and 4 parallel word ranges.
+#[test]
+fn fig6_mul32_replay_parity_per_model() {
+    for model in [ModelKind::Unlimited, ModelKind::Standard, ModelKind::Minimal] {
+        let geom = workload_geometry(WorkloadKind::Mul32, model, 130).unwrap(); // 3 words/col
+        let (prog, _) = compile_workload(WorkloadKind::Mul32, model, geom).unwrap();
+        let prepared = {
+            let mut scratch = Crossbar::new(geom, GateSet::NotNor);
+            prog.prepare(&mut ExecPipeline::wire(model, &mut scratch)).unwrap()
+        };
+        assert!(prepared.is_decoded());
+        let mut outcomes = Vec::new();
+        for (mode, threads) in [(ReplayMode::Wire, 1), (ReplayMode::Decoded, 1), (ReplayMode::Decoded, 2), (ReplayMode::Decoded, 4)] {
+            let mut xb = Crossbar::new(geom, GateSet::NotNor);
+            xb.state.fill_random(23);
+            let mut pipe = ExecPipeline::wire(model, &mut xb);
+            pipe.set_replay_mode(mode);
+            pipe.set_replay_threads(threads);
+            pipe.run_prepared(&prepared).unwrap();
+            let stats = pipe.stats();
+            let m = pipe.metrics();
+            drop(pipe);
+            outcomes.push((xb.state, m.cycles, m.gate_events, m.switch_events, stats.control_bits, stats.messages));
+        }
+        for o in &outcomes[1..] {
+            assert_eq!(o, &outcomes[0], "{}: cached replay diverged from the wire path", model.name());
+        }
+    }
+}
+
+/// Worker-level parity: Decoded and Wire replay workers serve identical
+/// batch values and identical per-batch metric deltas (including the exact
+/// per-row switch attribution folded into the segment reports), and the
+/// word-range-parallel worker matches both.
+#[test]
+fn worker_replay_modes_serve_identical_batches() {
+    for model in [ModelKind::Minimal, ModelKind::Standard] {
+        let geom = workload_geometry(WorkloadKind::Mul32, model, 130).unwrap();
+        let mut decoded = Worker::new(WorkloadKind::Mul32, model, geom).unwrap();
+        let mut wire = Worker::new(WorkloadKind::Mul32, model, geom).unwrap();
+        wire.set_replay(ReplayMode::Wire, 1);
+        let mut threaded = Worker::new(WorkloadKind::Mul32, model, geom).unwrap();
+        threaded.set_replay(ReplayMode::Decoded, 4);
+        let pairs: Vec<(u64, u64)> = (0..8).map(|i| (0x1234_5678 ^ (i * 991), 0x9abc + i * 77)).collect();
+        let (v_dec, m_dec) = decoded.run_batch(&pairs).unwrap();
+        let (v_wire, m_wire) = wire.run_batch(&pairs).unwrap();
+        let (v_thr, m_thr) = threaded.run_batch(&pairs).unwrap();
+        for (i, &(a, b)) in pairs.iter().enumerate() {
+            assert_eq!(v_dec[i], a * b, "{}", model.name());
+        }
+        assert_eq!(v_dec, v_wire);
+        assert_eq!(m_dec, m_wire, "{}: decoded batch metrics must match the wire path", model.name());
+        assert_eq!(v_dec, v_thr);
+        assert_eq!(m_dec, m_thr, "{}: word-range-parallel metrics must match", model.name());
+    }
+}
+
+/// Service-level parity: the same job stream returns identical values and
+/// identical per-job metric attribution whether the bank replays through
+/// the decoded cache (serial or word-parallel) or the full wire re-decode.
+#[test]
+fn service_replay_modes_agree() {
+    let run = |mode: ReplayMode, threads: usize| {
+        let svc = PimService::start(ServiceConfig {
+            kind: WorkloadKind::Mul32,
+            model: ModelKind::Minimal,
+            n_crossbars: 2,
+            rows: 8,
+            replay_mode: mode,
+            replay_threads: threads,
+            ..Default::default()
+        })
+        .unwrap();
+        let a: Vec<u64> = (0..24).map(|i| (i * 2654435761) & 0xffff_ffff).collect();
+        let b: Vec<u64> = (0..24).map(|i| (i * 40503 + 12345) & 0xffff_ffff).collect();
+        let res = svc.submit(&a, &b).unwrap().wait().unwrap();
+        svc.shutdown();
+        (res.values.scalars().to_vec(), res.sim_cycles, res.control_bits, res.switch_events)
+    };
+    let dec = run(ReplayMode::Decoded, 1);
+    let wire = run(ReplayMode::Wire, 1);
+    assert_eq!(dec, wire, "decoded and wire banks must attribute identically");
+    for (i, &v) in dec.0.iter().enumerate() {
+        let (a, b) = ((i as u64 * 2654435761) & 0xffff_ffff, (i as u64 * 40503 + 12345) & 0xffff_ffff);
+        assert_eq!(v, a * b, "element {i}");
+    }
+}
