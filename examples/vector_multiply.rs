@@ -53,8 +53,9 @@ fn main() -> Result<()> {
         }
         for (a, b, handle) in pending {
             let res = handle.wait()?;
+            let vals = res.try_scalars()?;
             for i in 0..job_len {
-                anyhow::ensure!(res.scalars()[i] == a[i] * b[i], "wrong product");
+                anyhow::ensure!(vals[i] == a[i] * b[i], "wrong product");
                 verified += 1;
             }
         }

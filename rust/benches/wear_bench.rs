@@ -1,0 +1,148 @@
+//! Experiment E18: wear-aware serving — how far cold-row leveling stretches
+//! the endurance horizon, what it costs in throughput, and what stuck-at
+//! quarantine + remap does to a live trace.
+//!
+//! Three sections:
+//!  1. Wear spread: the same sequential small-job trace with leveling off
+//!     (historical front-packing) vs on; reports peak row wear and the wear
+//!     Gini for both, and the horizon extension factor (the ratio of peak
+//!     wears — the factor by which time-to-first-failure stretches under a
+//!     fixed per-row endurance budget).
+//!  2. Throughput cost: pipelined serving rate with leveling on vs off (the
+//!     placement sort is the only extra work).
+//!  3. Remap: a stuck-at fault struck mid-trace; every job must still
+//!     complete, and the quarantine/remap counters are reported.
+//!
+//! Emits `BENCH_wear.json` so CI can accumulate the reliability-tier
+//! trajectory across PRs (companion to `BENCH_coordinator.json` and
+//! `BENCH_fleet.json`).
+
+use partition_pim::bench_support::section;
+use partition_pim::coordinator::{PimService, ServiceConfig, WorkloadKind};
+use partition_pim::isa::models::ModelKind;
+use std::time::Instant;
+
+const ROWS: usize = 32;
+const SPREAD_JOBS: usize = 64;
+const SPREAD_SPAN: usize = 4;
+const THROUGHPUT_JOBS: usize = 40;
+const THROUGHPUT_LEN: usize = 96;
+const REMAP_JOBS: usize = 24;
+const REMAP_LEN: usize = 24;
+
+fn service(n_crossbars: usize, wear_leveling: bool) -> PimService {
+    PimService::start(ServiceConfig {
+        kind: WorkloadKind::Mul32,
+        model: ModelKind::Minimal,
+        n_crossbars,
+        rows: ROWS,
+        wear_leveling,
+        ..Default::default()
+    })
+    .expect("service")
+}
+
+fn xorshift(seed: &mut u64) -> u64 {
+    *seed ^= *seed << 13;
+    *seed ^= *seed >> 7;
+    *seed ^= *seed << 17;
+    *seed
+}
+
+/// Sequential small-span trace on one crossbar; returns (max row wear, gini).
+fn wear_spread(leveling: bool) -> (u64, f64) {
+    let svc = service(1, leveling);
+    let a = vec![0xdead_beefu64; SPREAD_SPAN];
+    let b = vec![0x0bad_cafeu64; SPREAD_SPAN];
+    for _ in 0..SPREAD_JOBS {
+        svc.submit(&a, &b).expect("submit").wait().expect("job");
+    }
+    let wear = svc.wear();
+    svc.shutdown();
+    (wear.max_wear(), wear.gini())
+}
+
+/// Pipelined trace; returns elements per wall second.
+fn throughput(leveling: bool) -> f64 {
+    let svc = service(2, leveling);
+    let mut seed = 0x9e3779b97f4a7c15u64;
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for _ in 0..THROUGHPUT_JOBS {
+        let a: Vec<u64> = (0..THROUGHPUT_LEN).map(|_| xorshift(&mut seed) & 0xffff_ffff).collect();
+        let b: Vec<u64> = (0..THROUGHPUT_LEN).map(|_| xorshift(&mut seed) & 0xffff_ffff).collect();
+        handles.push(svc.submit(&a, &b).expect("submit"));
+    }
+    for h in handles {
+        h.wait().expect("job");
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    svc.shutdown();
+    (THROUGHPUT_JOBS * THROUGHPUT_LEN) as f64 / wall
+}
+
+fn main() {
+    section(&format!(
+        "wear spread: {SPREAD_JOBS} sequential span-{SPREAD_SPAN} jobs on {ROWS} rows, front-packed vs wear-leveled placement"
+    ));
+    let (packed_max, packed_gini) = wear_spread(false);
+    let (leveled_max, leveled_gini) = wear_spread(true);
+    let horizon_factor = packed_max as f64 / leveled_max as f64;
+    assert!(
+        horizon_factor > 1.0,
+        "leveling must lower peak row wear (packed {packed_max}, leveled {leveled_max})"
+    );
+    println!("      front-packed: max row wear {packed_max}, gini {packed_gini:.3}");
+    println!("      leveled     : max row wear {leveled_max}, gini {leveled_gini:.3}");
+    println!("      horizon extension factor: {horizon_factor:.2}x (TTFF stretch at any fixed endurance budget)");
+
+    section(&format!("throughput cost of leveling: {THROUGHPUT_JOBS} pipelined jobs x {THROUGHPUT_LEN} elements, 2 crossbars"));
+    let packed_eps = throughput(false);
+    let leveled_eps = throughput(true);
+    let cost_pct = 100.0 * (1.0 - leveled_eps / packed_eps);
+    println!("      front-packed: {packed_eps:.0} elements/s");
+    println!("      leveled     : {leveled_eps:.0} elements/s  (leveling cost {cost_pct:+.1}%)");
+
+    section(&format!("stuck-at remap: fault struck mid-trace, {REMAP_JOBS} jobs x {REMAP_LEN} elements must all complete"));
+    let svc = service(1, true);
+    let mut seed = 0x2545_f491_4f6c_dd1du64;
+    let mut handles = Vec::new();
+    for j in 0..REMAP_JOBS {
+        let a: Vec<u64> = (0..REMAP_LEN).map(|_| xorshift(&mut seed) & 0xffff_ffff).collect();
+        let b: Vec<u64> = (0..REMAP_LEN).map(|_| xorshift(&mut seed) & 0xffff_ffff).collect();
+        let handle = svc.submit(&a, &b);
+        handles.push((a, b, handle));
+        if j == REMAP_JOBS / 2 {
+            svc.inject_stuck(3, 0, true).expect("inject");
+        }
+    }
+    let mut completed = 0usize;
+    for (a, b, handle) in handles {
+        let res = handle.expect("submit").wait().expect("job must survive the stuck fault");
+        let vals = res.try_scalars().expect("scalar job");
+        for i in 0..a.len() {
+            assert_eq!(vals[i], a[i] * b[i], "corrupted value leaked past quarantine");
+        }
+        completed += 1;
+    }
+    let stats = svc.shutdown();
+    println!(
+        "      completed {completed}/{REMAP_JOBS} jobs   quarantined rows {}   remapped segments {}",
+        stats.wear.quarantined_rows, stats.remapped_segments
+    );
+
+    let json = format!(
+        "{{\n  \"bench\": \"wear\",\n  \"config\": {{\"rows\": {ROWS}, \"spread_jobs\": {SPREAD_JOBS}, \"spread_span\": {SPREAD_SPAN}, \
+         \"throughput_jobs\": {THROUGHPUT_JOBS}, \"throughput_len\": {THROUGHPUT_LEN}, \"remap_jobs\": {REMAP_JOBS}}},\n  \
+         \"leveling\": {{\"packed_max_row_wear\": {packed_max}, \"leveled_max_row_wear\": {leveled_max}, \"packed_gini\": {packed_gini:.3}, \
+         \"leveled_gini\": {leveled_gini:.3}, \"horizon_extension_factor\": {horizon_factor:.2}}},\n  \
+         \"throughput\": {{\"packed_elements_per_sec\": {packed_eps:.1}, \"leveled_elements_per_sec\": {leveled_eps:.1}, \
+         \"leveling_cost_pct\": {cost_pct:.1}}},\n  \
+         \"remap\": {{\"jobs\": {REMAP_JOBS}, \"completed\": {completed}, \"quarantined_rows\": {}, \"remapped_segments\": {}}}\n}}\n",
+        stats.wear.quarantined_rows, stats.remapped_segments
+    );
+    match std::fs::write("BENCH_wear.json", json) {
+        Ok(()) => println!("\nwrote BENCH_wear.json"),
+        Err(e) => println!("\nWARNING: could not write BENCH_wear.json: {e}"),
+    }
+}

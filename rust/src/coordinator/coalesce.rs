@@ -59,6 +59,13 @@ impl Coalescer {
         Self { rows, linger, enabled, pending: VecDeque::new() }
     }
 
+    /// Shrink (or restore) the packing capacity. The quarantine layer calls
+    /// this when stuck-at rows leave service: batches must pack to the
+    /// bank's *healthy* row count, or every batch would need a remap pass.
+    pub fn set_capacity(&mut self, rows: usize) {
+        self.rows = rows;
+    }
+
     /// Enqueue a freshly submitted segment (its linger clock starts now).
     pub fn push_back(&mut self, seg: Segment, now: Instant) {
         self.pending.push_back(Pending { seg, since: now, requeued: false });
@@ -90,7 +97,7 @@ impl Coalescer {
             if dead(&p.seg) {
                 dropped.push(std::mem::replace(
                     &mut p.seg,
-                    Segment { job: 0, offset: 0, payload: Payload::Pairs(Vec::new()) },
+                    Segment { job: 0, offset: 0, payload: Payload::Pairs(Vec::new()), remaps: 0 },
                 ));
                 false
             } else {
@@ -179,11 +186,11 @@ mod tests {
     use super::*;
 
     fn seg(job: u64, span: usize) -> Segment {
-        Segment { job, offset: 0, payload: Payload::Pairs(vec![(1, 1); span]) }
+        Segment { job, offset: 0, payload: Payload::Pairs(vec![(1, 1); span]), remaps: 0 }
     }
 
     fn poison() -> Segment {
-        Segment { job: u64::MAX, offset: 0, payload: Payload::Poison }
+        Segment { job: u64::MAX, offset: 0, payload: Payload::Poison, remaps: 0 }
     }
 
     fn spans(batch: &[Segment]) -> Vec<(u64, usize)> {
@@ -303,6 +310,20 @@ mod tests {
         c.push_front(vec![seg(1, 4), seg(2, 4)], t0);
         let batch = c.pop_batch(t0, false).expect("requeued segments fill a batch");
         assert_eq!(spans(&batch), vec![(1, 4), (2, 4)]);
+    }
+
+    /// Quarantined rows shrink the packing capacity: batches fill to the
+    /// healthy row count, not the physical one.
+    #[test]
+    fn shrunk_capacity_packs_to_healthy_rows() {
+        let t0 = Instant::now();
+        let mut c = Coalescer::new(8, Duration::from_secs(3600), true);
+        c.set_capacity(5);
+        c.push_back(seg(1, 3), t0);
+        c.push_back(seg(2, 3), t0); // no longer fits next to 3 at capacity 5
+        c.push_back(seg(3, 2), t0);
+        let batch = c.pop_batch(t0, false).expect("batch fills the shrunk capacity");
+        assert_eq!(spans(&batch), vec![(1, 3), (3, 2)]);
     }
 
     /// A segment handed back by a dying worker already sat out its window

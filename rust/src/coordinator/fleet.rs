@@ -37,8 +37,8 @@
 //!   (routed / rejected / rerouted / promoted / spawned / retired).
 
 use crate::coordinator::service::{BankDead, JobHandle, JobResult, PimService, ServiceConfig, ServiceStats, WorkloadMismatch};
-use crate::coordinator::worker::{compile_workload_cached, workload_geometry, JobShape, WorkloadKind};
-use anyhow::{anyhow, ensure, Context, Result};
+use crate::coordinator::worker::{compile_workload_cached, workload_geometry, Payload, WorkloadKind};
+use anyhow::{anyhow, bail, ensure, Context, Result};
 use std::collections::{HashMap, VecDeque};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -235,15 +235,6 @@ struct FleetShared {
     inner: Mutex<FleetInner>,
 }
 
-/// The operands of one fleet job, retained so the job can be requeued onto
-/// another bank if its bank dies before completing it (re-execution is
-/// idempotent: jobs are pure computations over their operands).
-#[derive(Clone)]
-enum FleetPayload {
-    Pairs(Vec<u64>, Vec<u64>),
-    Rows(Vec<Vec<u64>>),
-}
-
 impl FleetShared {
     /// Fold a bank that lost its last worker: mark it dead, collect its
     /// final statistics, and — if a spare slot is available — promote a
@@ -328,17 +319,17 @@ impl FleetShared {
         Ok(idx)
     }
 
-    fn submit_to(&self, inner: &FleetInner, bank: usize, payload: &FleetPayload) -> Result<JobHandle> {
+    fn submit_to(&self, inner: &FleetInner, bank: usize, kind: WorkloadKind, payload: &Payload) -> Result<JobHandle> {
         let svc = inner.banks[bank].service.as_ref().context("routed to a bank without a service")?;
-        match payload {
-            FleetPayload::Pairs(a, b) => svc.submit(a, b),
-            FleetPayload::Rows(rows) => svc.submit_sort(rows),
-        }
+        svc.submit_job(kind, payload.clone())
     }
 
     /// Front-door submission: note the arrival, autoscale opportunistically,
-    /// route under admission control, and place the job.
-    fn submit_payload(self: &Arc<Self>, kind: WorkloadKind, payload: FleetPayload) -> Result<FleetJobHandle> {
+    /// route under admission control, and place the job. The payload is
+    /// retained in the returned handle so the job can be requeued onto
+    /// another bank if its bank dies before completing it (re-execution is
+    /// idempotent: jobs are pure computations over their operands).
+    fn submit_payload(self: &Arc<Self>, kind: WorkloadKind, payload: Payload) -> Result<FleetJobHandle> {
         let mut inner = self.inner.lock().unwrap();
         if self.cfg.elastic.enabled {
             let now = Instant::now();
@@ -350,7 +341,7 @@ impl FleetShared {
             self.autoscale_locked(&mut inner);
         }
         let bank = self.route(&mut inner, kind, true)?;
-        let handle = self.submit_to(&inner, bank, &payload)?;
+        let handle = self.submit_to(&inner, bank, kind, &payload)?;
         inner.counters.routed += 1;
         Ok(FleetJobHandle {
             shared: Arc::clone(self),
@@ -363,11 +354,11 @@ impl FleetShared {
 
     /// Requeue a job whose bank died: retire the bank (promoting a spare if
     /// one is available) and place the job on a compatible bank.
-    fn note_death_and_resubmit(&self, bank: usize, kind: WorkloadKind, payload: &FleetPayload) -> Result<(usize, JobHandle)> {
+    fn note_death_and_resubmit(&self, bank: usize, kind: WorkloadKind, payload: &Payload) -> Result<(usize, JobHandle)> {
         let mut inner = self.inner.lock().unwrap();
         self.note_bank_death(&mut inner, bank);
         let idx = self.route(&mut inner, kind, false)?;
-        let handle = self.submit_to(&inner, idx, payload)?;
+        let handle = self.submit_to(&inner, idx, kind, payload)?;
         inner.counters.routed += 1;
         inner.counters.reroutes += 1;
         Ok((idx, handle))
@@ -504,6 +495,12 @@ impl PimFleet {
         FleetClient { shared: Arc::clone(&self.shared) }
     }
 
+    /// Submit any job through the unified path (see
+    /// [`FleetClient::submit_job`]).
+    pub fn submit_job(&self, kind: WorkloadKind, payload: Payload) -> Result<FleetJobHandle> {
+        self.client().submit_job(kind, payload)
+    }
+
     /// Submit an element-wise job (see [`FleetClient::submit`]).
     pub fn submit(&self, kind: WorkloadKind, a: &[u64], b: &[u64]) -> Result<FleetJobHandle> {
         self.client().submit(kind, a, b)
@@ -574,21 +571,31 @@ pub struct FleetClient {
 }
 
 impl FleetClient {
-    /// Submit an element-wise job for `kind` (`Mul32` or `Add32`); the
-    /// router picks the least-loaded compatible bank. Fails fast with the
-    /// typed [`Overloaded`] under backpressure, [`NoCompatibleBank`] if no
-    /// bank serves `kind`, and [`WorkloadMismatch`] if `kind` is not an
-    /// element-wise workload.
-    pub fn submit(&self, kind: WorkloadKind, a: &[u64], b: &[u64]) -> Result<FleetJobHandle> {
-        if kind.shape() != JobShape::ElementWise {
-            return Err(anyhow::Error::new(WorkloadMismatch { service: kind, submitted: JobShape::ElementWise }));
+    /// The single fleet submission path: place `payload` on the
+    /// least-loaded active bank serving `kind`. Fails fast with the typed
+    /// [`Overloaded`] under backpressure, [`NoCompatibleBank`] if no bank
+    /// serves `kind`, and [`WorkloadMismatch`] if the payload's shape does
+    /// not match the workload's. The shape-specific `submit`/`submit_sort`
+    /// entry points are one-line wrappers over this.
+    pub fn submit_job(&self, kind: WorkloadKind, payload: Payload) -> Result<FleetJobHandle> {
+        let Some(shape) = payload.shape() else {
+            bail!("fault-injection payloads cannot be submitted as jobs");
+        };
+        if shape != kind.shape() {
+            return Err(anyhow::Error::new(WorkloadMismatch { service: kind, submitted: shape }));
         }
-        self.shared.submit_payload(kind, FleetPayload::Pairs(a.to_vec(), b.to_vec()))
+        self.shared.submit_payload(kind, payload)
+    }
+
+    /// Submit an element-wise job for `kind` (`Mul32` or `Add32`); the
+    /// router picks the least-loaded compatible bank.
+    pub fn submit(&self, kind: WorkloadKind, a: &[u64], b: &[u64]) -> Result<FleetJobHandle> {
+        self.submit_job(kind, Payload::pairs(a, b)?)
     }
 
     /// Submit a per-row sort job (routes to a `Sort16` bank).
     pub fn submit_sort(&self, rows_data: &[Vec<u64>]) -> Result<FleetJobHandle> {
-        self.shared.submit_payload(WorkloadKind::Sort16, FleetPayload::Rows(rows_data.to_vec()))
+        self.submit_job(WorkloadKind::Sort16, Payload::Rows(rows_data.to_vec()))
     }
 }
 
@@ -601,7 +608,7 @@ impl FleetClient {
 pub struct FleetJobHandle {
     shared: Arc<FleetShared>,
     kind: WorkloadKind,
-    payload: FleetPayload,
+    payload: Payload,
     current: Option<(usize, JobHandle)>,
     reroutes_left: usize,
 }

@@ -49,6 +49,21 @@
 //!   [`fleet::Overloaded`] backpressure error, and absorbing bank death
 //!   by rerouting onto peers or warm-promoted hot spares (see DESIGN.md
 //!   §Fleet).
+//! * Serving is **wear- and reliability-aware**: every bank keeps a
+//!   persistent per-row [`crate::crossbar::WearMap`] fed by exact
+//!   switch-event attribution, placement prefers cold rows
+//!   (`ServiceConfig::wear_leveling`), stuck-at faults detected mid-batch
+//!   quarantine the row and transparently remap the affected segments onto
+//!   healthy rows within a bounded retry budget (typed
+//!   [`service::RowQuarantined`] once capacity is exhausted), and
+//!   [`ServiceStats`] carries an endurance-horizon summary (max/mean row
+//!   wear, wear Gini, projected time-to-first-failure under
+//!   `ServiceConfig::endurance_budget`) — DESIGN.md §Wear.
+//! * Every tier submits through one typed front door:
+//!   `submit_job(kind, `[`worker::Payload`]`)` on [`PimService`],
+//!   [`PimClient`], [`fleet::FleetClient`] and [`fleet::PimFleet`]; the
+//!   shape-specific `submit`/`submit_sort` entry points are one-line
+//!   wrappers over it.
 //!
 //! The environment has no tokio vendored, so the runtime is `std::thread` +
 //! `mpsc` channels (see DESIGN.md §Substitutions); the architecture is
@@ -63,8 +78,11 @@ pub use fleet::{
     BankSnapshot, BankState, ElasticPolicy, FleetClient, FleetConfig, FleetCounters, FleetJobHandle, FleetStats, NoCompatibleBank, Overloaded,
     PimFleet,
 };
-pub use service::{BankDead, JobHandle, JobResult, JobValues, PimClient, PimService, ServiceConfig, ServiceStats, WorkloadMismatch};
+pub use service::{
+    BankDead, JobHandle, JobResult, JobValues, PimClient, PimService, RowQuarantined, ServiceConfig, ServiceStats, ValueShapeMismatch,
+    WorkloadMismatch,
+};
 pub use worker::{
-    compile_workload, compile_workload_cached, prepared_workload_cached, workload_geometry, JobShape, Segment,
+    compile_workload, compile_workload_cached, prepared_workload_cached, workload_geometry, JobShape, Payload, Segment,
     SegmentReport, WorkloadKind,
 };

@@ -34,13 +34,24 @@
 //!   requeued to the surviving workers. A batch that was *executing* when
 //!   the crossbar died fails every job aboard (they shared the hardware).
 //!   Only when *every* worker is gone do pending jobs fail.
+//! * Serving is wear- and reliability-aware (DESIGN.md §Wear): the bank
+//!   keeps a persistent per-row [`crate::crossbar::WearMap`] fed by the
+//!   exact switch attribution of every batch, places batches on the
+//!   coldest healthy rows when `wear_leveling` is on, quarantines rows
+//!   found stuck-at ([`PimService::inject_stuck`]) and transparently
+//!   remaps their segments onto healthy rows within a bounded budget —
+//!   failing typed ([`RowQuarantined`]) only when capacity runs out — and
+//!   reports the endurance horizon in [`ServiceStats::wear`].
 
 use crate::backend::ReplayMode;
 use crate::coordinator::coalesce::Coalescer;
 use crate::coordinator::worker::{workload_geometry, ChunkValues, JobShape, Payload, Segment, SegmentReport, Worker, WorkloadKind};
 use crate::crossbar::crossbar::Metrics;
+use crate::crossbar::faults::{FaultMap, StuckAt};
+use crate::crossbar::geometry::Geometry;
+use crate::crossbar::wear::{WearMap, WearSummary};
 use crate::isa::models::ModelKind;
-use anyhow::{anyhow, ensure, Context, Result};
+use anyhow::{anyhow, bail, ensure, Context, Result};
 use std::collections::HashMap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
@@ -100,6 +111,51 @@ impl std::fmt::Display for BankDead {
 
 impl std::error::Error for BankDead {}
 
+/// Typed error: a job segment could not be (re)placed on healthy rows —
+/// stuck-at quarantine shrank the bank below the segment's span, or the
+/// segment exhausted its bounded remap budget. Carried as the failure
+/// detail of the affected job (`downcast_ref::<RowQuarantined>`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RowQuarantined {
+    /// Rows the segment needs.
+    pub rows_needed: usize,
+    /// Healthy rows the bank has left.
+    pub healthy_rows: usize,
+    /// Remap attempts the segment had already used.
+    pub remaps: u32,
+}
+
+impl std::fmt::Display for RowQuarantined {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "segment of {} row(s) cannot be placed: {} healthy row(s) left after stuck-at quarantine ({} remap(s) attempted)",
+            self.rows_needed, self.healthy_rows, self.remaps
+        )
+    }
+}
+
+impl std::error::Error for RowQuarantined {}
+
+/// Typed error: a result accessor asked for the wrong value shape —
+/// [`JobValues::try_scalars`] on a sort job, or [`JobValues::try_rows`] on
+/// an element-wise one.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ValueShapeMismatch {
+    /// The shape the accessor requested.
+    pub requested: JobShape,
+    /// The shape the job actually produced.
+    pub actual: JobShape,
+}
+
+impl std::fmt::Display for ValueShapeMismatch {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "value shape mismatch: accessor requested {}, but the job produced {}", self.requested, self.actual)
+    }
+}
+
+impl std::error::Error for ValueShapeMismatch {}
+
 /// Service configuration.
 #[derive(Debug, Clone, Copy)]
 pub struct ServiceConfig {
@@ -124,6 +180,18 @@ pub struct ServiceConfig {
     /// Word-range executor threads each worker may use per decoded replay
     /// (1 = serial; capped by the crossbar's `rows/64` word count).
     pub replay_threads: usize,
+    /// Wear-leveling placement: pack each batch onto the coldest healthy
+    /// rows instead of front-packing, spreading switch events across the
+    /// array. Disable only for the wear ablation (`benches/wear_bench.rs`),
+    /// mirroring the `coalescing` flag.
+    pub wear_leveling: bool,
+    /// How many times one segment may be remapped off freshly quarantined
+    /// stuck-at rows before its job fails typed ([`RowQuarantined`]).
+    pub max_remaps: u32,
+    /// Per-row endurance budget in switch events, used to project the
+    /// time-to-first-failure horizon in [`ServiceStats::wear`]. `None`
+    /// leaves the horizon unreported.
+    pub endurance_budget: Option<u64>,
 }
 
 impl Default for ServiceConfig {
@@ -137,6 +205,9 @@ impl Default for ServiceConfig {
             linger: Duration::from_micros(200),
             replay_mode: ReplayMode::Decoded,
             replay_threads: 1,
+            wear_leveling: true,
+            max_remaps: 3,
+            endurance_budget: None,
         }
     }
 }
@@ -150,7 +221,39 @@ pub enum JobValues {
 }
 
 impl JobValues {
-    /// Element-wise results. Panics if the job was a sort job.
+    /// The shape these values carry, mirroring [`JobShape`].
+    pub fn shape(&self) -> JobShape {
+        match self {
+            JobValues::Scalars(_) => JobShape::ElementWise,
+            JobValues::Rows(_) => JobShape::RowVectors,
+        }
+    }
+
+    /// Element-wise results, or a typed [`ValueShapeMismatch`] if the job
+    /// was a sort job.
+    pub fn try_scalars(&self) -> std::result::Result<&[u64], ValueShapeMismatch> {
+        match self {
+            JobValues::Scalars(v) => Ok(v),
+            JobValues::Rows(_) => Err(ValueShapeMismatch { requested: JobShape::ElementWise, actual: JobShape::RowVectors }),
+        }
+    }
+
+    /// Per-row sorted vectors, or a typed [`ValueShapeMismatch`] if the job
+    /// was element-wise.
+    pub fn try_rows(&self) -> std::result::Result<&[Vec<u64>], ValueShapeMismatch> {
+        match self {
+            JobValues::Rows(r) => Ok(r),
+            JobValues::Scalars(_) => Err(ValueShapeMismatch { requested: JobShape::RowVectors, actual: JobShape::ElementWise }),
+        }
+    }
+
+    /// Element-wise results.
+    ///
+    /// # Panics
+    ///
+    /// Panics if the job was a sort job. Meant for benches and examples
+    /// where the workload is fixed by construction; fallible callers use
+    /// [`JobValues::try_scalars`].
     pub fn scalars(&self) -> &[u64] {
         match self {
             JobValues::Scalars(v) => v,
@@ -158,7 +261,13 @@ impl JobValues {
         }
     }
 
-    /// Per-row sorted vectors. Panics if the job was element-wise.
+    /// Per-row sorted vectors.
+    ///
+    /// # Panics
+    ///
+    /// Panics if the job was element-wise. Meant for benches and examples
+    /// where the workload is fixed by construction; fallible callers use
+    /// [`JobValues::try_rows`].
     pub fn rows(&self) -> &[Vec<u64>] {
         match self {
             JobValues::Rows(r) => r,
@@ -200,12 +309,31 @@ pub struct JobResult {
 }
 
 impl JobResult {
-    /// Element-wise results (panics on a sort job; see [`JobValues`]).
+    /// Element-wise results, or a typed [`ValueShapeMismatch`] on a sort job.
+    pub fn try_scalars(&self) -> std::result::Result<&[u64], ValueShapeMismatch> {
+        self.values.try_scalars()
+    }
+
+    /// Per-row sorted vectors, or a typed [`ValueShapeMismatch`] on an
+    /// element-wise job.
+    pub fn try_rows(&self) -> std::result::Result<&[Vec<u64>], ValueShapeMismatch> {
+        self.values.try_rows()
+    }
+
+    /// Element-wise results.
+    ///
+    /// # Panics
+    ///
+    /// Panics on a sort job (see [`JobValues::scalars`]; bench-only use).
     pub fn scalars(&self) -> &[u64] {
         self.values.scalars()
     }
 
-    /// Per-row sorted vectors (panics on an element-wise job).
+    /// Per-row sorted vectors.
+    ///
+    /// # Panics
+    ///
+    /// Panics on an element-wise job (see [`JobValues::rows`]; bench-only use).
     pub fn rows(&self) -> &[Vec<u64>] {
         self.values.rows()
     }
@@ -228,7 +356,14 @@ pub struct ServiceStats {
     pub occupied_rows: u64,
     /// Row capacity across executed batches (`batches * rows`).
     pub capacity_rows: u64,
+    /// Segments transparently remapped off freshly quarantined stuck-at
+    /// rows (each also re-counts into `occupied_rows` when its retry
+    /// executes).
+    pub remapped_segments: u64,
     pub metrics: Metrics,
+    /// Endurance-horizon report: per-row wear spread and the projected
+    /// time-to-first-failure under `ServiceConfig::endurance_budget`.
+    pub wear: WearSummary,
 }
 
 impl ServiceStats {
@@ -254,17 +389,23 @@ impl ServiceStats {
         self.batches += other.batches;
         self.occupied_rows += other.occupied_rows;
         self.capacity_rows += other.capacity_rows;
+        self.remapped_segments += other.remapped_segments;
         self.metrics.add(&other.metrics);
+        self.wear.merge(&other.wear);
     }
 }
 
 /// Job id reserved for fault-injection poison segments (never a real job).
 const POISON_JOB: u64 = u64::MAX;
 
-/// One coalesced unit of work: segments from any number of jobs, packed
-/// back-to-back into a single shared row-batch.
+/// One coalesced unit of work: segments from any number of jobs, placed
+/// into a single shared row-batch by the dispatcher's wear-aware planner.
 struct Batch {
     segments: Vec<Segment>,
+    /// Row placement: `plan[i]` is the ascending row list segment `i`
+    /// occupies (`WearMap::assign_rows` — coldest healthy rows under
+    /// leveling, front-packed otherwise).
+    plan: Vec<Vec<usize>>,
 }
 
 /// Everything the dispatcher hears: job registration and segment supply
@@ -274,10 +415,13 @@ enum Event {
     Register { id: u64, accum: JobValues, n_chunks: usize, start: Instant, result_tx: Sender<Result<JobResult>> },
     Enqueue(Segment),
     Ready(usize),
-    /// Per-segment outcomes of one batch. `executed` is false when the
-    /// batch failed wholesale before the shared program ran (its reports
-    /// then carry the batch error and zero metrics).
-    Done { reports: Vec<SegmentReport>, metrics: Metrics, executed: bool },
+    /// Per-segment outcomes of one batch. `segments` travel back with the
+    /// reports so stuck-row segments can be requeued for remap without the
+    /// client resubmitting; `row_wear` is the batch's per-row switch
+    /// snapshot for the bank wear map. `executed` is false when the batch
+    /// failed wholesale before the shared program ran (its reports then
+    /// carry the batch error and zero metrics).
+    Done { segments: Vec<Segment>, reports: Vec<SegmentReport>, row_wear: Vec<u64>, metrics: Metrics, executed: bool },
     WorkerExit { worker: usize, unfinished: Option<Batch>, crashed: bool },
     KillWorker(usize),
     Shutdown,
@@ -310,7 +454,9 @@ struct WorkerPort {
 /// What happened to one segment of a job.
 enum ChunkOutcome {
     Success { offset: usize, values: ChunkValues, sim_cycles: u64, control_bits: u64, switch_events: u64 },
-    Failure(String),
+    /// The segment failed; typed errors ([`RowQuarantined`], batch faults)
+    /// flow through to the job handle for `downcast_ref` matching.
+    Failure(anyhow::Error),
     /// Queued segment of an already-failed job, drained without executing.
     Drained,
 }
@@ -323,6 +469,17 @@ struct Dispatcher {
     rows: usize,
     jobs: HashMap<u64, JobState>,
     stats: Arc<Mutex<ServiceStats>>,
+    /// The bank's persistent wear + quarantine ledger (shared with
+    /// `PimService::wear` snapshots). Drives batch placement.
+    wear: Arc<Mutex<WearMap>>,
+    /// Place batches on the coldest healthy rows (`ServiceConfig::wear_leveling`).
+    wear_leveling: bool,
+    /// Bounded per-segment remap budget (`ServiceConfig::max_remaps`).
+    max_remaps: u32,
+    /// Endurance budget for the horizon projection in `ServiceStats::wear`.
+    endurance_budget: Option<u64>,
+    /// Service start (the observation window of the horizon projection).
+    started: Instant,
     /// Jobs submitted but not yet resolved (shared with the clients, which
     /// increment it at submit) — the queue-depth signal the fleet router
     /// and admission control read. Decremented exactly when a job's result
@@ -419,7 +576,12 @@ impl Dispatcher {
                 }
             }
             Event::Ready(w) => self.ports[w].idle = true,
-            Event::Done { reports, metrics, executed } => {
+            Event::Done { segments, reports, row_wear, metrics, executed } => {
+                if executed {
+                    // Wear is physical: it accumulates whether or not any
+                    // job aboard succeeded.
+                    self.wear.lock().unwrap_or_else(|e| e.into_inner()).absorb(&row_wear);
+                }
                 {
                     let mut s = self.stats.lock().unwrap();
                     if executed {
@@ -435,14 +597,22 @@ impl Dispatcher {
                         }
                     }
                 }
-                for r in reports {
-                    let SegmentReport { job, offset, span: _, values, sim_cycles, control_bits, switch_events } = r;
+                for (seg, r) in segments.into_iter().zip(reports) {
+                    let SegmentReport { job, offset, span: _, values, sim_cycles, control_bits, switch_events, stuck_rows } = r;
+                    if !stuck_rows.is_empty() {
+                        // Stuck-at detection: the segment's values are
+                        // invalid, but the rows — not the job — are at
+                        // fault. Quarantine and retry instead of failing.
+                        self.handle_stuck(seg, &stuck_rows);
+                        continue;
+                    }
                     let outcome = match values {
                         Ok(values) => ChunkOutcome::Success { offset, values, sim_cycles, control_bits, switch_events },
-                        Err(msg) => ChunkOutcome::Failure(format!("chunk at offset {offset}: {msg}")),
+                        Err(msg) => ChunkOutcome::Failure(anyhow!(msg).context(format!("chunk at offset {offset}"))),
                     };
                     self.resolve_chunk(job, outcome);
                 }
+                self.refresh_wear_summary();
             }
             Event::WorkerExit { worker, unfinished, crashed } => {
                 let port = &mut self.ports[worker];
@@ -461,7 +631,7 @@ impl Dispatcher {
                         for seg in batch.segments {
                             self.resolve_chunk(
                                 seg.job,
-                                ChunkOutcome::Failure(format!(
+                                ChunkOutcome::Failure(anyhow!(
                                     "worker {worker} crashed executing the shared batch (chunk at offset {})",
                                     seg.offset
                                 )),
@@ -489,6 +659,48 @@ impl Dispatcher {
             }
             Event::Shutdown => self.shutting_down = true,
         }
+    }
+
+    /// A segment came back with stuck-at rows in its placement: quarantine
+    /// the rows (they never serve again — stuck devices do not heal), shrink
+    /// the coalescer to the healthy capacity, and requeue the segment for a
+    /// remap onto healthy rows within its bounded budget. The segment stays
+    /// outstanding and nothing was charged to its job, so the eventual
+    /// completion is value- and metric-identical to a fault-free run. Only
+    /// when the budget or the healthy capacity runs out does the job fail,
+    /// typed ([`RowQuarantined`]).
+    fn handle_stuck(&mut self, mut seg: Segment, stuck: &[usize]) {
+        let healthy = {
+            let mut wear = self.wear.lock().unwrap_or_else(|e| e.into_inner());
+            for &row in stuck {
+                wear.quarantine(row);
+            }
+            wear.healthy_rows()
+        };
+        self.coalescer.set_capacity(healthy);
+        let span = seg.payload.len();
+        if seg.remaps < self.max_remaps && span <= healthy {
+            seg.remaps += 1;
+            self.stats.lock().unwrap().remapped_segments += 1;
+            // Ahead of the line: the job already waited one batch, and a
+            // requeued segment never re-lingers.
+            self.coalescer.push_front(vec![seg], Instant::now());
+        } else {
+            let job = seg.job;
+            let detail = RowQuarantined { rows_needed: span, healthy_rows: healthy, remaps: seg.remaps };
+            self.resolve_chunk(job, ChunkOutcome::Failure(anyhow::Error::new(detail)));
+        }
+    }
+
+    /// Recompute the endurance-horizon report after wear moved (batch
+    /// completion) or rows left service (quarantine).
+    fn refresh_wear_summary(&self) {
+        let summary = self
+            .wear
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .summarize(self.started.elapsed().as_secs_f64(), self.endurance_budget);
+        self.stats.lock().unwrap().wear = summary;
     }
 
     /// Fold one segment resolution into its job; deliver the final result
@@ -520,12 +732,12 @@ impl Dispatcher {
                     job.switch_events += switch_events;
                 }
             }
-            ChunkOutcome::Failure(msg) => {
+            ChunkOutcome::Failure(err) => {
                 if !job.failed {
                     job.failed = true;
                     if let Some(tx) = job.result_tx.take() {
                         self.pending.fetch_sub(1, Ordering::SeqCst);
-                        let _ = tx.send(Err(anyhow!(msg)));
+                        let _ = tx.send(Err(err));
                     }
                     self.stats.lock().unwrap().failed_jobs += 1;
                 }
@@ -571,7 +783,23 @@ impl Dispatcher {
             let Some(segments) = self.coalescer.pop_batch(Instant::now(), self.shutting_down) else {
                 return;
             };
-            let mut batch = Batch { segments };
+            // Wear-aware placement: coldest healthy rows under leveling,
+            // the historical front-packed layout otherwise. `None` means
+            // stuck-at quarantine shrank the bank below this batch — its
+            // segments fail typed, they can never be placed again.
+            let spans: Vec<usize> = segments.iter().map(|s| s.payload.len()).collect();
+            let (plan, healthy) = {
+                let wear = self.wear.lock().unwrap_or_else(|e| e.into_inner());
+                (wear.assign_rows(&spans, self.wear_leveling), wear.healthy_rows())
+            };
+            let Some(plan) = plan else {
+                for seg in segments {
+                    let detail = RowQuarantined { rows_needed: seg.payload.len(), healthy_rows: healthy, remaps: seg.remaps };
+                    self.resolve_chunk(seg.job, ChunkOutcome::Failure(anyhow::Error::new(detail)));
+                }
+                continue;
+            };
+            let mut batch = Batch { segments, plan };
             loop {
                 let Some(w) = self.ports.iter().position(|p| p.alive && p.idle) else {
                     self.coalescer.push_front(batch.segments, Instant::now());
@@ -645,13 +873,13 @@ fn worker_loop(i: usize, mut worker: Worker, rx: Receiver<Batch>, event_tx: Send
             let _ = event_tx.send(Event::WorkerExit { worker: i, unfinished: Some(batch), crashed: false });
             return;
         }
-        match catch_unwind(AssertUnwindSafe(|| worker.run_segments(&batch.segments))) {
-            Ok(Ok((reports, metrics))) => {
+        match catch_unwind(AssertUnwindSafe(|| worker.run_segments_placed(&batch.segments, &batch.plan))) {
+            Ok(Ok((reports, row_wear, metrics))) => {
                 // A batch whose every segment failed to load skips the
                 // shared replay entirely (zero cycles): it occupied no bank
                 // time, so it does not count into occupancy statistics.
                 let executed = metrics.cycles > 0;
-                if event_tx.send(Event::Done { reports, metrics, executed }).is_err() {
+                if event_tx.send(Event::Done { segments: batch.segments, reports, row_wear, metrics, executed }).is_err() {
                     return;
                 }
             }
@@ -671,9 +899,12 @@ fn worker_loop(i: usize, mut worker: Worker, rx: Receiver<Batch>, event_tx: Send
                         sim_cycles: 0,
                         control_bits: 0,
                         switch_events: 0,
+                        stuck_rows: Vec::new(),
                     })
                     .collect();
-                if event_tx.send(Event::Done { reports, metrics: Metrics::default(), executed: false }).is_err() {
+                let done =
+                    Event::Done { segments: batch.segments, reports, row_wear: Vec::new(), metrics: Metrics::default(), executed: false };
+                if event_tx.send(done).is_err() {
                     return;
                 }
             }
@@ -761,32 +992,37 @@ impl PimClient {
         self.cfg.kind
     }
 
+    /// Submit a job as one typed [`Payload`] — the single submission path
+    /// every tier funnels through ([`PimClient::submit`] and
+    /// [`PimClient::submit_sort`] are one-line wrappers). `kind` names the
+    /// workload the payload is meant for: it must be this bank's workload,
+    /// and the payload's shape must match it — both mismatch directions
+    /// resolve to the typed [`WorkloadMismatch`]. Non-blocking: returns a
+    /// [`JobHandle`].
+    pub fn submit_job(&self, kind: WorkloadKind, payload: Payload) -> Result<JobHandle> {
+        let Some(shape) = payload.shape() else {
+            bail!("fault-injection payloads cannot be submitted as jobs");
+        };
+        if kind != self.cfg.kind || shape != self.cfg.kind.shape() {
+            return Err(anyhow::Error::new(WorkloadMismatch { service: self.cfg.kind, submitted: shape }));
+        }
+        ensure!(!payload.is_empty(), "empty job");
+        let accum = match &payload {
+            Payload::Pairs(p) => JobValues::Scalars(vec![0; p.len()]),
+            Payload::Rows(r) => JobValues::Rows(vec![Vec::new(); r.len()]),
+            Payload::Poison => unreachable!("poison rejected above"),
+        };
+        self.dispatch(accum, payload.chunked(self.cfg.rows))
+    }
+
     /// Submit an element-wise job; returns immediately with a handle.
     pub fn submit(&self, a: &[u64], b: &[u64]) -> Result<JobHandle> {
-        if self.cfg.kind.shape() != JobShape::ElementWise {
-            return Err(anyhow::Error::new(WorkloadMismatch { service: self.cfg.kind, submitted: JobShape::ElementWise }));
-        }
-        ensure!(a.len() == b.len(), "operand vectors differ in length");
-        ensure!(!a.is_empty(), "empty job");
-        let payloads: Vec<Payload> = a
-            .chunks(self.cfg.rows)
-            .enumerate()
-            .map(|(ci, ch)| {
-                let offset = ci * self.cfg.rows;
-                Payload::Pairs(ch.iter().zip(&b[offset..offset + ch.len()]).map(|(&x, &y)| (x, y)).collect())
-            })
-            .collect();
-        self.dispatch(JobValues::Scalars(vec![0; a.len()]), payloads)
+        self.submit_job(self.cfg.kind, Payload::pairs(a, b)?)
     }
 
     /// Submit a sort job (one vector per crossbar row); returns immediately.
     pub fn submit_sort(&self, rows_data: &[Vec<u64>]) -> Result<JobHandle> {
-        if self.cfg.kind.shape() != JobShape::RowVectors {
-            return Err(anyhow::Error::new(WorkloadMismatch { service: self.cfg.kind, submitted: JobShape::RowVectors }));
-        }
-        ensure!(!rows_data.is_empty(), "empty job");
-        let payloads: Vec<Payload> = rows_data.chunks(self.cfg.rows).map(|c| Payload::Rows(c.to_vec())).collect();
-        self.dispatch(JobValues::Rows(vec![Vec::new(); rows_data.len()]), payloads)
+        self.submit_job(self.cfg.kind, Payload::Rows(rows_data.to_vec()))
     }
 
     fn dispatch(&self, accum: JobValues, payloads: Vec<Payload>) -> Result<JobHandle> {
@@ -804,7 +1040,7 @@ impl PimClient {
         }
         for (ci, payload) in payloads.into_iter().enumerate() {
             self.event_tx
-                .send(Event::Enqueue(Segment { job: id, offset: ci * self.cfg.rows, payload }))
+                .send(Event::Enqueue(Segment { job: id, offset: ci * self.cfg.rows, payload, remaps: 0 }))
                 .ok()
                 .context("scheduler dispatcher exited")?;
         }
@@ -821,6 +1057,14 @@ pub struct PimService {
     dispatcher: Option<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
     stats: Arc<Mutex<ServiceStats>>,
+    /// Bank-shared stuck-at map ([`PimService::inject_stuck`] writes it;
+    /// every worker syncs it at batch boundaries).
+    faults: Arc<Mutex<FaultMap>>,
+    /// The bank's persistent wear + quarantine ledger (the dispatcher
+    /// updates it; [`PimService::wear`] snapshots it).
+    wear: Arc<Mutex<WearMap>>,
+    /// Bank geometry (bounds-checks fault injection at the API edge).
+    geom: Geometry,
     /// Cycles one full batch costs (for throughput reporting).
     pub batch_cycles: usize,
 }
@@ -836,6 +1080,8 @@ impl PimService {
         let stats = Arc::new(Mutex::new(ServiceStats::default()));
         let pending = Arc::new(AtomicU64::new(0));
         let live = Arc::new(AtomicUsize::new(cfg.n_crossbars));
+        let faults = Arc::new(Mutex::new(FaultMap::new()));
+        let wear = Arc::new(Mutex::new(WearMap::new(cfg.rows)));
         let mut first = Some(Worker::new(cfg.kind, cfg.model, geom)?);
         let batch_cycles = first.as_ref().expect("just built").batch_cycles();
         let mut ports = Vec::new();
@@ -846,6 +1092,7 @@ impl PimService {
                 None => Worker::new(cfg.kind, cfg.model, geom)?,
             };
             worker.set_replay(cfg.replay_mode, cfg.replay_threads);
+            worker.set_fault_source(Arc::clone(&faults));
             let (tx, rx) = channel::<Batch>();
             let kill = Arc::new(AtomicBool::new(false));
             ports.push(WorkerPort { tx: Some(tx), kill: Arc::clone(&kill), alive: true, idle: false });
@@ -859,6 +1106,7 @@ impl PimService {
         }
         let dispatcher_stats = Arc::clone(&stats);
         let (dispatcher_pending, dispatcher_live) = (Arc::clone(&pending), Arc::clone(&live));
+        let dispatcher_wear = Arc::clone(&wear);
         let dispatcher = std::thread::Builder::new()
             .name("pim-dispatcher".to_string())
             .spawn(move || {
@@ -869,6 +1117,11 @@ impl PimService {
                     rows: cfg.rows,
                     jobs: HashMap::new(),
                     stats: dispatcher_stats,
+                    wear: dispatcher_wear,
+                    wear_leveling: cfg.wear_leveling,
+                    max_remaps: cfg.max_remaps,
+                    endurance_budget: cfg.endurance_budget,
+                    started: Instant::now(),
                     pending: dispatcher_pending,
                     live: dispatcher_live,
                     shutting_down: false,
@@ -877,7 +1130,7 @@ impl PimService {
             })
             .context("spawning dispatcher thread")?;
         let client = PimClient { cfg, event_tx, next_job: Arc::new(AtomicU64::new(0)), pending, live };
-        Ok(Self { client, dispatcher: Some(dispatcher), workers, stats, batch_cycles })
+        Ok(Self { client, dispatcher: Some(dispatcher), workers, stats, faults, wear, geom, batch_cycles })
     }
 
     /// A cloneable submission front-end for driving this bank from other
@@ -890,6 +1143,12 @@ impl PimService {
     /// This service's configuration.
     pub fn config(&self) -> ServiceConfig {
         self.client.cfg
+    }
+
+    /// Submit a job as one typed [`Payload`] (see [`PimClient::submit_job`]
+    /// — the single submission path; `submit`/`submit_sort` wrap it).
+    pub fn submit_job(&self, kind: WorkloadKind, payload: Payload) -> Result<JobHandle> {
+        self.client.submit_job(kind, payload)
     }
 
     /// Submit an element-wise job. Non-blocking: returns a [`JobHandle`];
@@ -922,9 +1181,29 @@ impl PimService {
     pub fn inject_worker_panic(&self) -> Result<()> {
         self.client
             .event_tx
-            .send(Event::Enqueue(Segment { job: POISON_JOB, offset: 0, payload: Payload::Poison }))
+            .send(Event::Enqueue(Segment { job: POISON_JOB, offset: 0, payload: Payload::Poison, remaps: 0 }))
             .ok()
             .context("scheduler dispatcher exited")
+    }
+
+    /// Fault injection: stick cell `(row, col)` of the bank at `value`,
+    /// effective from the next batch boundary (every worker syncs the
+    /// shared fault map before executing a batch). Coordinates are
+    /// validated here, so a bad injection is an API error rather than a
+    /// batch failure. Jobs in flight complete correctly: the dispatcher
+    /// quarantines the row on first detection and remaps the affected
+    /// segments onto healthy rows.
+    pub fn inject_stuck(&self, row: usize, col: usize, value: bool) -> Result<()> {
+        ensure!(row < self.geom.rows, "stuck row {row} outside the {}-row bank", self.geom.rows);
+        ensure!(col < self.geom.n, "stuck column {col} outside the {}-column array", self.geom.n);
+        self.faults.lock().unwrap_or_else(|e| e.into_inner()).faults.push(StuckAt { row, col, value });
+        Ok(())
+    }
+
+    /// Snapshot of the bank's persistent wear map: per-row switch totals
+    /// plus the stuck-at quarantine ledger.
+    pub fn wear(&self) -> WearMap {
+        self.wear.lock().unwrap_or_else(|e| e.into_inner()).clone()
     }
 
     /// Aggregate statistics so far.
@@ -1093,5 +1372,40 @@ mod tests {
         let stats = svc.shutdown();
         assert_eq!(stats.jobs, 2);
         assert_eq!(stats.elements, 66);
+    }
+
+    /// The unified `submit_job(kind, payload)` path rejects shape and kind
+    /// mismatches with typed errors, and the `try_*` value accessors return
+    /// `ValueShapeMismatch` instead of panicking on the wrong shape.
+    #[test]
+    fn submit_job_rejects_mismatches_typed() {
+        let svc = PimService::start(ServiceConfig {
+            kind: WorkloadKind::Mul32,
+            model: ModelKind::Minimal,
+            n_crossbars: 1,
+            rows: 4,
+            ..Default::default()
+        })
+        .unwrap();
+
+        // Row-vector payload against an element-wise bank: typed mismatch.
+        let err = svc.submit_job(WorkloadKind::Mul32, Payload::Rows(vec![vec![1, 2]])).expect_err("shape mismatch must be rejected");
+        let typed = err.downcast_ref::<WorkloadMismatch>().expect("typed WorkloadMismatch");
+        assert_eq!(typed.submitted, JobShape::RowVectors);
+
+        // The sort wrapper goes through the same gate.
+        let err = svc.submit_sort(&[vec![9, 1, 5]]).expect_err("sort on a multiply bank must be rejected");
+        assert!(err.downcast_ref::<WorkloadMismatch>().is_some());
+
+        // Poison is an internal control payload, never a job.
+        assert!(svc.submit_job(WorkloadKind::Mul32, Payload::Poison).is_err());
+
+        // A well-shaped job completes, and the typed accessors agree on shape.
+        let res = svc.submit_job(WorkloadKind::Mul32, Payload::pairs(&[3], &[5]).unwrap()).unwrap().wait().unwrap();
+        assert_eq!(res.try_scalars().unwrap(), &[15]);
+        let shape_err = res.try_rows().expect_err("rows accessor on scalar values");
+        assert_eq!(shape_err, ValueShapeMismatch { requested: JobShape::RowVectors, actual: JobShape::ElementWise });
+
+        svc.shutdown();
     }
 }

@@ -8,15 +8,16 @@ use crate::algorithms::multpim::{build_multpim, MultPim, MultPimVariant};
 use crate::algorithms::program::Program;
 use crate::backend::{ExecPipeline, PreparedProgram, ReplayMode};
 use crate::crossbar::crossbar::{Crossbar, Metrics};
+use crate::crossbar::faults::FaultMap;
 use crate::crossbar::gate::GateSet;
 use crate::crossbar::geometry::Geometry;
 use crate::crossbar::state::BitMatrix;
 use crate::isa::models::ModelKind;
 use crate::isa::schedule::pack_program;
 use crate::verify;
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, bail, ensure, Result};
 use std::collections::HashMap;
-use std::sync::{Mutex, OnceLock};
+use std::sync::{Arc, Mutex, OnceLock};
 
 /// Which vectored operation this service instance executes.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -90,8 +91,12 @@ pub const SORT_ELEMS: usize = 16;
 /// Element width of the sort workload.
 pub const SORT_BITS: usize = 6;
 
-/// A chunk's operand payload: scalar pairs for element-wise arithmetic,
-/// per-row element vectors for sort jobs.
+/// A job's operand payload: scalar pairs for element-wise arithmetic,
+/// per-row element vectors for sort jobs. This is the single typed payload
+/// of the `submit_job(kind, payload)` entry points on `PimService`,
+/// `PimClient` and `FleetClient`; new workload families (e.g. a hashing
+/// state vector) extend this enum rather than adding parallel submit
+/// methods on every tier.
 #[derive(Debug, Clone)]
 pub enum Payload {
     Pairs(Vec<(u64, u64)>),
@@ -115,6 +120,9 @@ pub struct Segment {
     /// Element offset within the owning job's result accumulator.
     pub offset: usize,
     pub payload: Payload,
+    /// Times this segment has been remapped off quarantined rows — the
+    /// dispatcher's bounded stuck-at retry budget (`ServiceConfig::max_remaps`).
+    pub remaps: u32,
 }
 
 /// Per-segment execution report of a coalesced row-batch.
@@ -140,9 +148,43 @@ pub struct SegmentReport {
     pub control_bits: u64,
     /// Exact switching energy inside this segment's row range.
     pub switch_events: u64,
+    /// Rows of this segment's placement found stuck-at during the batch.
+    /// Empty when the segment executed on healthy rows — and also when a
+    /// loader error preempted execution (the loader error wins). A
+    /// non-empty list makes the dispatcher quarantine the rows and remap
+    /// the segment instead of failing the job.
+    pub stuck_rows: Vec<usize>,
 }
 
 impl Payload {
+    /// Pair up two element-wise operand vectors — the `submit(a, b)` payload.
+    pub fn pairs(a: &[u64], b: &[u64]) -> Result<Payload> {
+        ensure!(a.len() == b.len(), "operand vectors differ in length ({} vs {})", a.len(), b.len());
+        Ok(Payload::Pairs(a.iter().copied().zip(b.iter().copied()).collect()))
+    }
+
+    /// Operand shape of this payload — the routing/compatibility key
+    /// matched against [`WorkloadKind::shape`]. `None` for the poison
+    /// fault hook, which is not a job.
+    pub fn shape(&self) -> Option<JobShape> {
+        match self {
+            Payload::Pairs(_) => Some(JobShape::ElementWise),
+            Payload::Rows(_) => Some(JobShape::RowVectors),
+            Payload::Poison => None,
+        }
+    }
+
+    /// Split into per-chunk payloads of at most `rows` elements each — the
+    /// client-side chunking step of `submit_job`.
+    pub fn chunked(&self, rows: usize) -> Vec<Payload> {
+        let rows = rows.max(1);
+        match self {
+            Payload::Pairs(p) => p.chunks(rows).map(|c| Payload::Pairs(c.to_vec())).collect(),
+            Payload::Rows(r) => r.chunks(rows).map(|c| Payload::Rows(c.to_vec())).collect(),
+            Payload::Poison => vec![Payload::Poison],
+        }
+    }
+
     /// Elements this payload carries (rows for sort payloads).
     pub fn len(&self) -> usize {
         match self {
@@ -213,6 +255,10 @@ pub struct Worker {
     replay_mode: ReplayMode,
     /// Word-range executor threads per decoded replay.
     replay_threads: usize,
+    /// Shared view of the bank's injected stuck-at faults
+    /// (`PimService::inject_stuck`), synced into the crossbar at each batch
+    /// boundary — faults appearing mid-batch take effect from the next one.
+    fault_source: Option<Arc<Mutex<FaultMap>>>,
 }
 
 /// Build the workload program for `model` on `geom`, applying the paper's
@@ -334,7 +380,16 @@ impl Worker {
         // switching energy, so the worker's crossbar always attributes
         // switches per row.
         crossbar.enable_row_switch_tracking();
-        Ok(Self { crossbar, model, program, prepared, compiled, replay_mode: ReplayMode::Decoded, replay_threads: 1 })
+        Ok(Self {
+            crossbar,
+            model,
+            program,
+            prepared,
+            compiled,
+            replay_mode: ReplayMode::Decoded,
+            replay_threads: 1,
+            fault_source: None,
+        })
     }
 
     /// Configure how this worker replays the prepared program per batch
@@ -342,6 +397,13 @@ impl Worker {
     pub fn set_replay(&mut self, mode: ReplayMode, threads: usize) {
         self.replay_mode = mode;
         self.replay_threads = threads.max(1);
+    }
+
+    /// Attach the bank-shared stuck-at fault map. The worker re-reads it at
+    /// every batch boundary, so `PimService::inject_stuck` takes effect on
+    /// the next batch without restarting anything.
+    pub fn set_fault_source(&mut self, source: Arc<Mutex<FaultMap>>) {
+        self.fault_source = Some(source);
     }
 
     /// Geometry this worker serves.
@@ -375,7 +437,7 @@ impl Worker {
     /// anonymous segment, so the batch hygiene (row clearing — the
     /// ghost-row fix) lives in exactly one place.
     pub fn run_batch(&mut self, pairs: &[(u64, u64)]) -> Result<(Vec<u64>, Metrics)> {
-        let seg = Segment { job: 0, offset: 0, payload: Payload::Pairs(pairs.to_vec()) };
+        let seg = Segment { job: 0, offset: 0, payload: Payload::Pairs(pairs.to_vec()), remaps: 0 };
         let (reports, delta) = self.run_segments(std::slice::from_ref(&seg))?;
         let report = reports.into_iter().next().expect("one segment yields one report");
         match report.values.map_err(|e| anyhow!(e))? {
@@ -394,10 +456,56 @@ impl Worker {
     /// overflow, pipeline fault). Only a genuine panic — a simulated
     /// hardware fault — takes the worker down.
     pub fn run_segments(&mut self, segments: &[Segment]) -> Result<(Vec<SegmentReport>, Metrics)> {
+        let mut plan: Vec<Vec<usize>> = Vec::with_capacity(segments.len());
+        let mut base = 0usize;
+        for seg in segments {
+            plan.push((base..base + seg.payload.len()).collect());
+            base += seg.payload.len();
+        }
+        let (reports, _row_wear, delta) = self.run_segments_placed(segments, &plan)?;
+        Ok((reports, delta))
+    }
+
+    /// [`Worker::run_segments`] with an explicit row placement: `plan[i]`
+    /// lists the rows segment `i` occupies (the dispatcher computes it via
+    /// `WearMap::assign_rows` — coldest healthy rows under wear leveling,
+    /// front-packed otherwise). Column gates never cross rows and every
+    /// batch starts from cleared rows, so a segment's values and exact
+    /// switch attribution are invariant under placement.
+    ///
+    /// Reliability hooks: the bank-shared fault map is synced at the batch
+    /// boundary and its stuck cells forced after operand load (faults
+    /// corrupt inputs) and after replay (faults corrupt outputs); a segment
+    /// placed on a stuck row reports `stuck_rows` so the dispatcher can
+    /// quarantine and remap it. The batch's per-row switch snapshot is
+    /// folded into the crossbar's persistent [`crate::crossbar::WearMap`]
+    /// and returned alongside the reports.
+    pub fn run_segments_placed(&mut self, segments: &[Segment], plan: &[Vec<usize>]) -> Result<(Vec<SegmentReport>, Vec<u64>, Metrics)> {
         let rows = self.crossbar.geom.rows;
         let occupied: usize = segments.iter().map(|s| s.payload.len()).sum();
         if occupied > rows {
             bail!("coalesced batch of {occupied} elements exceeds {rows} rows");
+        }
+        ensure!(plan.len() == segments.len(), "placement plan covers {} of {} segments", plan.len(), segments.len());
+        let mut used = vec![false; rows];
+        for (seg, assigned) in segments.iter().zip(plan) {
+            ensure!(
+                assigned.len() == seg.payload.len(),
+                "segment of {} elements placed on {} rows",
+                seg.payload.len(),
+                assigned.len()
+            );
+            for &r in assigned {
+                ensure!(r < rows, "placement row {r} outside the {rows}-row bank");
+                ensure!(!used[r], "placement row {r} assigned twice");
+                used[r] = true;
+            }
+        }
+        // Sync this batch's fault view: stuck cells injected mid-batch take
+        // effect from the next batch boundary.
+        if let Some(source) = &self.fault_source {
+            let faults = source.lock().unwrap_or_else(|e| e.into_inner()).clone();
+            self.crossbar.set_faults(faults);
         }
         // Batch hygiene (the structural ghost-row fix): every batch starts
         // from fully cleared rows, so no job's values or metrics can depend
@@ -405,29 +513,39 @@ impl Worker {
         self.crossbar.state.clear_rows(0, rows)?;
         self.crossbar.reset_row_switches();
         let before = self.crossbar.metrics;
-        let mut bases = Vec::with_capacity(segments.len());
         let mut load_errs: Vec<Option<String>> = Vec::with_capacity(segments.len());
-        let mut base = 0usize;
-        for seg in segments {
-            bases.push(base);
-            load_errs.push(self.load_segment(seg, base).err().map(|e| format!("{e:#}")));
-            base += seg.payload.len();
+        for (seg, assigned) in segments.iter().zip(plan) {
+            load_errs.push(self.load_segment(seg, assigned).err().map(|e| format!("{e:#}")));
         }
+        // Stuck devices override whatever the operand writes produced...
+        self.crossbar.apply_faults()?;
         // If no segment loaded, the shared replay would compute garbage for
         // nobody: skip it and charge nothing (a batch with zero cycles is
         // reported as not executed).
         let delta = if load_errs.iter().all(Option::is_some) {
             Metrics::default()
         } else {
-            self.run_prepared_batch(before)?
+            let delta = self.run_prepared_batch(before)?;
+            // ... and whatever the gates computed afterwards. Both passes
+            // write through `BitMatrix::set`, so healthy segments' metrics
+            // are untouched.
+            self.crossbar.apply_faults()?;
+            delta
         };
+        // Wear is physical: fold this batch's exact per-row switch counts
+        // into the persistent map before anything resets them.
+        let row_wear = self.crossbar.absorb_wear();
+        let stuck = self.crossbar.stuck_rows();
         let mut reports = Vec::with_capacity(segments.len());
         for (i, seg) in segments.iter().enumerate() {
             let span = seg.payload.len();
-            let values = match &load_errs[i] {
-                Some(e) => Err(e.clone()),
-                None => self.read_segment(seg, bases[i]).map_err(|e| format!("{e:#}")),
+            let seg_stuck: Vec<usize> = plan[i].iter().copied().filter(|r| stuck.binary_search(r).is_ok()).collect();
+            let values = match (&load_errs[i], seg_stuck.is_empty()) {
+                (Some(e), _) => Err(e.clone()),
+                (None, false) => Err(format!("stuck-at fault on row(s) {seg_stuck:?}")),
+                (None, true) => self.read_segment(seg, &plan[i]).map_err(|e| format!("{e:#}")),
             };
+            let stuck_rows = if load_errs[i].is_some() { Vec::new() } else { seg_stuck };
             reports.push(SegmentReport {
                 job: seg.job,
                 offset: seg.offset,
@@ -435,20 +553,22 @@ impl Worker {
                 values,
                 sim_cycles: delta.cycles * span as u64 / occupied.max(1) as u64,
                 control_bits: delta.control_bits * span as u64 / occupied.max(1) as u64,
-                switch_events: self.crossbar.row_switches(bases[i], bases[i] + span),
+                switch_events: self.crossbar.row_switches_at(&plan[i]),
+                stuck_rows,
             });
         }
-        Ok((reports, delta))
+        Ok((reports, row_wear, delta))
     }
 
-    /// Load one segment's operands at row `base`. A malformed operand fails
-    /// only this segment; rows already written stay loaded (they execute as
-    /// garbage in this segment's own row range and are never read back).
-    fn load_segment(&mut self, seg: &Segment, base: usize) -> Result<()> {
+    /// Load one segment's operands onto its assigned rows. A malformed
+    /// operand fails only this segment; rows already written stay loaded
+    /// (they execute as garbage in this segment's own rows and are never
+    /// read back).
+    fn load_segment(&mut self, seg: &Segment, assigned: &[usize]) -> Result<()> {
         match &seg.payload {
             Payload::Pairs(pairs) => {
-                for (r, &(a, b)) in pairs.iter().enumerate() {
-                    self.compiled.load_pair(&mut self.crossbar.state, base + r, a, b)?;
+                for (&row, &(a, b)) in assigned.iter().zip(pairs) {
+                    self.compiled.load_pair(&mut self.crossbar.state, row, a, b)?;
                 }
                 Ok(())
             }
@@ -456,8 +576,8 @@ impl Worker {
                 let Compiled::Sorter(sorter) = &self.compiled else {
                     bail!("per-row sort payload on a non-sort workload");
                 };
-                for (r, vals) in rows_data.iter().enumerate() {
-                    sorter.load(&mut self.crossbar.state, base + r, vals)?;
+                for (&row, vals) in assigned.iter().zip(rows_data) {
+                    sorter.load(&mut self.crossbar.state, row, vals)?;
                 }
                 Ok(())
             }
@@ -465,13 +585,13 @@ impl Worker {
         }
     }
 
-    /// Read one segment's results back from its row range.
-    fn read_segment(&self, seg: &Segment, base: usize) -> Result<ChunkValues> {
+    /// Read one segment's results back from its assigned rows.
+    fn read_segment(&self, seg: &Segment, assigned: &[usize]) -> Result<ChunkValues> {
         match &seg.payload {
             Payload::Pairs(pairs) => {
                 let mut out = Vec::with_capacity(pairs.len());
-                for r in 0..pairs.len() {
-                    out.push(self.compiled.read_result(&self.crossbar.state, base + r)?);
+                for &row in assigned.iter().take(pairs.len()) {
+                    out.push(self.compiled.read_result(&self.crossbar.state, row)?);
                 }
                 Ok(ChunkValues::Scalars(out))
             }
@@ -480,8 +600,8 @@ impl Worker {
                     bail!("per-row sort payload on a non-sort workload");
                 };
                 let mut out = Vec::with_capacity(rows_data.len());
-                for r in 0..rows_data.len() {
-                    out.push(sorter.read(&self.crossbar.state, base + r)?);
+                for &row in assigned.iter().take(rows_data.len()) {
+                    out.push(sorter.read(&self.crossbar.state, row)?);
                 }
                 Ok(ChunkValues::Rows(out))
             }
@@ -493,7 +613,7 @@ impl Worker {
     /// Like [`Worker::run_batch`], a single-segment wrapper over
     /// [`Worker::run_segments`].
     pub fn run_sort_batch(&mut self, rows_data: &[Vec<u64>]) -> Result<(Vec<Vec<u64>>, Metrics)> {
-        let seg = Segment { job: 0, offset: 0, payload: Payload::Rows(rows_data.to_vec()) };
+        let seg = Segment { job: 0, offset: 0, payload: Payload::Rows(rows_data.to_vec()), remaps: 0 };
         let (reports, delta) = self.run_segments(std::slice::from_ref(&seg))?;
         let report = reports.into_iter().next().expect("one segment yields one report");
         match report.values.map_err(|e| anyhow!(e))? {
@@ -600,7 +720,7 @@ mod tests {
         let model = ModelKind::Minimal;
         let geom = workload_geometry(WorkloadKind::Mul32, model, 8).unwrap();
         let mut w = Worker::new(WorkloadKind::Mul32, model, geom).unwrap();
-        let seg = |job: u64, offset: usize, pairs: Vec<(u64, u64)>| Segment { job, offset, payload: Payload::Pairs(pairs) };
+        let seg = |job: u64, offset: usize, pairs: Vec<(u64, u64)>| Segment { job, offset, payload: Payload::Pairs(pairs), remaps: 0 };
         let segments = vec![
             seg(7, 0, vec![(3, 5), (11, 13)]),
             seg(9, 4, vec![(100, 200)]),
@@ -632,10 +752,65 @@ mod tests {
         let geom = workload_geometry(WorkloadKind::Mul32, model, 2).unwrap();
         let mut w = Worker::new(WorkloadKind::Mul32, model, geom).unwrap();
         let segments = vec![
-            Segment { job: 1, offset: 0, payload: Payload::Pairs(vec![(1, 2), (3, 4)]) },
-            Segment { job: 2, offset: 0, payload: Payload::Pairs(vec![(5, 6)]) },
+            Segment { job: 1, offset: 0, payload: Payload::Pairs(vec![(1, 2), (3, 4)]), remaps: 0 },
+            Segment { job: 2, offset: 0, payload: Payload::Pairs(vec![(5, 6)]), remaps: 0 },
         ];
         assert!(w.run_segments(&segments).is_err());
+    }
+
+    /// Scattered placement (the wear-leveling / remap path) must reproduce
+    /// front-packed values and exact switch attribution bit-for-bit: gates
+    /// never cross rows and every batch starts cleared, so per-row behaviour
+    /// depends only on that row's loaded data.
+    #[test]
+    fn placed_execution_is_placement_invariant() {
+        let model = ModelKind::Minimal;
+        let geom = workload_geometry(WorkloadKind::Mul32, model, 8).unwrap();
+        let mut w = Worker::new(WorkloadKind::Mul32, model, geom).unwrap();
+        let segments = vec![
+            Segment { job: 1, offset: 0, payload: Payload::Pairs(vec![(3, 5), (11, 13)]), remaps: 0 },
+            Segment { job: 2, offset: 0, payload: Payload::Pairs(vec![(100, 200)]), remaps: 0 },
+        ];
+        let (front, _) = w.run_segments(&segments).unwrap();
+        let plan = vec![vec![5, 7], vec![2]];
+        let (scattered, row_wear, _) = w.run_segments_placed(&segments, &plan).unwrap();
+        for (a, b) in front.iter().zip(&scattered) {
+            let (ChunkValues::Scalars(va), ChunkValues::Scalars(vb)) = (a.values.as_ref().unwrap(), b.values.as_ref().unwrap())
+            else {
+                panic!("scalar workload")
+            };
+            assert_eq!(va, vb, "values are placement-invariant");
+            assert_eq!(a.switch_events, b.switch_events, "switch attribution is placement-invariant");
+        }
+        assert_eq!(row_wear.len(), 8);
+        assert!(row_wear[5] > 0 && row_wear[2] > 0);
+        // Wear persisted across both batches.
+        assert!(w.crossbar.wear().total_wear() > 0);
+        // Malformed plans are scheduler bugs and fail the batch as a unit.
+        assert!(w.run_segments_placed(&segments, &[vec![0, 1], vec![0]]).is_err(), "duplicate row");
+        assert!(w.run_segments_placed(&segments, &[vec![0, 99], vec![1]]).is_err(), "row out of range");
+        assert!(w.run_segments_placed(&segments, &[vec![0], vec![1]]).is_err(), "span mismatch");
+    }
+
+    /// A stuck cell surfaces as a per-segment `stuck_rows` report — the
+    /// dispatcher's quarantine trigger — while co-batched segments on
+    /// healthy rows still complete with correct values.
+    #[test]
+    fn stuck_row_reported_without_failing_cobatched_segments() {
+        let model = ModelKind::Minimal;
+        let geom = workload_geometry(WorkloadKind::Mul32, model, 4).unwrap();
+        let mut w = Worker::new(WorkloadKind::Mul32, model, geom).unwrap();
+        w.set_fault_source(Arc::new(Mutex::new(FaultMap::new().stuck(1, 0, true))));
+        let segments = vec![
+            Segment { job: 1, offset: 0, payload: Payload::Pairs(vec![(3, 5), (7, 9)]), remaps: 0 },
+            Segment { job: 2, offset: 0, payload: Payload::Pairs(vec![(11, 13)]), remaps: 0 },
+        ];
+        let (reports, _, _) = w.run_segments_placed(&segments, &[vec![0, 1], vec![2]]).unwrap();
+        assert_eq!(reports[0].stuck_rows, vec![1]);
+        assert!(reports[0].values.is_err());
+        assert!(reports[1].stuck_rows.is_empty());
+        let ChunkValues::Scalars(v) = reports[1].values.as_ref().unwrap() else { panic!("scalar workload") };
+        assert_eq!(v.as_slice(), &[143]);
     }
 
     /// The per-batch metrics delta must charge exactly the wire format's

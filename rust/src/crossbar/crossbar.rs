@@ -5,9 +5,11 @@
 //! [`crate::backend::pipeline`].
 
 use crate::backend::PimBackend;
+use crate::crossbar::faults::FaultMap;
 use crate::crossbar::gate::GateSet;
 use crate::crossbar::geometry::Geometry;
 use crate::crossbar::state::BitMatrix;
+use crate::crossbar::wear::WearMap;
 use crate::isa::operation::Operation;
 use anyhow::Result;
 
@@ -110,12 +112,27 @@ pub struct Crossbar {
     /// switching energy; `None` (the default) keeps the simulator hot path
     /// free of per-bit attribution work.
     row_switches: Option<Vec<u64>>,
+    /// Stuck-at cells of this physical array. Applied on the serving path
+    /// via [`Crossbar::apply_faults`]; empty by default.
+    faults: FaultMap,
+    /// Persistent per-row wear: the exact switch attribution folded in by
+    /// [`Crossbar::absorb_wear`] across batches. Survives `clear_rows` —
+    /// wear is physical, not logical.
+    wear: WearMap,
 }
 
 impl Crossbar {
     pub fn new(geom: Geometry, gate_set: GateSet) -> Self {
         let state = BitMatrix::new(geom.rows, geom.n);
-        Self { geom, gate_set, state, metrics: Metrics::default(), row_switches: None }
+        Self {
+            geom,
+            gate_set,
+            state,
+            metrics: Metrics::default(),
+            row_switches: None,
+            faults: FaultMap::new(),
+            wear: WearMap::new(geom.rows),
+        }
     }
 
     /// The paper's headline configuration (n=1024, k=32), routed through the
@@ -145,6 +162,63 @@ impl Crossbar {
             Some(acc) => acc[start.min(acc.len())..end.min(acc.len())].iter().sum(),
             None => 0,
         }
+    }
+
+    /// Switch events attributed to exactly the given rows since the last
+    /// reset — the scattered-placement counterpart of
+    /// [`Crossbar::row_switches`]. Returns 0 while tracking is disabled.
+    pub fn row_switches_at(&self, rows: &[usize]) -> u64 {
+        match &self.row_switches {
+            Some(acc) => rows.iter().filter_map(|&r| acc.get(r)).sum(),
+            None => 0,
+        }
+    }
+
+    /// A copy of the per-row switch counters since the last reset (empty
+    /// while tracking is disabled).
+    pub fn row_switches_snapshot(&self) -> Vec<u64> {
+        self.row_switches.clone().unwrap_or_default()
+    }
+
+    /// Replace this array's stuck-at fault map.
+    pub fn set_faults(&mut self, faults: FaultMap) {
+        self.faults = faults;
+    }
+
+    /// Force every stuck cell to its stuck value. The serving path calls
+    /// this after operand loads (faults corrupt inputs) and after replay
+    /// (faults corrupt outputs); it writes through `BitMatrix::set`, so it
+    /// never perturbs the switch-event metrics. Errors only on a fault
+    /// outside the array bounds.
+    pub fn apply_faults(&mut self) -> Result<()> {
+        if self.faults.faults.is_empty() {
+            return Ok(());
+        }
+        self.faults.apply(&mut self.state)
+    }
+
+    /// Rows containing at least one stuck cell, ascending and deduplicated —
+    /// the dispatcher's quarantine probe.
+    pub fn stuck_rows(&self) -> Vec<usize> {
+        let mut rows: Vec<usize> = self.faults.faults.iter().map(|f| f.row).collect();
+        rows.sort_unstable();
+        rows.dedup();
+        rows
+    }
+
+    /// The persistent per-row wear map of this physical array.
+    pub fn wear(&self) -> &WearMap {
+        &self.wear
+    }
+
+    /// Fold the current per-row switch counters into the persistent wear map
+    /// and return the snapshot that was absorbed (so callers can attribute
+    /// the same batch's wear elsewhere). Call once per batch, after replay
+    /// and before the next reset.
+    pub fn absorb_wear(&mut self) -> Vec<u64> {
+        let snapshot = self.row_switches_snapshot();
+        self.wear.absorb(&snapshot);
+        snapshot
     }
 
     /// Apply one already-validated cycle and account for it. Shared by the

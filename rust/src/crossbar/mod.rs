@@ -10,14 +10,24 @@
 //! The simulator is bit-packed column-major: each column is a `rows/64`-word
 //! bitvector, so a row-parallel gate is a handful of word-wide boolean ops —
 //! this is the L3 hot path (see `benches/sim_throughput.rs`).
+//!
+//! Device reliability rides on two side structures: [`faults::FaultMap`]
+//! injects stuck-at cells (applied through the serving path after loads and
+//! replays), and [`wear::WearMap`] persistently accumulates the exact per-row
+//! switch attribution across batches — wear is physical, so it survives row
+//! clearing — and carries the quarantine ledger plus wear-leveling placement
+//! used by the coordinator (DESIGN.md §Wear).
 
 pub mod crossbar;
 pub mod faults;
 pub mod gate;
 pub mod geometry;
 pub mod state;
+pub mod wear;
 
 pub use crossbar::{Crossbar, Metrics};
+pub use faults::{FaultMap, StuckAt};
 pub use gate::{GateSet, GateType};
 pub use geometry::Geometry;
 pub use state::BitMatrix;
+pub use wear::{WearMap, WearSummary};

@@ -1,0 +1,355 @@
+//! Persistent per-row wear tracking for a memristive crossbar.
+//!
+//! Stateful logic physically switches memristors on every gate, so endurance
+//! is a serving-time constraint, not an offline concern. The [`WearMap`]
+//! accumulates the crossbar's exact per-row `switch_events` attribution across
+//! batches — wear is physical, so it survives `clear_rows` and every batch
+//! boundary — and doubles as the row-health ledger: rows found stuck-at are
+//! quarantined here and excluded from all future placements.
+//!
+//! Placement itself also lives here: [`WearMap::assign_rows`] turns a batch of
+//! segment spans into concrete row lists, either front-packed (the historical
+//! layout, used when wear leveling is disabled) or coldest-rows-first. Because
+//! column gates never cross rows and every batch starts from cleared operand
+//! rows, a segment's values and per-row switch counts depend only on its own
+//! loaded data — results and metrics are invariant under row placement, which
+//! is what makes both leveling and stuck-row remapping transparent to jobs.
+
+use std::fmt;
+
+/// Persistent per-row switch totals plus the quarantine ledger for one crossbar.
+#[derive(Debug, Clone)]
+pub struct WearMap {
+    switches: Vec<u64>,
+    quarantined: Vec<bool>,
+}
+
+impl WearMap {
+    /// A fresh map for a crossbar with `rows` rows: zero wear, nothing quarantined.
+    pub fn new(rows: usize) -> Self {
+        Self { switches: vec![0; rows], quarantined: vec![false; rows] }
+    }
+
+    /// Number of rows tracked.
+    pub fn rows(&self) -> usize {
+        self.switches.len()
+    }
+
+    /// Fold a per-row switch snapshot (as produced by the crossbar's row
+    /// switch tracker since its last reset) into the persistent totals.
+    /// Snapshots shorter than the map only touch the rows they cover.
+    pub fn absorb(&mut self, snapshot: &[u64]) {
+        for (acc, &delta) in self.switches.iter_mut().zip(snapshot) {
+            *acc += delta;
+        }
+    }
+
+    /// Add `n` switch events to a single row.
+    pub fn record(&mut self, row: usize, n: u64) {
+        if let Some(acc) = self.switches.get_mut(row) {
+            *acc += n;
+        }
+    }
+
+    /// Accumulated switch events for one row (0 for out-of-range rows).
+    pub fn wear(&self, row: usize) -> u64 {
+        self.switches.get(row).copied().unwrap_or(0)
+    }
+
+    /// The most-worn row's total — the endurance-limiting quantity.
+    pub fn max_wear(&self) -> u64 {
+        self.switches.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Sum of all per-row switch totals.
+    pub fn total_wear(&self) -> u64 {
+        self.switches.iter().sum()
+    }
+
+    /// Mean per-row switch total (0.0 for an empty map).
+    pub fn mean_wear(&self) -> f64 {
+        if self.switches.is_empty() {
+            0.0
+        } else {
+            self.total_wear() as f64 / self.switches.len() as f64
+        }
+    }
+
+    /// Gini coefficient of the per-row wear distribution: 0.0 when wear is
+    /// perfectly even (or all-zero), approaching 1.0 when a single row absorbs
+    /// everything. The wear-leveling ablation reads directly off this number.
+    pub fn gini(&self) -> f64 {
+        let mut xs = self.switches.clone();
+        xs.sort_unstable();
+        let n = xs.len();
+        let total: u128 = xs.iter().map(|&x| x as u128).sum();
+        if n == 0 || total == 0 {
+            return 0.0;
+        }
+        let mut weighted: u128 = 0;
+        for (i, &x) in xs.iter().enumerate() {
+            weighted += (i as u128 + 1) * x as u128;
+        }
+        (2.0 * weighted as f64) / (n as f64 * total as f64) - (n as f64 + 1.0) / n as f64
+    }
+
+    /// Quarantine a row (idempotent). Returns `true` when the row was newly
+    /// quarantined, `false` when it was already out of service or out of range.
+    pub fn quarantine(&mut self, row: usize) -> bool {
+        match self.quarantined.get_mut(row) {
+            Some(q) if !*q => {
+                *q = true;
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Whether a row is quarantined (out-of-range rows read as healthy).
+    pub fn is_quarantined(&self, row: usize) -> bool {
+        self.quarantined.get(row).copied().unwrap_or(false)
+    }
+
+    /// Rows currently quarantined, ascending.
+    pub fn quarantined_rows(&self) -> Vec<usize> {
+        (0..self.quarantined.len()).filter(|&r| self.quarantined[r]).collect()
+    }
+
+    /// Number of rows still in service.
+    pub fn healthy_rows(&self) -> usize {
+        self.quarantined.iter().filter(|&&q| !q).count()
+    }
+
+    /// Place a batch of segment spans onto healthy rows. Returns one ascending
+    /// row list per span, or `None` when the healthy capacity cannot hold the
+    /// batch (the caller fails the segments typed, with `RowQuarantined`).
+    ///
+    /// With `leveling` off and nothing quarantined this reproduces the
+    /// historical front-packed layout exactly (rows `0..total` in order).
+    /// With `leveling` on, healthy rows are consumed coldest-first (ties
+    /// broken by row index), spreading switch events across the array.
+    pub fn assign_rows(&self, spans: &[usize], leveling: bool) -> Option<Vec<Vec<usize>>> {
+        let total: usize = spans.iter().sum();
+        let mut healthy: Vec<usize> = (0..self.switches.len()).filter(|&r| !self.quarantined[r]).collect();
+        if total > healthy.len() {
+            return None;
+        }
+        if leveling {
+            healthy.sort_by_key(|&r| (self.switches[r], r));
+        }
+        let mut next = healthy.into_iter();
+        Some(
+            spans
+                .iter()
+                .map(|&span| {
+                    let mut rows: Vec<usize> = next.by_ref().take(span).collect();
+                    rows.sort_unstable();
+                    rows
+                })
+                .collect(),
+        )
+    }
+
+    /// Condense the map into the endurance-horizon report carried by
+    /// `ServiceStats`. `elapsed_secs` is the observation window (used to turn
+    /// the observed peak switch rate into a projected time-to-first-failure);
+    /// `budget` is the per-row endurance budget in switch events, if one is
+    /// configured.
+    pub fn summarize(&self, elapsed_secs: f64, budget: Option<u64>) -> WearSummary {
+        let max = self.max_wear();
+        let budget_raw = budget.unwrap_or(0);
+        let ttff = match budget {
+            Some(b) if max > 0 && elapsed_secs > 0.0 => {
+                let remaining = b.saturating_sub(max) as f64;
+                let rate = max as f64 / elapsed_secs;
+                remaining / rate
+            }
+            _ => f64::INFINITY,
+        };
+        WearSummary {
+            rows: self.rows() as u64,
+            max_row_wear: max,
+            mean_row_wear: self.mean_wear(),
+            wear_gini: self.gini(),
+            quarantined_rows: self.quarantined.iter().filter(|&&q| q).count() as u64,
+            endurance_budget: budget_raw,
+            projected_ttff_secs: ttff,
+        }
+    }
+}
+
+/// Endurance-horizon report for one bank (or, after [`WearSummary::merge`],
+/// a whole fleet): how unevenly wear is distributed, how close the hottest
+/// row is to the endurance budget, and the projected time to first row
+/// failure at the observed switch rate.
+#[derive(Debug, Clone, Copy)]
+pub struct WearSummary {
+    /// Rows covered by the summary.
+    pub rows: u64,
+    /// Switch events on the most-worn row.
+    pub max_row_wear: u64,
+    /// Mean per-row switch events.
+    pub mean_row_wear: f64,
+    /// Gini coefficient of the per-row wear distribution (0 = even).
+    pub wear_gini: f64,
+    /// Rows taken out of service by stuck-at quarantine.
+    pub quarantined_rows: u64,
+    /// Configured per-row endurance budget in switch events (0 = unset).
+    pub endurance_budget: u64,
+    /// Projected seconds until the hottest row exhausts the budget at the
+    /// observed switch rate; infinite when no budget is set or no wear has
+    /// accumulated yet.
+    pub projected_ttff_secs: f64,
+}
+
+impl Default for WearSummary {
+    fn default() -> Self {
+        Self {
+            rows: 0,
+            max_row_wear: 0,
+            mean_row_wear: 0.0,
+            wear_gini: 0.0,
+            quarantined_rows: 0,
+            endurance_budget: 0,
+            projected_ttff_secs: f64::INFINITY,
+        }
+    }
+}
+
+impl WearSummary {
+    /// Fold another bank's summary into this one. Means are row-weighted;
+    /// `max_row_wear` takes the fleet-wide maximum; the Gini takes the worse
+    /// (larger) of the two — a conservative bound, since the exact fleet Gini
+    /// needs the raw distributions; the horizon takes the earliest projected
+    /// failure; a zero (unset) budget defers to the other side's.
+    pub fn merge(&mut self, other: &WearSummary) {
+        let total_rows = self.rows + other.rows;
+        if total_rows > 0 {
+            self.mean_row_wear =
+                (self.mean_row_wear * self.rows as f64 + other.mean_row_wear * other.rows as f64) / total_rows as f64;
+        }
+        self.rows = total_rows;
+        self.max_row_wear = self.max_row_wear.max(other.max_row_wear);
+        self.wear_gini = self.wear_gini.max(other.wear_gini);
+        self.quarantined_rows += other.quarantined_rows;
+        self.endurance_budget = match (self.endurance_budget, other.endurance_budget) {
+            (0, b) => b,
+            (a, 0) => a,
+            (a, b) => a.min(b),
+        };
+        self.projected_ttff_secs = self.projected_ttff_secs.min(other.projected_ttff_secs);
+    }
+}
+
+impl fmt::Display for WearSummary {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "max row wear {} (mean {:.1}, gini {:.3}), {} row(s) quarantined",
+            self.max_row_wear, self.mean_row_wear, self.wear_gini, self.quarantined_rows
+        )?;
+        if self.endurance_budget > 0 {
+            if self.projected_ttff_secs.is_finite() {
+                write!(f, ", projected TTFF {:.1}s @ budget {}", self.projected_ttff_secs, self.endurance_budget)?;
+            } else {
+                write!(f, ", no wear observed @ budget {}", self.endurance_budget)?;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn absorb_accumulates_across_snapshots() {
+        let mut map = WearMap::new(4);
+        map.absorb(&[1, 2, 3, 4]);
+        map.absorb(&[10, 0, 0, 0]);
+        assert_eq!(map.wear(0), 11);
+        assert_eq!(map.wear(3), 4);
+        assert_eq!(map.max_wear(), 11);
+        assert_eq!(map.total_wear(), 20);
+        assert!((map.mean_wear() - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gini_zero_when_even_and_high_when_concentrated() {
+        let mut even = WearMap::new(4);
+        even.absorb(&[5, 5, 5, 5]);
+        assert!(even.gini().abs() < 1e-12);
+
+        let mut skew = WearMap::new(4);
+        skew.absorb(&[100, 0, 0, 0]);
+        assert!((skew.gini() - 0.75).abs() < 1e-12);
+
+        assert_eq!(WearMap::new(4).gini(), 0.0);
+    }
+
+    #[test]
+    fn quarantine_is_idempotent_and_shrinks_capacity() {
+        let mut map = WearMap::new(3);
+        assert!(map.quarantine(1));
+        assert!(!map.quarantine(1));
+        assert!(!map.quarantine(99));
+        assert!(map.is_quarantined(1));
+        assert_eq!(map.quarantined_rows(), vec![1]);
+        assert_eq!(map.healthy_rows(), 2);
+    }
+
+    #[test]
+    fn assign_rows_front_packs_without_leveling() {
+        let map = WearMap::new(8);
+        let plan = map.assign_rows(&[3, 2], false).unwrap();
+        assert_eq!(plan, vec![vec![0, 1, 2], vec![3, 4]]);
+    }
+
+    #[test]
+    fn assign_rows_prefers_cold_rows_with_leveling() {
+        let mut map = WearMap::new(6);
+        map.absorb(&[50, 40, 30, 20, 10, 0]);
+        let plan = map.assign_rows(&[2, 2], true).unwrap();
+        // Coldest first: rows 5, 4 for the first span, then 3, 2.
+        assert_eq!(plan, vec![vec![4, 5], vec![2, 3]]);
+    }
+
+    #[test]
+    fn assign_rows_skips_quarantined_and_reports_exhaustion() {
+        let mut map = WearMap::new(4);
+        map.quarantine(0);
+        map.quarantine(2);
+        let plan = map.assign_rows(&[2], false).unwrap();
+        assert_eq!(plan, vec![vec![1, 3]]);
+        assert!(map.assign_rows(&[3], false).is_none());
+        // Zero-span batches always fit, even at zero capacity.
+        map.quarantine(1);
+        map.quarantine(3);
+        assert_eq!(map.assign_rows(&[0], true).unwrap(), vec![Vec::<usize>::new()]);
+    }
+
+    #[test]
+    fn summary_projects_horizon_and_merges() {
+        let mut map = WearMap::new(4);
+        map.absorb(&[100, 50, 0, 0]);
+        let s = map.summarize(10.0, Some(1_100));
+        assert_eq!(s.max_row_wear, 100);
+        // Rate 10 switches/s on the hottest row, 1000 remaining -> 100 s.
+        assert!((s.projected_ttff_secs - 100.0).abs() < 1e-9);
+
+        let t = map.summarize(10.0, None);
+        assert!(t.projected_ttff_secs.is_infinite());
+        assert_eq!(t.endurance_budget, 0);
+
+        let mut merged = s;
+        let mut other = WearMap::new(4).summarize(1.0, Some(500));
+        other.quarantined_rows = 1;
+        merged.merge(&other);
+        assert_eq!(merged.rows, 8);
+        assert_eq!(merged.max_row_wear, 100);
+        assert_eq!(merged.endurance_budget, 500);
+        assert_eq!(merged.quarantined_rows, 1);
+        assert!((merged.mean_row_wear - 150.0 / 8.0).abs() < 1e-9);
+    }
+}

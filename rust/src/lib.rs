@@ -68,6 +68,16 @@
 //!   with a typed `Overloaded` backpressure error, and absorbs bank death
 //!   by rerouting jobs onto peers or warm-promoted hot spares, folding
 //!   every bank's statistics into one `FleetStats` (DESIGN.md §Fleet).
+//!   Every submission front door is the unified
+//!   `submit_job(WorkloadKind, Payload)` — `submit` / `submit_sort` are
+//!   one-line wrappers — and serving is wear-aware: a persistent per-row
+//!   `WearMap` (switch events survive `clear_rows`; wear is physical)
+//!   drives cold-row-first placement, stuck-at faults quarantine only the
+//!   afflicted rows while segments remap onto healthy ones within a
+//!   bounded retry budget (typed `RowQuarantined` on exhaustion), and
+//!   `ServiceStats`/`FleetStats` report the endurance horizon — max
+//!   per-row wear, wear Gini, projected time-to-first-failure under a
+//!   configurable endurance budget (DESIGN.md §Wear).
 //! * [`runtime`] — PJRT/XLA execution of the AOT-compiled JAX/Pallas
 //!   crossbar-step artifact (`artifacts/*.hlo.txt`) as an independent
 //!   `PimBackend`, used to cross-check the rust simulator (python never

@@ -10,13 +10,15 @@
 //! repro serve [--model M] [--crossbars N] [--rows R] [--jobs J] [--len L]
 //!             [--inject-bad] [--kill W] [--no-coalesce]
 //!             [--wire-replay] [--replay-threads T]
+//!             [--endurance-budget N] [--no-wear-level] [--inject-stuck R,C]
 //!                                   end-to-end vector-multiply service demo
 //!                                   (pipelined jobs, cross-job coalescing,
 //!                                   decode-once replay — --wire-replay
 //!                                   forces the full per-batch decode,
 //!                                   --replay-threads spreads each replay
 //!                                   over T word ranges; optional fault
-//!                                   injection)
+//!                                   injection, wear-leveling ablation and
+//!                                   endurance-horizon reporting)
 //! repro serve --banks N [--mix mul:add:sort] [--spares S] [--max-pending P]
 //!             [--kill-bank B] [...single-bank flags]
 //!                                   multi-bank fleet demo: mixed traffic
@@ -68,6 +70,21 @@ fn parse_flags(args: &[String]) -> HashMap<String, String> {
         }
     }
     flags
+}
+
+/// Parse `--inject-stuck R,C` or `R,C,V` (stuck value `V` in `{0,1}`,
+/// defaulting to stuck-at-1).
+fn parse_stuck(spec: &str) -> Result<(usize, usize, bool)> {
+    let parts: Vec<&str> = spec.split(',').collect();
+    anyhow::ensure!(parts.len() == 2 || parts.len() == 3, "--inject-stuck wants R,C or R,C,V, got '{spec}'");
+    let row = parts[0].trim().parse().with_context(|| format!("bad row in --inject-stuck '{spec}'"))?;
+    let col = parts[1].trim().parse().with_context(|| format!("bad column in --inject-stuck '{spec}'"))?;
+    let value = match parts.get(2).map(|v| v.trim()) {
+        None | Some("1") => true,
+        Some("0") => false,
+        Some(other) => bail!("bad stuck value '{other}' in --inject-stuck (0|1)"),
+    };
+    Ok((row, col, value))
 }
 
 fn parse_model(s: &str) -> Result<ModelKind> {
@@ -252,8 +269,8 @@ fn cmd_serve_fleet(flags: &HashMap<String, String>) -> Result<()> {
     for (j, kind, expect, handle) in pending {
         let res = handle.wait().with_context(|| format!("job {j} ({})", kind.name()))?;
         match expect {
-            Expect::Scalars(want) => anyhow::ensure!(res.scalars() == want.as_slice(), "wrong values in job {j}"),
-            Expect::Rows(want) => anyhow::ensure!(res.rows() == want.as_slice(), "wrong rows in job {j}"),
+            Expect::Scalars(want) => anyhow::ensure!(res.try_scalars()? == want.as_slice(), "wrong values in job {j}"),
+            Expect::Rows(want) => anyhow::ensure!(res.try_rows()? == want.as_slice(), "wrong rows in job {j}"),
         }
         println!(
             "job {j:>3} ({:<6}): {:>5} values  sim_cycles={:<8} wall={:?}",
@@ -303,6 +320,15 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     let coalescing = !flags.contains_key("no-coalesce");
     let replay_mode = if flags.contains_key("wire-replay") { ReplayMode::Wire } else { ReplayMode::Decoded };
     let replay_threads: usize = flags.get("replay-threads").map(String::as_str).unwrap_or("1").parse()?;
+    let wear_leveling = !flags.contains_key("no-wear-level");
+    let endurance_budget: Option<u64> = match flags.get("endurance-budget") {
+        Some(b) => Some(b.parse()?),
+        None => None,
+    };
+    let inject_stuck: Option<(usize, usize, bool)> = match flags.get("inject-stuck") {
+        Some(spec) => Some(parse_stuck(spec)?),
+        None => None,
+    };
     let kill: Option<usize> = match flags.get("kill") {
         Some(w) => Some(w.parse()?),
         None => None,
@@ -327,6 +353,8 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         coalescing,
         replay_mode,
         replay_threads,
+        wear_leveling,
+        endurance_budget,
         ..Default::default()
     })?;
     println!("batch latency: {} crossbar cycles\n", svc.batch_cycles);
@@ -357,14 +385,19 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
             Err(e) => println!("bad job  : rejected in isolation ({e:#})"),
         }
     }
+    if let Some((row, col, value)) = inject_stuck {
+        svc.inject_stuck(row, col, value)?;
+        println!("fault    : cell ({row},{col}) stuck at {} mid-service; the row quarantines, segments remap", value as u8);
+    }
     if let Some(w) = kill {
         svc.kill_worker(w)?;
         println!("fault    : worker {w} killed mid-service; its chunks requeue to the survivors");
     }
     for (j, (a, b, handle)) in pending.into_iter().enumerate() {
         let res = handle.wait()?;
+        let vals = res.try_scalars()?;
         for i in 0..len {
-            anyhow::ensure!(res.scalars()[i] == a[i] * b[i], "wrong product at job {j} element {i}");
+            anyhow::ensure!(vals[i] == a[i] * b[i], "wrong product at job {j} element {i}");
         }
         println!(
             "job {j:>3}: {len} elements  sim_cycles={:<8} control={:>7} bits  wall={:?}",
@@ -389,6 +422,21 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         stats.occupied_rows,
         stats.capacity_rows
     );
+    let w = &stats.wear;
+    println!(
+        "wear: max {} / mean {:.1} switch events per row, gini {:.3}, {} row(s) quarantined, {} segment remap(s)",
+        w.max_row_wear, w.mean_row_wear, w.wear_gini, w.quarantined_rows, stats.remapped_segments
+    );
+    if w.endurance_budget > 0 {
+        if w.projected_ttff_secs.is_finite() {
+            println!(
+                "endurance: budget {} switches/row -> first row failure projected in {:.1}s at this load",
+                w.endurance_budget, w.projected_ttff_secs
+            );
+        } else {
+            println!("endurance: budget {} switches/row -> no row wearing, no projected failure", w.endurance_budget);
+        }
+    }
     Ok(())
 }
 
@@ -511,6 +559,9 @@ fn main() -> Result<()> {
             println!("              [--inject-bad]  submit one malformed job, show fault isolation");
             println!("              [--kill W]      kill worker W mid-service, show chunk requeue");
             println!("              [--no-coalesce] disable cross-job chunk coalescing (ablation)");
+            println!("              [--no-wear-level] disable cold-row wear-leveling placement (ablation)");
+            println!("              [--endurance-budget N] per-row switch budget for the TTFF projection");
+            println!("              [--inject-stuck R,C[,V]] stick cell (R,C) mid-service; quarantine + remap");
             println!("              --banks N       fleet mode: N banks cycling through --mix");
             println!("              [--mix mul:add:sort] workload mix across the banks");
             println!("              [--spares 1]    hot-spare slots promoted on bank death");

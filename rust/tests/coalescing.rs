@@ -55,7 +55,7 @@ fn p12_coalesced_values_match_per_chunk_execution() {
         while fill < ROWS {
             let span = (1 + rng.below((ROWS - fill).min(5) as u64)) as usize;
             let pairs: Vec<(u64, u64)> = (0..span).map(|_| (rng.next() & 0xffff_ffff, rng.next() & 0xffff_ffff)).collect();
-            segments.push(Segment { job, offset: 0, payload: Payload::Pairs(pairs) });
+            segments.push(Segment { job, offset: 0, payload: Payload::Pairs(pairs), remaps: 0 });
             job += 1;
             fill += span;
             if rng.below(4) == 0 {
@@ -97,9 +97,9 @@ fn p13_segment_failure_is_isolated_and_neighbors_exact() {
         let mut bad = good_a.clone();
         bad[1].0 = 1 << 33;
         let segments = vec![
-            Segment { job: 0, offset: 0, payload: Payload::Pairs(good_a.clone()) },
-            Segment { job: 1, offset: 0, payload: Payload::Pairs(bad) },
-            Segment { job: 2, offset: 0, payload: Payload::Pairs(good_b.clone()) },
+            Segment { job: 0, offset: 0, payload: Payload::Pairs(good_a.clone()), remaps: 0 },
+            Segment { job: 1, offset: 0, payload: Payload::Pairs(bad), remaps: 0 },
+            Segment { job: 2, offset: 0, payload: Payload::Pairs(good_b.clone()), remaps: 0 },
         ];
         let (reports, _) = coalesced.run_segments(&segments).unwrap();
         let err = reports[1].values.as_ref().expect_err("oversized operand must fail its segment");
