@@ -1,0 +1,130 @@
+//! Experiment E19: the SHA-3 (HashPIM) workload — Keccak-f[1600] rounds
+//! per second through the serving worker, and the cycles-per-round latency
+//! held against the published 3,494-cycle HashPIM budget.
+//!
+//! Three sections:
+//!  1. Round budget: the emitted per-step cycle/gate table vs the published
+//!     HashPIM table (the same numbers `tests/sha3_cycles.rs` asserts).
+//!  2. Worker throughput: full 24-round permutations per wall second on the
+//!     decode-once replay path, across batch (row) counts.
+//!  3. Replay-mode cost: decoded-cache vs full wire re-decode wall time for
+//!     the same batch.
+//!
+//! Emits `BENCH_sha3.json` so CI can accumulate the workload's trajectory
+//! across PRs (companion to `BENCH_coordinator.json`, `BENCH_fleet.json`
+//! and `BENCH_wear.json`).
+
+use partition_pim::algorithms::sha3;
+use partition_pim::backend::ReplayMode;
+use partition_pim::bench_support::section;
+use partition_pim::coordinator::worker::Worker;
+use partition_pim::coordinator::{workload_geometry, WorkloadKind};
+use partition_pim::isa::models::ModelKind;
+use std::time::Instant;
+
+const MODEL: ModelKind = ModelKind::Minimal;
+const BATCHES: usize = 8;
+
+fn xorshift(seed: &mut u64) -> u64 {
+    *seed ^= *seed << 13;
+    *seed ^= *seed >> 7;
+    *seed ^= *seed << 17;
+    *seed
+}
+
+fn states(rows: usize, seed: &mut u64) -> Vec<[u64; 25]> {
+    (0..rows)
+        .map(|_| {
+            let mut st = [0u64; 25];
+            for lane in st.iter_mut() {
+                *lane = xorshift(seed);
+            }
+            st
+        })
+        .collect()
+}
+
+/// Permutations per wall second over `BATCHES` verified batches of `rows`
+/// states; returns (rounds/s, cycles per round as metered).
+fn worker_throughput(rows: usize, mode: ReplayMode) -> (f64, f64) {
+    let geom = workload_geometry(WorkloadKind::Sha3, MODEL, rows).expect("geometry");
+    let mut worker = Worker::new(WorkloadKind::Sha3, MODEL, geom).expect("worker");
+    worker.set_replay(mode, 1);
+    let mut seed = 0x6a09_e667_f3bc_c908u64;
+    let mut cycles_per_batch = 0u64;
+    let t0 = Instant::now();
+    for batch in 0..BATCHES {
+        let input = states(rows, &mut seed);
+        let (out, metrics) = worker.run_sha3_batch(&input).expect("batch");
+        cycles_per_batch = metrics.cycles;
+        if batch == 0 {
+            for (r, st) in input.iter().enumerate() {
+                let mut want = *st;
+                sha3::keccak_f_sw(&mut want);
+                assert_eq!(out[r], want, "row {r} diverged from the software oracle");
+            }
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let permutations = (BATCHES * rows) as f64;
+    let rounds_per_sec = permutations * sha3::ROUNDS as f64 / wall;
+    let cycles_per_round = cycles_per_batch as f64 / sha3::ROUNDS as f64;
+    (rounds_per_sec, cycles_per_round)
+}
+
+fn main() {
+    let geom = workload_geometry(WorkloadKind::Sha3, MODEL, 4).expect("geometry");
+    let unit = sha3::build_keccak_f(geom).expect("build");
+    let round = unit.round_stats.total();
+
+    section("round budget: emitted per-step schedule vs the published HashPIM table");
+    println!("      {:<7} {:>8} {:>8} {:>14} {:>16}", "step", "cycles", "gates", "published cyc", "published gates");
+    for ((name, s), (_, pc, pg)) in unit.round_stats.steps().into_iter().zip(sha3::PUBLISHED_STEP_TABLE) {
+        println!("      {:<7} {:>8} {:>8} {:>14} {:>16}", name, s.cycles, s.gates, pc, pg);
+    }
+    println!(
+        "      {:<7} {:>8} {:>8} {:>14} {:>16}",
+        "round", round.cycles, round.gates, sha3::PUBLISHED_ROUND_CYCLES, sha3::PUBLISHED_ROUND_GATES
+    );
+    assert!(round.cycles <= sha3::PUBLISHED_ROUND_CYCLES, "round latency must stay within the published budget");
+    let budget_ratio = round.cycles as f64 / sha3::PUBLISHED_ROUND_CYCLES as f64;
+
+    section(&format!("worker throughput: {BATCHES} verified batches per row count, decoded replay, {} model", MODEL.name()));
+    let mut rows_results = Vec::new();
+    for rows in [4usize, 16, 64] {
+        let (rps, cpr) = worker_throughput(rows, ReplayMode::Decoded);
+        println!("      {rows:>3} rows: {rps:>10.0} rounds/s   ({cpr:.0} metered cycles/round)");
+        rows_results.push((rows, rps, cpr));
+    }
+
+    section("replay-mode cost: decoded cache vs full wire re-decode, 16 rows");
+    let (dec_rps, _) = worker_throughput(16, ReplayMode::Decoded);
+    let (wire_rps, _) = worker_throughput(16, ReplayMode::Wire);
+    println!("      decoded: {dec_rps:>10.0} rounds/s");
+    println!("      wire   : {wire_rps:>10.0} rounds/s   (decode-once speedup {:.2}x)", dec_rps / wire_rps);
+
+    let rows_json: Vec<String> = rows_results
+        .iter()
+        .map(|(rows, rps, cpr)| format!("{{\"rows\": {rows}, \"rounds_per_sec\": {rps:.1}, \"metered_cycles_per_round\": {cpr:.1}}}"))
+        .collect();
+    let json = format!(
+        "{{\n  \"bench\": \"sha3\",\n  \"config\": {{\"model\": \"{}\", \"batches\": {BATCHES}, \"rounds\": {}}},\n  \
+         \"round_budget\": {{\"cycles\": {}, \"gates\": {}, \"published_cycles\": {}, \"published_gates\": {}, \
+         \"budget_ratio\": {budget_ratio:.3}}},\n  \
+         \"throughput\": [{}],\n  \
+         \"replay\": {{\"decoded_rounds_per_sec\": {dec_rps:.1}, \"wire_rounds_per_sec\": {wire_rps:.1}, \
+         \"decode_once_speedup\": {:.2}}}\n}}\n",
+        MODEL.name(),
+        sha3::ROUNDS,
+        round.cycles,
+        round.gates,
+        sha3::PUBLISHED_ROUND_CYCLES,
+        sha3::PUBLISHED_ROUND_GATES,
+        rows_json.join(", "),
+        dec_rps / wire_rps
+    );
+    match std::fs::write("BENCH_sha3.json", json) {
+        Ok(()) => println!("\nwrote BENCH_sha3.json"),
+        Err(e) => println!("\nWARNING: could not write BENCH_sha3.json: {e}"),
+    }
+}

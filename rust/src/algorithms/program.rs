@@ -9,7 +9,7 @@ use crate::backend::{ExecPipeline, PimBackend, PreparedProgram};
 use crate::crossbar::crossbar::init_message_bits;
 use crate::crossbar::gate::GateSet;
 use crate::crossbar::geometry::Geometry;
-use crate::isa::encode::message_bits;
+use crate::isa::encode::message_bits_for;
 use crate::isa::lower::{legalize_program, LegalizeConfig, LegalizeStats};
 use crate::isa::models::ModelKind;
 use crate::isa::operation::{GateOp, Operation};
@@ -57,10 +57,11 @@ impl Program {
     }
 
     /// Control traffic (bits) to stream this program under `model`:
-    /// gate cycles cost one model message each, init cycles one write
-    /// command each.
+    /// gate cycles cost one model message each (including the per-cycle
+    /// gate-type field when the gate set has more than one wire class),
+    /// init cycles one write command each.
     pub fn control_bits(&self, model: ModelKind) -> u64 {
-        let gate_msg = message_bits(model, &self.geom) as u64;
+        let gate_msg = message_bits_for(model, &self.geom, self.gate_set) as u64;
         let init_msg = init_message_bits(&self.geom) as u64;
         self.ops
             .iter()
@@ -156,11 +157,12 @@ pub struct Builder {
     pub gate_set: GateSet,
     ops: Vec<Operation>,
     used: Vec<bool>,
+    gates: usize,
 }
 
 impl Builder {
     pub fn new(geom: Geometry, gate_set: GateSet) -> Self {
-        Self { geom, gate_set, ops: Vec::new(), used: vec![false; geom.n] }
+        Self { geom, gate_set, ops: Vec::new(), used: vec![false; geom.n], gates: 0 }
     }
 
     /// Append a validated operation.
@@ -169,6 +171,7 @@ impl Builder {
         match &op {
             Operation::Init { cols, .. } => cols.iter().for_each(|&c| self.used[c] = true),
             Operation::Gates(gs) => {
+                self.gates += gs.len();
                 for g in gs {
                     self.used[g.out] = true;
                     g.ins.iter().for_each(|&c| self.used[c] = true);
@@ -206,6 +209,12 @@ impl Builder {
 
     pub fn len(&self) -> usize {
         self.ops.len()
+    }
+
+    /// Stateful gates pushed so far (the per-step accounting the SHA-3
+    /// builder reports against the published HashPIM table).
+    pub fn gates(&self) -> usize {
+        self.gates
     }
 
     pub fn is_empty(&self) -> bool {

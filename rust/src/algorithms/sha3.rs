@@ -1,0 +1,546 @@
+//! SHA-3 (Keccak-f[1600]) over the partitioned crossbar — the HashPIM
+//! workload [Oved et al.].
+//!
+//! ## Bit-slice layout
+//!
+//! The 5×5×64-bit Keccak state is mapped *bit-sliced along z*: partition
+//! `z` (k = 64 partitions) holds bit `z` of every lane, and the intra-
+//! partition column index names the lane slot. A lane is therefore a
+//! 64-column stride-`m` field, and every lane-local step (Theta's column
+//! parities, Chi, Pi) runs as one gate per partition — 64 state bits per
+//! cycle — while the rotations of Rho and Theta's `rot1` become *partition
+//! distance*: bit `z` of a lane rotated by `r` is a copy gate from
+//! partition `z` into partition `(z + r) mod 64`.
+//!
+//! Intra-partition slot map (m = 64 columns per partition):
+//!
+//! ```text
+//!   0..=24   A lanes (x + 5y)      — the state proper, round input/output
+//!   25..=49  B lanes               — Theta/Pi staging (out ≠ in per cycle)
+//!   50..=54  C[x] column parities  (Theta)
+//!   55..=59  D[x] theta addends    (Theta)
+//!   60..=62  S0/S1/S2 scratch
+//! ```
+//!
+//! ## Rotation as grouped copies
+//!
+//! A rotate-left by `r` is emitted in the cheaper direction (`d = min(r,
+//! 64-r)`): the non-wrapping copies all have uniform signed distance `±d`
+//! and are grouped into cycles whose input partitions form arithmetic runs
+//! of period `d + 1` — exactly the minimal control model's *Uniform
+//! Partition-Distance* and *Periodic (T > d)* criteria, so every rotation
+//! cycle is wire-representable by the range generator with no
+//! legalization. The `d` wrapping bits cross in single-gate cycles (their
+//! opposite direction cannot share a cycle with the main group). A copy is
+//! `OR(a, a)` — single-cycle in the HashPIM NOT/NOR/OR/XOR gate set.
+//!
+//! Every cycle is *class-homogeneous* (all-XOR, all-OR, or all-NOT/NOR),
+//! matching the one shared per-cycle gate-type field of the typed wire
+//! formats (see [`crate::crossbar::gate::GateSet::wire_type_bits`]).
+//!
+//! The per-step cycle/gate budget is asserted against the published
+//! HashPIM table (Theta 330 / Rho 2,911 / Pi 81 / Chi 140 / Iota 32 —
+//! 3,494 cycles per round) in `tests/sha3_cycles.rs`; this mapping lands
+//! well under it because the z-dimension bit-slice executes 64 state bits
+//! per cycle and XOR is a native single-cycle gate here.
+
+use crate::algorithms::program::{Builder, Program};
+use crate::crossbar::gate::{GateSet, GateType};
+use crate::crossbar::geometry::Geometry;
+use crate::crossbar::state::BitMatrix;
+use anyhow::{ensure, Result};
+
+/// Keccak lanes (5×5).
+pub const LANES: usize = 25;
+/// Lane width in bits = partitions of the SHA-3 geometry.
+pub const LANE_BITS: usize = 64;
+/// Keccak-f[1600] rounds.
+pub const ROUNDS: usize = 24;
+
+/// The published HashPIM per-round budget, `(step, cycles, gates)`: Theta
+/// 330 / Rho 2,911 / Pi 81 / Chi 140 / Iota 32 cycles — 3,494 cycles and
+/// 119,571 gates per round. `tests/sha3_cycles.rs` holds this mapping to
+/// it step by step; `repro sha3` prints the comparison.
+pub const PUBLISHED_STEP_TABLE: [(&str, usize, usize); 5] =
+    [("theta", 330, 15_127), ("rho", 2_911, 82_300), ("pi", 81, 6_976), ("chi", 140, 14_720), ("iota", 32, 448)];
+/// Published whole-round cycle count (sum of [`PUBLISHED_STEP_TABLE`]).
+pub const PUBLISHED_ROUND_CYCLES: usize = 3_494;
+/// Published whole-round gate count (sum of [`PUBLISHED_STEP_TABLE`]).
+pub const PUBLISHED_ROUND_GATES: usize = 119_571;
+
+// Intra-partition slot map.
+const SLOT_B0: usize = LANES;
+const SLOT_C0: usize = 2 * LANES;
+const SLOT_D0: usize = 2 * LANES + 5;
+const S0: usize = 2 * LANES + 10;
+const S1: usize = S0 + 1;
+const S2: usize = S0 + 2;
+
+fn slot_a(lane: usize) -> usize {
+    lane
+}
+
+fn slot_b(lane: usize) -> usize {
+    SLOT_B0 + lane
+}
+
+// ---------------------------------------------------------------------------
+// Reference semantics (the software oracle)
+// ---------------------------------------------------------------------------
+
+/// `rc(t)` of FIPS 202 §3.2.5: an LFSR over x⁸ + x⁶ + x⁵ + x⁴ + 1.
+fn rc_bit(t: usize) -> bool {
+    let mut r: u16 = 1;
+    for _ in 0..t % 255 {
+        r <<= 1;
+        if r & 0x100 != 0 {
+            r ^= 0x171;
+        }
+    }
+    r & 1 == 1
+}
+
+/// The 24 Iota round constants, generated from the FIPS 202 LFSR (bit
+/// `2ʲ - 1` of `RC[i]` is `rc(j + 7i)`).
+pub fn round_constants() -> [u64; ROUNDS] {
+    let mut rcs = [0u64; ROUNDS];
+    for (ir, rc) in rcs.iter_mut().enumerate() {
+        for j in 0..7 {
+            if rc_bit(j + 7 * ir) {
+                *rc |= 1u64 << ((1u32 << j) - 1);
+            }
+        }
+    }
+    rcs
+}
+
+/// The Rho rotation offsets `rho[x][y]`, generated from the FIPS 202
+/// coordinate walk (`(x, y) ← (y, 2x + 3y)` starting at (1, 0), offset
+/// `(t+1)(t+2)/2 mod 64`).
+pub fn rho_offsets() -> [[usize; 5]; 5] {
+    let mut rho = [[0usize; 5]; 5];
+    let (mut x, mut y) = (1usize, 0usize);
+    for t in 0..24 {
+        rho[x][y] = ((t + 1) * (t + 2) / 2) % LANE_BITS;
+        let (nx, ny) = (y, (2 * x + 3 * y) % 5);
+        x = nx;
+        y = ny;
+    }
+    rho
+}
+
+/// One software Keccak round on lane-indexed state (`a[x + 5y]`) — the
+/// differential oracle the crossbar program is tested against.
+pub fn keccak_round_sw(a: &mut [u64; LANES], rc: u64) {
+    let rho = rho_offsets();
+    // Theta
+    let mut c = [0u64; 5];
+    for x in 0..5 {
+        c[x] = a[x] ^ a[x + 5] ^ a[x + 10] ^ a[x + 15] ^ a[x + 20];
+    }
+    for x in 0..5 {
+        let d = c[(x + 4) % 5] ^ c[(x + 1) % 5].rotate_left(1);
+        for y in 0..5 {
+            a[x + 5 * y] ^= d;
+        }
+    }
+    // Rho + Pi
+    let mut b = [0u64; LANES];
+    for y in 0..5 {
+        for x in 0..5 {
+            b[y + 5 * ((2 * x + 3 * y) % 5)] = a[x + 5 * y].rotate_left(rho[x][y] as u32);
+        }
+    }
+    // Chi
+    for y in 0..5 {
+        for x in 0..5 {
+            a[x + 5 * y] = b[x + 5 * y] ^ (!b[(x + 1) % 5 + 5 * y] & b[(x + 2) % 5 + 5 * y]);
+        }
+    }
+    // Iota
+    a[0] ^= rc;
+}
+
+/// The full software Keccak-f[1600] permutation (24 rounds).
+pub fn keccak_f_sw(a: &mut [u64; LANES]) {
+    let rcs = round_constants();
+    for rc in rcs {
+        keccak_round_sw(a, rc);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Crossbar program
+// ---------------------------------------------------------------------------
+
+/// Cycle / gate counts of one round step (the units of the published
+/// HashPIM per-step table).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Sha3StepStats {
+    pub cycles: usize,
+    pub gates: usize,
+}
+
+/// Per-step accounting of one Keccak round as emitted.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Sha3RoundStats {
+    pub theta: Sha3StepStats,
+    pub rho: Sha3StepStats,
+    pub pi: Sha3StepStats,
+    pub chi: Sha3StepStats,
+    pub iota: Sha3StepStats,
+}
+
+impl Sha3RoundStats {
+    pub fn steps(&self) -> [(&'static str, Sha3StepStats); 5] {
+        [("theta", self.theta), ("rho", self.rho), ("pi", self.pi), ("chi", self.chi), ("iota", self.iota)]
+    }
+
+    /// Whole-round totals (cycles include initialization writes, exactly as
+    /// [`crate::algorithms::program::ProgramStats`] counts latency).
+    pub fn total(&self) -> Sha3StepStats {
+        let mut t = Sha3StepStats::default();
+        for (_, s) in self.steps() {
+            t.cycles += s.cycles;
+            t.gates += s.gates;
+        }
+        t
+    }
+}
+
+/// A compiled SHA-3 unit: the Keccak-f program plus the state loader /
+/// reader for the bit-slice layout.
+#[derive(Debug, Clone)]
+pub struct Sha3Unit {
+    pub program: Program,
+    /// Per-round per-step accounting (identical for every round up to the
+    /// Iota constant's init-mask split, so one representative is kept).
+    pub round_stats: Sha3RoundStats,
+    geom: Geometry,
+}
+
+impl Sha3Unit {
+    /// Load one 25-lane state onto `row`: bit `z` of lane `i` lands at
+    /// column `(z, slot_a(i))` — a stride-`m` field per lane.
+    pub fn load(&self, state: &mut BitMatrix, row: usize, lanes: &[u64; LANES]) -> Result<()> {
+        let m = self.geom.m();
+        for (i, &lane) in lanes.iter().enumerate() {
+            state.write_strided(row, slot_a(i), m, LANE_BITS, lane)?;
+        }
+        Ok(())
+    }
+
+    /// Read the permuted 25-lane state back from `row`.
+    pub fn read(&self, state: &BitMatrix, row: usize) -> Result<[u64; LANES]> {
+        let m = self.geom.m();
+        let mut lanes = [0u64; LANES];
+        for (i, lane) in lanes.iter_mut().enumerate() {
+            *lane = state.read_strided(row, slot_a(i), m, LANE_BITS)?;
+        }
+        Ok(lanes)
+    }
+}
+
+/// Validate a SHA-3 geometry: 64 partitions (one per z bit) of at least 63
+/// columns (the slot map).
+fn check_geom(geom: &Geometry) -> Result<()> {
+    ensure!(geom.k == LANE_BITS, "SHA-3 bit-slice layout needs k = {LANE_BITS} partitions (one per lane bit), got k = {}", geom.k);
+    ensure!(geom.m() > S2, "SHA-3 slot map needs {} columns per partition, got m = {}", S2 + 1, geom.m());
+    Ok(())
+}
+
+/// `out = OR(a, a)` — the single-cycle copy of the HashPIM gate set.
+fn copy_gate(src: usize, dst: usize) -> crate::isa::operation::GateOp {
+    crate::isa::operation::GateOp { gate: GateType::Or, ins: vec![src, src], out: dst }
+}
+
+fn xor_gate(a: usize, b: usize, out: usize) -> crate::isa::operation::GateOp {
+    crate::isa::operation::GateOp { gate: GateType::Xor, ins: vec![a, b], out }
+}
+
+/// One gate per partition (the 64-bits-per-cycle workhorse).
+fn all_parts(b: &mut Builder, f: impl Fn(usize) -> crate::isa::operation::GateOp) -> Result<()> {
+    let k = b.geom.k;
+    b.concurrent((0..k).map(f).collect())
+}
+
+/// Initialize `slots` across every partition in one write cycle.
+fn init_slots(b: &mut Builder, slots: &[usize]) -> Result<()> {
+    let geom = b.geom;
+    b.init1((0..geom.k).flat_map(|p| slots.iter().map(move |&s| geom.col(p, s))).collect())
+}
+
+/// Copy slot `src` rotated left by `r` lane-bit positions into slot `dst`:
+/// partition `z`'s bit lands in partition `(z + r) mod 64`. Emits the
+/// init + grouped-copy cycles described in the module docs (minimal-legal;
+/// `2·min(r, 64-r) + 2` cycles, 64 gates).
+fn emit_rotate_copy(b: &mut Builder, src: usize, dst: usize, r: usize) -> Result<()> {
+    let geom = b.geom;
+    let k = geom.k;
+    let r = r % k;
+    init_slots(b, &[dst])?;
+    if r == 0 {
+        return all_parts(b, |p| copy_gate(geom.col(p, src), geom.col(p, dst)));
+    }
+    let d = r.min(k - r);
+    let forward = r <= k / 2; // rotate by distance +d, else by -d (≡ +r mod k)
+    let dest = |z: usize| (z + r) % k;
+    // Non-wrapping copies: uniform distance ±d; input partitions grouped
+    // into arithmetic runs of period d+1 (> d ⇒ periodic, disjoint
+    // sections).
+    let main: Vec<usize> = if forward { (0..k - d).collect() } else { (d..k).collect() };
+    for c in 0..(d + 1).min(main.len()) {
+        let group: Vec<usize> = main.iter().copied().skip(c).step_by(d + 1).collect();
+        b.concurrent(group.iter().map(|&z| copy_gate(geom.col(z, src), geom.col(dest(z), dst))).collect())?;
+    }
+    // Wrapping copies run against the main direction: one gate per cycle
+    // (their span would interleave any grouped layout).
+    let wrap: Vec<usize> = if forward { (k - d..k).collect() } else { (0..d).collect() };
+    for z in wrap {
+        b.concurrent(vec![copy_gate(geom.col(z, src), geom.col(dest(z), dst))])?;
+    }
+    Ok(())
+}
+
+/// Theta: `C[x] = ⊕_y A[x,y]`, `D[x] = C[x-1] ⊕ rot1(C[x+1])`,
+/// `B[x,y] = A[x,y] ⊕ D[x]` (routed into the B slots — MAGIC-style gates
+/// cannot write their own input column).
+fn emit_theta(b: &mut Builder) -> Result<()> {
+    let geom = b.geom;
+    // Column parities, folded through scratch (XOR is 2-input).
+    for x in 0..5 {
+        let chain = [S0, S1, S2, SLOT_C0 + x];
+        init_slots(b, &chain)?;
+        let mut acc = slot_a(x);
+        for (step, y) in (1..5).enumerate() {
+            let lane = slot_a(x + 5 * y);
+            all_parts(b, |p| xor_gate(geom.col(p, acc), geom.col(p, lane), geom.col(p, chain[step])))?;
+            acc = chain[step];
+        }
+    }
+    // D[x] = C[(x+4)%5] ⊕ rot1(C[(x+1)%5]).
+    for x in 0..5 {
+        emit_rotate_copy(b, SLOT_C0 + (x + 1) % 5, S0, 1)?;
+        init_slots(b, &[SLOT_D0 + x])?;
+        all_parts(b, |p| xor_gate(geom.col(p, SLOT_C0 + (x + 4) % 5), geom.col(p, S0), geom.col(p, SLOT_D0 + x)))?;
+    }
+    // Fold D into the state, staging into B.
+    let b_slots: Vec<usize> = (0..LANES).map(slot_b).collect();
+    init_slots(b, &b_slots)?;
+    for lane in 0..LANES {
+        let d_slot = SLOT_D0 + lane % 5;
+        all_parts(b, |p| xor_gate(geom.col(p, slot_a(lane)), geom.col(p, d_slot), geom.col(p, slot_b(lane))))?;
+    }
+    Ok(())
+}
+
+/// Rho: rotate every B lane by its offset, landing back in the A slots.
+fn emit_rho(b: &mut Builder) -> Result<()> {
+    let rho = rho_offsets();
+    for y in 0..5 {
+        for x in 0..5 {
+            let lane = x + 5 * y;
+            emit_rotate_copy(b, slot_b(lane), slot_a(lane), rho[x][y])?;
+        }
+    }
+    Ok(())
+}
+
+/// Pi: `B[y, 2x+3y] = A[x, y]` — pure lane permutation, distance-0 copies.
+fn emit_pi(b: &mut Builder) -> Result<()> {
+    let geom = b.geom;
+    let b_slots: Vec<usize> = (0..LANES).map(slot_b).collect();
+    init_slots(b, &b_slots)?;
+    for y in 0..5 {
+        for x in 0..5 {
+            let src = slot_a(x + 5 * y);
+            let dst = slot_b(y + 5 * ((2 * x + 3 * y) % 5));
+            all_parts(b, |p| copy_gate(geom.col(p, src), geom.col(p, dst)))?;
+        }
+    }
+    Ok(())
+}
+
+/// Chi: `A[x,y] = B[x,y] ⊕ (¬B[x+1,y] ∧ B[x+2,y])`, with the AND-NOT
+/// factored for the gate set as `NOR(B[x+1,y], NOT B[x+2,y])`.
+fn emit_chi(b: &mut Builder) -> Result<()> {
+    let geom = b.geom;
+    for y in 0..5 {
+        for x in 0..5 {
+            let dst = slot_a(x + 5 * y);
+            let b0 = slot_b(x + 5 * y);
+            let b1 = slot_b((x + 1) % 5 + 5 * y);
+            let b2 = slot_b((x + 2) % 5 + 5 * y);
+            init_slots(b, &[S0, S1, dst])?;
+            all_parts(b, |p| crate::isa::operation::GateOp::not(geom.col(p, b2), geom.col(p, S0)))?;
+            all_parts(b, |p| crate::isa::operation::GateOp::nor(geom.col(p, b1), geom.col(p, S0), geom.col(p, S1)))?;
+            all_parts(b, |p| xor_gate(geom.col(p, b0), geom.col(p, S1), geom.col(p, dst)))?;
+        }
+    }
+    Ok(())
+}
+
+/// Iota: `A[0,0] ^= RC`. The constant is materialized into a scratch slot
+/// by two partition-masked write cycles (bit `z` of RC lives in partition
+/// `z`), XORed with the lane into scratch, and copied back.
+fn emit_iota(b: &mut Builder, rc: u64) -> Result<()> {
+    let geom = b.geom;
+    let k = geom.k;
+    let ones: Vec<usize> = (0..k).filter(|&z| rc >> z & 1 == 1).map(|z| geom.col(z, S0)).collect();
+    let zeros: Vec<usize> = (0..k).filter(|&z| rc >> z & 1 == 0).map(|z| geom.col(z, S0)).collect();
+    if !ones.is_empty() {
+        b.init1(ones)?;
+    }
+    if !zeros.is_empty() {
+        b.init0(zeros)?;
+    }
+    init_slots(b, &[S1])?;
+    all_parts(b, |p| xor_gate(geom.col(p, slot_a(0)), geom.col(p, S0), geom.col(p, S1)))?;
+    init_slots(b, &[slot_a(0)])?;
+    all_parts(b, |p| copy_gate(geom.col(p, S1), geom.col(p, slot_a(0))))
+}
+
+/// Cycle/gate delta of the builder since `mark` (a `(len, gates)` pair).
+fn step_delta(b: &Builder, mark: (usize, usize)) -> Sha3StepStats {
+    Sha3StepStats { cycles: b.len() - mark.0, gates: b.gates() - mark.1 }
+}
+
+/// Emit one full Keccak round (state in the A slots before and after),
+/// returning the per-step cycle/gate accounting.
+pub fn emit_keccak_round(b: &mut Builder, rc: u64) -> Result<Sha3RoundStats> {
+    let mut stats = Sha3RoundStats::default();
+    let mut mark = (b.len(), b.gates());
+    emit_theta(b)?;
+    stats.theta = step_delta(b, mark);
+    mark = (b.len(), b.gates());
+    emit_rho(b)?;
+    stats.rho = step_delta(b, mark);
+    mark = (b.len(), b.gates());
+    emit_pi(b)?;
+    stats.pi = step_delta(b, mark);
+    mark = (b.len(), b.gates());
+    emit_chi(b)?;
+    stats.chi = step_delta(b, mark);
+    mark = (b.len(), b.gates());
+    emit_iota(b, rc)?;
+    stats.iota = step_delta(b, mark);
+    Ok(stats)
+}
+
+/// Build a single-round Keccak program (round 0) — the unit the published
+/// per-step cycle table is asserted against.
+pub fn build_keccak_round(geom: Geometry) -> Result<(Program, Sha3RoundStats)> {
+    check_geom(&geom)?;
+    let mut b = Builder::new(geom, GateSet::HashPim);
+    let stats = emit_keccak_round(&mut b, round_constants()[0])?;
+    Ok((b.finish("sha3_round"), stats))
+}
+
+/// Build the full 24-round Keccak-f[1600] permutation program.
+pub fn build_keccak_f(geom: Geometry) -> Result<Sha3Unit> {
+    check_geom(&geom)?;
+    let mut b = Builder::new(geom, GateSet::HashPim);
+    let mut round_stats = Sha3RoundStats::default();
+    for rc in round_constants() {
+        round_stats = emit_keccak_round(&mut b, rc)?;
+    }
+    Ok(Sha3Unit { program: b.finish("keccak_f1600"), round_stats, geom })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::ExecPipeline;
+    use crate::crossbar::crossbar::Crossbar;
+    use crate::isa::models::ModelKind;
+
+    fn geom() -> Geometry {
+        Geometry::new(4096, 64, 4).unwrap()
+    }
+
+    #[test]
+    fn generated_tables_match_fips() {
+        let rc = round_constants();
+        assert_eq!(rc[0], 0x0000000000000001);
+        assert_eq!(rc[1], 0x0000000000008082);
+        assert_eq!(rc[2], 0x800000000000808a);
+        assert_eq!(rc[23], 0x8000000080008008);
+        let rho = rho_offsets();
+        assert_eq!(rho[0][0], 0);
+        assert_eq!(rho[1][0], 1);
+        assert_eq!(rho[2][0], 62);
+        assert_eq!(rho[3][0], 28);
+        assert_eq!(rho[4][0], 27);
+        assert_eq!(rho[1][1], 44);
+        assert_eq!(rho[2][2], 43);
+    }
+
+    /// The canonical Keccak-f[1600] known-answer: permuting the all-zero
+    /// state yields lane 0 = F1258F7940E1DDE7 (XKCP test vectors).
+    #[test]
+    fn software_oracle_matches_known_answer() {
+        let mut st = [0u64; LANES];
+        keccak_f_sw(&mut st);
+        assert_eq!(st[0], 0xF1258F7940E1DDE7);
+        assert_ne!(st[24], 0, "permutation must diffuse into every lane");
+    }
+
+    #[test]
+    fn single_round_program_matches_oracle() {
+        let g = geom();
+        let (prog, stats) = build_keccak_round(g).unwrap();
+        assert!(stats.total().cycles <= 3494, "round exceeds the published HashPIM budget: {:?}", stats.total());
+        let unit = Sha3Unit { program: prog.clone(), round_stats: stats, geom: g };
+        let mut xb = Crossbar::new(g, GateSet::HashPim);
+        let mut lanes = [0u64; LANES];
+        for (i, l) in lanes.iter_mut().enumerate() {
+            *l = 0x0123_4567_89ab_cdefu64.rotate_left(i as u32 * 7) ^ (i as u64);
+        }
+        unit.load(&mut xb.state, 1, &lanes).unwrap();
+        prog.execute(&mut ExecPipeline::direct(&mut xb)).unwrap();
+        let mut expect = lanes;
+        keccak_round_sw(&mut expect, round_constants()[0]);
+        assert_eq!(unit.read(&xb.state, 1).unwrap(), expect);
+    }
+
+    #[test]
+    fn keccak_f_program_matches_oracle_on_wire_path() {
+        let g = geom();
+        let unit = build_keccak_f(g).unwrap();
+        unit.program.check_model(ModelKind::Minimal).unwrap();
+        unit.program.check_model(ModelKind::Standard).unwrap();
+        let mut xb = Crossbar::new(g, GateSet::HashPim);
+        let mut lanes = [0u64; LANES];
+        for (i, l) in lanes.iter_mut().enumerate() {
+            *l = (i as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15);
+        }
+        unit.load(&mut xb.state, 0, &lanes).unwrap();
+        unit.program.execute(&mut ExecPipeline::wire(ModelKind::Minimal, &mut xb)).unwrap();
+        let mut expect = lanes;
+        keccak_f_sw(&mut expect);
+        assert_eq!(unit.read(&xb.state, 0).unwrap(), expect);
+    }
+
+    #[test]
+    fn rotation_copy_is_a_rotate_left() {
+        let g = geom();
+        for r in [0usize, 1, 2, 31, 32, 33, 62, 63] {
+            let mut b = Builder::new(g, GateSet::HashPim);
+            b.init1((0..g.k).map(|p| g.col(p, 0)).collect()).unwrap();
+            emit_rotate_copy(&mut b, 0, 1, r).unwrap();
+            let prog = b.finish("rot");
+            prog.check_model(ModelKind::Minimal).unwrap();
+            let mut xb = Crossbar::new(g, GateSet::HashPim);
+            let v = 0xdead_beef_0bad_f00du64;
+            xb.state.write_strided(0, 0, g.m(), LANE_BITS, v).unwrap();
+            prog.execute(&mut ExecPipeline::wire(ModelKind::Minimal, &mut xb)).unwrap();
+            assert_eq!(xb.state.read_strided(0, 1, g.m(), LANE_BITS).unwrap(), v.rotate_left(r as u32), "rot {r}");
+        }
+    }
+
+    #[test]
+    fn bad_geometry_rejected() {
+        assert!(build_keccak_f(Geometry::new(1024, 32, 4).unwrap()).is_err(), "k != 64");
+        assert!(build_keccak_round(Geometry::new(2048, 64, 4).unwrap()).is_err(), "m too narrow for the slot map");
+    }
+}

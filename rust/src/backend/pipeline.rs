@@ -354,7 +354,7 @@ impl<'a> ExecPipeline<'a> {
                     verify::check_cycle(&op, geom, &VerifyOptions::new(model, gate_set))?;
                     out.push(Item::Op(op));
                 }
-                (Stage::Encode(model), Item::Op(op)) => out.push(Self::encode_item(model, &op, geom)?),
+                (Stage::Encode(model), Item::Op(op)) => out.push(Self::encode_item(model, &op, geom, gate_set)?),
                 (Stage::PeripheryDecode(_), _) => {
                     bail!("periphery decode is a crossbar-side stage; it is consumed at the decode boundary, not applied in the controller-side stage walk")
                 }
@@ -377,8 +377,9 @@ impl<'a> ExecPipeline<'a> {
             (Some(model), ItemRef::Message(bits)) => {
                 self.stats.control_bits += bits.len() as u64;
                 self.stats.messages += 1;
-                let msg = encode::decode(model, bits, geom)?;
-                let op = periphery::reconstruct(&msg, geom)?;
+                let gate_set = self.backend.gate_set();
+                let (class, msg) = encode::decode_with(model, bits, geom, gate_set)?;
+                let op = periphery::reconstruct_typed(class, &msg, geom)?;
                 self.stats.ops_to_backend += 1;
                 self.backend.execute_trusted(&op)
             }
@@ -406,11 +407,14 @@ impl<'a> ExecPipeline<'a> {
     }
 
     /// Encode one borrowed operation for the wire (the legalize-free fast
-    /// path of [`ExecPipeline::run_op`] — no staging clone per cycle).
-    fn encode_item(model: ModelKind, op: &Operation, geom: &Geometry) -> Result<Item> {
+    /// path of [`ExecPipeline::run_op`] — no staging clone per cycle). The
+    /// backend's gate set selects the wire format: NOT/NOR emits the paper's
+    /// untyped messages bit-for-bit, richer sets prepend the per-cycle
+    /// gate-type field (see [`encode::encode_with`]).
+    fn encode_item(model: ModelKind, op: &Operation, geom: &Geometry, gate_set: GateSet) -> Result<Item> {
         Ok(match op {
             Operation::Init { cols, value } => Item::InitWrite { cols: cols.clone(), value: *value },
-            Operation::Gates(_) => Item::Message(encode::encode(model, op, geom)?),
+            Operation::Gates(_) => Item::Message(encode::encode_with(model, op, geom, gate_set)?),
         })
     }
 
@@ -439,7 +443,7 @@ impl<'a> ExecPipeline<'a> {
             if let Some(v) = verify_model {
                 verify::check_cycle(op, &geom, &VerifyOptions::new(v, self.backend.gate_set()))?;
             }
-            let item = Self::encode_item(model, op, &geom)?;
+            let item = Self::encode_item(model, op, &geom, self.backend.gate_set())?;
             return self.consume_item(item.borrowed(), &geom);
         }
         let gate_set = self.backend.gate_set();
@@ -470,7 +474,7 @@ impl<'a> ExecPipeline<'a> {
         let items: Vec<Item> = ops.iter().cloned().map(Item::Op).collect();
         let items = self.apply_stages(0..self.front_len(), items, &geom, gate_set)?;
         let cache = match self.decode_model() {
-            Some(model) => Some(Self::build_cache(model, &items, &geom)?),
+            Some(model) => Some(Self::build_cache(model, &items, &geom, gate_set)?),
             None => None,
         };
         Ok(PreparedProgram { items, cache })
@@ -479,15 +483,15 @@ impl<'a> ExecPipeline<'a> {
     /// Decode + reconstruct every wire item once (the one periphery pass a
     /// [`ReplayMode::Decoded`] replay amortizes), recording the exact
     /// control-traffic cost a single wire replay of the stream would meter.
-    fn build_cache(model: ModelKind, items: &[Item], geom: &Geometry) -> Result<DecodedCache> {
+    fn build_cache(model: ModelKind, items: &[Item], geom: &Geometry, gate_set: GateSet) -> Result<DecodedCache> {
         let mut ops = Vec::with_capacity(items.len());
         let mut control_bits = 0u64;
         for item in items {
             match item {
                 Item::Message(bits) => {
                     control_bits += bits.len() as u64;
-                    let msg = encode::decode(model, bits, geom)?;
-                    ops.push(periphery::reconstruct(&msg, geom)?);
+                    let (class, msg) = encode::decode_with(model, bits, geom, gate_set)?;
+                    ops.push(periphery::reconstruct_typed(class, &msg, geom)?);
                 }
                 Item::InitWrite { cols, value } => {
                     control_bits += init_message_bits(geom) as u64;

@@ -597,6 +597,12 @@ impl FleetClient {
     pub fn submit_sort(&self, rows_data: &[Vec<u64>]) -> Result<FleetJobHandle> {
         self.submit_job(WorkloadKind::Sort16, Payload::Rows(rows_data.to_vec()))
     }
+
+    /// Submit a Keccak-f[1600] permutation job, one 25-lane state per row
+    /// (routes to a `Sha3` bank).
+    pub fn submit_sha3(&self, states: &[[u64; 25]]) -> Result<FleetJobHandle> {
+        self.submit_job(WorkloadKind::Sha3, Payload::States(states.to_vec()))
+    }
 }
 
 /// A pending fleet job. Unlike the service-level

@@ -10,10 +10,11 @@
 //!                       ◀──JobResult─────┴──Done / Exit◀──── results, faults
 //! ```
 //!
-//! * Jobs are element-wise vector operations (32-bit multiply / add) or
-//!   per-row sorts; each crossbar **row** processes one element (pair)
-//!   independently — the single-row parallelism stateful logic provides for
-//!   free.
+//! * Jobs are element-wise vector operations (32-bit multiply / add),
+//!   per-row sorts, or per-row Keccak-f[1600] permutations (the HashPIM
+//!   SHA-3 datapath); each crossbar **row** processes one element (pair /
+//!   vector / state) independently — the single-row parallelism stateful
+//!   logic provides for free.
 //! * [`PimService::submit`] is non-blocking and returns a [`JobHandle`], so
 //!   any number of jobs are in flight at once; a central dispatcher routes
 //!   completions back by job id and assigns work to *idle* workers (pull

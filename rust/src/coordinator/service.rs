@@ -213,11 +213,13 @@ impl Default for ServiceConfig {
 }
 
 /// Values a completed job produced: scalars for element-wise arithmetic,
-/// one vector per row for sort jobs.
+/// one vector per row for sort jobs, one permuted Keccak state per row for
+/// sha3 jobs.
 #[derive(Debug, Clone)]
 pub enum JobValues {
     Scalars(Vec<u64>),
     Rows(Vec<Vec<u64>>),
+    States(Vec<[u64; 25]>),
 }
 
 impl JobValues {
@@ -226,24 +228,34 @@ impl JobValues {
         match self {
             JobValues::Scalars(_) => JobShape::ElementWise,
             JobValues::Rows(_) => JobShape::RowVectors,
+            JobValues::States(_) => JobShape::KeccakState,
         }
     }
 
     /// Element-wise results, or a typed [`ValueShapeMismatch`] if the job
-    /// was a sort job.
+    /// produced a different shape.
     pub fn try_scalars(&self) -> std::result::Result<&[u64], ValueShapeMismatch> {
         match self {
             JobValues::Scalars(v) => Ok(v),
-            JobValues::Rows(_) => Err(ValueShapeMismatch { requested: JobShape::ElementWise, actual: JobShape::RowVectors }),
+            other => Err(ValueShapeMismatch { requested: JobShape::ElementWise, actual: other.shape() }),
         }
     }
 
     /// Per-row sorted vectors, or a typed [`ValueShapeMismatch`] if the job
-    /// was element-wise.
+    /// produced a different shape.
     pub fn try_rows(&self) -> std::result::Result<&[Vec<u64>], ValueShapeMismatch> {
         match self {
             JobValues::Rows(r) => Ok(r),
-            JobValues::Scalars(_) => Err(ValueShapeMismatch { requested: JobShape::RowVectors, actual: JobShape::ElementWise }),
+            other => Err(ValueShapeMismatch { requested: JobShape::RowVectors, actual: other.shape() }),
+        }
+    }
+
+    /// Per-row permuted Keccak states, or a typed [`ValueShapeMismatch`] if
+    /// the job produced a different shape.
+    pub fn try_states(&self) -> std::result::Result<&[[u64; 25]], ValueShapeMismatch> {
+        match self {
+            JobValues::States(s) => Ok(s),
+            other => Err(ValueShapeMismatch { requested: JobShape::KeccakState, actual: other.shape() }),
         }
     }
 
@@ -257,7 +269,7 @@ impl JobValues {
     pub fn scalars(&self) -> &[u64] {
         match self {
             JobValues::Scalars(v) => v,
-            JobValues::Rows(_) => panic!("job produced per-row results, not scalars"),
+            _ => panic!("job produced per-row results, not scalars"),
         }
     }
 
@@ -271,7 +283,21 @@ impl JobValues {
     pub fn rows(&self) -> &[Vec<u64>] {
         match self {
             JobValues::Rows(r) => r,
-            JobValues::Scalars(_) => panic!("job produced scalar results, not rows"),
+            _ => panic!("job produced scalar results, not rows"),
+        }
+    }
+
+    /// Per-row permuted Keccak states.
+    ///
+    /// # Panics
+    ///
+    /// Panics if the job was not a sha3 job. Meant for benches and examples
+    /// where the workload is fixed by construction; fallible callers use
+    /// [`JobValues::try_states`].
+    pub fn states(&self) -> &[[u64; 25]] {
+        match self {
+            JobValues::States(s) => s,
+            _ => panic!("job produced {} results, not keccak states", self.shape()),
         }
     }
 
@@ -279,6 +305,7 @@ impl JobValues {
         match self {
             JobValues::Scalars(v) => v.len(),
             JobValues::Rows(r) => r.len(),
+            JobValues::States(s) => s.len(),
         }
     }
 
@@ -724,6 +751,11 @@ impl Dispatcher {
                                 acc[offset + i] = r;
                             }
                         }
+                        (JobValues::States(acc), ChunkValues::States(sts)) => {
+                            for (i, st) in sts.into_iter().enumerate() {
+                                acc[offset + i] = st;
+                            }
+                        }
                         // Unreachable: a job's payload kind is fixed at submit.
                         _ => {}
                     }
@@ -1010,6 +1042,7 @@ impl PimClient {
         let accum = match &payload {
             Payload::Pairs(p) => JobValues::Scalars(vec![0; p.len()]),
             Payload::Rows(r) => JobValues::Rows(vec![Vec::new(); r.len()]),
+            Payload::States(s) => JobValues::States(vec![[0u64; 25]; s.len()]),
             Payload::Poison => unreachable!("poison rejected above"),
         };
         self.dispatch(accum, payload.chunked(self.cfg.rows))

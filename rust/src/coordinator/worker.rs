@@ -6,6 +6,7 @@ use crate::algorithms::addition::{build_adder, build_adder_aligned, Adder, Align
 use crate::algorithms::mult_serial::{build_serial_multiplier, SerialMultiplier};
 use crate::algorithms::multpim::{build_multpim, MultPim, MultPimVariant};
 use crate::algorithms::program::Program;
+use crate::algorithms::sha3::{build_keccak_f, Sha3Unit, LANES as SHA3_LANES};
 use crate::backend::{ExecPipeline, PreparedProgram, ReplayMode};
 use crate::crossbar::crossbar::{Crossbar, Metrics};
 use crate::crossbar::faults::FaultMap;
@@ -30,6 +31,10 @@ pub enum WorkloadKind {
     /// Per-row sort of 16 six-bit elements (partitioned bitonic network;
     /// serial network on the baseline).
     Sort16,
+    /// Per-row Keccak-f[1600] permutation (the HashPIM SHA-3 datapath,
+    /// bit-sliced along z — one partition per lane bit) in the
+    /// NOT/NOR/OR/XOR gate set.
+    Sha3,
 }
 
 /// The shape of a job's operands, mirroring [`Payload`]: element-wise
@@ -42,6 +47,8 @@ pub enum JobShape {
     ElementWise,
     /// One element vector per row, one result vector per row.
     RowVectors,
+    /// One 25-lane Keccak state per row, one permuted state per row.
+    KeccakState,
 }
 
 impl std::fmt::Display for JobShape {
@@ -49,6 +56,7 @@ impl std::fmt::Display for JobShape {
         f.write_str(match self {
             JobShape::ElementWise => "element-wise pairs",
             JobShape::RowVectors => "per-row vectors",
+            JobShape::KeccakState => "per-row keccak states",
         })
     }
 }
@@ -56,7 +64,7 @@ impl std::fmt::Display for JobShape {
 impl WorkloadKind {
     /// Every workload the bank layer can serve — the fleet's routing table
     /// iterates this, and `repro lint` sweeps it.
-    pub const ALL: [WorkloadKind; 3] = [WorkloadKind::Mul32, WorkloadKind::Add32, WorkloadKind::Sort16];
+    pub const ALL: [WorkloadKind; 4] = [WorkloadKind::Mul32, WorkloadKind::Add32, WorkloadKind::Sort16, WorkloadKind::Sha3];
 
     /// Stable name (CLI flags, bench JSON, fleet reports).
     pub fn name(self) -> &'static str {
@@ -64,15 +72,18 @@ impl WorkloadKind {
             WorkloadKind::Mul32 => "mul32",
             WorkloadKind::Add32 => "add32",
             WorkloadKind::Sort16 => "sort16",
+            WorkloadKind::Sha3 => "sha3",
         }
     }
 
-    /// Parse a CLI spelling (`mul`/`mul32`, `add`/`add32`, `sort`/`sort16`).
+    /// Parse a CLI spelling (`mul`/`mul32`, `add`/`add32`, `sort`/`sort16`,
+    /// `sha3`).
     pub fn parse(s: &str) -> Option<WorkloadKind> {
         match s {
             "mul" | "mul32" => Some(WorkloadKind::Mul32),
             "add" | "add32" => Some(WorkloadKind::Add32),
             "sort" | "sort16" => Some(WorkloadKind::Sort16),
+            "sha3" | "sha-3" | "keccak" => Some(WorkloadKind::Sha3),
             _ => None,
         }
     }
@@ -82,6 +93,18 @@ impl WorkloadKind {
         match self {
             WorkloadKind::Mul32 | WorkloadKind::Add32 => JobShape::ElementWise,
             WorkloadKind::Sort16 => JobShape::RowVectors,
+            WorkloadKind::Sha3 => JobShape::KeccakState,
+        }
+    }
+
+    /// The stateful-logic gate set this workload's program is built from.
+    /// SHA-3 uses the HashPIM NOT/NOR/OR/XOR set (its wire messages carry
+    /// the 2-bit per-cycle gate-type field); everything else runs the
+    /// paper's NOT/NOR configuration with bit-identical untyped messages.
+    pub fn gate_set(self) -> GateSet {
+        match self {
+            WorkloadKind::Sha3 => GateSet::HashPim,
+            _ => GateSet::NotNor,
         }
     }
 }
@@ -101,6 +124,8 @@ pub const SORT_BITS: usize = 6;
 pub enum Payload {
     Pairs(Vec<(u64, u64)>),
     Rows(Vec<Vec<u64>>),
+    /// One 25-lane Keccak-f[1600] state per row (sha3 jobs).
+    States(Vec<[u64; SHA3_LANES]>),
     /// Fault injection: executing this payload panics the worker thread,
     /// simulating a crossbar that dies mid-operation (used by the
     /// scheduler's resilience tests and `PimService::inject_worker_panic`).
@@ -170,6 +195,7 @@ impl Payload {
         match self {
             Payload::Pairs(_) => Some(JobShape::ElementWise),
             Payload::Rows(_) => Some(JobShape::RowVectors),
+            Payload::States(_) => Some(JobShape::KeccakState),
             Payload::Poison => None,
         }
     }
@@ -181,6 +207,7 @@ impl Payload {
         match self {
             Payload::Pairs(p) => p.chunks(rows).map(|c| Payload::Pairs(c.to_vec())).collect(),
             Payload::Rows(r) => r.chunks(rows).map(|c| Payload::Rows(c.to_vec())).collect(),
+            Payload::States(s) => s.chunks(rows).map(|c| Payload::States(c.to_vec())).collect(),
             Payload::Poison => vec![Payload::Poison],
         }
     }
@@ -190,6 +217,7 @@ impl Payload {
         match self {
             Payload::Pairs(p) => p.len(),
             Payload::Rows(r) => r.len(),
+            Payload::States(s) => s.len(),
             Payload::Poison => 0,
         }
     }
@@ -204,6 +232,7 @@ impl Payload {
 pub enum ChunkValues {
     Scalars(Vec<u64>),
     Rows(Vec<Vec<u64>>),
+    States(Vec<[u64; SHA3_LANES]>),
 }
 
 /// The operand loader / result reader for a compiled workload.
@@ -215,6 +244,7 @@ pub enum Compiled {
     Adder(Adder),
     AlignedAdder(AlignedAdder),
     Sorter(crate::algorithms::sort::Sorter),
+    Sha3(Sha3Unit),
 }
 
 impl Compiled {
@@ -225,6 +255,7 @@ impl Compiled {
             Compiled::Adder(m) => m.load(state, row, a, b),
             Compiled::AlignedAdder(m) => m.load(state, row, a, b),
             Compiled::Sorter(_) => bail!("sort workloads take per-row element vectors; use run_sort_batch"),
+            Compiled::Sha3(_) => bail!("sha3 workloads take per-row keccak states; use a States payload"),
         }
     }
 
@@ -235,6 +266,7 @@ impl Compiled {
             Compiled::Adder(m) => m.read_sum(state, row),
             Compiled::AlignedAdder(m) => m.read_sum(state, row),
             Compiled::Sorter(_) => bail!("sort workloads read element vectors; use run_sort_batch"),
+            Compiled::Sha3(_) => bail!("sha3 workloads read keccak states; use a States payload"),
         }
     }
 }
@@ -322,6 +354,27 @@ pub fn compile_workload(kind: WorkloadKind, model: ModelKind, geom: Geometry) ->
             prog.ops = packed;
             Ok((prog, Compiled::AlignedAdder(a)))
         }
+        WorkloadKind::Sha3 => {
+            // The round builder already emits class-homogeneous cycles legal
+            // under Minimal (and so under every partitioned model) — see
+            // algorithms::sha3. The baseline serializes via the legalizer.
+            // Never `pack_program` this workload: packing could merge cycles
+            // of different gate classes, and a mixed-class cycle has no wire
+            // encoding (the per-cycle gate-type field is shared).
+            let unit = build_keccak_f(geom)?;
+            let prog = match model {
+                ModelKind::Baseline => {
+                    let (legal, _) =
+                        unit.program.legalize(ModelKind::Baseline, &crate::isa::lower::LegalizeConfig::default())?;
+                    legal
+                }
+                _ => {
+                    unit.program.check_model(model)?;
+                    unit.program.clone()
+                }
+            };
+            Ok((prog, Compiled::Sha3(unit)))
+        }
     }
 }
 
@@ -365,7 +418,7 @@ pub fn prepared_workload_cached(
     // Prepare (encode + decode once) on a scratch crossbar: preparation is
     // controller-side and touches no cells, so the scratch state is
     // irrelevant and the cached stream is valid on any same-geometry bank.
-    let mut scratch = Crossbar::new(geom, GateSet::NotNor);
+    let mut scratch = Crossbar::new(geom, kind.gate_set());
     let prepared = program.prepare(&mut ExecPipeline::wire(model, &mut scratch))?;
     let entry = (program, compiled, prepared);
     map.insert((kind, model, geom), entry.clone());
@@ -375,7 +428,7 @@ pub fn prepared_workload_cached(
 impl Worker {
     pub fn new(kind: WorkloadKind, model: ModelKind, geom: Geometry) -> Result<Self> {
         let (program, compiled, prepared) = prepared_workload_cached(kind, model, geom)?;
-        let mut crossbar = Crossbar::new(geom, GateSet::NotNor);
+        let mut crossbar = Crossbar::new(geom, kind.gate_set());
         // Coalesced batches charge each segment its exact row-range
         // switching energy, so the worker's crossbar always attributes
         // switches per row.
@@ -581,6 +634,15 @@ impl Worker {
                 }
                 Ok(())
             }
+            Payload::States(states) => {
+                let Compiled::Sha3(unit) = &self.compiled else {
+                    bail!("keccak state payload on a non-sha3 workload");
+                };
+                for (&row, st) in assigned.iter().zip(states) {
+                    unit.load(&mut self.crossbar.state, row, st)?;
+                }
+                Ok(())
+            }
             Payload::Poison => panic!("injected crossbar fault"),
         }
     }
@@ -605,6 +667,16 @@ impl Worker {
                 }
                 Ok(ChunkValues::Rows(out))
             }
+            Payload::States(states) => {
+                let Compiled::Sha3(unit) = &self.compiled else {
+                    bail!("keccak state payload on a non-sha3 workload");
+                };
+                let mut out = Vec::with_capacity(states.len());
+                for &row in assigned.iter().take(states.len()) {
+                    out.push(unit.read(&self.crossbar.state, row)?);
+                }
+                Ok(ChunkValues::States(out))
+            }
             Payload::Poison => bail!("poison payload has no results"),
         }
     }
@@ -618,7 +690,19 @@ impl Worker {
         let report = reports.into_iter().next().expect("one segment yields one report");
         match report.values.map_err(|e| anyhow!(e))? {
             ChunkValues::Rows(v) => Ok((v, delta)),
-            ChunkValues::Scalars(_) => unreachable!("row payloads read back as rows"),
+            _ => unreachable!("row payloads read back as rows"),
+        }
+    }
+
+    /// Execute one row-batch of Keccak-f[1600] permutations (one 25-lane
+    /// state per row). Single-segment wrapper over [`Worker::run_segments`].
+    pub fn run_sha3_batch(&mut self, states: &[[u64; SHA3_LANES]]) -> Result<(Vec<[u64; SHA3_LANES]>, Metrics)> {
+        let seg = Segment { job: 0, offset: 0, payload: Payload::States(states.to_vec()), remaps: 0 };
+        let (reports, delta) = self.run_segments(std::slice::from_ref(&seg))?;
+        let report = reports.into_iter().next().expect("one segment yields one report");
+        match report.values.map_err(|e| anyhow!(e))? {
+            ChunkValues::States(v) => Ok((v, delta)),
+            _ => unreachable!("state payloads read back as states"),
         }
     }
 }
@@ -629,6 +713,10 @@ impl Worker {
 /// service-start error.
 pub fn workload_geometry(kind: WorkloadKind, model: ModelKind, rows: usize) -> Result<Geometry> {
     match (kind, model) {
+        // SHA-3 keeps its z-bit-slice geometry (k=64, one partition per lane
+        // bit) on every model — the baseline serializes in the legalizer,
+        // not by dropping partitions, so loads/reads use one layout.
+        (WorkloadKind::Sha3, _) => Geometry::new(4096, 64, rows),
         // Serial baselines run on a partition-free crossbar.
         (_, ModelKind::Baseline) => Geometry::new(1024, 1, rows),
         // MultPIM at paper scale: n=1024, k=32 (one partition per bit).
@@ -654,6 +742,32 @@ mod tests {
                 assert_eq!(out[i], a * b, "{}*{} under {}", a, b, model.name());
             }
             assert!(metrics.cycles > 0 && metrics.control_bits > 0);
+        }
+    }
+
+    #[test]
+    fn worker_permutes_keccak_states() {
+        use crate::algorithms::sha3;
+        for model in [ModelKind::Minimal, ModelKind::Standard] {
+            let geom = workload_geometry(WorkloadKind::Sha3, model, 4).unwrap();
+            let mut w = Worker::new(WorkloadKind::Sha3, model, geom).unwrap();
+            let states: Vec<[u64; 25]> = (0..4)
+                .map(|r| {
+                    let mut st = [0u64; 25];
+                    for (i, lane) in st.iter_mut().enumerate() {
+                        *lane = (r as u64 + 1).wrapping_mul(0x9e3779b97f4a7c15).rotate_left(i as u32) ^ i as u64;
+                    }
+                    st
+                })
+                .collect();
+            let (out, metrics) = w.run_sha3_batch(&states).unwrap();
+            for (r, st) in states.iter().enumerate() {
+                let mut want = *st;
+                sha3::keccak_f_sw(&mut want);
+                assert_eq!(out[r], want, "row {r} under {}", model.name());
+            }
+            // 24 rounds, each within the published 3,494-cycle budget.
+            assert!(metrics.cycles <= (sha3::ROUNDS * sha3::PUBLISHED_ROUND_CYCLES) as u64);
         }
     }
 

@@ -27,6 +27,8 @@ pub enum GateType {
     Nand,
     /// `out = AND(a, b)` — FELIX-derived, 2 inputs.
     And,
+    /// `out = XOR(a, b)` — the single-cycle X-MAGIC/HashPIM gate, 2 inputs.
+    Xor,
     /// `out = Minority3(a, b, c)` — FELIX, 3 inputs.
     Min3,
     /// `out = 1` — initialization write (SET).
@@ -41,7 +43,7 @@ impl GateType {
     pub fn arity(&self) -> usize {
         match self {
             GateType::Not => 1,
-            GateType::Nor | GateType::Or | GateType::Nand | GateType::And => 2,
+            GateType::Nor | GateType::Or | GateType::Nand | GateType::And | GateType::Xor => 2,
             GateType::Min3 => 3,
             GateType::Init1 | GateType::Init0 => 0,
         }
@@ -73,6 +75,7 @@ impl GateType {
             GateType::Or => ins[0] | ins[1],
             GateType::Nand => !(ins[0] & ins[1]),
             GateType::And => ins[0] & ins[1],
+            GateType::Xor => ins[0] ^ ins[1],
             GateType::Min3 => {
                 let (a, b, c) = (ins[0], ins[1], ins[2]);
                 !((a & b) | (a & c) | (b & c))
@@ -91,11 +94,15 @@ impl GateType {
 }
 
 /// The gate set a crossbar supports; restricts which operations validate.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum GateSet {
     /// MAGIC NOT/NOR only — the paper's evaluation configuration.
     NotNor,
-    /// FELIX extension: NOT/NOR/OR/NAND/AND/Min3 (footnote 2 of the paper).
+    /// The HashPIM configuration: MAGIC NOT/NOR plus FELIX OR and the
+    /// single-cycle XOR the SHA-3 datapath is built from.
+    HashPim,
+    /// FELIX extension: NOT/NOR/OR/NAND/AND/Xor/Min3 (footnote 2 of the
+    /// paper).
     Felix,
 }
 
@@ -110,6 +117,10 @@ impl GateSet {
                 GateType::Not | GateType::Nor => Ok(()),
                 other => bail!("gate {other:?} not available in the NOT/NOR gate set"),
             },
+            GateSet::HashPim => match gate {
+                GateType::Not | GateType::Nor | GateType::Or | GateType::Xor => Ok(()),
+                other => bail!("gate {other:?} not available in the HashPIM NOT/NOR/OR/XOR gate set"),
+            },
             GateSet::Felix => Ok(()),
         }
     }
@@ -120,16 +131,66 @@ impl GateSet {
             // NOT is NOR with InA = InB, so a single opcode suffices — this is
             // why the paper's message formulas carry no gate-type field.
             GateSet::NotNor => 1,
-            GateSet::Felix => 6,
+            GateSet::HashPim => 3,
+            GateSet::Felix => 7,
         }
     }
 
     /// Maximum gate arity (2 for the paper's configuration, 3 with Min3).
     pub fn max_arity(&self) -> usize {
         match self {
-            GateSet::NotNor => 2,
+            GateSet::NotNor | GateSet::HashPim => 2,
             GateSet::Felix => 3,
         }
+    }
+
+    /// The *wire classes* of this gate set: the distinct two-input gate
+    /// functions a control message must be able to name. NOT is NOR with
+    /// `InA = InB` (the paper's formats carry no gate-type field at all),
+    /// so it folds into the NOR class; every other gate is its own class.
+    /// `Min3` is 3-input and has no half-gate wire encoding — programs
+    /// using it stay on the direct path (the encoder reports V030).
+    pub fn wire_classes(&self) -> &'static [GateType] {
+        match self {
+            GateSet::NotNor => &[GateType::Nor],
+            GateSet::HashPim => &[GateType::Nor, GateType::Or, GateType::Xor],
+            GateSet::Felix => &[GateType::Nor, GateType::Or, GateType::Nand, GateType::And, GateType::Xor],
+        }
+    }
+
+    /// Width of the per-cycle gate-type field in this gate set's control
+    /// messages: `ceil(log2(#wire classes))`. Zero for NOT/NOR — the
+    /// paper's published format lengths (30/607/79/36 bits) are preserved
+    /// bit-for-bit; richer gate sets pay `wire_type_bits` extra bits per
+    /// message (mirroring the FELIX extension costing in
+    /// `algorithms::felix::extended_message_bits`).
+    pub fn wire_type_bits(&self) -> usize {
+        let n = self.wire_classes().len();
+        (usize::BITS - (n - 1).leading_zeros()) as usize
+    }
+
+    /// The wire class of `gate` under this set (`None` when the gate is not
+    /// wire-encodable here — not in the set, init pseudo-gate, or `Min3`).
+    pub fn wire_class_of(&self, gate: GateType) -> Option<GateType> {
+        let class = match gate {
+            GateType::Not => GateType::Nor,
+            g => g,
+        };
+        self.wire_classes().contains(&class).then_some(class)
+    }
+
+    /// Index of `gate`'s wire class in the gate-type field encoding.
+    pub fn wire_class_index(&self, gate: GateType) -> Option<usize> {
+        let class = self.wire_class_of(gate)?;
+        self.wire_classes().iter().position(|&c| c == class)
+    }
+
+    /// Decode a gate-type field value back to its wire class.
+    pub fn wire_class_from_index(&self, index: usize) -> Result<GateType> {
+        self.wire_classes()
+            .get(index)
+            .copied()
+            .ok_or_else(|| anyhow::anyhow!("gate-type field value {index} out of range for {self:?} ({} classes)", self.wire_classes().len()))
     }
 }
 

@@ -21,6 +21,7 @@
 //! the coordinator charges them one baseline-write message each — see
 //! `DESIGN.md`.
 
+use crate::crossbar::gate::{GateSet, GateType};
 use crate::crossbar::geometry::Geometry;
 use crate::isa::models::ModelKind;
 use crate::isa::opcode::Opcode;
@@ -196,6 +197,40 @@ pub fn message_bits(model: ModelKind, geom: &Geometry) -> usize {
     }
 }
 
+/// Gate-operation message length for `model` on `geom` under `gate_set`:
+/// the paper's NOT/NOR format plus one shared per-cycle gate-type field of
+/// [`GateSet::wire_type_bits`] bits. Zero extra bits for NOT/NOR, so the
+/// published 30/607/79/36-bit formats are preserved exactly; the HashPIM
+/// NOT/NOR/OR/XOR set pays 2 bits per message.
+pub fn message_bits_for(model: ModelKind, geom: &Geometry, gate_set: GateSet) -> usize {
+    message_bits(model, geom) + gate_set.wire_type_bits()
+}
+
+/// The shared *wire class* of a gate cycle under `gate_set` (NOT folds into
+/// the NOR class). The gate-type field is one per message — like the shared
+/// intra indices of the standard/minimal formats — so every gate in the
+/// cycle must belong to the same class; mixed-class cycles have no encoding
+/// and must be split by the scheduler.
+pub fn cycle_wire_class(op: &Operation, gate_set: GateSet) -> Result<GateType> {
+    let Operation::Gates(gates) = op else {
+        bail!("initialization writes carry no gate-type field");
+    };
+    ensure!(!gates.is_empty(), "empty gate cycle has no wire class");
+    let mut class: Option<GateType> = None;
+    for g in gates {
+        let c = gate_set
+            .wire_class_of(g.gate)
+            .ok_or_else(|| anyhow::anyhow!("gate {:?} is not wire-encodable under the {gate_set:?} gate set", g.gate))?;
+        match class {
+            None => class = Some(c),
+            Some(prev) => {
+                ensure!(prev == c, "mixed gate classes {prev:?} and {c:?} in one cycle: the per-cycle gate-type field encodes a single class");
+            }
+        }
+    }
+    Ok(class.expect("non-empty cycle"))
+}
+
 // ---------------------------------------------------------------------------
 // Controller side: operation -> Message
 // ---------------------------------------------------------------------------
@@ -281,8 +316,15 @@ pub fn to_message(model: ModelKind, op: &Operation, geom: &Geometry) -> Result<M
 
 /// Serialize a [`Message`] to its bit-exact wire format.
 pub fn message_to_bits(msg: &Message, geom: &Geometry) -> BitVec {
-    let (ln, lk, lm) = (geom.log2_n(), geom.log2_k(), geom.log2_m());
     let mut bv = BitVec::new();
+    write_message(&mut bv, msg, geom);
+    bv
+}
+
+/// Append a [`Message`]'s wire bits to `bv` (shared by the NOT/NOR format
+/// and the typed formats, which prefix a gate-type field).
+fn write_message(bv: &mut BitVec, msg: &Message, geom: &Geometry) {
+    let (ln, lk, lm) = (geom.log2_n(), geom.log2_k(), geom.log2_m());
     match msg {
         Message::Baseline { ia, ib, io } => {
             bv.push_bits(*ia, ln);
@@ -325,7 +367,6 @@ pub fn message_to_bits(msg: &Message, geom: &Geometry) -> BitVec {
             bv.push_bit(matches!(dir, Direction::OutputsLeft));
         }
     }
-    bv
 }
 
 /// Controller entry point: encode `op` for `model`. The result is exactly
@@ -337,12 +378,54 @@ pub fn encode(model: ModelKind, op: &Operation, geom: &Geometry) -> Result<BitVe
     Ok(bv)
 }
 
+/// Controller entry point for an arbitrary gate set: the message of
+/// [`encode`] prefixed with the shared per-cycle gate-type field. For
+/// [`GateSet::NotNor`] the field is zero bits wide and the output is
+/// bit-identical to [`encode`]; the result is exactly [`message_bits_for`]
+/// long.
+pub fn encode_with(model: ModelKind, op: &Operation, geom: &Geometry, gate_set: GateSet) -> Result<BitVec> {
+    let class = cycle_wire_class(op, gate_set)?;
+    let msg = to_message(model, op, geom)?;
+    let mut bv = BitVec::new();
+    let ty = gate_set.wire_type_bits();
+    if ty > 0 {
+        let idx = gate_set.wire_class_index(class).expect("cycle class came from this gate set");
+        bv.push_bits(idx, ty);
+    }
+    write_message(&mut bv, &msg, geom);
+    debug_assert_eq!(bv.len(), message_bits_for(model, geom, gate_set), "typed wire format length drifted");
+    Ok(bv)
+}
+
 /// Crossbar-periphery entry point: parse the wire bits back into a
 /// [`Message`]. Gate reconstruction happens in [`crate::periphery`].
 pub fn decode(model: ModelKind, bits: &BitVec, geom: &Geometry) -> Result<Message> {
     ensure!(bits.len() == message_bits(model, geom), "wrong message length for {}: got {}, expected {}", model.name(), bits.len(), message_bits(model, geom));
-    let (ln, lk, lm, k) = (geom.log2_n(), geom.log2_k(), geom.log2_m(), geom.k);
     let mut r = BitReader::new(bits);
+    let msg = read_message(&mut r, model, geom)?;
+    r.finish()?;
+    Ok(msg)
+}
+
+/// Periphery entry point for an arbitrary gate set: read the gate-type
+/// field (if the set has one), then the model's message. Returns the wire
+/// class alongside the message so [`crate::periphery::reconstruct_typed`]
+/// knows which gate function to rebuild. Bit-identical to [`decode`] for
+/// [`GateSet::NotNor`] (the class is then always NOR).
+pub fn decode_with(model: ModelKind, bits: &BitVec, geom: &Geometry, gate_set: GateSet) -> Result<(GateType, Message)> {
+    let expect = message_bits_for(model, geom, gate_set);
+    ensure!(bits.len() == expect, "wrong message length for {} under {gate_set:?}: got {}, expected {expect}", model.name(), bits.len());
+    let mut r = BitReader::new(bits);
+    let ty = gate_set.wire_type_bits();
+    let class = gate_set.wire_class_from_index(if ty > 0 { r.read_bits(ty)? } else { 0 })?;
+    let msg = read_message(&mut r, model, geom)?;
+    r.finish()?;
+    Ok((class, msg))
+}
+
+/// Parse one message body (everything after any gate-type field) from `r`.
+fn read_message(r: &mut BitReader<'_>, model: ModelKind, geom: &Geometry) -> Result<Message> {
+    let (ln, lk, lm, k) = (geom.log2_n(), geom.log2_k(), geom.log2_m(), geom.k);
     let msg = match model {
         ModelKind::Baseline => {
             let ia = r.read_bits(ln)?;
@@ -384,7 +467,6 @@ pub fn decode(model: ModelKind, bits: &BitVec, geom: &Geometry) -> Result<Messag
             Message::Minimal { ia, ib, io, p_start, p_end, t, distance, dir }
         }
     };
-    r.finish()?;
     Ok(msg)
 }
 
@@ -485,5 +567,70 @@ mod tests {
         let mut bv = BitVec::new();
         bv.push_bits(0, 35);
         assert!(decode(ModelKind::Minimal, &bv, &g).is_err());
+    }
+
+    /// The typed codec under NOT/NOR is the paper codec, bit for bit: the
+    /// gate-type field is zero bits wide, so nothing about the published
+    /// 30/607/79/36-bit formats changes.
+    #[test]
+    fn notnor_typed_codec_is_bit_identical() {
+        let g = paper_geom();
+        let op = Operation::serial(GateOp::nor(g.col(2, 1), g.col(2, 3), g.col(7, 5)));
+        for m in ModelKind::ALL {
+            assert_eq!(message_bits_for(m, &g, GateSet::NotNor), message_bits(m, &g));
+            let plain = encode(m, &op, &g).unwrap();
+            let typed = encode_with(m, &op, &g, GateSet::NotNor).unwrap();
+            assert_eq!(plain, typed, "{}", m.name());
+            let (class, msg) = decode_with(m, &typed, &g, GateSet::NotNor).unwrap();
+            assert_eq!(class, crate::crossbar::gate::GateType::Nor);
+            assert_eq!(msg, decode(m, &plain, &g).unwrap());
+        }
+    }
+
+    /// The HashPIM set (NOR/OR/XOR wire classes) costs exactly 2 extra bits
+    /// per message and round-trips each class, NOT riding the NOR class.
+    #[test]
+    fn hashpim_typed_codec_roundtrips_classes() {
+        use crate::crossbar::gate::GateType;
+        let g = paper_geom();
+        let gs = GateSet::HashPim;
+        for m in ModelKind::ALL {
+            assert_eq!(message_bits_for(m, &g, gs), message_bits(m, &g) + 2, "{}", m.name());
+        }
+        let cases = [
+            (GateOp { gate: GateType::Xor, ins: vec![g.col(2, 1), g.col(2, 3)], out: g.col(7, 5) }, GateType::Xor),
+            (GateOp { gate: GateType::Or, ins: vec![g.col(2, 1), g.col(2, 3)], out: g.col(7, 5) }, GateType::Or),
+            (GateOp::nor(g.col(2, 1), g.col(2, 3), g.col(7, 5)), GateType::Nor),
+            (GateOp::not(g.col(2, 1), g.col(7, 5)), GateType::Nor),
+        ];
+        for (gate, want_class) in cases {
+            let op = Operation::serial(gate);
+            for m in ModelKind::ALL {
+                let bits = encode_with(m, &op, &g, gs).unwrap();
+                assert_eq!(bits.len(), message_bits_for(m, &g, gs));
+                let (class, _) = decode_with(m, &bits, &g, gs).unwrap();
+                assert_eq!(class, want_class, "{}", m.name());
+            }
+        }
+    }
+
+    /// The gate-type field is per-cycle: a cycle mixing wire classes has no
+    /// encoding, and a class outside the set is rejected.
+    #[test]
+    fn mixed_or_foreign_classes_rejected() {
+        use crate::crossbar::gate::GateType;
+        let g = paper_geom();
+        let mixed = Operation::Gates(vec![
+            GateOp { gate: GateType::Xor, ins: vec![g.col(0, 1), g.col(0, 3)], out: g.col(1, 5) },
+            GateOp::nor(g.col(4, 1), g.col(4, 3), g.col(5, 5)),
+        ]);
+        assert!(cycle_wire_class(&mixed, GateSet::HashPim).is_err());
+        assert!(encode_with(ModelKind::Minimal, &mixed, &g, GateSet::HashPim).is_err());
+        // XOR has no wire class under NOT/NOR.
+        let xor = Operation::serial(GateOp { gate: GateType::Xor, ins: vec![g.col(0, 1), g.col(0, 3)], out: g.col(1, 5) });
+        assert!(encode_with(ModelKind::Minimal, &xor, &g, GateSet::NotNor).is_err());
+        // Min3 has no half-gate wire class even under FELIX.
+        let min3 = Operation::serial(GateOp { gate: GateType::Min3, ins: vec![g.col(0, 1), g.col(0, 2), g.col(0, 3)], out: g.col(1, 5) });
+        assert!(cycle_wire_class(&min3, GateSet::Felix).is_err());
     }
 }

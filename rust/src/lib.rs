@@ -37,9 +37,12 @@
 //!   area models (including the naive Ω(k²) decoder stack for comparison).
 //! * [`algorithms`] — PIM algorithms as micro-op programs: NOR full adders,
 //!   N-bit addition, the optimized serial multiplier baseline, a
-//!   MultPIM-style partitioned multiplier, and partitioned bitonic sorting.
-//!   Programs execute via `Program::execute(&mut ExecPipeline)` — one API
-//!   for every backend and control path.
+//!   MultPIM-style partitioned multiplier, partitioned bitonic sorting, and
+//!   the HashPIM-style SHA-3 Keccak-f[1600] permutation (typed XOR/NOR/
+//!   NOT/OR gate set, bit-sliced across partitions, verified against the
+//!   published per-step cycle/gate table). Programs execute via
+//!   `Program::execute(&mut ExecPipeline)` — one API for every backend and
+//!   control path.
 //! * [`verify`] — the whole-program static analyzer: per-cycle
 //!   classification (serial / parallel / semi-parallel / init), a stable
 //!   rule catalog (structural V00x, hazard V01x, model-conformance V02x,

@@ -7,6 +7,8 @@
 //! repro report                      control formats, lower bounds, periphery
 //! repro figure6                     regenerate Figure 6 (latency/control/area)
 //! repro sort                        sorting speedup table (intro claim)
+//! repro sha3 [--model M] [--rows R] Keccak-f[1600] round table vs the
+//!                                   published HashPIM budget + oracle check
 //! repro serve [--model M] [--crossbars N] [--rows R] [--jobs J] [--len L]
 //!             [--inject-bad] [--kill W] [--no-coalesce]
 //!             [--wire-replay] [--replay-threads T]
@@ -19,7 +21,7 @@
 //!                                   over T word ranges; optional fault
 //!                                   injection, wear-leveling ablation and
 //!                                   endurance-horizon reporting)
-//! repro serve --banks N [--mix mul:add:sort] [--spares S] [--max-pending P]
+//! repro serve --banks N [--mix mul:add:sort:sha3] [--spares S] [--max-pending P]
 //!             [--kill-bank B] [...single-bank flags]
 //!                                   multi-bank fleet demo: mixed traffic
 //!                                   routed across N banks, admission
@@ -35,6 +37,7 @@
 
 use anyhow::{bail, Context, Result};
 use partition_pim::algorithms::multpim::{build_multpim, MultPimVariant};
+use partition_pim::algorithms::sha3;
 use partition_pim::backend::{ExecPipeline, PimBackend, ReplayMode};
 use partition_pim::coordinator::worker::{SORT_BITS, SORT_ELEMS};
 use partition_pim::coordinator::{compile_workload, workload_geometry, FleetConfig, JobShape, PimFleet, PimService, ServiceConfig, WorkloadKind};
@@ -187,6 +190,73 @@ fn cmd_sort() -> Result<()> {
     Ok(())
 }
 
+/// `repro sha3`: the HashPIM workload demo. Prints the per-step cycle/gate
+/// table of one Keccak round against the published HashPIM budget, then
+/// runs full Keccak-f[1600] permutations through the serving worker (wire
+/// pipeline, decode-once replay) and checks every state against the
+/// software oracle.
+fn cmd_sha3(flags: &HashMap<String, String>) -> Result<()> {
+    use partition_pim::coordinator::worker::Worker;
+
+    let model = parse_model(flags.get("model").map(String::as_str).unwrap_or("minimal"))?;
+    let rows: usize = flags.get("rows").map(String::as_str).unwrap_or("4").parse()?;
+    let geom = workload_geometry(WorkloadKind::Sha3, model, rows)?;
+    let unit = sha3::build_keccak_f(geom)?;
+
+    println!("SHA-3 (HashPIM) Keccak-f[1600] on n={}, k={} (one partition per lane bit), {} model\n", geom.n, geom.k, model.name());
+    println!("{:<7} {:>12} {:>12} {:>16} {:>16}", "step", "cycles", "gates", "published cyc", "published gates");
+    for ((name, s), (pname, pc, pg)) in unit.round_stats.steps().into_iter().zip(sha3::PUBLISHED_STEP_TABLE) {
+        debug_assert_eq!(name, pname);
+        println!("{:<7} {:>12} {:>12} {:>16} {:>16}", name, s.cycles, s.gates, pc, pg);
+    }
+    let t = unit.round_stats.total();
+    println!(
+        "{:<7} {:>12} {:>12} {:>16} {:>16}",
+        "round", t.cycles, t.gates, sha3::PUBLISHED_ROUND_CYCLES, sha3::PUBLISHED_ROUND_GATES
+    );
+    anyhow::ensure!(t.cycles <= sha3::PUBLISHED_ROUND_CYCLES, "round latency exceeds the published budget");
+    println!(
+        "\nround latency {:.2}x under the published budget (z bit-slice: 64 state bits/cycle, native XOR)\n",
+        sha3::PUBLISHED_ROUND_CYCLES as f64 / t.cycles as f64
+    );
+
+    let mut worker = Worker::new(WorkloadKind::Sha3, model, geom)?;
+    let mut seed = 0x9e3779b97f4a7c15u64;
+    let mut rnd = move || {
+        seed ^= seed << 13;
+        seed ^= seed >> 7;
+        seed ^= seed << 17;
+        seed
+    };
+    let states: Vec<[u64; 25]> = (0..rows)
+        .map(|_| {
+            let mut st = [0u64; 25];
+            for lane in st.iter_mut() {
+                *lane = rnd();
+            }
+            st
+        })
+        .collect();
+    let t0 = Instant::now();
+    let (out, metrics) = worker.run_sha3_batch(&states)?;
+    let wall = t0.elapsed();
+    for (r, st) in states.iter().enumerate() {
+        let mut want = *st;
+        sha3::keccak_f_sw(&mut want);
+        anyhow::ensure!(out[r] == want, "crossbar permutation diverged from the software oracle on row {r}");
+    }
+    println!("{rows} Keccak-f[1600] permutations (24 rounds each), all bitwise-equal to the software oracle");
+    println!(
+        "sim_cycles={} ({} cycles/round)  control_bits={}  switch_events={}  wall={:?}",
+        metrics.cycles,
+        metrics.cycles / sha3::ROUNDS as u64,
+        metrics.control_bits,
+        metrics.switch_events,
+        wall
+    );
+    Ok(())
+}
+
 /// `repro serve --banks N`: the fleet demo. N banks cycle through the
 /// workload mix; a mixed trace is routed across them by the fleet, with
 /// optional mid-trace bank kill to demonstrate rerouting / hot-spare
@@ -207,7 +277,7 @@ fn cmd_serve_fleet(flags: &HashMap<String, String>) -> Result<()> {
     let mix_spec = flags.get("mix").map(String::as_str).unwrap_or("mul:add:sort");
     let mut mix = Vec::new();
     for part in mix_spec.split(':') {
-        mix.push(WorkloadKind::parse(part).with_context(|| format!("unknown workload '{part}' in --mix (mul|add|sort)"))?);
+        mix.push(WorkloadKind::parse(part).with_context(|| format!("unknown workload '{part}' in --mix (mul|add|sort|sha3)"))?);
     }
 
     let base = ServiceConfig { model, n_crossbars, rows, ..Default::default() };
@@ -231,6 +301,7 @@ fn cmd_serve_fleet(flags: &HashMap<String, String>) -> Result<()> {
     enum Expect {
         Scalars(Vec<u64>),
         Rows(Vec<Vec<u64>>),
+        States(Vec<[u64; 25]>),
     }
     let t0 = Instant::now();
     let mut pending = Vec::new();
@@ -259,6 +330,26 @@ fn cmd_serve_fleet(flags: &HashMap<String, String>) -> Result<()> {
                     .collect();
                 (Expect::Rows(expect), client.submit_sort(&data)?)
             }
+            JobShape::KeccakState => {
+                let states: Vec<[u64; 25]> = (0..rows)
+                    .map(|_| {
+                        let mut st = [0u64; 25];
+                        for lane in st.iter_mut() {
+                            *lane = rnd();
+                        }
+                        st
+                    })
+                    .collect();
+                let expect = states
+                    .iter()
+                    .map(|st| {
+                        let mut s = *st;
+                        sha3::keccak_f_sw(&mut s);
+                        s
+                    })
+                    .collect();
+                (Expect::States(expect), client.submit_sha3(&states)?)
+            }
         };
         pending.push((j, kind, expect, handle));
         if kill_bank == Some(j) {
@@ -271,6 +362,7 @@ fn cmd_serve_fleet(flags: &HashMap<String, String>) -> Result<()> {
         match expect {
             Expect::Scalars(want) => anyhow::ensure!(res.try_scalars()? == want.as_slice(), "wrong values in job {j}"),
             Expect::Rows(want) => anyhow::ensure!(res.try_rows()? == want.as_slice(), "wrong rows in job {j}"),
+            Expect::States(want) => anyhow::ensure!(res.try_states()? == want.as_slice(), "wrong keccak states in job {j}"),
         }
         println!(
             "job {j:>3} ({:<6}): {:>5} values  sim_cycles={:<8} wall={:?}",
@@ -453,7 +545,12 @@ fn cmd_lint(flags: &HashMap<String, String>) -> Result<()> {
         Some(m) => Some(parse_model(m)?),
         None => None,
     };
-    let kinds = [(WorkloadKind::Mul32, "mul32"), (WorkloadKind::Add32, "add32"), (WorkloadKind::Sort16, "sort16")];
+    let kinds = [
+        (WorkloadKind::Mul32, "mul32"),
+        (WorkloadKind::Add32, "add32"),
+        (WorkloadKind::Sort16, "sort16"),
+        (WorkloadKind::Sha3, "sha3"),
+    ];
     println!("verifier lint: built-in workload programs x control models\n");
     println!("{:<20} {:>7} {:>26} {:>7} {:>6} {:>6}", "program", "cycles", "serial/par/semi/init", "errors", "warns", "notes");
     let (mut errors, mut warnings, mut pairs) = (0usize, 0usize, 0usize);
@@ -544,16 +641,20 @@ fn main() -> Result<()> {
         "figure6" => cmd_figure6(),
         "sweep" => cmd_sweep(),
         "sort" => cmd_sort(),
+        "sha3" => cmd_sha3(&flags),
         "serve" => cmd_serve(&flags),
         "lint" => cmd_lint(&flags),
         "xla-parity" => cmd_xla_parity(&flags),
         _ => {
             println!("PartitionPIM reproduction driver\n");
-            println!("usage: repro <report|figure6|sweep|sort|serve|lint|xla-parity> [--flag value]...");
+            println!("usage: repro <report|figure6|sweep|sort|sha3|serve|lint|xla-parity> [--flag value]...");
             println!("  report      control formats, lower bounds, periphery areas");
             println!("  figure6     regenerate Figure 6 (latency / control / area / energy)");
             println!("  sweep       speedup vs control-overhead across partition counts");
             println!("  sort        sorting speedup table");
+            println!("  sha3        Keccak-f[1600] round demo: per-step cycle/gate table vs the");
+            println!("              published HashPIM budget, full permutation vs software oracle");
+            println!("              [--model minimal] [--rows 4]");
             println!("  serve       end-to-end vector-multiply service demo (concurrent scheduler)");
             println!("              [--model minimal] [--crossbars 4] [--rows 64] [--jobs 8] [--len 256]");
             println!("              [--inject-bad]  submit one malformed job, show fault isolation");
@@ -563,7 +664,7 @@ fn main() -> Result<()> {
             println!("              [--endurance-budget N] per-row switch budget for the TTFF projection");
             println!("              [--inject-stuck R,C[,V]] stick cell (R,C) mid-service; quarantine + remap");
             println!("              --banks N       fleet mode: N banks cycling through --mix");
-            println!("              [--mix mul:add:sort] workload mix across the banks");
+            println!("              [--mix mul:add:sort:sha3] workload mix across the banks");
             println!("              [--spares 1]    hot-spare slots promoted on bank death");
             println!("              [--max-pending 256] per-bank admission bound (backpressure)");
             println!("              [--kill-bank B] kill bank B mid-trace, show rerouting");

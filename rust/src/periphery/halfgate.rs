@@ -8,6 +8,7 @@
 //! into a single stateful gate — each partition only executes *half* a gate
 //! and trusts its section peers for the other half.
 
+use crate::crossbar::gate::GateType;
 use crate::crossbar::geometry::Geometry;
 use crate::isa::encode::{Message, PartitionFields};
 use crate::isa::opcode::Opcode;
@@ -32,9 +33,30 @@ pub fn sections_from_selects(selects: &[bool]) -> Vec<(usize, usize)> {
     sections
 }
 
+/// Compose the `(InA, InB, Out)` columns of one section into the executed
+/// gate of wire class `class`. `NOR(a, a)` is physically a `NOT` — the one
+/// identity the gate-type-free NOT/NOR formats rely on; every other class
+/// keeps its two inputs as decoded (e.g. `OR(a, a)` is the copy gate).
+fn compose_gate(class: GateType, ca: usize, cb: usize, co: usize) -> GateOp {
+    if class == GateType::Nor && ca == cb {
+        GateOp::not(ca, co)
+    } else {
+        GateOp { gate: class, ins: vec![ca, cb], out: co }
+    }
+}
+
 /// Reconstruct the executed operation from per-partition decoder fields and
-/// transistor selects — the shared back-end of all three designs.
+/// transistor selects — the shared back-end of all three designs (NOT/NOR
+/// gate set; [`reconstruct_from_fields_typed`] is the general form).
 pub fn reconstruct_from_fields(parts: &[PartitionFields], selects: &[bool], geom: &Geometry) -> Result<Operation> {
+    reconstruct_from_fields_typed(GateType::Nor, parts, selects, geom)
+}
+
+/// Reconstruct the executed operation for an arbitrary wire class (the
+/// gate-type field decoded by [`crate::isa::encode::decode_with`]): the
+/// section/half-gate composition is class-independent, only the gate
+/// function applied inside each section changes.
+pub fn reconstruct_from_fields_typed(class: GateType, parts: &[PartitionFields], selects: &[bool], geom: &Geometry) -> Result<Operation> {
     ensure!(parts.len() == geom.k, "expected {} partition field sets, got {}", geom.k, parts.len());
     ensure!(selects.len() == geom.k - 1, "expected {} transistor selects, got {}", geom.k - 1, selects.len());
     let mut gates = Vec::new();
@@ -61,13 +83,7 @@ pub fn reconstruct_from_fields(parts: &[PartitionFields], selects: &[bool], geom
             (None, None, None) => continue, // idle section
             (Some(ca), Some(cb), Some(co)) => {
                 ensure!(co != ca && co != cb, "output column {co} aliases a gate input in section [{lo}, {hi}]");
-                // NOR(a, a) is physically a NOT — normalize so the
-                // reconstructed operation matches the controller's intent.
-                if ca == cb {
-                    gates.push(GateOp::not(ca, co));
-                } else {
-                    gates.push(GateOp::nor(ca, cb, co));
-                }
+                gates.push(compose_gate(class, ca, cb, co));
             }
             _ => bail!("dangling half-gate in section [{lo}, {hi}]: InA={a:?} InB={b:?} Out={o:?} do not compose into a valid gate"),
         }
@@ -76,28 +92,33 @@ pub fn reconstruct_from_fields(parts: &[PartitionFields], selects: &[bool], geom
     Ok(Operation::Gates(gates))
 }
 
-/// Decode a [`Message`] into the operation the crossbar executes.
+/// Decode a [`Message`] into the operation the crossbar executes (NOT/NOR
+/// gate set; [`reconstruct_typed`] is the general form).
 ///
 /// This is the functional model of the periphery of Figure 3(c) (unlimited),
 /// Figure 5 (standard) and Section 4.2 (minimal).
 pub fn reconstruct(msg: &Message, geom: &Geometry) -> Result<Operation> {
+    reconstruct_typed(GateType::Nor, msg, geom)
+}
+
+/// Decode a [`Message`] of wire class `class` into the operation the
+/// crossbar executes. `class` comes from the message's gate-type field
+/// ([`crate::isa::encode::decode_with`]); for the NOT/NOR gate set it is
+/// always `Nor` and this is exactly [`reconstruct`].
+pub fn reconstruct_typed(class: GateType, msg: &Message, geom: &Geometry) -> Result<Operation> {
     match msg {
         Message::Baseline { ia, ib, io } => {
             ensure!(*ia < geom.n && *ib < geom.n && *io < geom.n, "baseline index out of range");
             ensure!(*io != *ia && *io != *ib, "baseline output aliases an input");
-            if ia == ib {
-                Ok(Operation::serial(GateOp::not(*ia, *io)))
-            } else {
-                Ok(Operation::serial(GateOp::nor(*ia, *ib, *io)))
-            }
+            Ok(Operation::serial(compose_gate(class, *ia, *ib, *io)))
         }
-        Message::Unlimited { parts, selects } => reconstruct_from_fields(parts, selects, geom),
+        Message::Unlimited { parts, selects } => reconstruct_from_fields_typed(class, parts, selects, geom),
         Message::Standard { ia, ib, io, enables, selects, dir } => {
             ensure!(enables.len() == geom.k, "expected {} enables", geom.k);
             let opcodes = opcode_gen::generate(enables, selects, *dir)?;
             let parts: Vec<PartitionFields> =
                 opcodes.into_iter().map(|opcode| PartitionFields { ia: *ia, ib: *ib, io: *io, opcode }).collect();
-            reconstruct_from_fields(&parts, selects, geom)
+            reconstruct_from_fields_typed(class, &parts, selects, geom)
         }
         Message::Minimal { ia, ib, io, p_start, p_end, t, distance, dir } => {
             let params = range_gen::RangeParams { p_start: *p_start, p_end: *p_end, t: *t, distance: *distance, dir: *dir };
@@ -110,7 +131,7 @@ pub fn reconstruct(msg: &Message, geom: &Geometry) -> Result<Operation> {
                     opcode: Opcode { in_a: expansion.in_mask[p], in_b: expansion.in_mask[p], out: expansion.out_mask[p] },
                 })
                 .collect();
-            reconstruct_from_fields(&parts, &expansion.selects, geom)
+            reconstruct_from_fields_typed(class, &parts, &expansion.selects, geom)
         }
     }
 }
@@ -206,6 +227,34 @@ mod tests {
         parts[2].opcode = Opcode::OUTPUT;
         let selects = vec![false; 7];
         assert!(reconstruct_from_fields(&parts, &selects, &g).is_err());
+    }
+
+    /// Typed wire path: HashPIM XOR/OR cycles encode with the 2-bit
+    /// gate-type field and reconstruct to the same gates under every model,
+    /// while NOT still rides the NOR class (`ia == ib`).
+    #[test]
+    fn typed_roundtrip_hashpim() {
+        use crate::isa::encode::{decode_with, encode_with};
+        let g = geom();
+        let mk = |gate: GateType, p: usize| GateOp { gate, ins: vec![g.col(p, 0), g.col(p, 1)], out: g.col(p + 1, 3) };
+        let cases = vec![
+            Operation::serial(mk(GateType::Xor, 2)),
+            Operation::serial(mk(GateType::Or, 0)),
+            Operation::Gates(vec![mk(GateType::Xor, 0), mk(GateType::Xor, 4)]),
+            Operation::Gates(vec![GateOp::not(g.col(0, 5), g.col(1, 9)), GateOp::not(g.col(4, 5), g.col(5, 9))]),
+            // OR(a, a): the copy gate — must NOT fold to NOT.
+            Operation::serial(GateOp { gate: GateType::Or, ins: vec![g.col(1, 2), g.col(1, 2)], out: g.col(2, 6) }),
+        ];
+        let gs = crate::crossbar::gate::GateSet::HashPim;
+        for op in cases {
+            for m in [ModelKind::Unlimited, ModelKind::Standard, ModelKind::Minimal] {
+                m.check(&op, &g, gs).unwrap();
+                let bits = encode_with(m, &op, &g, gs).unwrap();
+                let (class, msg) = decode_with(m, &bits, &g, gs).unwrap();
+                let rec = reconstruct_typed(class, &msg, &g).unwrap();
+                assert_eq!(rec.normalized(), op.normalized(), "model {}", m.name());
+            }
+        }
     }
 
     #[test]

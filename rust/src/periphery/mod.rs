@@ -20,4 +20,4 @@ pub mod halfgate;
 pub mod opcode_gen;
 pub mod range_gen;
 
-pub use halfgate::reconstruct;
+pub use halfgate::{reconstruct, reconstruct_typed};

@@ -267,13 +267,25 @@ fn wire_roundtrip(cycle: usize, op: &Operation, geom: &Geometry, opts: &VerifyOp
         return; // init writes bypass the gate wire formats
     }
     let had_error = out[start..].iter().any(|d| d.severity == Severity::Error);
+    // The cycle's wire class under the backend's gate set: a cycle mixing
+    // classes (e.g. XOR + NOR) or using a gate with no wire class (Min3)
+    // has no message at all in the typed format.
+    let class = match encode::cycle_wire_class(op, opts.gate_set) {
+        Ok(class) => class,
+        Err(e) => {
+            if !had_error {
+                push(out, Rule::NotEncodable, Severity::Error, cycle, format!("no encoding in the {} wire format: {e}", opts.model.name()));
+            }
+            return;
+        }
+    };
     match encode::to_message(opts.model, op, geom) {
         Err(e) => {
             if !had_error {
                 push(out, Rule::NotEncodable, Severity::Error, cycle, format!("no encoding in the {} wire format: {e}", opts.model.name()));
             }
         }
-        Ok(msg) => match periphery::reconstruct(&msg, geom) {
+        Ok(msg) => match periphery::reconstruct_typed(class, &msg, geom) {
             Err(e) => {
                 push(out, Rule::DecodeDivergence, Severity::Error, cycle, format!("the encoded message fails to decode: {e}"));
             }

@@ -1,11 +1,12 @@
-//! Fleet failure-domain and policy tests: mixed traffic routed with zero
-//! workload-mismatch rejections, a bank killed mid-trace with every
-//! accepted job still completing (or failing cleanly — no wedge), hot-spare
-//! promotion, typed admission-control backpressure, the unified
-//! `WorkloadMismatch` error in both directions, `wait_timeout` leaving
-//! handles reusable, pristine-vs-reused-fleet metric equality, and elastic
-//! spawn/retire.
+//! Fleet failure-domain and policy tests: mixed traffic (mul + add + sort
+//! + sha3) routed with zero workload-mismatch rejections, a bank killed
+//! mid-trace with every accepted job still completing (or failing cleanly
+//! — no wedge), hot-spare promotion, typed admission-control backpressure,
+//! the unified `WorkloadMismatch` error in both directions, `wait_timeout`
+//! leaving handles reusable, pristine-vs-reused-fleet metric equality, and
+//! elastic spawn/retire.
 
+use partition_pim::algorithms::sha3;
 use partition_pim::coordinator::worker::{SORT_BITS, SORT_ELEMS};
 use partition_pim::coordinator::{
     BankState, ElasticPolicy, FleetConfig, JobShape, Overloaded, PimFleet, PimService, ServiceConfig, WorkloadKind, WorkloadMismatch,
@@ -13,7 +14,7 @@ use partition_pim::coordinator::{
 use partition_pim::isa::models::ModelKind;
 use std::time::Duration;
 
-const MIX: [WorkloadKind; 3] = [WorkloadKind::Mul32, WorkloadKind::Add32, WorkloadKind::Sort16];
+const MIX: [WorkloadKind; 4] = [WorkloadKind::Mul32, WorkloadKind::Add32, WorkloadKind::Sort16, WorkloadKind::Sha3];
 
 fn vectors(len: usize, seed: u64) -> (Vec<u64>, Vec<u64>) {
     let mut s = seed.wrapping_mul(0x9e3779b97f4a7c15).wrapping_add(1);
@@ -37,6 +38,25 @@ fn sort_rows(n_rows: usize, seed: u64) -> Vec<Vec<u64>> {
     (0..n_rows).map(|_| (0..SORT_ELEMS).map(|_| next()).collect()).collect()
 }
 
+fn keccak_states(n_rows: usize, seed: u64) -> Vec<[u64; 25]> {
+    let mut s = seed.wrapping_mul(0x9e3779b97f4a7c15).wrapping_add(13);
+    let mut next = move || {
+        s ^= s << 13;
+        s ^= s >> 7;
+        s ^= s << 17;
+        s
+    };
+    (0..n_rows)
+        .map(|_| {
+            let mut st = [0u64; 25];
+            for lane in st.iter_mut() {
+                *lane = next();
+            }
+            st
+        })
+        .collect()
+}
+
 fn base_config(rows: usize) -> ServiceConfig {
     ServiceConfig { model: ModelKind::Minimal, n_crossbars: 2, rows, ..Default::default() }
 }
@@ -45,15 +65,16 @@ fn mixed_fleet(n_banks: usize, rows: usize) -> PimFleet {
     PimFleet::start(FleetConfig::mixed(&MIX, n_banks, base_config(rows)).expect("config")).expect("fleet")
 }
 
-/// The headline acceptance property: a mixed mul + add + sort trace served
-/// by one fleet completes with *zero* jobs rejected for workload mismatch
-/// (or anything else) — routing by shape compatibility works end-to-end,
-/// and every value is exact.
+/// The headline acceptance property: a mixed mul + add + sort + sha3 trace
+/// served by one fleet completes with *zero* jobs rejected for workload
+/// mismatch (or anything else) — routing by shape compatibility works
+/// end-to-end, and every value is exact (sha3 states bitwise-equal the
+/// software Keccak-f oracle).
 #[test]
 fn mixed_trace_completes_with_zero_mismatch_rejections() {
-    let fleet = mixed_fleet(3, 8);
+    let fleet = mixed_fleet(4, 8);
     let client = fleet.client();
-    let n_jobs = 18usize;
+    let n_jobs = 20usize;
     let mut pending = Vec::new();
     for j in 0..n_jobs {
         let kind = MIX[j % MIX.len()];
@@ -61,16 +82,21 @@ fn mixed_trace_completes_with_zero_mismatch_rejections() {
             JobShape::ElementWise => {
                 let (a, b) = vectors(10 + j, j as u64);
                 let handle = client.submit(kind, &a, &b).expect("mixed submit must never be rejected");
-                pending.push((kind, Some((a, b)), None, handle));
+                pending.push((kind, Some((a, b)), None, None, handle));
             }
             JobShape::RowVectors => {
                 let data = sort_rows(6, j as u64);
                 let handle = client.submit_sort(&data).expect("sort submit must never be rejected");
-                pending.push((kind, None, Some(data), handle));
+                pending.push((kind, None, Some(data), None, handle));
+            }
+            JobShape::KeccakState => {
+                let states = keccak_states(4, j as u64);
+                let handle = client.submit_sha3(&states).expect("sha3 submit must never be rejected");
+                pending.push((kind, None, None, Some(states), handle));
             }
         }
     }
-    for (kind, pairs, rows_data, handle) in pending {
+    for (kind, pairs, rows_data, states, handle) in pending {
         let res = handle.wait().expect("mixed job");
         match kind.shape() {
             JobShape::ElementWise => {
@@ -85,6 +111,13 @@ fn mixed_trace_completes_with_zero_mismatch_rejections() {
                     let mut want = row.clone();
                     want.sort_unstable();
                     assert_eq!(res.rows()[i], want, "sort row {i}");
+                }
+            }
+            JobShape::KeccakState => {
+                for (i, st) in states.expect("sha3 job keeps its operands").iter().enumerate() {
+                    let mut want = *st;
+                    sha3::keccak_f_sw(&mut want);
+                    assert_eq!(res.try_states().expect("sha3 values")[i], want, "sha3 state {i} vs the software oracle");
                 }
             }
         }
@@ -180,14 +213,15 @@ fn killed_bank_mid_trace_jobs_finish_via_hot_spare() {
     assert_eq!(dead, 1);
 }
 
-/// A larger mixed trace with a mid-trace bank kill on a fleet that has a
-/// second bank per workload: jobs reroute onto the surviving peer (no spare
-/// needed), nothing wedges, and the fleet's aggregate accounts for every
-/// accepted job as either completed or cleanly failed.
+/// A larger mixed trace (sha3 included) with a mid-trace bank kill on a
+/// fleet that has a second bank per workload: jobs reroute onto the
+/// surviving peer (no spare needed), nothing wedges, and the fleet's
+/// aggregate accounts for every accepted job as either completed or
+/// cleanly failed.
 #[test]
 fn kill_bank_mid_mixed_trace_no_wedge() {
-    // 6 banks over a 3-workload mix = two banks per workload.
-    let fleet = mixed_fleet(6, 8);
+    // 8 banks over a 4-workload mix = two banks per workload.
+    let fleet = mixed_fleet(8, 8);
     let client = fleet.client();
     let n_jobs = 24usize;
     let mut accepted = Vec::new();
@@ -199,6 +233,7 @@ fn kill_bank_mid_mixed_trace_no_wedge() {
                 client.submit(kind, &a, &b).expect("submit")
             }
             JobShape::RowVectors => client.submit_sort(&sort_rows(4, j as u64)).expect("submit_sort"),
+            JobShape::KeccakState => client.submit_sha3(&keccak_states(4, j as u64)).expect("submit_sha3"),
         };
         accepted.push(handle);
         if j == n_jobs / 2 {

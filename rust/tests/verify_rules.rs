@@ -349,7 +349,7 @@ fn hazardous_program_rejected_before_any_backend() {
 #[test]
 fn builtin_workload_programs_verify_clean() {
     use partition_pim::coordinator::{compile_workload, workload_geometry, WorkloadKind};
-    for kind in [WorkloadKind::Mul32, WorkloadKind::Add32, WorkloadKind::Sort16] {
+    for kind in WorkloadKind::ALL {
         for model in ModelKind::ALL {
             let geom = workload_geometry(kind, model, 4).unwrap();
             let (program, _) = compile_workload(kind, model, geom).unwrap();

@@ -169,6 +169,72 @@ fn wear_leveling_spreads_wear() {
     );
 }
 
+/// SHA-3 wear accumulation: Keccak-f jobs drive the bank's persistent wear
+/// map exactly like the arithmetic workloads — switch events accumulate
+/// across jobs, wear leveling spreads them over the array rather than
+/// hammering the front rows, and every permuted state stays bitwise-exact
+/// while the map fills (wear accounting must never perturb values).
+#[test]
+fn sha3_jobs_accumulate_and_level_wear() {
+    use partition_pim::algorithms::sha3;
+
+    let rows = 8;
+    let svc = PimService::start(ServiceConfig {
+        kind: WorkloadKind::Sha3,
+        model: ModelKind::Minimal,
+        n_crossbars: 1,
+        rows,
+        wear_leveling: true,
+        ..Default::default()
+    })
+    .expect("sha3 service");
+
+    let mut s = 0x5851f42d4c957f2du64;
+    let mut next = move || {
+        s ^= s << 13;
+        s ^= s >> 7;
+        s ^= s << 17;
+        s
+    };
+    let mut totals = Vec::new();
+    for _ in 0..6 {
+        // Half-occupancy jobs: leveling has empty rows to rotate onto.
+        let states: Vec<[u64; 25]> = (0..rows / 2)
+            .map(|_| {
+                let mut st = [0u64; 25];
+                for lane in st.iter_mut() {
+                    *lane = next();
+                }
+                st
+            })
+            .collect();
+        let res = svc.submit_job(WorkloadKind::Sha3, partition_pim::coordinator::Payload::States(states.clone()))
+            .expect("submit")
+            .wait()
+            .expect("sha3 job");
+        let got = res.try_states().expect("sha3 values");
+        for (i, st) in states.iter().enumerate() {
+            let mut want = *st;
+            sha3::keccak_f_sw(&mut want);
+            assert_eq!(got[i], want, "state {i} must stay exact while wear accumulates");
+        }
+        assert!(res.switch_events > 0, "a 24-round permutation must flip memristors");
+        totals.push(svc.wear().total_wear());
+    }
+    // Wear accumulates monotonically across jobs...
+    assert!(totals.windows(2).all(|w| w[0] < w[1]), "each sha3 job must add wear: {totals:?}");
+    let wear = svc.wear();
+    // ...and leveling rotated the half-occupancy batches across the whole
+    // array: every row saw traffic.
+    assert!(wear.quarantined_rows().is_empty());
+    for row in 0..rows {
+        assert!(wear.wear(row) > 0, "row {row} must have seen sha3 traffic (leveling + row-parallel inits)");
+    }
+    let stats = svc.shutdown();
+    assert_eq!(stats.failed_jobs, 0);
+    assert_eq!(stats.jobs, 6);
+}
+
 /// `FaultMap::random` is a pure function of its arguments: identical seeds
 /// reproduce the identical fault population (the property every randomized
 /// reliability experiment in the repo leans on), and different seeds do not.
